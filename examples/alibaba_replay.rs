@@ -1,0 +1,113 @@
+//! END-TO-END VALIDATION DRIVER (see EXPERIMENTS.md §E2E).
+//!
+//! Run: `cargo run --release --example alibaba_replay [-- jobs=N seed=S]`
+//!
+//! Replays an Alibaba-like production trace (the §5.5 macro-benchmark)
+//! through the full system — trace generation, the trigger-driven
+//! multi-tenant coordinator, the Predictor with its adaptive event-log
+//! feedback, Algorithm 1 co-optimization per round, and simulated
+//! execution — for both default Airflow and AGORA, and reports the
+//! paper's headline metric: total cost and total DAG completion time
+//! reduction, plus the per-DAG improvement CDF (Fig. 11).
+
+use agora::cluster::ConfigSpace;
+use agora::coordinator::{improvement_cdf, BatchRunner, MacroSummary, Strategy};
+use agora::solver::Goal;
+use agora::trace::{generate, TraceParams};
+use agora::util::{fmt_cost, fmt_duration, Rng};
+
+fn arg(name: &str, default: u64) -> u64 {
+    std::env::args()
+        .find_map(|a| a.strip_prefix(&format!("{name}=")).map(String::from))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let jobs_n = arg("jobs", 60) as usize;
+    let seed = arg("seed", 2022);
+
+    // Contended batch slice (see rust/benches/fig11_alibaba.rs): the
+    // macro gains are queueing-dominated, like the production trace.
+    let params = TraceParams {
+        jobs: jobs_n,
+        window: 4.0 * 3600.0,
+        machines: 12,
+        ..TraceParams::default()
+    };
+    let mut rng = Rng::new(seed);
+    let jobs = generate(&params, &mut rng);
+    let tasks: usize = jobs.iter().map(|j| j.dag.len()).sum();
+    println!(
+        "trace: {} DAGs / {} tasks over {}; batch capacity {:.0} cores, {:.0} GiB",
+        jobs.len(),
+        tasks,
+        fmt_duration(params.window),
+        params.batch_capacity().vcpus,
+        params.batch_capacity().memory_gb,
+    );
+    println!("triggers: every 15 min or queue demand > 3x cluster cores\n");
+
+    let space = ConfigSpace::standard();
+    let t0 = std::time::Instant::now();
+    let mut base_runner = BatchRunner::new(
+        params.batch_capacity(),
+        space.clone(),
+        Strategy::Airflow,
+        seed,
+    );
+    let base = base_runner.run(&jobs);
+    println!(
+        "airflow : {} rounds, cost {}, total completion {} ({:?})",
+        base.rounds,
+        fmt_cost(base.total_cost),
+        fmt_duration(base.total_completion),
+        t0.elapsed()
+    );
+
+    let t1 = std::time::Instant::now();
+    let mut agora_runner = BatchRunner::new(
+        params.batch_capacity(),
+        space,
+        Strategy::Agora(Goal::Balanced),
+        seed,
+    );
+    let run = agora_runner.run(&jobs);
+    println!(
+        "agora   : {} rounds, cost {}, total completion {} ({:?}, optimizer {:?})",
+        run.rounds,
+        fmt_cost(run.total_cost),
+        fmt_duration(run.total_completion),
+        t1.elapsed(),
+        run.optimizer_overhead
+    );
+
+    let s = MacroSummary::against(&base, &run);
+    println!("\n== Fig. 11 headline (paper: cost -65%, completion -57%) ==");
+    println!(
+        "cost reduction       : {:.0}%  (normalized cost {:.2})",
+        (1.0 - s.normalized_cost) * 100.0,
+        s.normalized_cost
+    );
+    println!(
+        "completion reduction : {:.0}%  (normalized completion {:.2})",
+        (1.0 - s.normalized_completion) * 100.0,
+        s.normalized_completion
+    );
+    println!(
+        "DAGs improved        : {:.0}%  (paper: 87%)",
+        s.improved_fraction * 100.0
+    );
+    println!(
+        "DAGs improved >=95%  : {:.0}%  (paper: 45% near-100%)",
+        s.near_total_fraction * 100.0
+    );
+
+    println!("\n== per-DAG completion improvement CDF ==");
+    let cdf = improvement_cdf(&base, &run);
+    for q in [5, 25, 50, 75, 90, 95] {
+        let idx = (cdf.len().saturating_sub(1)) * q / 100;
+        println!("  p{q:<3} improvement: {:>6.1}%", cdf[idx] * 100.0);
+    }
+    Ok(())
+}

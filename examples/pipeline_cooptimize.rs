@@ -1,0 +1,116 @@
+//! Domain example: why co-optimization matters for a production ETL+ML
+//! pipeline — the §3 motivational study as a runnable program.
+//!
+//! Run: `cargo run --release --example pipeline_cooptimize`
+//!
+//! Compares four ways of running DAG1 + DAG2 (the paper's Fig. 6
+//! evaluation DAGs) and prints the runtime/cost frontier:
+//!   * default Airflow (no optimization),
+//!   * Ernest VM selection + Critical-Path scheduling (separate),
+//!   * Ernest VM selection + MILP scheduling (separate),
+//!   * AGORA co-optimization at all three goals.
+//!
+//! Uses the AOT/PJRT predictor path when `artifacts/` exists, otherwise
+//! falls back to the host predictor (identical numerics).
+
+use agora::baselines::{
+    AirflowScheduler, CriticalPathScheduler, ErnestGoal, MilpScheduler, Scheduler,
+    StratusScheduler,
+};
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::workloads::{dag1, dag2};
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
+use agora::runtime::{Engine, PjrtPredictor};
+use agora::solver::{Agora, AgoraOptions, Goal, Problem};
+use agora::util::{fmt_cost, fmt_duration, Rng};
+use agora::{LearnedPredictor, Predictor};
+
+fn build_problem(use_pjrt: bool, rng: &mut Rng) -> anyhow::Result<(Problem, Vec<agora::Dag>)> {
+    let dags = vec![dag1(), dag2()];
+    let space = ConfigSpace::standard();
+    let logs: Vec<EventLog> = dags
+        .iter()
+        .flat_map(|d| {
+            d.tasks
+                .iter()
+                .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), rng))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    let grid = if use_pjrt {
+        let engine = Engine::new(&agora::runtime::ArtifactManifest::default_dir())?;
+        println!("(predictor running through PJRT: {})", engine.platform());
+        PjrtPredictor::new(&engine).fit_predict(&logs, &space)?.0
+    } else {
+        println!("(predictor running on host; run `make artifacts` for the PJRT path)");
+        LearnedPredictor::fit(&logs).predict(&space)
+    };
+
+    let p = Agora::build_problem_with_grid(
+        &dags,
+        &[0.0, 0.0],
+        grid,
+        Capacity::micro(),
+        space,
+        CostModel::OnDemand,
+    );
+    Ok((p, dags))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let use_pjrt = agora::runtime::ArtifactManifest::default_dir()
+        .join("manifest.json")
+        .exists();
+    let (p, dags) = build_problem(use_pjrt, &mut rng)?;
+
+    println!(
+        "pipeline: {} tasks across {} DAGs, {} candidate configurations\n",
+        p.len(),
+        dags.len(),
+        p.space.len()
+    );
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let mut run = |name: String, schedule: agora::Schedule| {
+        let mut rng = Rng::new(99); // same execution noise for everyone
+        let rep = agora::sim::execute(&p, &dags, &schedule, &CostModel::OnDemand, &mut rng);
+        rows.push((name, rep.makespan, rep.cost));
+    };
+
+    run("airflow (default)".into(), AirflowScheduler::default().schedule(&p));
+    run(
+        "ernest+cp (separate)".into(),
+        CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p),
+    );
+    run(
+        "ernest+milp (separate)".into(),
+        MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p),
+    );
+    run("stratus (cost-aware)".into(), StratusScheduler::default().schedule(&p));
+
+    for goal in [Goal::Cost, Goal::Balanced, Goal::Runtime] {
+        let agora_opt = Agora::new(AgoraOptions {
+            goal,
+            ..Default::default()
+        });
+        let plan = agora_opt.optimize(&p);
+        run(format!("AGORA ({})", goal.name()), plan.schedule);
+    }
+
+    println!("{:<24} {:>12} {:>10}", "policy", "makespan", "cost");
+    println!("{}", "-".repeat(48));
+    let base = rows[0].clone();
+    for (name, makespan, cost) in &rows {
+        println!(
+            "{:<24} {:>12} {:>10}   ({} runtime, {} cost vs airflow)",
+            name,
+            fmt_duration(*makespan),
+            fmt_cost(*cost),
+            agora::bench::pct(base.1, *makespan),
+            agora::bench::pct(base.2, *cost),
+        );
+    }
+    Ok(())
+}

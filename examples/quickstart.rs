@@ -1,0 +1,72 @@
+//! Quickstart: co-optimize one DAG end to end with the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! Walks the full AGORA flow on the paper's Fig. 1 pipeline (data
+//! pre-processing feeding three ML jobs):
+//!   1. gather event-log history for each task (one profiling run set),
+//!   2. fit the Predictor and build the runtime grid,
+//!   3. co-optimize configurations + schedule (Algorithm 1),
+//!   4. execute the plan on the simulated cluster and compare.
+
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::workloads::fig1_dag;
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
+use agora::solver::{Agora, AgoraOptions, Goal};
+use agora::util::{fmt_cost, fmt_duration, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+
+    // 1. The workload: Fig. 1's pipeline, and its (simulated) history.
+    let dag = fig1_dag();
+    println!("workload: {} with {} tasks", dag.name, dag.len());
+    let logs: Vec<EventLog> = dag
+        .tasks
+        .iter()
+        .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng))
+        .collect();
+
+    // 2. Predictor + extended-RCPSP problem over the standard config
+    //    space (Table 1 instances x node ladder x Spark presets).
+    let dags = vec![dag];
+    let problem = Agora::build_problem(
+        &dags,
+        &[0.0],
+        &logs,
+        Capacity::micro(),
+        ConfigSpace::standard(),
+        CostModel::OnDemand,
+    );
+    println!(
+        "problem: {} tasks, {} candidate configs, {} precedence edges",
+        problem.len(),
+        problem.space.len(),
+        problem.precedence.len()
+    );
+
+    // 3. Co-optimize for a balanced cost/runtime goal.
+    let agora = Agora::new(AgoraOptions {
+        goal: Goal::Balanced,
+        ..Default::default()
+    });
+    let plan = agora.optimize(&problem);
+    println!(
+        "\nplan: predicted makespan {}  cost {}  ({} annealing iterations in {:?})",
+        fmt_duration(plan.makespan),
+        fmt_cost(plan.cost),
+        plan.anneal.as_ref().map_or(0, |a| a.stats.iterations),
+        plan.overhead
+    );
+    println!("\n{}", plan.schedule.render(&problem));
+
+    // 4. Execute against ground truth.
+    let report = agora::sim::execute(&problem, &dags, &plan.schedule, &CostModel::OnDemand, &mut rng);
+    println!(
+        "executed: actual makespan {}  cost {}  prediction error {:.1}%",
+        fmt_duration(report.makespan),
+        fmt_cost(report.cost),
+        report.prediction_mape * 100.0
+    );
+    Ok(())
+}

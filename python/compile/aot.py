@@ -1,0 +1,170 @@
+"""AOT compile path: lower the L2 Predictor graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); Python never runs on the
+request path. The Rust runtime (``rust/src/runtime/``) loads the emitted
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them on the PJRT CPU client.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. Lowered with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple1`` / element extraction.
+
+Artifacts (per variant v in {small, large}; shapes in manifest.json):
+  predict_<v>.hlo.txt      (theta[T,K], phi[C,K], usl[T,4], n[C]) -> (grid[T,C],)
+  fit_predict_<v>.hlo.txt  (x[T,S,K], y[T,S], phi[C,K], usl[T,4], n[C])
+                           -> (grid[T,C], theta[T,K])
+
+``--report`` additionally prints the L1 VMEM/MXU estimates and HLO op
+statistics used by EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import predict_grid as pg
+from .kernels.ref import K
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text (see module docstring for why text)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_variant(name: str):
+    """Lower both entry points for one shape variant.
+
+    Returns {artifact_name: (hlo_text, manifest_entry)}.
+    """
+    t, c, s = model.VARIANTS[name]
+    out = {}
+
+    lowered = jax.jit(model.predict).lower(
+        spec(t, K), spec(c, K), spec(t, 4), spec(c)
+    )
+    out[f"predict_{name}"] = (
+        to_hlo_text(lowered),
+        {
+            "entry": "predict",
+            "variant": name,
+            "tasks": t,
+            "configs": c,
+            "samples": 0,
+            "k": K,
+            "inputs": [[t, K], [c, K], [t, 4], [c]],
+            "outputs": [[t, c]],
+        },
+    )
+
+    lowered = jax.jit(model.fit_predict).lower(
+        spec(t, s, K), spec(t, s), spec(c, K), spec(t, 4), spec(c)
+    )
+    out[f"fit_predict_{name}"] = (
+        to_hlo_text(lowered),
+        {
+            "entry": "fit_predict",
+            "variant": name,
+            "tasks": t,
+            "configs": c,
+            "samples": s,
+            "k": K,
+            "inputs": [[t, s, K], [t, s], [c, K], [t, 4], [c]],
+            "outputs": [[t, c], [t, K]],
+        },
+    )
+    return out
+
+
+def hlo_stats(text: str) -> dict:
+    """Cheap HLO op census for the perf report."""
+    ops = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if line.startswith("ROOT "):
+            line = line[5:]
+        # instruction lines: "name = TYPE[shape]{layout} op(args), ..."
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1].strip()
+        parts = rhs.split(" ", 1)
+        if len(parts) < 2 or "[" not in parts[0]:
+            continue
+        op = parts[1].split("(", 1)[0].strip()
+        if op and op.replace("-", "").isalnum():
+            ops[op] = ops.get(op, 0) + 1
+    return ops
+
+
+def report(manifest: dict, texts: dict) -> None:
+    print("== L1 kernel static profile (predict_grid) ==")
+    for bt, bc in [(32, 64), (128, 128), (128, 512)]:
+        vmem = pg.vmem_bytes(bt, bc)
+        print(f"  tile ({bt:>3} x {bc:>3}): VMEM/instance = {vmem/1024:8.1f} KiB")
+    for name, (t, c, s) in model.VARIANTS.items():
+        flops = pg.mxu_flops(t, c)
+        bytes_moved = 4 * (t * K + c * K + t * 4 + c + t * c)
+        print(
+            f"  variant {name:<6} grid [{t:>3} x {c:>3}]: "
+            f"MXU FLOPs = {flops:>9,}  HBM bytes = {bytes_moved:>9,}  "
+            f"arith intensity = {flops/bytes_moved:5.2f} flop/B (memory-bound epilogue fusion)"
+        )
+    print("== HLO op census ==")
+    for name, text in texts.items():
+        ops = hlo_stats(text)
+        top = sorted(ops.items(), key=lambda kv: -kv[1])[:8]
+        total = sum(ops.values())
+        print(f"  {name}: {total} ops; top: " + ", ".join(f"{k}={v}" for k, v in top))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--report", action="store_true", help="print perf estimates")
+    ap.add_argument(
+        "--variants", default="small,large", help="comma-separated variant names"
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"k": K, "artifacts": {}}
+    texts = {}
+    for v in args.variants.split(","):
+        if v not in model.VARIANTS:
+            sys.exit(f"unknown variant {v!r}; have {sorted(model.VARIANTS)}")
+        for name, (text, entry) in lower_variant(v).items():
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"][name] = entry
+            texts[name] = text
+            print(f"wrote {path} ({len(text):,} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+    if args.report:
+        report(manifest, texts)
+
+
+if __name__ == "__main__":
+    main()

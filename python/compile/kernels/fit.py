@@ -1,0 +1,75 @@
+"""L1/L2 kernel: batched non-negative least-squares fit of Ernest models.
+
+The AGORA Predictor refits per-task Ernest coefficients every time a new
+event log arrives (the §4.1 adaptive feedback loop). Fitting is a batched
+NNLS solved by projected gradient descent:
+
+    theta <- max(0, theta - eta * (X^T X theta - X^T y))
+
+The Gram matrices are tiny ([K, K] with K = 8) so the interesting structure
+is the batch dimension: one fused computation fits every task at once.
+
+The gradient is produced by ``jax.grad`` of the batched loss — this is the
+L2 "fwd/bwd" pair — and the iteration loop is a ``lax.scan`` so the lowered
+HLO contains a single rolled loop instead of 300 unrolled copies (keeps the
+artifact small and the XLA compile fast; see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import K
+
+DEFAULT_ITERS = 300
+
+
+def batched_loss(theta, x, y):
+    """0.5*||X theta - y||^2 summed over tasks. fwd half of the fit."""
+    resid = jnp.einsum("tsk,tk->ts", x, theta) - y
+    return 0.5 * jnp.sum(resid * resid)
+
+
+# bwd half: d(loss)/d(theta), batched. Precomputing grad once and closing
+# over (gram, xty) inside the scan would be equivalent; jax.grad keeps the
+# code shape honest to "fwd/bwd".
+batched_grad = jax.grad(batched_loss, argnums=0)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def fit_theta(x, y, *, iters: int = DEFAULT_ITERS):
+    """Fit non-negative Ernest coefficients for a batch of tasks.
+
+    Args:
+      x: [T, S, K] f32 — basis features of the S observed samples per task.
+      y: [T, S]    f32 — observed runtimes.
+      iters: projected-gradient iterations (static).
+
+    Returns theta [T, K] f32, elementwise >= 0.
+
+    Step size is 1/trace(X^T X) per task — an upper bound on the Lipschitz
+    constant of the gradient, so the iteration never diverges; zero-padded
+    sample rows contribute nothing to either the Gram matrix or X^T y, so
+    callers may pad S freely.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    if x.shape[-1] != K:
+        raise ValueError(f"basis dim must be {K}, got {x.shape[-1]}")
+
+    gram = jnp.einsum("tsk,tsl->tkl", x, x)
+    trace = jnp.trace(gram, axis1=-2, axis2=-1)
+    step = (1.0 / jnp.maximum(trace, 1e-6))[:, None]
+
+    theta0 = jnp.zeros((x.shape[0], K), dtype=jnp.float32)
+
+    def body(theta, _):
+        g = batched_grad(theta, x, y)
+        theta = jnp.maximum(theta - step * g, 0.0)
+        return theta, ()
+
+    theta, _ = jax.lax.scan(body, theta0, xs=None, length=iters)
+    return theta

@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: batched runtime-grid prediction for the AGORA solver.
+
+This is the numeric hot spot of the AGORA Predictor: for every task t and
+every candidate resource configuration c, evaluate
+
+    d[t, c] = mix_t * (theta_t . phi_c)
+            + (1 - mix_t) * gamma_t * (1 + a_t*(n_c-1) + b_t*n_c*(n_c-1)) / n_c
+
+i.e. an Ernest basis matmul fused with a USL (Eq. 9) rational epilogue.
+The simulated-annealing outer loop consumes this grid on every proposal, so
+the whole [T, C] surface is produced by a single kernel launch.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * The Ernest term is a [T, K] x [K, C] matmul with K = 8 — the MXU does
+    the contraction while the USL epilogue runs on the VPU in the same
+    kernel, so the grid never round-trips HBM between the two terms.
+  * BlockSpec tiles: one (BT, K) theta tile and its (BT, 4) USL row stay
+    resident in VMEM while (BC, K) phi tiles stream; the output tile is
+    (BT, BC).
+  * interpret=True everywhere in this repo: the CPU PJRT plugin cannot run
+    Mosaic custom-calls; the lowered HLO is plain ops and runs anywhere.
+
+VMEM footprint per program instance (f32):
+    theta  BT*K*4   + usl BT*4*4 + phi BC*K*4 + n BC*4 + out BT*BC*4
+With BT = BC = 128, K = 8: 4 KiB + 2 KiB + 4 KiB + 0.5 KiB + 64 KiB
+≈ 75 KiB — comfortably inside a 16 MiB VMEM budget, leaving room for
+double-buffering the streamed phi/out tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS, K
+
+# Default tile sizes. BT rows of the grid are produced per program instance;
+# BC columns. Both multiples of the 8x128 VPU lanes when the problem is
+# large enough; clamped for small problem variants.
+DEFAULT_BT = 128
+DEFAULT_BC = 128
+
+
+def _predict_kernel(theta_ref, usl_ref, phi_ref, n_ref, out_ref):
+    """Pallas kernel body: one (BT, BC) output tile.
+
+    theta_ref: [BT, K]  usl_ref: [BT, 4]  phi_ref: [BC, K]  n_ref: [1, BC]
+    out_ref:   [BT, BC]
+    """
+    theta = theta_ref[...]
+    phi = phi_ref[...]
+    usl = usl_ref[...]
+    n = jnp.maximum(n_ref[...], 1.0)  # [1, BC]
+
+    # MXU part: Ernest basis contraction. Accumulate in f32 regardless of
+    # the input dtype (bf16-ready on real hardware).
+    ernest = jax.lax.dot_general(
+        theta,
+        phi,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [BT, BC]
+
+    # VPU epilogue: USL rational penalty, fused in the same tile.
+    gamma = usl[:, 0:1]
+    alpha = usl[:, 1:2]
+    beta = usl[:, 2:3]
+    mix = usl[:, 3:4]
+    denom = 1.0 + alpha * (n - 1.0) + beta * n * (n - 1.0)  # [BT, BC]
+    usl_rt = gamma * denom / n
+
+    out = mix * ernest + (1.0 - mix) * usl_rt
+    out_ref[...] = jnp.maximum(out, EPS)
+
+
+def _tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (tile size picker)."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "bc"))
+def predict_grid(theta, phi, usl, n, *, bt: int = DEFAULT_BT, bc: int = DEFAULT_BC):
+    """Predict the [T, C] runtime grid with the Pallas kernel.
+
+    Args:
+      theta: [T, K] f32 Ernest coefficients.
+      phi:   [C, K] f32 config basis features.
+      usl:   [T, 4] f32 (gamma, alpha, beta, mix) per task.
+      n:     [C]    f32 effective parallelism per config.
+      bt/bc: requested tile sizes (clamped to divisors of T / C).
+
+    Returns [T, C] f32 predicted runtimes, >= EPS.
+    """
+    theta = theta.astype(jnp.float32)
+    phi = phi.astype(jnp.float32)
+    usl = usl.astype(jnp.float32)
+    n2 = n.astype(jnp.float32).reshape(1, -1)
+
+    t, k = theta.shape
+    c, k2 = phi.shape
+    if k != K or k2 != K:
+        raise ValueError(f"basis dim must be {K}, got theta K={k} phi K={k2}")
+    if usl.shape != (t, 4):
+        raise ValueError(f"usl must be [{t}, 4], got {usl.shape}")
+    if n2.shape[1] != c:
+        raise ValueError(f"n must have {c} entries, got {n2.shape[1]}")
+
+    bt = _tile(t, bt)
+    bc = _tile(c, bc)
+    grid = (t // bt, c // bc)
+
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, K), lambda i, j: (i, 0)),  # theta: row tile
+            pl.BlockSpec((bt, 4), lambda i, j: (i, 0)),  # usl:   row tile
+            pl.BlockSpec((bc, K), lambda i, j: (j, 0)),  # phi:   col tile
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),  # n:     col tile
+        ],
+        out_specs=pl.BlockSpec((bt, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
+        interpret=True,
+    )(theta, usl, phi, n2)
+
+
+def vmem_bytes(bt: int = DEFAULT_BT, bc: int = DEFAULT_BC, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate for one program instance."""
+    theta = bt * K * dtype_bytes
+    usl = bt * 4 * dtype_bytes
+    phi = bc * K * dtype_bytes
+    n = bc * dtype_bytes
+    out = bt * bc * dtype_bytes
+    return theta + usl + phi + n + out
+
+
+def mxu_flops(t: int, c: int) -> int:
+    """MXU FLOPs of the Ernest contraction for a [T, C] grid."""
+    return 2 * t * c * K

@@ -1,0 +1,117 @@
+"""Pure-jnp oracle for the AGORA Predictor kernels.
+
+This module is the CORE correctness signal for the L1 Pallas kernel and the
+L2 fit model: everything here is straight-line jax.numpy with no Pallas, no
+tiling, no tricks. pytest (``python/tests/``) asserts allclose between these
+references and the optimized implementations across a hypothesis sweep of
+shapes / dtypes / parameter ranges.
+
+The canonical AGORA predictor model (mirrored in ``rust/src/predictor/``):
+
+    d[t, c] = mix_t * (theta_t . phi_c)                        # Ernest part
+            + (1 - mix_t) * gamma_t * penalty(n_c; alpha_t, beta_t)
+
+    penalty(n; a, b) = (1 + a*(n - 1) + b*n*(n - 1)) / n       # USL, Eq. 9
+
+- ``theta``  [T, K]  non-negative Ernest basis coefficients per task
+- ``phi``    [C, K]  basis features per candidate configuration
+- ``usl``    [T, 4]  columns = (gamma, alpha, beta, mix)
+- ``n``      [C]     effective parallelism of each configuration
+- result     [T, C]  predicted runtime (seconds), clamped to >= EPS
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Floor for predicted runtimes: a prediction of zero/negative seconds is
+# always a model artifact, never a real task.
+EPS = 1e-3
+
+# Number of Ernest basis features. The basis is (1, 1/n, log2(n+1), n/64)
+# padded with zeros to K=8 so the matmul contraction dim is MXU-aligned.
+K = 8
+
+
+def ernest_basis(n, cpu_factor, mem_factor):
+    """Ernest feature vector for effective parallelism ``n`` (vectorized).
+
+    Mirrors ``rust/src/predictor/ernest.rs::basis``. Features 0..3 are the
+    classic Ernest terms (serial, communication, aggregation, per-node
+    overhead); 4..5 carry the instance-type speed factors; 6..7 are zero
+    padding up to K=8.
+    """
+    n = jnp.asarray(n, dtype=jnp.float32)
+    one = jnp.ones_like(n)
+    feats = [
+        one,
+        1.0 / jnp.maximum(n, 1.0),
+        jnp.log2(n + 1.0),
+        n / 64.0,
+        jnp.asarray(cpu_factor, dtype=jnp.float32) * one,
+        jnp.asarray(mem_factor, dtype=jnp.float32) * one,
+        jnp.zeros_like(n),
+        jnp.zeros_like(n),
+    ]
+    return jnp.stack(feats, axis=-1)
+
+
+def usl_penalty(n, alpha, beta):
+    """Relative USL runtime penalty at parallelism ``n`` (Eq. 9 inverted).
+
+    X(N) = N / (1 + alpha*(N-1) + beta*N*(N-1)); penalty = 1 / X. Penalty is
+    1.0 at N=1 and grows again for large N when beta > 0 (negative scaling —
+    the Sentiment Analysis curve in the paper's Fig. 2).
+    """
+    n = jnp.maximum(jnp.asarray(n, dtype=jnp.float32), 1.0)
+    denom = 1.0 + alpha * (n - 1.0) + beta * n * (n - 1.0)
+    return denom / n
+
+
+def predict_grid_ref(theta, phi, usl, n):
+    """Reference [T, C] runtime-grid prediction. See module docstring."""
+    theta = jnp.asarray(theta, dtype=jnp.float32)
+    phi = jnp.asarray(phi, dtype=jnp.float32)
+    usl = jnp.asarray(usl, dtype=jnp.float32)
+    n = jnp.asarray(n, dtype=jnp.float32)
+
+    gamma = usl[:, 0:1]  # [T, 1]
+    alpha = usl[:, 1:2]
+    beta = usl[:, 2:3]
+    mix = usl[:, 3:4]
+
+    ernest = theta @ phi.T  # [T, C]
+    pen = usl_penalty(n[None, :], alpha, beta)  # [T, C]
+    out = mix * ernest + (1.0 - mix) * gamma * pen
+    return jnp.maximum(out, EPS)
+
+
+def fit_theta_ref(x, y, iters=300):
+    """Reference batched NNLS fit of Ernest coefficients.
+
+    Projected-gradient descent on 0.5*||X theta - y||^2 with theta >= 0,
+    batched over tasks. ``x`` is [T, S, K] sample bases, ``y`` is [T, S]
+    observed runtimes. Step size is 1/L per task with L = trace(X^T X)
+    (a cheap upper bound on the spectral norm, so the iteration is stable
+    for every well-formed input).
+
+    Returns theta [T, K] >= 0.
+    """
+    x = jnp.asarray(x, dtype=jnp.float32)
+    y = jnp.asarray(y, dtype=jnp.float32)
+    gram = jnp.einsum("tsk,tsl->tkl", x, x)  # [T, K, K]
+    xty = jnp.einsum("tsk,ts->tk", x, y)  # [T, K]
+    trace = jnp.trace(gram, axis1=-2, axis2=-1)  # [T]
+    step = (1.0 / jnp.maximum(trace, 1e-6))[:, None]  # [T, 1]
+
+    theta = jnp.zeros(x.shape[0:1] + x.shape[2:3], dtype=jnp.float32)
+    for _ in range(iters):
+        grad = jnp.einsum("tkl,tl->tk", gram, theta) - xty
+        theta = jnp.maximum(theta - step * grad, 0.0)
+    return theta
+
+
+def fit_loss_ref(theta, x, y):
+    """0.5 * ||X theta - y||^2 summed over the batch (for grad checks)."""
+    resid = jnp.einsum("tsk,tk->ts", x, theta) - y
+    return 0.5 * jnp.sum(resid * resid)

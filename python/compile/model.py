@@ -1,0 +1,61 @@
+"""L2: the AGORA Predictor compute graph.
+
+Composes the L1 kernels into the two entry points the Rust coordinator
+calls through PJRT:
+
+  * ``predict``      — theta/usl already known, produce the [T, C] grid.
+  * ``fit_predict``  — ingest raw event-log samples, fit Ernest
+                       coefficients (projected-gradient NNLS), then produce
+                       the grid. One fused module: XLA keeps the fitted
+                       theta on-device between the two phases, so there is
+                       no fit->host->predict round trip.
+
+Shapes are static per artifact variant (PJRT AOT requirement); the Rust
+side zero-pads tasks/configs/samples up to the variant size and slices the
+result. Padding is semantically inert by construction:
+  - a zero theta row + mix=1 predicts EPS everywhere,
+  - zero sample rows contribute nothing to the NNLS fit.
+"""
+
+from __future__ import annotations
+
+from .kernels.fit import fit_theta
+from .kernels.predict_grid import predict_grid
+from .kernels import ref
+
+# Artifact variants: name -> (T, C, S). Chosen so the small variant covers
+# the paper's micro-benchmarks (DAG1/DAG2: <= 16 tasks, 32 configs) and the
+# large variant covers a macro scheduling round (Fig. 10/11 scale).
+VARIANTS = {
+    "small": (32, 64, 16),
+    "large": (128, 512, 16),
+}
+
+
+def predict(theta, phi, usl, n):
+    """[T, K], [C, K], [T, 4], [C] -> [T, C] runtime grid (L1 kernel)."""
+    return (predict_grid(theta, phi, usl, n),)
+
+
+def fit_predict(x, y, phi, usl, n):
+    """Event-log samples -> fitted theta -> runtime grid, fused.
+
+    Args:
+      x:   [T, S, K] sample basis features from prior runs.
+      y:   [T, S]    observed runtimes.
+      phi: [C, K]    candidate-config basis features.
+      usl: [T, 4]    (gamma, alpha, beta, mix) per task.
+      n:   [C]       effective parallelism per config.
+
+    Returns (grid [T, C], theta [T, K]).
+    """
+    theta = fit_theta(x, y)
+    grid = predict_grid(theta, phi, usl, n)
+    return grid, theta
+
+
+def fit_predict_ref(x, y, phi, usl, n):
+    """Pure-jnp oracle for ``fit_predict`` (pytest cross-check)."""
+    theta = ref.fit_theta_ref(x, y, iters=300)
+    grid = ref.predict_grid_ref(theta, phi, usl, n)
+    return grid, theta

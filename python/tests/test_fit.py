@@ -1,0 +1,93 @@
+"""L2 fit (projected-gradient NNLS) vs oracle + recovery properties."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.fit import batched_grad, batched_loss, fit_theta
+from compile.kernels.ref import K
+
+
+def make_problem(rng, t, s, noise=0.0):
+    """Samples drawn from a ground-truth non-negative theta."""
+    n = rng.integers(1, 33, size=(t, s)).astype(np.float32)
+    x = np.zeros((t, s, K), np.float32)
+    for i in range(t):
+        x[i] = np.asarray(ref.ernest_basis(n[i], 1.0, 1.0))
+    true_theta = rng.uniform(0.0, 20.0, size=(t, K)).astype(np.float32)
+    true_theta[:, 6:] = 0.0  # padding features carry no signal
+    y = np.einsum("tsk,tk->ts", x, true_theta)
+    y += noise * rng.standard_normal(y.shape).astype(np.float32)
+    return x, y, true_theta
+
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(
+    t=st.sampled_from([1, 2, 8, 32]),
+    s=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fit_matches_ref(t, s, seed):
+    rng = np.random.default_rng(seed)
+    x, y, _ = make_problem(rng, t, s)
+    got = np.asarray(fit_theta(x, y))
+    want = np.asarray(ref.fit_theta_ref(x, y))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fit_is_nonnegative(seed):
+    rng = np.random.default_rng(seed)
+    x, y, _ = make_problem(rng, 8, 8, noise=5.0)
+    theta = np.asarray(fit_theta(x, y))
+    assert np.all(theta >= 0.0)
+
+
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fit_reduces_loss(seed):
+    """Fitted theta must beat the zero initializer on the training loss."""
+    rng = np.random.default_rng(seed)
+    x, y, _ = make_problem(rng, 4, 12, noise=1.0)
+    theta = fit_theta(x, y)
+    l_fit = float(batched_loss(theta, jnp.asarray(x), jnp.asarray(y)))
+    l_zero = float(batched_loss(jnp.zeros_like(theta), jnp.asarray(x), jnp.asarray(y)))
+    assert l_fit < l_zero
+
+
+def test_fit_predictions_recover_noiseless_targets():
+    """On clean data the fitted model reproduces observed runtimes well."""
+    rng = np.random.default_rng(7)
+    x, y, _ = make_problem(rng, 8, 16)
+    theta = np.asarray(fit_theta(x, y, iters=2000))
+    pred = np.einsum("tsk,tk->ts", x, theta)
+    # relative error on the predictions (not the coefficients: the basis is
+    # collinear, so theta itself is not identifiable — predictions are).
+    rel = np.abs(pred - y) / np.maximum(np.abs(y), 1e-3)
+    assert np.median(rel) < 0.05
+
+
+def test_grad_matches_manual():
+    rng = np.random.default_rng(3)
+    x, y, _ = make_problem(rng, 3, 5)
+    theta = jnp.asarray(rng.uniform(0, 5, size=(3, K)).astype(np.float32))
+    g = np.asarray(batched_grad(theta, jnp.asarray(x), jnp.asarray(y)))
+    gram = np.einsum("tsk,tsl->tkl", x, x)
+    xty = np.einsum("tsk,ts->tk", x, y)
+    manual = np.einsum("tkl,tl->tk", gram, np.asarray(theta)) - xty
+    np.testing.assert_allclose(g, manual, rtol=1e-4, atol=1e-3)
+
+
+def test_zero_padded_samples_are_inert():
+    """Padding rows with zeros must not change the fit (rust relies on it)."""
+    rng = np.random.default_rng(11)
+    x, y, _ = make_problem(rng, 4, 8)
+    xp = np.concatenate([x, np.zeros((4, 8, K), np.float32)], axis=1)
+    yp = np.concatenate([y, np.zeros((4, 8), np.float32)], axis=1)
+    a = np.asarray(fit_theta(x, y))
+    b = np.asarray(fit_theta(xp, yp))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

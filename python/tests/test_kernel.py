@@ -1,0 +1,166 @@
+"""L1 Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes, tile sizes, dtypes and parameter ranges; every
+case asserts allclose between ``predict_grid`` (Pallas, interpret=True) and
+``predict_grid_ref`` (straight jnp).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.predict_grid import predict_grid, vmem_bytes, mxu_flops
+from compile.kernels.ref import K
+
+hypothesis.settings.register_profile(
+    "agora", settings(max_examples=25, deadline=None, derandomize=True)
+)
+hypothesis.settings.load_profile("agora")
+
+
+def make_inputs(rng, t, c):
+    theta = rng.uniform(0.0, 50.0, size=(t, K)).astype(np.float32)
+    phi = rng.uniform(0.0, 4.0, size=(c, K)).astype(np.float32)
+    usl = np.stack(
+        [
+            rng.uniform(1.0, 500.0, size=t),  # gamma: single-node runtime
+            rng.uniform(0.0, 1.0, size=t),  # alpha: contention
+            rng.uniform(0.0, 1.0, size=t),  # beta: coherency
+            rng.uniform(0.0, 1.0, size=t),  # mix
+        ],
+        axis=1,
+    ).astype(np.float32)
+    n = rng.integers(1, 65, size=c).astype(np.float32)
+    return theta, phi, usl, n
+
+
+@given(
+    t=st.sampled_from([1, 2, 3, 8, 16, 32, 64]),
+    c=st.sampled_from([1, 2, 5, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(t, c, seed):
+    rng = np.random.default_rng(seed)
+    theta, phi, usl, n = make_inputs(rng, t, c)
+    got = np.asarray(predict_grid(theta, phi, usl, n))
+    want = np.asarray(ref.predict_grid_ref(theta, phi, usl, n))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    bt=st.sampled_from([1, 2, 7, 16, 32, 128]),
+    bc=st.sampled_from([1, 3, 8, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tile_sizes_do_not_change_result(bt, bc, seed):
+    """Tiling is an implementation detail: every tile shape agrees."""
+    rng = np.random.default_rng(seed)
+    theta, phi, usl, n = make_inputs(rng, 32, 64)
+    base = np.asarray(predict_grid(theta, phi, usl, n))
+    tiled = np.asarray(predict_grid(theta, phi, usl, n, bt=bt, bc=bc))
+    np.testing.assert_allclose(tiled, base, rtol=1e-6, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_accepts_f64_inputs(seed):
+    """Inputs of wider dtype are downcast, not rejected."""
+    rng = np.random.default_rng(seed)
+    theta, phi, usl, n = make_inputs(rng, 8, 16)
+    got = np.asarray(
+        predict_grid(
+            theta.astype(np.float64),
+            phi.astype(np.float64),
+            usl.astype(np.float64),
+            n.astype(np.float64),
+        )
+    )
+    want = np.asarray(ref.predict_grid_ref(theta, phi, usl, n))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got.dtype == np.float32
+
+
+def test_output_floor():
+    """Zero models still predict EPS, never 0/negative/NaN."""
+    theta = np.zeros((4, K), np.float32)
+    phi = np.zeros((8, K), np.float32)
+    usl = np.zeros((4, 4), np.float32)
+    usl[:, 3] = 1.0  # mix=1: pure (zero) Ernest model
+    n = np.ones(8, np.float32)
+    out = np.asarray(predict_grid(theta, phi, usl, n))
+    assert np.all(out == ref.EPS)
+
+
+def test_usl_negative_scaling_shape():
+    """beta > 0 reproduces the paper's Fig. 2 negative-scaling curve:
+    runtime decreases then increases with n."""
+    t = 1
+    usl = np.array([[100.0, 0.05, 0.02, 0.0]], np.float32)  # pure USL
+    theta = np.zeros((t, K), np.float32)
+    ns = np.array([1, 2, 4, 8, 16, 32, 64], np.float32)
+    phi = np.zeros((len(ns), K), np.float32)
+    out = np.asarray(predict_grid(theta, phi, usl, ns))[0]
+    assert out[1] < out[0]  # initial speedup
+    assert out[-1] > out.min()  # eventual slowdown
+
+
+def test_mix_blends_models():
+    rng = np.random.default_rng(0)
+    theta, phi, usl, n = make_inputs(rng, 8, 16)
+    usl_e = usl.copy()
+    usl_e[:, 3] = 1.0
+    usl_u = usl.copy()
+    usl_u[:, 3] = 0.0
+    usl_h = usl.copy()
+    usl_h[:, 3] = 0.5
+    e = np.asarray(predict_grid(theta, phi, usl_e, n))
+    u = np.asarray(predict_grid(theta, phi, usl_u, n))
+    h = np.asarray(predict_grid(theta, phi, usl_h, n))
+    np.testing.assert_allclose(h, np.maximum(0.5 * e + 0.5 * u, ref.EPS), rtol=1e-4, atol=1e-4)
+
+
+def test_rejects_bad_basis_dim():
+    with pytest.raises(ValueError):
+        predict_grid(
+            np.zeros((4, K + 1), np.float32),
+            np.zeros((8, K + 1), np.float32),
+            np.zeros((4, 4), np.float32),
+            np.ones(8, np.float32),
+        )
+
+
+def test_rejects_mismatched_usl():
+    with pytest.raises(ValueError):
+        predict_grid(
+            np.zeros((4, K), np.float32),
+            np.zeros((8, K), np.float32),
+            np.zeros((5, 4), np.float32),
+            np.ones(8, np.float32),
+        )
+
+
+def test_vmem_estimate_within_budget():
+    """Default tiles must fit VMEM with double-buffering headroom."""
+    assert vmem_bytes(128, 128) < 2 * 1024 * 1024
+
+
+def test_mxu_flops_positive():
+    assert mxu_flops(128, 512) == 2 * 128 * 512 * K
+
+
+def test_ernest_basis_matches_rust_convention():
+    """Pin the basis layout — rust/src/predictor/ernest.rs mirrors this."""
+    b = np.asarray(ref.ernest_basis(np.array([4.0]), 1.5, 2.0))[0]
+    np.testing.assert_allclose(
+        b,
+        [1.0, 0.25, np.log2(5.0), 4.0 / 64.0, 1.5, 2.0, 0.0, 0.0],
+        rtol=1e-6,
+    )
+
+
+def test_usl_penalty_is_one_at_n1():
+    p = np.asarray(ref.usl_penalty(jnp.array([1.0]), 0.3, 0.2))
+    np.testing.assert_allclose(p, [1.0], rtol=1e-6)

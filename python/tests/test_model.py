@@ -1,0 +1,110 @@
+"""L2 model composition + AOT lowering round-trip tests."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import hlo_stats, lower_variant, to_hlo_text
+from compile.kernels import ref
+from compile.kernels.ref import K
+
+
+def make_fit_predict_inputs(rng, t, c, s):
+    n_obs = rng.integers(1, 17, size=(t, s)).astype(np.float32)
+    x = np.zeros((t, s, K), np.float32)
+    for i in range(t):
+        x[i] = np.asarray(ref.ernest_basis(n_obs[i], 1.0, 1.0))
+    true_theta = rng.uniform(0.0, 10.0, size=(t, K)).astype(np.float32)
+    y = np.einsum("tsk,tk->ts", x, true_theta)
+    phi = rng.uniform(0.0, 4.0, size=(c, K)).astype(np.float32)
+    usl = np.stack(
+        [
+            rng.uniform(1.0, 100.0, size=t),
+            rng.uniform(0.0, 1.0, size=t),
+            rng.uniform(0.0, 0.3, size=t),
+            rng.uniform(0.0, 1.0, size=t),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    n = rng.integers(1, 33, size=c).astype(np.float32)
+    return x, y, phi, usl, n
+
+
+def test_fit_predict_matches_ref():
+    rng = np.random.default_rng(0)
+    x, y, phi, usl, n = make_fit_predict_inputs(rng, 8, 16, 8)
+    grid, theta = model.fit_predict(x, y, phi, usl, n)
+    grid_r, theta_r = model.fit_predict_ref(x, y, phi, usl, n)
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(grid), np.asarray(grid_r), rtol=1e-4, atol=1e-4)
+
+
+def test_predict_entry_is_tuple():
+    rng = np.random.default_rng(1)
+    _, _, phi, usl, n = make_fit_predict_inputs(rng, 4, 8, 4)
+    theta = rng.uniform(0, 5, size=(4, K)).astype(np.float32)
+    out = model.predict(theta, phi, usl, n)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (4, 8)
+
+
+def test_variants_table():
+    for name, (t, c, s) in model.VARIANTS.items():
+        assert t > 0 and c > 0 and s > 0, name
+    assert "small" in model.VARIANTS and "large" in model.VARIANTS
+
+
+def test_lower_variant_small_produces_hlo_text():
+    arts = lower_variant("small")
+    assert set(arts) == {"predict_small", "fit_predict_small"}
+    for name, (text, entry) in arts.items():
+        assert text.startswith("HloModule"), f"{name} not HLO text"
+        assert "ENTRY" in text
+        # shape sanity: the output grid [T, C] appears in the module
+        t, c = entry["tasks"], entry["configs"]
+        assert f"f32[{t},{c}]" in text
+        ops = hlo_stats(text)
+        assert sum(ops.values()) > 0
+
+
+def test_fit_predict_hlo_contains_rolled_loop():
+    """lax.scan must lower to a while loop, not 300 unrolled iterations —
+    keeps the artifact compact (EXPERIMENTS.md §Perf L2)."""
+    arts = lower_variant("small")
+    text = arts["fit_predict_small"][0]
+    assert "while(" in text or "while (" in text.replace("  ", " ")
+    assert len(text) < 4_000_000
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    proc = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--variants",
+            "small",
+        ],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["k"] == K
+    assert "predict_small" in manifest["artifacts"]
+    for name, entry in manifest["artifacts"].items():
+        assert (out / f"{name}.hlo.txt").exists()

@@ -1,0 +1,114 @@
+//! Ablation (DESIGN.md §4): pricing-model sensitivity — the extension
+//! the paper sketches in §4.2 ("spot instances in AWS have a dynamic
+//! pricing model ... AGORA can be easily modified to include these
+//! details by defining the C_m variable more accurately").
+//!
+//! We co-optimize DAG1+DAG2 at the balanced goal under three cost
+//! models and report how the chosen configurations shift:
+//!   * on-demand (Eq. 6 baseline),
+//!   * spot (30% of on-demand, interruption overhead grows with task
+//!     duration — long tasks get re-run work),
+//!   * per-second billing with a 60 s minimum (billing granularity).
+//!
+//! Expected shape: spot pricing pushes the optimizer toward MORE
+//! parallel (shorter) tasks than on-demand — shorter tasks carry less
+//! expected interruption overhead — while per-second minimums are
+//! irrelevant at these task lengths (all >> 60 s).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use agora::bench;
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::workloads::{dag1, dag2};
+use agora::solver::{Agora, AgoraOptions, Goal, Problem};
+use agora::util::{fmt_cost, fmt_duration, Rng};
+use agora::{LearnedPredictor, Predictor};
+
+fn problem_with(cost_model: CostModel, rng: &mut Rng) -> Problem {
+    let dags = vec![dag1(), dag2()];
+    let space = ConfigSpace::standard();
+    let logs = common::logs_for(&dags, rng);
+    let grid = LearnedPredictor::fit(&logs).predict(&space);
+    Problem::new(
+        &dags,
+        &[0.0, 0.0],
+        Capacity::micro(),
+        space,
+        grid,
+        cost_model,
+    )
+}
+
+fn main() {
+    bench::header(
+        "Ablation: cost models",
+        "co-optimization under on-demand / spot / per-second pricing (balanced goal)",
+    );
+
+    let models: Vec<(&str, CostModel)> = vec![
+        ("on-demand", CostModel::OnDemand),
+        (
+            "spot (30%, 0.5 interrupts/h)",
+            CostModel::Spot {
+                discount: 0.30,
+                interrupt_rate: 0.5,
+            },
+        ),
+        (
+            "per-second (60s min)",
+            CostModel::PerSecond {
+                min_billable_secs: 60.0,
+            },
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    let mut mean_neff = Vec::new();
+    for (name, model) in &models {
+        let mut rng = Rng::new(common::SEED);
+        let p = problem_with(model.clone(), &mut rng);
+        let plan = Agora::new(AgoraOptions {
+            goal: Goal::Balanced,
+            seed: common::SEED,
+            ..Default::default()
+        })
+        .optimize(&p);
+
+        let avg_neff: f64 = plan
+            .schedule
+            .assignment
+            .iter()
+            .map(|&c| p.space.configs[c].n_eff())
+            .sum::<f64>()
+            / p.len() as f64;
+        mean_neff.push((*name, avg_neff));
+        rows.push(vec![
+            name.to_string(),
+            fmt_duration(plan.makespan),
+            fmt_cost(plan.cost),
+            format!("{avg_neff:.1}"),
+            format!("{:?}", plan.overhead),
+        ]);
+    }
+    bench::table(
+        &["pricing model", "makespan", "cost", "mean n_eff", "overhead"],
+        &rows,
+    );
+
+    let od = mean_neff.iter().find(|(n, _)| *n == "on-demand").unwrap().1;
+    let spot = mean_neff
+        .iter()
+        .find(|(n, _)| n.starts_with("spot"))
+        .unwrap()
+        .1;
+    println!(
+        "\nspot pricing shifts mean parallelism {od:.1} -> {spot:.1} n_eff \
+         ({}): shorter tasks carry less expected interruption re-run work",
+        if spot >= od { "more parallel, as expected" } else { "not visible at this seed" }
+    );
+    println!(
+        "per-second minimum billing is inert at these task durations (all >> 60 s) — \
+         the knob matters for sub-minute functions, not Spark stages."
+    );
+}

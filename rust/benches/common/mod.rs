@@ -1,0 +1,75 @@
+//! Shared setup for the paper-reproduction bench targets.
+//!
+//! Every bench regenerates one table/figure of the paper's evaluation.
+//! The substrate is the simulated cluster, so absolute numbers differ
+//! from the authors' AWS testbed; the *shape* (who wins, rough factors,
+//! crossovers) is the reproduction target. Seeds are fixed and printed.
+
+#![allow(dead_code)]
+
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::Dag;
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
+use agora::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Schedule};
+use agora::util::Rng;
+use agora::{LearnedPredictor, Predictor};
+
+pub const SEED: u64 = 2022;
+
+/// Event logs for a set of DAGs (Ernest-style profiling bootstrap).
+pub fn logs_for(dags: &[Dag], rng: &mut Rng) -> Vec<EventLog> {
+    dags.iter()
+        .flat_map(|d| {
+            d.tasks
+                .iter()
+                .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), rng))
+                .collect::<Vec<_>>()
+        })
+        .collect()
+}
+
+/// Standard micro-benchmark problem: learned predictor over the full
+/// config space on the 256-vCPU cluster.
+pub fn learned_problem(dags: Vec<Dag>, rng: &mut Rng) -> (Problem, Vec<Dag>) {
+    let space = ConfigSpace::standard();
+    let logs = logs_for(&dags, rng);
+    let grid = LearnedPredictor::fit(&logs).predict(&space);
+    let releases = vec![0.0; dags.len()];
+    let p = Problem::new(
+        &dags,
+        &releases,
+        Capacity::micro(),
+        space,
+        grid,
+        CostModel::OnDemand,
+    );
+    (p, dags)
+}
+
+/// Execute a schedule with a fixed noise seed (same noise for every
+/// policy so comparisons are apples-to-apples).
+pub fn realize(p: &Problem, dags: &[Dag], s: &Schedule) -> (f64, f64) {
+    let mut rng = Rng::new(0xE0E0);
+    let rep = agora::sim::execute(p, dags, s, &CostModel::OnDemand, &mut rng);
+    (rep.makespan, rep.cost)
+}
+
+/// AGORA plan for a goal. The cost goal carries the paper's observable
+/// framing ("lowest cost with comparable runtime against default
+/// Airflow"): a makespan budget of 3x the baseline keeps the search in
+/// the regime the paper reports.
+pub fn agora_plan(p: &Problem, goal: Goal, base_makespan: f64) -> agora::solver::Plan {
+    let (makespan_budget, cost_budget) = match goal {
+        Goal::Cost => (3.0 * base_makespan, f64::INFINITY),
+        _ => (f64::INFINITY, f64::INFINITY),
+    };
+    Agora::new(AgoraOptions {
+        goal,
+        mode: Mode::CoOptimize,
+        makespan_budget,
+        cost_budget,
+        seed: SEED,
+        ..Default::default()
+    })
+    .optimize(p)
+}

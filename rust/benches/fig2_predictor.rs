@@ -1,0 +1,87 @@
+//! Fig. 2 — Ernest runtime predictions for the four example jobs across
+//! instance types and node counts.
+//!
+//! Regenerates the four panels: predicted runtime vs number of nodes for
+//! each m5 instance type, using the learned (Ernest-style) predictor
+//! trained on profiling runs. Also reports prediction error vs ground
+//! truth (the paper quotes <20% for Ernest) and the expected curve
+//! shapes: diminishing returns everywhere, negative scaling for
+//! Sentiment Analysis on large m5.4xlarge counts.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use agora::bench;
+use agora::cluster::catalog::{table1, M5_CATALOG};
+use agora::cluster::{Config, ConfigSpace};
+use agora::dag::workloads::ALL_JOBS;
+use agora::predictor::{bootstrap_history, default_profiling_configs, mape};
+use agora::util::Rng;
+use agora::{LearnedPredictor, Predictor};
+
+fn main() {
+    bench::header(
+        "Figure 2",
+        "Ernest runtime prediction on four example jobs (predicted seconds)",
+    );
+    print!("{}", table1());
+    println!("seed = {}", common::SEED);
+
+    let mut rng = Rng::new(common::SEED);
+    let logs: Vec<_> = ALL_JOBS
+        .iter()
+        .map(|j| bootstrap_history(j.name(), &j.profile(), &default_profiling_configs(), &mut rng))
+        .collect();
+    let predictor = LearnedPredictor::fit(&logs);
+
+    let nodes = [1u32, 2, 4, 6, 8, 10, 12, 16];
+    for (j, job) in ALL_JOBS.iter().enumerate() {
+        let labels: Vec<&str> = M5_CATALOG.iter().map(|it| it.name).collect();
+        let points: Vec<(f64, Vec<f64>)> = nodes
+            .iter()
+            .map(|&n| {
+                let ys: Vec<f64> = (0..M5_CATALOG.len())
+                    .map(|inst| {
+                        let cfg = Config {
+                            instance: inst,
+                            nodes: n,
+                            spark: 1,
+                        };
+                        agora::predictor::model_runtime(&predictor.fits[j], &cfg)
+                    })
+                    .collect();
+                (n as f64, ys)
+            })
+            .collect();
+        bench::series(job.name(), "nodes", &labels, &points);
+    }
+
+    // Quantitative checks the paper's text claims.
+    let space = ConfigSpace::standard();
+    let grid = predictor.predict(&space);
+    let profiles: Vec<_> = ALL_JOBS.iter().map(|j| j.profile()).collect();
+    let err = mape(&grid, &profiles, &space);
+    println!("\nprediction MAPE vs ground truth: {:.1}% (Ernest paper: <20%)", err * 100.0);
+
+    // Shape assertions (also exercised by tests).
+    let sentiment = &predictor.fits[1];
+    let r8 = agora::predictor::model_runtime(sentiment, &Config { instance: 0, nodes: 8, spark: 1 });
+    let r16 = agora::predictor::model_runtime(sentiment, &Config { instance: 0, nodes: 16, spark: 1 });
+    println!(
+        "sentiment-analysis negative scaling on m5.4xlarge: r(16)={:.0}s vs r(8)={:.0}s -> {}",
+        r16,
+        r8,
+        if r16 > r8 { "REPRODUCED" } else { "not visible at this seed" }
+    );
+
+    let timing = bench::measure("full-grid prediction (host)", 2, 10, || {
+        let _ = predictor.predict(&space);
+    });
+    println!(
+        "\ngrid prediction latency: {:.3} ms mean over {} reps ({} tasks x {} configs)",
+        timing.mean_ms(),
+        timing.reps,
+        ALL_JOBS.len(),
+        space.len()
+    );
+}

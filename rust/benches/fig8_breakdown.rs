@@ -1,0 +1,69 @@
+//! Fig. 8 — performance breakdown: Predictor-only, Scheduler-only,
+//! AGORA-separate (both, independently), and full AGORA co-optimization,
+//! on DAG1 and DAG2 at the balanced goal.
+//!
+//! Paper's findings to reproduce:
+//!   * DAG1: Predictor contributes more than Scheduler; DAG2: opposite
+//!     (more parallelism for the scheduler to exploit).
+//!   * AGORA-separate can be WORSE than single-component modes.
+//!   * Full co-optimization beats separate on both axes
+//!     (paper: 4.0% faster / 44.4% cheaper on DAG1; 33.8% / 49.8% on DAG2).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use agora::baselines::{AirflowScheduler, Scheduler};
+use agora::bench;
+use agora::dag::workloads::{dag1, dag2};
+use agora::solver::{Agora, AgoraOptions, Goal, Mode};
+use agora::util::{fmt_cost, fmt_duration, Rng};
+
+fn main() {
+    bench::header(
+        "Figure 8",
+        "AGORA component breakdown at the balanced goal (realized on the simulator)",
+    );
+
+    for (dag_name, dag_fn) in [("DAG1", dag1 as fn() -> agora::Dag), ("DAG2", dag2)] {
+        let mut rng = Rng::new(common::SEED);
+        let (p, dags) = common::learned_problem(vec![dag_fn()], &mut rng);
+        let airflow = AirflowScheduler::default().schedule(&p);
+        let (air_m, air_c) = common::realize(&p, &dags, &airflow);
+
+        println!("\n-- {dag_name} (airflow anchor: {} / {}) --", fmt_duration(air_m), fmt_cost(air_c));
+        let mut rows = Vec::new();
+        let mut results = Vec::new();
+        for mode in [
+            Mode::PredictorOnly,
+            Mode::SchedulerOnly,
+            Mode::Separate,
+            Mode::CoOptimize,
+        ] {
+            let plan = Agora::new(AgoraOptions {
+                goal: Goal::Balanced,
+                mode,
+                seed: common::SEED,
+                ..Default::default()
+            })
+            .optimize(&p);
+            let (m, c) = common::realize(&p, &dags, &plan.schedule);
+            results.push((mode, m, c));
+            rows.push(vec![
+                mode.name().to_string(),
+                fmt_duration(m),
+                fmt_cost(c),
+                bench::pct(air_m, m),
+                bench::pct(air_c, c),
+            ]);
+        }
+        bench::table(&["mode", "runtime", "cost", "d-runtime", "d-cost"], &rows);
+
+        let sep = results.iter().find(|r| r.0 == Mode::Separate).unwrap();
+        let co = results.iter().find(|r| r.0 == Mode::CoOptimize).unwrap();
+        println!(
+            "co-optimize vs separate: {} runtime, {} cost (paper: DAG1 -4.0%/-44.4%, DAG2 -33.8%/-49.8%)",
+            bench::pct(sep.1, co.1),
+            bench::pct(sep.2, co.2)
+        );
+    }
+}

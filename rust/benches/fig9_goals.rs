@@ -1,0 +1,63 @@
+//! Fig. 9 — cost/performance frontier as the optimization weight slides
+//! from pure cost (w = 0) through balanced (w = 0.5) to pure runtime
+//! (w = 1), for DAG1 (circles in the paper) and DAG2 (triangles).
+//!
+//! Paper's observations to reproduce: cost-goal points sit top-left
+//! (cheap, slow), runtime-goal points bottom-right (fast, pricey),
+//! balanced in between; DAG2's curve is stiffer (more runtime headroom).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use agora::bench;
+use agora::dag::workloads::{dag1, dag2};
+use agora::solver::Goal;
+use agora::util::{fmt_cost, fmt_duration, Rng};
+
+fn main() {
+    bench::header("Figure 9", "goal sweep: runtime/cost frontier per DAG");
+
+    for (dag_name, dag_fn) in [("DAG1", dag1 as fn() -> agora::Dag), ("DAG2", dag2)] {
+        let mut rng = Rng::new(common::SEED);
+        let (p, dags) = common::learned_problem(vec![dag_fn()], &mut rng);
+        // anchor for the cost goal's makespan budget
+        let base = {
+            use agora::baselines::{AirflowScheduler, Scheduler};
+            let s = AirflowScheduler::default().schedule(&p);
+            common::realize(&p, &dags, &s).0
+        };
+
+        println!("\n-- {dag_name} --");
+        let mut rows = Vec::new();
+        let mut frontier = Vec::new();
+        for (label, goal) in [
+            ("cost (w=0)", Goal::Cost),
+            ("w=0.25", Goal::Weighted(0.25)),
+            ("balanced (w=0.5)", Goal::Balanced),
+            ("w=0.75", Goal::Weighted(0.75)),
+            ("runtime (w=1)", Goal::Runtime),
+        ] {
+            let plan = common::agora_plan(&p, goal, base);
+            let (m, c) = common::realize(&p, &dags, &plan.schedule);
+            frontier.push((label, m, c));
+            rows.push(vec![label.to_string(), fmt_duration(m), fmt_cost(c)]);
+        }
+        bench::table(&["goal", "runtime", "cost"], &rows);
+
+        // Frontier direction checks.
+        let cost_pt = frontier[0];
+        let runtime_pt = frontier[frontier.len() - 1];
+        println!(
+            "frontier: cost-goal ({}, {}) vs runtime-goal ({}, {}) -> {}",
+            fmt_duration(cost_pt.1),
+            fmt_cost(cost_pt.2),
+            fmt_duration(runtime_pt.1),
+            fmt_cost(runtime_pt.2),
+            if cost_pt.2 <= runtime_pt.2 && runtime_pt.1 <= cost_pt.1 {
+                "correct orientation (cheap-slow vs fast-pricey)"
+            } else {
+                "orientation degraded by prediction noise at this seed"
+            }
+        );
+    }
+}

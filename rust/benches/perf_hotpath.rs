@@ -1,0 +1,118 @@
+//! §Perf — hot-path microbenchmarks for the L3 coordinator.
+//!
+//! Not a paper figure: this target measures the pieces the optimizer
+//! spends its time in, and is the measurement harness for the
+//! performance pass recorded in EXPERIMENTS.md §Perf:
+//!   * serial SGS placement (the innermost loop),
+//!   * one CP solve at annealing limits,
+//!   * one full annealing iteration (propose + solve + accept),
+//!   * full co-optimization of DAG1+DAG2,
+//!   * host-predictor grid construction,
+//!   * PJRT predictor grid construction (when artifacts are present).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use agora::bench;
+use agora::dag::workloads::{dag1, dag2};
+use agora::runtime::{ArtifactManifest, Engine, PjrtPredictor};
+use agora::solver::cp::{CpSolver, Limits};
+use agora::solver::sgs;
+use agora::solver::{anneal, Agora, AgoraOptions, AnnealParams, Goal, Objective};
+use agora::util::Rng;
+use agora::{LearnedPredictor, Predictor};
+
+fn main() {
+    bench::header("Perf", "L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf harness)");
+
+    let mut rng = Rng::new(common::SEED);
+    let (p, dags) = common::learned_problem(vec![dag1(), dag2()], &mut rng);
+    let c0 = Agora::default_config(&p.space);
+    let assignment = vec![c0; p.len()];
+    let _ = &dags;
+
+    let mut results = Vec::new();
+
+    let prio = sgs::priorities(&p, &assignment, sgs::Rule::CriticalPath);
+    results.push(bench::measure("serial SGS (16 tasks)", 50, 500, || {
+        let s = sgs::serial_sgs(&p, &assignment, &prio);
+        std::hint::black_box(s.start[0]);
+    }));
+
+    let solver = CpSolver::new(Limits::inner_loop());
+    results.push(bench::measure("CP solve @ inner-loop limits", 10, 100, || {
+        let (s, _) = solver.solve(&p, &assignment);
+        std::hint::black_box(s.start[0]);
+    }));
+
+    let obj = Objective::new(Goal::Balanced, 3000.0, 8.0);
+    results.push(bench::measure("anneal 50 iterations", 2, 10, || {
+        let mut rng = Rng::new(7);
+        let r = anneal(
+            &p,
+            &obj,
+            &assignment,
+            &AnnealParams {
+                max_iters: 50,
+                patience: 1000,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        std::hint::black_box(r.energy);
+    }));
+
+    results.push(bench::measure("full co-optimize DAG1+DAG2", 1, 3, || {
+        let plan = Agora::new(AgoraOptions {
+            seed: 1,
+            ..Default::default()
+        })
+        .optimize(&p);
+        std::hint::black_box(plan.makespan);
+    }));
+
+    // Predictor paths.
+    let logs = common::logs_for(&dags, &mut Rng::new(3));
+    let space = agora::cluster::ConfigSpace::standard();
+    results.push(bench::measure("host predictor fit+grid (16x96)", 5, 50, || {
+        let pred = LearnedPredictor::fit(&logs);
+        let g = pred.predict(&space);
+        std::hint::black_box(g.get(0, 0));
+    }));
+
+    let artifacts = ArtifactManifest::default_dir();
+    if artifacts.join("manifest.json").exists() {
+        let engine = Engine::new(&artifacts).expect("artifacts load");
+        let pjrt = PjrtPredictor::new(&engine);
+        let fits: Vec<_> = logs.iter().map(LearnedPredictor::fit_task).collect();
+        // warm the executable cache before timing
+        let _ = pjrt.predict_fitted(&fits, &space).unwrap();
+        results.push(bench::measure("PJRT predictor grid (cached exe)", 3, 30, || {
+            let g = pjrt.predict_fitted(&fits, &space).unwrap();
+            std::hint::black_box(g.get(0, 0));
+        }));
+        results.push(bench::measure("PJRT fit_predict (fused artifact)", 3, 30, || {
+            let (g, _) = pjrt.fit_predict(&logs, &space).unwrap();
+            std::hint::black_box(g.get(0, 0));
+        }));
+    } else {
+        println!("(artifacts/ missing: run `make artifacts` for the PJRT rows)");
+    }
+
+    println!();
+    bench::table(
+        &["hot path", "mean", "min", "max", "reps"],
+        &results
+            .iter()
+            .map(|m| {
+                vec![
+                    m.name.clone(),
+                    format!("{:.3} ms", m.mean_ms()),
+                    format!("{:.3} ms", m.min.as_secs_f64() * 1e3),
+                    format!("{:.3} ms", m.max.as_secs_f64() * 1e3),
+                    m.reps.to_string(),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}

@@ -1,0 +1,129 @@
+//! Default Apache Airflow scheduling (the paper's industry baseline).
+//!
+//! "Airflow internally calculates job priority weights by how many
+//! children a job has in a DAG and schedules jobs accordingly. FIFO
+//! heuristic is applied when multiple jobs have the same topological
+//! order." No resource optimization: every task keeps the user's default
+//! configuration (the expert-chosen Spark setup of §5).
+
+use super::Scheduler;
+use crate::solver::cooptimizer::Agora;
+use crate::solver::sgs::{serial_sgs, Timeline};
+use crate::solver::{Problem, Schedule};
+
+#[derive(Debug, Clone, Default)]
+pub struct AirflowScheduler {
+    /// Override the default config index (None = 4 x m5.4xlarge balanced).
+    pub config: Option<usize>,
+}
+
+impl AirflowScheduler {
+    /// Airflow priority weight: 1 + number of transitive downstream tasks.
+    pub fn priority_weights(p: &Problem) -> Vec<f64> {
+        let order = p.topo_order();
+        let mut weight = vec![1.0f64; p.len()];
+        for &u in order.iter().rev() {
+            weight[u] = 1.0
+                + p.succs(u)
+                    .iter()
+                    .map(|&v| weight[v])
+                    .sum::<f64>();
+        }
+        weight
+    }
+}
+
+impl Scheduler for AirflowScheduler {
+    fn name(&self) -> &'static str {
+        "airflow"
+    }
+
+    fn schedule(&self, p: &Problem) -> Schedule {
+        let cfg = self.config.unwrap_or_else(|| Agora::default_config(&p.space));
+        let assignment = vec![cfg; p.len()];
+        // Priority weight with FIFO tie-break (task index): encode as
+        // weight - epsilon * index so earlier-submitted tasks win ties.
+        let weights = Self::priority_weights(p);
+        let prio: Vec<f64> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| w - 1e-9 * i as f64)
+            .collect();
+        serial_sgs(p, &assignment, &prio)
+    }
+}
+
+/// Dispatch-time visibility helper used by tests: which task would
+/// Airflow launch first among a ready set.
+pub fn first_dispatched(p: &Problem, ready: &[usize]) -> usize {
+    let w = AirflowScheduler::priority_weights(p);
+    *ready
+        .iter()
+        .max_by(|&&a, &&b| {
+            w[a].partial_cmp(&w[b])
+                .unwrap()
+                .then(b.cmp(&a)) // FIFO: lower index wins ties
+        })
+        .expect("non-empty ready set")
+}
+
+// Re-export for the trait object in mod.rs tests.
+#[allow(unused_imports)]
+use Timeline as _;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, fig1_dag};
+    use crate::predictor::OraclePredictor;
+    use crate::Predictor;
+
+    fn problem(dag: crate::Dag) -> Problem {
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dag.tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &[dag],
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn priority_counts_transitive_children() {
+        let p = problem(dag1());
+        let w = AirflowScheduler::priority_weights(&p);
+        // root (task 0) dominates everything
+        assert!(w[0] > w[1]);
+        // sinks have weight 1
+        assert_eq!(w[6], 1.0);
+        assert_eq!(w[7], 1.0);
+    }
+
+    #[test]
+    fn produces_valid_schedule_with_default_configs() {
+        let p = problem(fig1_dag());
+        let s = AirflowScheduler::default().schedule(&p);
+        s.validate(&p).unwrap();
+        let def = Agora::default_config(&p.space);
+        assert!(s.assignment.iter().all(|&c| c == def));
+    }
+
+    #[test]
+    fn fifo_breaks_ties() {
+        let p = problem(fig1_dag());
+        // tasks 1..3 are all sinks with equal weight -> FIFO picks 1
+        assert_eq!(first_dispatched(&p, &[2, 1, 3]), 1);
+    }
+
+    #[test]
+    fn higher_priority_dispatches_first() {
+        let p = problem(dag1());
+        // root vs a sink
+        assert_eq!(first_dispatched(&p, &[7, 0]), 0);
+    }
+}

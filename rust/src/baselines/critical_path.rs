@@ -1,0 +1,103 @@
+//! Critical-Path (CP) list scheduling [Graham 1969] — the paper's
+//! representative heuristic scheduler, combined with Ernest VM selection
+//! ("Ernest+CP" in Fig. 7).
+
+use super::ernest::{ernest_selection, ErnestGoal};
+use super::Scheduler;
+use crate::solver::sgs::{priorities, serial_sgs, Rule};
+use crate::solver::{Problem, Schedule};
+
+#[derive(Debug, Clone)]
+pub struct CriticalPathScheduler {
+    /// How per-task configs are chosen before scheduling (the "separate"
+    /// two-step pipeline the paper critiques).
+    pub ernest_goal: Option<ErnestGoal>,
+    /// Fixed assignment override (scheduler-only ablations).
+    pub assignment: Option<Vec<usize>>,
+}
+
+impl CriticalPathScheduler {
+    pub fn with_ernest(goal: ErnestGoal) -> Self {
+        CriticalPathScheduler {
+            ernest_goal: Some(goal),
+            assignment: None,
+        }
+    }
+
+    pub fn with_assignment(assignment: Vec<usize>) -> Self {
+        CriticalPathScheduler {
+            ernest_goal: None,
+            assignment: Some(assignment),
+        }
+    }
+}
+
+impl Scheduler for CriticalPathScheduler {
+    fn name(&self) -> &'static str {
+        "ernest+cp"
+    }
+
+    fn schedule(&self, p: &Problem) -> Schedule {
+        let assignment = match (&self.assignment, self.ernest_goal) {
+            (Some(a), _) => a.clone(),
+            (None, Some(goal)) => ernest_selection(p, goal),
+            (None, None) => {
+                let c = crate::solver::cooptimizer::Agora::default_config(&p.space);
+                vec![c; p.len()]
+            }
+        };
+        let prio = priorities(p, &assignment, Rule::CriticalPath);
+        serial_sgs(p, &assignment, &prio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::solver::Goal;
+    use crate::Predictor;
+
+    fn problem(dag: crate::Dag) -> Problem {
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dag.tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &[dag],
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn valid_on_both_evaluation_dags() {
+        for dag in [dag1(), dag2()] {
+            let p = problem(dag);
+            let s = CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p);
+            s.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn graham_bound_holds() {
+        // List scheduling is within 2x of the resource LB + CP LB
+        // (loose Graham-style sanity bound).
+        let p = problem(dag2());
+        let s = CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Runtime)).schedule(&p);
+        let lb = p.lower_bound(&s.assignment);
+        assert!(s.makespan(&p) <= 2.5 * lb + 1e-6);
+    }
+
+    #[test]
+    fn fixed_assignment_is_respected() {
+        let p = problem(dag1());
+        let a = vec![p.feasible[3]; p.len()];
+        let s = CriticalPathScheduler::with_assignment(a.clone()).schedule(&p);
+        assert_eq!(s.assignment, a);
+    }
+}

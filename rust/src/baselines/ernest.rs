@@ -1,0 +1,135 @@
+//! Ernest-style per-task VM selection (§2.1, §5.1).
+//!
+//! Ernest predicts each job's runtime across machine counts and picks the
+//! configuration closest to the goal — *per task, in isolation*: it sees
+//! neither the DAG structure nor cluster contention, which is exactly the
+//! gap the paper's motivational study exposes. Our implementation selects
+//! from the Ernest slice of the config space (instance x nodes, default
+//! Spark preset — Ernest does not tune application parameters).
+
+use crate::solver::{Goal, Problem};
+
+/// Ernest's optimization target for each task.
+#[derive(Debug, Clone, Copy)]
+pub struct ErnestGoal(pub Goal);
+
+impl From<Goal> for ErnestGoal {
+    fn from(g: Goal) -> Self {
+        ErnestGoal(g)
+    }
+}
+
+/// Pick each task's configuration in isolation (no DAG/cluster view).
+/// Restricted to balanced-Spark configs: Ernest selects VMs, not Spark
+/// parameters.
+pub fn ernest_selection(p: &Problem, goal: ErnestGoal) -> Vec<usize> {
+    let w = goal.0.weight();
+    let candidates: Vec<usize> = p
+        .feasible
+        .iter()
+        .copied()
+        .filter(|&c| p.space.configs[c].spark == 1)
+        .collect();
+    let candidates = if candidates.is_empty() {
+        p.feasible.clone()
+    } else {
+        candidates
+    };
+
+    (0..p.len())
+        .map(|t| {
+            let min_d = candidates
+                .iter()
+                .map(|&c| p.duration(t, c))
+                .fold(f64::INFINITY, f64::min)
+                .max(1e-9);
+            let min_cost = candidates
+                .iter()
+                .map(|&c| p.cost(t, c))
+                .fold(f64::INFINITY, f64::min)
+                .max(1e-9);
+            let score =
+                |c: usize| w * p.duration(t, c) / min_d + (1.0 - w) * p.cost(t, c) / min_cost;
+            *candidates
+                .iter()
+                .min_by(|&&a, &&b| score(a).partial_cmp(&score(b)).unwrap())
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::fig1_dag;
+    use crate::predictor::OraclePredictor;
+    use crate::Predictor;
+
+    fn problem() -> Problem {
+        let dag = fig1_dag();
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dag.tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &[dag],
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn runtime_goal_picks_fastest_per_task() {
+        let p = problem();
+        let sel = ernest_selection(&p, ErnestGoal(Goal::Runtime));
+        for (t, &c) in sel.iter().enumerate() {
+            let d = p.duration(t, c);
+            for &other in &p.feasible {
+                if p.space.configs[other].spark == 1 {
+                    assert!(
+                        d <= p.duration(t, other) + 1e-9,
+                        "task {t}: picked {d}, but config {other} gives {}",
+                        p.duration(t, other)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cost_goal_picks_cheapest_per_task() {
+        let p = problem();
+        let sel = ernest_selection(&p, ErnestGoal(Goal::Cost));
+        for (t, &c) in sel.iter().enumerate() {
+            let cost = p.cost(t, c);
+            for &other in &p.feasible {
+                if p.space.configs[other].spark == 1 {
+                    assert!(cost <= p.cost(t, other) + 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selection_avoids_spark_tuning() {
+        let p = problem();
+        for goal in [Goal::Cost, Goal::Balanced, Goal::Runtime] {
+            let sel = ernest_selection(&p, ErnestGoal(goal));
+            assert!(sel.iter().all(|&c| p.space.configs[c].spark == 1));
+        }
+    }
+
+    #[test]
+    fn runtime_goal_uses_more_resources_than_cost_goal() {
+        let p = problem();
+        let fast = ernest_selection(&p, ErnestGoal(Goal::Runtime));
+        let cheap = ernest_selection(&p, ErnestGoal(Goal::Cost));
+        let vcpus = |sel: &[usize]| -> f64 {
+            sel.iter().map(|&c| p.space.configs[c].vcpus()).sum()
+        };
+        assert!(vcpus(&fast) >= vcpus(&cheap));
+    }
+}

@@ -1,0 +1,73 @@
+//! Baseline schedulers from the paper's evaluation (§5.1): default
+//! Airflow, Ernest VM selection combined with Critical-Path and MILP
+//! scheduling, and Stratus cost-aware packing.
+//!
+//! Every baseline implements [`Scheduler`] over the same extended-RCPSP
+//! [`Problem`] AGORA solves, so results are directly comparable and all
+//! schedules pass the same feasibility validation.
+
+pub mod airflow;
+pub mod critical_path;
+pub mod ernest;
+pub mod milp;
+pub mod stratus;
+
+use crate::solver::{Problem, Schedule};
+
+/// A scheduling policy producing a complete (assignment, start-times)
+/// solution for a problem.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+    fn schedule(&self, p: &Problem) -> Schedule;
+}
+
+pub use airflow::AirflowScheduler;
+pub use critical_path::CriticalPathScheduler;
+pub use ernest::{ernest_selection, ErnestGoal};
+pub use milp::MilpScheduler;
+pub use stratus::StratusScheduler;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::solver::Goal;
+    use crate::Predictor;
+
+    fn problem() -> Problem {
+        let dags = vec![dag1(), dag2()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &dags,
+            &[0.0, 0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn every_baseline_produces_valid_schedules() {
+        let p = problem();
+        let baselines: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(AirflowScheduler::default()),
+            Box::new(CriticalPathScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
+            Box::new(MilpScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
+            Box::new(StratusScheduler::default()),
+        ];
+        for b in baselines {
+            let s = b.schedule(&p);
+            s.validate(&p)
+                .unwrap_or_else(|e| panic!("{}: {e}", b.name()));
+            assert!(s.makespan(&p) > 0.0, "{}", b.name());
+        }
+    }
+}

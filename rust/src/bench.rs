@@ -1,0 +1,131 @@
+//! Bench-harness utilities (criterion is unavailable offline): wall-clock
+//! measurement with warmup + repetitions, and paper-style table/series
+//! printers shared by every `rust/benches/*.rs` target.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of a measured closure.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub reps: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Measure a closure: `warmup` unmeasured runs, then `reps` measured.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    let total: Duration = samples.iter().sum();
+    Measurement {
+        name: name.to_string(),
+        reps: samples.len(),
+        mean: total / samples.len() as u32,
+        min: samples.iter().min().copied().unwrap_or_default(),
+        max: samples.iter().max().copied().unwrap_or_default(),
+    }
+}
+
+/// Paper-style experiment header with reproduction context.
+pub fn header(experiment: &str, description: &str) {
+    println!("\n{}", "=".repeat(78));
+    println!("{experiment}: {description}");
+    println!("{}", "=".repeat(78));
+}
+
+/// Fixed-width table printer. `rows` are already formatted cells.
+pub fn table(columns: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = columns.iter().map(|c| c.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, cell) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<width$}  ", cell, width = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&columns.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Print an x/y series (one figure panel) as aligned columns.
+pub fn series(title: &str, x_label: &str, y_labels: &[&str], points: &[(f64, Vec<f64>)]) {
+    println!("\n-- {title} --");
+    let mut cols = vec![x_label];
+    cols.extend_from_slice(y_labels);
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|(x, ys)| {
+            let mut row = vec![format!("{x:.1}")];
+            row.extend(ys.iter().map(|y| format!("{y:.3}")));
+            row
+        })
+        .collect();
+    table(&cols, &rows);
+}
+
+/// Relative change formatted as the paper quotes it ("45% faster").
+pub fn pct(base: f64, new: f64) -> String {
+    if base <= 0.0 {
+        return "n/a".into();
+    }
+    let imp = (base - new) / base * 100.0;
+    if imp >= 0.0 {
+        format!("-{imp:.1}%")
+    } else {
+        format!("+{:.1}%", -imp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let m = measure("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(m.reps, 5);
+        assert!(m.min <= m.mean && m.mean <= m.max);
+    }
+
+    #[test]
+    fn pct_formats_direction() {
+        assert_eq!(pct(100.0, 55.0), "-45.0%");
+        assert_eq!(pct(100.0, 130.0), "+30.0%");
+        assert_eq!(pct(0.0, 1.0), "n/a");
+    }
+
+    #[test]
+    fn table_does_not_panic_on_ragged_rows() {
+        table(
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+}

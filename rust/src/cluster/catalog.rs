@@ -1,0 +1,118 @@
+//! AWS instance catalog — paper Table 1 (prices valid 2022-01-27).
+
+/// One purchasable VM instance type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub memory_gb: u32,
+    /// On-demand price in $ per hour.
+    pub hourly_cost: f64,
+    /// Relative per-vCPU throughput vs the m5 baseline (1.0 for the m5
+    /// family; extension point for other families / spot degradation).
+    pub speed_factor: f64,
+}
+
+impl InstanceType {
+    /// $ per vCPU-hour — constant within the m5 family, which is exactly
+    /// why the co-optimization is about *granularity* (fewer, larger nodes
+    /// trade contention against packing flexibility), not raw unit price.
+    pub fn cost_per_vcpu_hour(&self) -> f64 {
+        self.hourly_cost / self.vcpus as f64
+    }
+
+    pub fn memory_per_vcpu(&self) -> f64 {
+        self.memory_gb as f64 / self.vcpus as f64
+    }
+}
+
+/// Table 1 of the paper.
+pub const M5_CATALOG: &[InstanceType] = &[
+    InstanceType {
+        name: "m5.4xlarge",
+        vcpus: 16,
+        memory_gb: 64,
+        hourly_cost: 0.768,
+        speed_factor: 1.0,
+    },
+    InstanceType {
+        name: "m5.8xlarge",
+        vcpus: 32,
+        memory_gb: 128,
+        hourly_cost: 1.536,
+        speed_factor: 1.0,
+    },
+    InstanceType {
+        name: "m5.12xlarge",
+        vcpus: 48,
+        memory_gb: 192,
+        hourly_cost: 2.304,
+        speed_factor: 1.0,
+    },
+    InstanceType {
+        name: "m5.16xlarge",
+        vcpus: 64,
+        memory_gb: 256,
+        hourly_cost: 3.072,
+        speed_factor: 1.0,
+    },
+];
+
+/// Look up an instance type by name.
+pub fn by_name(name: &str) -> Option<&'static InstanceType> {
+    M5_CATALOG.iter().find(|it| it.name == name)
+}
+
+/// Render Table 1 (used as the header of every bench report).
+pub fn table1() -> String {
+    let mut s = String::from(
+        "Table 1. Selected instance types from AWS (prices of 2022-01-27)\n\
+         Instance       vCPUs  Memory  Cost ($/h)\n",
+    );
+    for it in M5_CATALOG {
+        s.push_str(&format!(
+            "{:<14} {:>5}  {:>6}  {:>9.3}\n",
+            it.name, it.vcpus, it.memory_gb, it.hourly_cost
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table1() {
+        assert_eq!(M5_CATALOG.len(), 4);
+        let m54 = by_name("m5.4xlarge").unwrap();
+        assert_eq!(m54.vcpus, 16);
+        assert_eq!(m54.memory_gb, 64);
+        assert!((m54.hourly_cost - 0.768).abs() < 1e-12);
+        let m516 = by_name("m5.16xlarge").unwrap();
+        assert_eq!(m516.vcpus, 64);
+        assert!((m516.hourly_cost - 3.072).abs() < 1e-12);
+    }
+
+    #[test]
+    fn m5_family_has_uniform_unit_price() {
+        let base = M5_CATALOG[0].cost_per_vcpu_hour();
+        for it in M5_CATALOG {
+            assert!((it.cost_per_vcpu_hour() - base).abs() < 1e-9, "{}", it.name);
+            assert!((it.memory_per_vcpu() - 4.0).abs() < 1e-9, "{}", it.name);
+        }
+    }
+
+    #[test]
+    fn unknown_instance_is_none() {
+        assert!(by_name("p4d.24xlarge").is_none());
+    }
+
+    #[test]
+    fn table1_renders_all_rows() {
+        let t = table1();
+        for it in M5_CATALOG {
+            assert!(t.contains(it.name));
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Candidate resource configurations — the decision variables of the
+//! co-optimization (instance type x node count x Spark parameters).
+
+use super::catalog::{InstanceType, M5_CATALOG};
+
+/// Spark-level parameters. The paper found these "directly decide the
+/// resource usage per task (e.g. executor memory) and have a big impact on
+/// the runtime"; we model the three presets a Spark expert would reach
+/// for, following the paper's experimental setup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparkParams {
+    pub name: &'static str,
+    /// Executors per node (scales task-level parallelism granularity).
+    pub executors_per_node: u32,
+    /// Cores handed to each executor.
+    pub cores_per_executor: u32,
+    /// Fraction of node memory usable by executors (rest is overhead).
+    pub memory_fraction: f64,
+    /// Relative throughput multiplier: fat executors favour shuffle-heavy
+    /// jobs, thin executors favour embarrassingly parallel ones. The
+    /// per-task affinity in `dag::TaskProfile` selects which preset wins.
+    pub parallel_bias: f64,
+}
+
+/// Three expert presets: fat / balanced / thin executors.
+pub const SPARK_PRESETS: &[SparkParams] = &[
+    SparkParams {
+        name: "fat",
+        executors_per_node: 1,
+        cores_per_executor: 16,
+        memory_fraction: 0.90,
+        parallel_bias: -1.0,
+    },
+    SparkParams {
+        name: "balanced",
+        executors_per_node: 4,
+        cores_per_executor: 4,
+        memory_fraction: 0.85,
+        parallel_bias: 0.0,
+    },
+    SparkParams {
+        name: "thin",
+        executors_per_node: 8,
+        cores_per_executor: 2,
+        memory_fraction: 0.80,
+        parallel_bias: 1.0,
+    },
+];
+
+/// Node-count ladder studied in the paper's Fig. 2 (x-axes run 1..16).
+pub const NODE_LADDER: &[u32] = &[1, 2, 4, 6, 8, 10, 12, 16];
+
+/// One fully specified resource configuration for a task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Config {
+    /// Index into the instance catalog.
+    pub instance: usize,
+    /// Number of VM nodes.
+    pub nodes: u32,
+    /// Index into `SPARK_PRESETS`.
+    pub spark: usize,
+}
+
+impl Config {
+    pub fn instance_type(&self) -> &'static InstanceType {
+        &M5_CATALOG[self.instance]
+    }
+
+    pub fn spark_params(&self) -> &'static SparkParams {
+        &SPARK_PRESETS[self.spark]
+    }
+
+    /// Total vCPU demand while the task runs (whole nodes are billed).
+    pub fn vcpus(&self) -> f64 {
+        (self.nodes * self.instance_type().vcpus) as f64
+    }
+
+    /// Total memory demand in GiB.
+    pub fn memory_gb(&self) -> f64 {
+        (self.nodes * self.instance_type().memory_gb) as f64
+    }
+
+    /// Effective parallelism in units of m5.4xlarge-equivalent nodes —
+    /// the `n` fed to the USL / Ernest basis (both sides of the stack use
+    /// this same definition; see python/compile/kernels/ref.py).
+    pub fn n_eff(&self) -> f64 {
+        self.vcpus() / 16.0
+    }
+
+    /// $ per hour while the task holds this configuration.
+    pub fn hourly_cost(&self) -> f64 {
+        self.nodes as f64 * self.instance_type().hourly_cost
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} x {} ({})",
+            self.nodes,
+            self.instance_type().name,
+            self.spark_params().name
+        )
+    }
+}
+
+/// The enumerated candidate set handed to the optimizer and the predictor.
+#[derive(Debug, Clone)]
+pub struct ConfigSpace {
+    pub configs: Vec<Config>,
+}
+
+impl ConfigSpace {
+    /// Full space: every instance type x node ladder x Spark preset.
+    pub fn standard() -> Self {
+        Self::with_ladder(NODE_LADDER)
+    }
+
+    /// Restricted space used by brute-force experiments (Fig. 3/4): a
+    /// smaller node ladder keeps exhaustive search tractable, exactly as
+    /// the paper's motivational study restricts itself to Table 1.
+    pub fn with_ladder(ladder: &[u32]) -> Self {
+        let mut configs = Vec::new();
+        for instance in 0..M5_CATALOG.len() {
+            for &nodes in ladder {
+                for spark in 0..SPARK_PRESETS.len() {
+                    configs.push(Config {
+                        instance,
+                        nodes,
+                        spark,
+                    });
+                }
+            }
+        }
+        ConfigSpace { configs }
+    }
+
+    /// Single-instance-type, balanced-spark slice (Ernest's view: it only
+    /// picks node counts per instance type).
+    pub fn ernest_slice() -> Self {
+        let mut configs = Vec::new();
+        for instance in 0..M5_CATALOG.len() {
+            for &nodes in NODE_LADDER {
+                configs.push(Config {
+                    instance,
+                    nodes,
+                    spark: 1,
+                });
+            }
+        }
+        ConfigSpace { configs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    /// Configs whose demand fits within a capacity (infeasible candidates
+    /// are excluded before optimization rather than penalized inside it).
+    pub fn feasible(&self, cap: &super::Capacity) -> Vec<usize> {
+        (0..self.configs.len())
+            .filter(|&i| {
+                let c = &self.configs[i];
+                cap.fits(c.vcpus(), c.memory_gb())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Capacity;
+
+    #[test]
+    fn standard_space_size() {
+        let cs = ConfigSpace::standard();
+        assert_eq!(cs.len(), 4 * NODE_LADDER.len() * 3);
+    }
+
+    #[test]
+    fn n_eff_in_m54xlarge_units() {
+        let c = Config {
+            instance: 0,
+            nodes: 4,
+            spark: 1,
+        };
+        assert_eq!(c.n_eff(), 4.0);
+        let c16 = Config {
+            instance: 3,
+            nodes: 1,
+            spark: 1,
+        };
+        assert_eq!(c16.n_eff(), 4.0); // one m5.16xlarge = 4 m5.4xlarge-equivalents
+    }
+
+    #[test]
+    fn hourly_cost_scales_with_nodes() {
+        let c = Config {
+            instance: 0,
+            nodes: 10,
+            spark: 0,
+        };
+        assert!((c.hourly_cost() - 7.68).abs() < 1e-9);
+    }
+
+    #[test]
+    fn feasible_filters_oversized() {
+        let cs = ConfigSpace::standard();
+        let cap = Capacity::new(64.0, 256.0);
+        let feas = cs.feasible(&cap);
+        assert!(!feas.is_empty());
+        for &i in &feas {
+            assert!(cs.configs[i].vcpus() <= 64.0);
+        }
+        // 16 x m5.16xlarge must be excluded
+        assert!(feas.len() < cs.len());
+    }
+
+    #[test]
+    fn ernest_slice_has_no_spark_choice() {
+        let cs = ConfigSpace::ernest_slice();
+        assert!(cs.configs.iter().all(|c| c.spark == 1));
+        assert_eq!(cs.len(), 4 * NODE_LADDER.len());
+    }
+
+    #[test]
+    fn labels_are_informative() {
+        let c = Config {
+            instance: 2,
+            nodes: 6,
+            spark: 2,
+        };
+        assert_eq!(c.label(), "6 x m5.12xlarge (thin)");
+    }
+}

@@ -1,0 +1,122 @@
+//! Cost model — Eq. 6 of the paper, with the spot-pricing extension the
+//! paper sketches ("AGORA can be easily modified to include these details
+//! by defining the C_m variable more accurately").
+
+use super::config::Config;
+
+/// Pricing policy for a task occupying a configuration for a duration.
+#[derive(Debug, Clone)]
+pub enum CostModel {
+    /// On-demand: cost = nodes x hourly price x hours (Eq. 6 with the
+    /// paper's simplification that storage etc. is configuration-invariant).
+    OnDemand,
+    /// Spot: on-demand price scaled by a market discount, plus an expected
+    /// interruption overhead that grows with task duration (interrupted
+    /// work is re-run). `discount` in (0, 1], `interrupt_rate` is the
+    /// expected number of interruptions per hour.
+    Spot {
+        discount: f64,
+        interrupt_rate: f64,
+    },
+    /// Per-second billing with a minimum billable duration (e.g. EMR-style
+    /// 60 s minimum) — exposes scheduling decisions to billing granularity.
+    PerSecond { min_billable_secs: f64 },
+}
+
+impl CostModel {
+    /// Dollar cost of holding `config` for `secs` seconds.
+    pub fn cost(&self, config: &Config, secs: f64) -> f64 {
+        let hourly = config.hourly_cost();
+        match self {
+            CostModel::OnDemand => hourly * secs / 3600.0,
+            CostModel::Spot {
+                discount,
+                interrupt_rate,
+            } => {
+                // Expected re-run overhead: each interruption wastes on
+                // average half of the work done since the last checkpoint
+                // (modeled as half the task so far, capped at 1 re-run).
+                let expected_interrupts = interrupt_rate * secs / 3600.0;
+                let overhead = 1.0 + 0.5 * expected_interrupts.min(2.0);
+                hourly * discount * (secs * overhead) / 3600.0
+            }
+            CostModel::PerSecond { min_billable_secs } => {
+                hourly * secs.max(*min_billable_secs) / 3600.0
+            }
+        }
+    }
+
+    /// Cost of an entire assignment: sum over (config, duration) pairs —
+    /// Eq. 6's sum over tasks (cost is schedule-independent, which is why
+    /// the inner CP solver only optimizes makespan; see solver/anneal.rs).
+    pub fn total(&self, items: impl IntoIterator<Item = (Config, f64)>) -> f64 {
+        items
+            .into_iter()
+            .map(|(cfg, secs)| self.cost(&cfg, secs))
+            .sum()
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::OnDemand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(nodes: u32) -> Config {
+        Config {
+            instance: 0,
+            nodes,
+            spark: 1,
+        }
+    }
+
+    #[test]
+    fn on_demand_eq6() {
+        // 10 x m5.4xlarge for 30 minutes = 10 * 0.768 * 0.5
+        let c = CostModel::OnDemand.cost(&cfg(10), 1800.0);
+        assert!((c - 3.84).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spot_is_cheaper_for_short_tasks() {
+        let od = CostModel::OnDemand.cost(&cfg(4), 600.0);
+        let spot = CostModel::Spot {
+            discount: 0.3,
+            interrupt_rate: 0.05,
+        }
+        .cost(&cfg(4), 600.0);
+        assert!(spot < od);
+    }
+
+    #[test]
+    fn spot_overhead_grows_with_duration() {
+        let m = CostModel::Spot {
+            discount: 0.3,
+            interrupt_rate: 0.5,
+        };
+        let short = m.cost(&cfg(1), 600.0) / 600.0;
+        let long = m.cost(&cfg(1), 36_000.0) / 36_000.0;
+        assert!(long > short, "unit cost should grow with duration");
+    }
+
+    #[test]
+    fn per_second_minimum_applies() {
+        let m = CostModel::PerSecond {
+            min_billable_secs: 60.0,
+        };
+        assert_eq!(m.cost(&cfg(1), 10.0), m.cost(&cfg(1), 60.0));
+        assert!(m.cost(&cfg(1), 120.0) > m.cost(&cfg(1), 60.0));
+    }
+
+    #[test]
+    fn total_sums_tasks() {
+        let m = CostModel::OnDemand;
+        let total = m.total(vec![(cfg(1), 3600.0), (cfg(2), 1800.0)]);
+        assert!((total - (0.768 + 0.768)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,203 @@
+//! Launcher configuration: JSON file + CLI overrides.
+//!
+//! The `agora` binary reads an optional JSON config (`--config file`),
+//! then applies CLI flags on top, so experiments are reproducible from a
+//! single checked-in file while staying easy to tweak interactively.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::Capacity;
+use crate::solver::anneal::AnnealParams;
+use crate::solver::{Goal, Mode};
+use crate::util::{Args, Json};
+
+pub use crate::util::cli::Args as CliArgs;
+
+/// Fully resolved launcher configuration.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    pub goal: Goal,
+    pub mode: Mode,
+    pub capacity: Capacity,
+    pub seed: u64,
+    pub artifacts_dir: PathBuf,
+    /// Use the PJRT predictor path (requires artifacts) instead of host.
+    pub use_pjrt: bool,
+    pub makespan_budget: f64,
+    pub cost_budget: f64,
+    pub anneal: AnnealParams,
+    pub verbose: bool,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            goal: Goal::Balanced,
+            mode: Mode::CoOptimize,
+            capacity: Capacity::micro(),
+            seed: 0xA60BA,
+            artifacts_dir: PathBuf::from("artifacts"),
+            use_pjrt: false,
+            makespan_budget: f64::INFINITY,
+            cost_budget: f64::INFINITY,
+            anneal: AnnealParams::default(),
+            verbose: false,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Flags understood by the launcher (also used for usage output).
+    pub const FLAGS: &'static [(&'static str, &'static str)] = &[
+        ("config", "JSON config file"),
+        ("goal", "cost | balanced | runtime | w=<0..1>"),
+        ("mode", "agora | predictor-only | scheduler-only | agora-separate"),
+        ("seed", "RNG seed (u64)"),
+        ("vcpus", "cluster vCPU capacity"),
+        ("memory-gb", "cluster memory capacity (GiB)"),
+        ("artifacts", "artifact directory (default ./artifacts)"),
+        ("pjrt", "run predictions through the AOT/PJRT path"),
+        ("makespan-budget", "Eq. 7 budget in seconds"),
+        ("cost-budget", "Eq. 8 budget in dollars"),
+        ("max-iters", "annealing iteration cap"),
+        ("verbose", "chatty output"),
+    ];
+
+    pub fn from_json(v: &Json) -> Result<AppConfig> {
+        let mut c = AppConfig::default();
+        if let Some(goal) = v.opt("goal") {
+            c.goal = parse_goal(goal.as_str()?)?;
+        }
+        if let Some(mode) = v.opt("mode") {
+            c.mode = parse_mode(mode.as_str()?)?;
+        }
+        if let Some(x) = v.opt("seed") {
+            c.seed = x.as_f64()? as u64;
+        }
+        if let Some(x) = v.opt("vcpus") {
+            c.capacity.vcpus = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("memory_gb") {
+            c.capacity.memory_gb = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("artifacts") {
+            c.artifacts_dir = PathBuf::from(x.as_str()?);
+        }
+        if let Some(x) = v.opt("pjrt") {
+            c.use_pjrt = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("makespan_budget") {
+            c.makespan_budget = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("cost_budget") {
+            c.cost_budget = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("max_iters") {
+            c.anneal.max_iters = x.as_usize()?;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<AppConfig> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Apply CLI flags on top of the (file-loaded or default) config.
+    pub fn apply_args(mut self, args: &Args) -> Result<AppConfig> {
+        if let Some(goal) = args.get("goal") {
+            self.goal = parse_goal(goal)?;
+        }
+        if let Some(mode) = args.get("mode") {
+            self.mode = parse_mode(mode)?;
+        }
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.capacity.vcpus = args.f64_or("vcpus", self.capacity.vcpus)?;
+        self.capacity.memory_gb = args.f64_or("memory-gb", self.capacity.memory_gb)?;
+        if let Some(dir) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(dir);
+        }
+        self.use_pjrt = args.bool_or("pjrt", self.use_pjrt)?;
+        self.makespan_budget = args.f64_or("makespan-budget", self.makespan_budget)?;
+        self.cost_budget = args.f64_or("cost-budget", self.cost_budget)?;
+        self.anneal.max_iters = args.usize_or("max-iters", self.anneal.max_iters)?;
+        self.verbose = args.bool_or("verbose", self.verbose)?;
+        Ok(self)
+    }
+
+    /// Resolve: defaults -> optional --config file -> CLI flags.
+    pub fn resolve(args: &Args) -> Result<AppConfig> {
+        let base = match args.get("config") {
+            Some(path) => AppConfig::load(Path::new(path))?,
+            None => AppConfig::default(),
+        };
+        base.apply_args(args)
+    }
+}
+
+pub fn parse_goal(s: &str) -> Result<Goal> {
+    Goal::parse(s).ok_or_else(|| {
+        anyhow::anyhow!("invalid goal {s:?}; expected cost | balanced | runtime | w=<0..1>")
+    })
+}
+
+pub fn parse_mode(s: &str) -> Result<Mode> {
+    match s {
+        "agora" => Ok(Mode::CoOptimize),
+        "predictor-only" => Ok(Mode::PredictorOnly),
+        "scheduler-only" => Ok(Mode::SchedulerOnly),
+        "agora-separate" => Ok(Mode::Separate),
+        _ => bail!("invalid mode {s:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(argv: &[&str]) -> Args {
+        Args::parse(argv.iter().map(|s| s.to_string()), AppConfig::FLAGS).unwrap()
+    }
+
+    #[test]
+    fn defaults_then_cli_overrides() {
+        let c = AppConfig::resolve(&args(&["optimize", "--goal", "cost", "--seed", "9"])).unwrap();
+        assert_eq!(c.goal, Goal::Cost);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.capacity, Capacity::micro());
+    }
+
+    #[test]
+    fn json_config_parses() {
+        let v = Json::parse(
+            r#"{"goal": "runtime", "mode": "agora-separate", "vcpus": 64,
+                "memory_gb": 256, "seed": 3, "max_iters": 10}"#,
+        )
+        .unwrap();
+        let c = AppConfig::from_json(&v).unwrap();
+        assert_eq!(c.goal, Goal::Runtime);
+        assert_eq!(c.mode, Mode::Separate);
+        assert_eq!(c.capacity.vcpus, 64.0);
+        assert_eq!(c.anneal.max_iters, 10);
+    }
+
+    #[test]
+    fn cli_overrides_file_values() {
+        let v = Json::parse(r#"{"goal": "runtime"}"#).unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        let c = base.apply_args(&args(&["run", "--goal", "cost"])).unwrap();
+        assert_eq!(c.goal, Goal::Cost);
+    }
+
+    #[test]
+    fn invalid_goal_rejected() {
+        assert!(AppConfig::resolve(&args(&["run", "--goal", "fastest"])).is_err());
+    }
+
+    #[test]
+    fn weighted_goal_parses() {
+        let c = AppConfig::resolve(&args(&["run", "--goal", "w=0.75"])).unwrap();
+        assert_eq!(c.goal, Goal::Weighted(0.75));
+    }
+}

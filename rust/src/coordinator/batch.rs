@@ -1,0 +1,339 @@
+//! Batch optimization rounds over a submission trace (virtual time).
+//!
+//! This is the macro-benchmark engine (Fig. 11): jobs arrive over a
+//! window; the trigger policy groups them into rounds; each round is
+//! co-optimized (or scheduled by a baseline) and executed on the
+//! simulated cluster; completed runs feed event logs back into the
+//! Predictor database (the §4.1 adaptive loop).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use super::TriggerPolicy;
+use crate::cluster::{Capacity, ConfigSpace, CostModel};
+use crate::dag::Dag;
+use crate::predictor::{
+    bootstrap_history, default_profiling_configs, EventLog, LearnedPredictor, Predictor,
+};
+use crate::sim;
+use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem};
+use crate::trace::TracedJob;
+use crate::util::Rng;
+
+/// How each round is scheduled.
+#[derive(Debug, Clone)]
+pub enum Strategy {
+    /// Default Airflow: default configs, priority-weight dispatch.
+    Airflow,
+    /// Full AGORA co-optimization with a goal.
+    Agora(Goal),
+    /// AGORA ablations (§5.2).
+    AgoraMode(Goal, Mode),
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::Airflow => "airflow".into(),
+            Strategy::Agora(g) => format!("agora[{}]", g.name()),
+            Strategy::AgoraMode(g, m) => format!("{}[{}]", m.name(), g.name()),
+        }
+    }
+}
+
+/// Per-DAG outcome in a macro run.
+#[derive(Debug, Clone)]
+pub struct DagOutcome {
+    pub name: String,
+    pub submit_time: f64,
+    /// Wall-clock completion instant (virtual time).
+    pub finish_time: f64,
+    /// finish - submit.
+    pub completion: f64,
+    pub cost: f64,
+}
+
+/// Full macro-run report.
+#[derive(Debug, Clone)]
+pub struct MacroReport {
+    pub strategy: String,
+    pub outcomes: Vec<DagOutcome>,
+    pub total_cost: f64,
+    /// Sum of per-DAG completion times (the paper's "total DAG completion
+    /// time" metric).
+    pub total_completion: f64,
+    pub rounds: usize,
+    pub optimizer_overhead: Duration,
+}
+
+/// Virtual-time batch runner.
+pub struct BatchRunner {
+    pub capacity: Capacity,
+    pub space: ConfigSpace,
+    pub cost_model: CostModel,
+    pub trigger: TriggerPolicy,
+    pub strategy: Strategy,
+    pub seed: u64,
+    /// Event-log database (task name -> history), persisted across rounds.
+    pub log_db: HashMap<String, EventLog>,
+}
+
+impl BatchRunner {
+    pub fn new(capacity: Capacity, space: ConfigSpace, strategy: Strategy, seed: u64) -> Self {
+        BatchRunner {
+            capacity,
+            space,
+            cost_model: CostModel::OnDemand,
+            trigger: TriggerPolicy::default(),
+            strategy,
+            seed,
+            log_db: HashMap::new(),
+        }
+    }
+
+    /// History for a task: the database entry if present, else a
+    /// bootstrap profiling run (the paper's "triggered test run").
+    fn history(&mut self, dag: &Dag, rng: &mut Rng) -> Vec<EventLog> {
+        dag.tasks
+            .iter()
+            .map(|t| {
+                self.log_db
+                    .entry(format!("{}/{}", dag.name, t.name))
+                    .or_insert_with(|| {
+                        bootstrap_history(
+                            &t.name,
+                            &t.profile,
+                            &default_profiling_configs(),
+                            rng,
+                        )
+                    })
+                    .clone()
+            })
+            .collect()
+    }
+
+    /// Run the whole trace; returns the per-DAG outcomes.
+    pub fn run(&mut self, jobs: &[TracedJob]) -> MacroReport {
+        let mut rng = Rng::new(self.seed);
+        let mut outcomes = Vec::new();
+        let mut rounds = 0usize;
+        let mut overhead = Duration::ZERO;
+
+        // Virtual clock: advance to each trigger firing.
+        let mut queue: Vec<&TracedJob> = Vec::new();
+        let mut next_job = 0usize;
+        let mut clock = 0.0f64;
+        let mut last_round = 0.0f64;
+        // when the cluster frees up from the previous round
+        let mut cluster_free = 0.0f64;
+
+        let default_cores = {
+            // queue demand measured at the default config
+            let c = Agora::default_config(&self.space);
+            self.space.configs[c].vcpus()
+        };
+
+        loop {
+            // Admit arrivals up to the clock.
+            while next_job < jobs.len() && jobs[next_job].submit_time <= clock {
+                queue.push(&jobs[next_job]);
+                next_job += 1;
+            }
+
+            let queued_demand: f64 = queue
+                .iter()
+                .map(|j| j.dag.len() as f64 * default_cores)
+                .sum();
+            let fire = self.trigger.should_fire(
+                queued_demand,
+                self.capacity.vcpus,
+                clock - last_round,
+                queue.len(),
+            );
+
+            if fire {
+                rounds += 1;
+                last_round = clock;
+                let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
+                let round_start = clock.max(cluster_free);
+
+                // Build the problem: releases are relative to round start.
+                let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
+                let releases = vec![0.0f64; dags.len()];
+                let logs: Vec<EventLog> = dags
+                    .iter()
+                    .flat_map(|d| self.history(d, &mut rng))
+                    .collect();
+                let predictor = LearnedPredictor::fit(&logs);
+                let grid = predictor.predict(&self.space);
+                let p = Problem::new(
+                    &dags,
+                    &releases,
+                    self.capacity,
+                    self.space.clone(),
+                    grid,
+                    self.cost_model.clone(),
+                );
+
+                // Plan the round.
+                let schedule = match &self.strategy {
+                    Strategy::Airflow => {
+                        use crate::baselines::{AirflowScheduler, Scheduler};
+                        AirflowScheduler::default().schedule(&p)
+                    }
+                    Strategy::Agora(goal) => {
+                        let agora = Agora::new(AgoraOptions {
+                            goal: *goal,
+                            mode: Mode::CoOptimize,
+                            params: crate::solver::AnnealParams::fast(),
+                            seed: rng.next_u64(),
+                            ..Default::default()
+                        });
+                        let plan = agora.optimize(&p);
+                        overhead += plan.overhead;
+                        plan.schedule
+                    }
+                    Strategy::AgoraMode(goal, mode) => {
+                        let agora = Agora::new(AgoraOptions {
+                            goal: *goal,
+                            mode: *mode,
+                            params: crate::solver::AnnealParams::fast(),
+                            seed: rng.next_u64(),
+                            ..Default::default()
+                        });
+                        let plan = agora.optimize(&p);
+                        overhead += plan.overhead;
+                        plan.schedule
+                    }
+                };
+
+                // Execute on the simulated cluster.
+                let report = sim::execute(&p, &dags, &schedule, &self.cost_model, &mut rng);
+                cluster_free = round_start + report.makespan;
+
+                // Record outcomes + feed logs back.
+                for (d, job) in batch.iter().enumerate() {
+                    let finish = round_start + report.dag_completion[d];
+                    outcomes.push(DagOutcome {
+                        name: job.dag.name.clone(),
+                        submit_time: job.submit_time,
+                        finish_time: finish,
+                        completion: finish - job.submit_time,
+                        cost: report
+                            .records
+                            .iter()
+                            .filter(|r| p.tasks[r.task].dag == d)
+                            .map(|r| {
+                                self.cost_model
+                                    .cost(&p.space.configs[r.config], r.runtime)
+                            })
+                            .sum(),
+                    });
+                }
+                for (t, log) in report.new_logs.iter().enumerate() {
+                    let key = p.tasks[t].name.clone();
+                    let entry = self
+                        .log_db
+                        .entry(key)
+                        .or_insert_with(|| EventLog::new(&p.tasks[t].name));
+                    entry.runs.extend(log.runs.iter().cloned());
+                }
+            }
+
+            // Advance virtual time.
+            if next_job < jobs.len() {
+                let next_arrival = jobs[next_job].submit_time;
+                let next_tick = last_round + self.trigger.interval;
+                clock = if queue.is_empty() {
+                    next_arrival.max(clock)
+                } else {
+                    next_arrival.min(next_tick).max(clock + 1.0)
+                };
+            } else if !queue.is_empty() {
+                clock = (last_round + self.trigger.interval).max(clock + 1.0);
+            } else {
+                break;
+            }
+        }
+
+        let total_cost = outcomes.iter().map(|o| o.cost).sum();
+        let total_completion = outcomes.iter().map(|o| o.completion).sum();
+        MacroReport {
+            strategy: self.strategy.name(),
+            outcomes,
+            total_cost,
+            total_completion,
+            rounds,
+            optimizer_overhead: overhead,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{generate, TraceParams};
+
+    fn tiny_run(strategy: Strategy, seed: u64) -> MacroReport {
+        let params = TraceParams::tiny();
+        let mut rng = Rng::new(7);
+        let jobs = generate(&params, &mut rng);
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            strategy,
+            seed,
+        );
+        runner.run(&jobs)
+    }
+
+    #[test]
+    fn airflow_strategy_completes_all_jobs() {
+        let rep = tiny_run(Strategy::Airflow, 1);
+        assert_eq!(rep.outcomes.len(), 12);
+        assert!(rep.rounds >= 1);
+        for o in &rep.outcomes {
+            assert!(o.completion > 0.0, "{} has non-positive completion", o.name);
+            assert!(o.cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn agora_strategy_completes_all_jobs() {
+        let rep = tiny_run(Strategy::Agora(Goal::Balanced), 1);
+        assert_eq!(rep.outcomes.len(), 12);
+        assert!(rep.optimizer_overhead > Duration::ZERO);
+    }
+
+    #[test]
+    fn agora_beats_airflow_on_cost() {
+        // The macro signature of Fig. 11: large cost reduction.
+        let base = tiny_run(Strategy::Airflow, 2);
+        let agora = tiny_run(Strategy::Agora(Goal::Balanced), 2);
+        assert!(
+            agora.total_cost < base.total_cost,
+            "agora {} should beat airflow {}",
+            agora.total_cost,
+            base.total_cost
+        );
+    }
+
+    #[test]
+    fn event_log_database_grows_across_rounds() {
+        let params = TraceParams::tiny();
+        let mut rng = Rng::new(7);
+        let jobs = generate(&params, &mut rng);
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::Airflow,
+            3,
+        );
+        runner.run(&jobs);
+        assert!(!runner.log_db.is_empty());
+        // every executed task has bootstrap + at least one real run
+        let total_jobs: usize = jobs.iter().map(|j| j.dag.len()).sum();
+        assert_eq!(runner.log_db.len(), total_jobs);
+        assert!(runner.log_db.values().all(|l| l.len() >= 2));
+    }
+}

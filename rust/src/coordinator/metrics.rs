@@ -1,0 +1,101 @@
+//! Macro-run metric aggregation (Fig. 11's panels).
+
+use super::batch::MacroReport;
+use crate::util::stats;
+
+/// Headline macro comparison: normalized cost + completion vs a baseline.
+#[derive(Debug, Clone)]
+pub struct MacroSummary {
+    pub strategy: String,
+    pub normalized_cost: f64,
+    pub normalized_completion: f64,
+    /// Fraction of DAGs whose completion improved vs the baseline.
+    pub improved_fraction: f64,
+    /// Fraction of DAGs with >= 95% completion improvement.
+    pub near_total_fraction: f64,
+}
+
+impl MacroSummary {
+    /// Compare a run against a baseline run over the same trace. DAGs are
+    /// matched by name.
+    pub fn against(base: &MacroReport, run: &MacroReport) -> MacroSummary {
+        let improvements = improvement_cdf(base, run);
+        let improved = improvements.iter().filter(|&&i| i > 0.0).count();
+        let near_total = improvements.iter().filter(|&&i| i >= 0.95).count();
+        MacroSummary {
+            strategy: run.strategy.clone(),
+            normalized_cost: run.total_cost / base.total_cost.max(1e-9),
+            normalized_completion: run.total_completion / base.total_completion.max(1e-9),
+            improved_fraction: improved as f64 / improvements.len().max(1) as f64,
+            near_total_fraction: near_total as f64 / improvements.len().max(1) as f64,
+        }
+    }
+}
+
+/// Per-DAG completion-time improvement of `run` vs `base`
+/// ((base - run)/base per DAG, matched by name), sorted ascending —
+/// the CDF panel of Fig. 11.
+pub fn improvement_cdf(base: &MacroReport, run: &MacroReport) -> Vec<f64> {
+    let base_by_name: std::collections::HashMap<&str, f64> = base
+        .outcomes
+        .iter()
+        .map(|o| (o.name.as_str(), o.completion))
+        .collect();
+    let mut improvements: Vec<f64> = run
+        .outcomes
+        .iter()
+        .filter_map(|o| {
+            base_by_name
+                .get(o.name.as_str())
+                .map(|&b| stats::improvement(b, o.completion))
+        })
+        .collect();
+    improvements.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    improvements
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batch::DagOutcome;
+    use std::time::Duration;
+
+    fn report(strategy: &str, completions: &[(&str, f64, f64)]) -> MacroReport {
+        MacroReport {
+            strategy: strategy.into(),
+            outcomes: completions
+                .iter()
+                .map(|&(name, completion, cost)| DagOutcome {
+                    name: name.into(),
+                    submit_time: 0.0,
+                    finish_time: completion,
+                    completion,
+                    cost,
+                })
+                .collect(),
+            total_cost: completions.iter().map(|c| c.2).sum(),
+            total_completion: completions.iter().map(|c| c.1).sum(),
+            rounds: 1,
+            optimizer_overhead: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn improvement_cdf_matches_by_name() {
+        let base = report("base", &[("a", 100.0, 1.0), ("b", 200.0, 2.0)]);
+        let run = report("run", &[("b", 100.0, 1.0), ("a", 50.0, 0.5)]);
+        let cdf = improvement_cdf(&base, &run);
+        assert_eq!(cdf, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn summary_normalizes() {
+        let base = report("base", &[("a", 100.0, 2.0), ("b", 100.0, 2.0)]);
+        let run = report("run", &[("a", 50.0, 1.0), ("b", 120.0, 1.0)]);
+        let s = MacroSummary::against(&base, &run);
+        assert!((s.normalized_cost - 0.5).abs() < 1e-9);
+        assert!((s.normalized_completion - 0.85).abs() < 1e-9);
+        assert!((s.improved_fraction - 0.5).abs() < 1e-9);
+        assert_eq!(s.near_total_fraction, 0.0);
+    }
+}

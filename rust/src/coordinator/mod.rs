@@ -1,0 +1,80 @@
+//! The multi-tenant coordination layer (L3): submission queue, trigger
+//! policy, batch optimization rounds, the event-log database feeding the
+//! Predictor's adaptive loop, and a threaded service front-end.
+//!
+//! §5.5.1 methodology: "AGORA is triggered to schedule jobs that have
+//! been submitted every fifteen minutes or when the demands in the queue
+//! are greater than three times the available cores in the cluster."
+
+pub mod batch;
+pub mod metrics;
+pub mod service;
+
+pub use batch::{BatchRunner, MacroReport, Strategy};
+pub use metrics::{improvement_cdf, MacroSummary};
+pub use service::{Service, ServiceHandle, SubmitResult};
+
+/// Trigger policy for batching queued DAGs into optimization rounds.
+#[derive(Debug, Clone)]
+pub struct TriggerPolicy {
+    /// Periodic trigger interval in seconds (paper: 15 minutes).
+    pub interval: f64,
+    /// Demand trigger: fire when queued core-demand exceeds this multiple
+    /// of the cluster's cores (paper: 3x).
+    pub demand_factor: f64,
+}
+
+impl Default for TriggerPolicy {
+    fn default() -> Self {
+        TriggerPolicy {
+            interval: 15.0 * 60.0,
+            demand_factor: 3.0,
+        }
+    }
+}
+
+impl TriggerPolicy {
+    /// Should a round fire now?
+    ///
+    /// `queued_demand_cores`: sum of default-config core demands of
+    /// queued tasks; `cluster_cores`: capacity; `since_last`: seconds
+    /// since the previous round.
+    pub fn should_fire(
+        &self,
+        queued_demand_cores: f64,
+        cluster_cores: f64,
+        since_last: f64,
+        queue_len: usize,
+    ) -> bool {
+        if queue_len == 0 {
+            return false;
+        }
+        since_last >= self.interval
+            || queued_demand_cores > self.demand_factor * cluster_cores
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_on_interval() {
+        let p = TriggerPolicy::default();
+        assert!(!p.should_fire(10.0, 100.0, 899.0, 3));
+        assert!(p.should_fire(10.0, 100.0, 900.0, 3));
+    }
+
+    #[test]
+    fn fires_on_demand_pressure() {
+        let p = TriggerPolicy::default();
+        assert!(!p.should_fire(300.0, 100.0, 0.0, 5));
+        assert!(p.should_fire(301.0, 100.0, 0.0, 5));
+    }
+
+    #[test]
+    fn never_fires_on_empty_queue() {
+        let p = TriggerPolicy::default();
+        assert!(!p.should_fire(1e9, 100.0, 1e9, 0));
+    }
+}

@@ -1,0 +1,305 @@
+//! Threaded multi-tenant service front-end (std::thread + mpsc; the
+//! offline vendor set has no tokio — the event loop is a plain
+//! channel-driven reactor, which for this workload is equivalent).
+//!
+//! Tenants submit DAGs through a [`ServiceHandle`]; the coordinator
+//! thread batches submissions per the trigger policy (scaled to real
+//! milliseconds for interactivity), co-optimizes each batch, executes it
+//! on the simulated cluster, and answers every submission with its
+//! realized completion time and cost.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{Capacity, ConfigSpace, CostModel};
+use crate::dag::Dag;
+use crate::predictor::{bootstrap_history, default_profiling_configs, EventLog, LearnedPredictor, Predictor};
+use crate::sim;
+use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem};
+use crate::util::Rng;
+
+/// Outcome returned to a tenant for one submitted DAG.
+#[derive(Debug, Clone)]
+pub struct SubmitResult {
+    pub tenant: String,
+    pub dag_name: String,
+    /// Simulated completion time in seconds (from batch start).
+    pub completion: f64,
+    pub cost: f64,
+    /// Which optimization round served this DAG.
+    pub round: usize,
+}
+
+struct Submission {
+    tenant: String,
+    dag: Dag,
+    reply: Sender<SubmitResult>,
+}
+
+enum Msg {
+    Submit(Submission),
+    Shutdown,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub capacity: Capacity,
+    pub goal: Goal,
+    /// Real-time batching window (stands in for the 15-minute trigger).
+    pub batch_window: Duration,
+    /// Demand trigger: optimize immediately once this many DAGs queue up.
+    pub max_queue: usize,
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            capacity: Capacity::micro(),
+            goal: Goal::Balanced,
+            batch_window: Duration::from_millis(50),
+            max_queue: 8,
+            seed: 0x5E21,
+        }
+    }
+}
+
+/// Handle cloned out to tenants.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: Sender<Msg>,
+}
+
+impl ServiceHandle {
+    /// Submit a DAG; returns a receiver that yields the outcome after the
+    /// round containing this DAG executes.
+    pub fn submit(&self, tenant: &str, dag: Dag) -> Receiver<SubmitResult> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Submit(Submission {
+                tenant: tenant.to_string(),
+                dag,
+                reply: reply_tx,
+            }))
+            .expect("service thread alive");
+        reply_rx
+    }
+}
+
+/// The running service: coordinator thread + handle factory.
+pub struct Service {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<usize>>,
+}
+
+impl Service {
+    pub fn start(config: ServiceConfig) -> Service {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || run_loop(config, rx));
+        Service {
+            tx,
+            worker: Some(worker),
+        }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Graceful shutdown; returns the number of rounds served.
+    pub fn shutdown(mut self) -> usize {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker
+            .take()
+            .map(|w| w.join().unwrap_or(0))
+            .unwrap_or(0)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_loop(config: ServiceConfig, rx: Receiver<Msg>) -> usize {
+    let mut rng = Rng::new(config.seed);
+    let space = ConfigSpace::standard();
+    let cost_model = CostModel::OnDemand;
+    let mut log_db: HashMap<String, EventLog> = HashMap::new();
+    let mut queue: Vec<Submission> = Vec::new();
+    let mut round = 0usize;
+    let mut window_start = Instant::now();
+
+    loop {
+        let timeout = config
+            .batch_window
+            .saturating_sub(window_start.elapsed())
+            .max(Duration::from_millis(1));
+        let msg = rx.recv_timeout(timeout);
+
+        match msg {
+            Ok(Msg::Submit(s)) => queue.push(s),
+            Ok(Msg::Shutdown) => {
+                if !queue.is_empty() {
+                    round += 1;
+                    serve_round(&config, &space, &cost_model, &mut log_db, &mut queue, round, &mut rng);
+                }
+                return round;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return round,
+        }
+
+        let window_elapsed = window_start.elapsed() >= config.batch_window;
+        if !queue.is_empty() && (window_elapsed || queue.len() >= config.max_queue) {
+            round += 1;
+            serve_round(&config, &space, &cost_model, &mut log_db, &mut queue, round, &mut rng);
+            window_start = Instant::now();
+        } else if window_elapsed {
+            window_start = Instant::now();
+        }
+    }
+}
+
+fn serve_round(
+    config: &ServiceConfig,
+    space: &ConfigSpace,
+    cost_model: &CostModel,
+    log_db: &mut HashMap<String, EventLog>,
+    queue: &mut Vec<Submission>,
+    round: usize,
+    rng: &mut Rng,
+) {
+    let batch: Vec<Submission> = queue.drain(..).collect();
+    let dags: Vec<Dag> = batch.iter().map(|s| s.dag.clone()).collect();
+    let releases = vec![0.0; dags.len()];
+
+    // Histories from the DB (or bootstrap profiling runs).
+    let mut logs: Vec<EventLog> = Vec::new();
+    for d in &dags {
+        for t in &d.tasks {
+            let entry = log_db
+                .entry(format!("{}/{}", d.name, t.name))
+                .or_insert_with(|| {
+                    bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), rng)
+                });
+            logs.push(entry.clone());
+        }
+    }
+
+    let predictor = LearnedPredictor::fit(&logs);
+    let grid = predictor.predict(space);
+    let p = Problem::new(
+        &dags,
+        &releases,
+        config.capacity,
+        space.clone(),
+        grid,
+        cost_model.clone(),
+    );
+
+    let agora = Agora::new(AgoraOptions {
+        goal: config.goal,
+        mode: Mode::CoOptimize,
+        params: crate::solver::AnnealParams::fast(),
+        seed: rng.next_u64(),
+        ..Default::default()
+    });
+    let plan = agora.optimize(&p);
+    let report = sim::execute(&p, &dags, &plan.schedule, cost_model, rng);
+
+    // Feed logs back (adaptive loop) and answer tenants.
+    for (t, log) in report.new_logs.iter().enumerate() {
+        let key = p.tasks[t].name.clone();
+        let entry = log_db
+            .entry(key)
+            .or_insert_with(|| EventLog::new(&p.tasks[t].name));
+        entry.runs.extend(log.runs.iter().cloned());
+    }
+    for (d, sub) in batch.iter().enumerate() {
+        let cost: f64 = report
+            .records
+            .iter()
+            .filter(|r| p.tasks[r.task].dag == d)
+            .map(|r| cost_model.cost(&p.space.configs[r.config], r.runtime))
+            .sum();
+        let _ = sub.reply.send(SubmitResult {
+            tenant: sub.tenant.clone(),
+            dag_name: sub.dag.name.clone(),
+            completion: report.dag_completion[d],
+            cost,
+            round,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::workloads::{dag1, dag2, fig1_dag};
+
+    #[test]
+    fn serves_concurrent_tenants() {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        });
+        let handle = service.handle();
+
+        let rx1 = handle.submit("alice", dag1());
+        let rx2 = handle.submit("bob", dag2());
+        let rx3 = handle.submit("carol", fig1_dag());
+
+        let r1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r3 = rx3.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r1.tenant, "alice");
+        assert_eq!(r2.dag_name, "DAG2");
+        assert!(r1.completion > 0.0 && r2.completion > 0.0 && r3.completion > 0.0);
+        assert!(r1.cost > 0.0);
+
+        let rounds = service.shutdown();
+        assert!(rounds >= 1);
+    }
+
+    #[test]
+    fn demand_trigger_fires_before_window() {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_secs(30), // long window
+            max_queue: 2,                          // low demand trigger
+            ..Default::default()
+        });
+        let handle = service.handle();
+        let rx1 = handle.submit("a", dag1());
+        let rx2 = handle.submit("b", dag2());
+        // Must be answered by the demand trigger, well within the window.
+        let r1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
+        let r2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r1.round, r2.round);
+        service.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending_queue() {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_secs(60),
+            max_queue: 100,
+            ..Default::default()
+        });
+        let handle = service.handle();
+        let rx = handle.submit("late", fig1_dag());
+        let rounds = service.shutdown();
+        let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(r.dag_name, "fig1");
+        assert!(rounds >= 1);
+    }
+}

@@ -1,0 +1,186 @@
+//! Random DAG generators for the scalability (Fig. 10) and ablation
+//! experiments, plus arbitrary layered DAGs for property tests.
+
+use super::{Dag, Task, TaskProfile};
+use crate::util::Rng;
+
+/// Parameters for the layered random generator.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    /// Max tasks per layer.
+    pub width: usize,
+    /// Layer count range (inclusive).
+    pub depth_min: usize,
+    pub depth_max: usize,
+    /// Total task budget (generation stops when reached).
+    pub tasks: usize,
+    /// Probability of an edge between consecutive-layer task pairs.
+    pub edge_prob: f64,
+}
+
+impl GenParams {
+    /// The paper's Fig. 10 setup: "randomly generated DAGs with a width of
+    /// 4 and a depth of 3-5 consisting of 10 tasks each".
+    pub fn fig10() -> GenParams {
+        GenParams {
+            width: 4,
+            depth_min: 3,
+            depth_max: 5,
+            tasks: 10,
+            edge_prob: 0.5,
+        }
+    }
+}
+
+/// Random task profile spanning the realistic ranges of the workload
+/// library (work 5 min .. 1 h, USL parameters in [0, 1] like §5.5.1).
+pub fn random_profile(rng: &mut Rng) -> TaskProfile {
+    TaskProfile {
+        work: rng.uniform(300.0, 3600.0),
+        alpha: rng.uniform(0.01, 0.35),
+        beta: rng.uniform(0.0, 0.02),
+        mem_gb: rng.uniform(16.0, 256.0),
+        spark_affinity: rng.uniform(-1.0, 1.0),
+        noise_sigma: rng.uniform(0.01, 0.06),
+    }
+}
+
+/// Layered random DAG. Every non-first-layer task gets at least one
+/// predecessor in the previous layer so the graph is connected forward;
+/// extra edges appear with `edge_prob`.
+pub fn random_dag(rng: &mut Rng, name: &str, p: &GenParams) -> Dag {
+    assert!(p.tasks >= 1 && p.width >= 1 && p.depth_min >= 1 && p.depth_max >= p.depth_min);
+    let depth = rng.range(p.depth_min, p.depth_max);
+
+    // Distribute the task budget across layers (>= 1 per layer).
+    let mut layer_sizes = vec![1usize; depth];
+    let mut remaining = p.tasks.saturating_sub(depth);
+    while remaining > 0 {
+        let l = rng.below(depth);
+        if layer_sizes[l] < p.width {
+            layer_sizes[l] += 1;
+            remaining -= 1;
+        } else if layer_sizes.iter().all(|&s| s >= p.width) {
+            break; // budget exceeds width*depth; cap
+        }
+    }
+
+    let mut tasks = Vec::new();
+    let mut layers: Vec<Vec<usize>> = Vec::new();
+    for (li, &size) in layer_sizes.iter().enumerate() {
+        let mut layer = Vec::new();
+        for s in 0..size {
+            layer.push(tasks.len());
+            tasks.push(Task {
+                name: format!("{name}-l{li}t{s}"),
+                profile: random_profile(rng),
+            });
+        }
+        layers.push(layer);
+    }
+
+    let mut edges = Vec::new();
+    for w in 1..layers.len() {
+        for &t in &layers[w] {
+            let mut any = false;
+            for &prev in &layers[w - 1] {
+                if rng.chance(p.edge_prob) {
+                    edges.push((prev, t));
+                    any = true;
+                }
+            }
+            if !any {
+                // guarantee connectivity to the previous layer
+                let prev = *rng.choice(&layers[w - 1]);
+                edges.push((prev, t));
+            }
+        }
+    }
+
+    Dag::new(name, tasks, edges).expect("layered construction is acyclic")
+}
+
+/// A batch of Fig. 10-style DAGs (10 tasks each).
+pub fn fig10_batch(rng: &mut Rng, count: usize) -> Vec<Dag> {
+    (0..count)
+        .map(|i| random_dag(rng, &format!("rand{i}"), &GenParams::fig10()))
+        .collect()
+}
+
+/// Fully random DAG for property tests: arbitrary edge density over a
+/// random topological order (always acyclic by construction).
+pub fn arbitrary_dag(rng: &mut Rng, max_tasks: usize) -> Dag {
+    let n = rng.range(1, max_tasks.max(1));
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let tasks = (0..n)
+        .map(|i| Task {
+            name: format!("t{i}"),
+            profile: random_profile(rng),
+        })
+        .collect();
+    let mut edges = Vec::new();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.chance(0.25) {
+                edges.push((order[i], order[j]));
+            }
+        }
+    }
+    Dag::new("arbitrary", tasks, edges).expect("order-respecting edges are acyclic")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_dags_have_ten_tasks() {
+        let mut rng = Rng::new(42);
+        for d in fig10_batch(&mut rng, 20) {
+            assert_eq!(d.len(), 10, "paper: 10 tasks per random DAG");
+            assert!(d.width() <= 4, "paper: width 4");
+            let depth = d.depth();
+            assert!((3..=5).contains(&depth), "paper: depth 3-5, got {depth}");
+        }
+    }
+
+    #[test]
+    fn random_dags_are_valid() {
+        let mut rng = Rng::new(7);
+        for i in 0..50 {
+            let d = arbitrary_dag(&mut rng, 20);
+            assert!(d.topo_order().is_ok(), "dag {i} has a cycle");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let d1 = random_dag(&mut Rng::new(5), "x", &GenParams::fig10());
+        let d2 = random_dag(&mut Rng::new(5), "x", &GenParams::fig10());
+        assert_eq!(d1.edges, d2.edges);
+        assert_eq!(d1.len(), d2.len());
+    }
+
+    #[test]
+    fn profiles_are_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let p = random_profile(&mut rng);
+            assert!(p.work >= 300.0 && p.work <= 3600.0);
+            assert!(p.alpha >= 0.0 && p.alpha <= 1.0);
+            assert!(p.beta >= 0.0 && p.beta <= 1.0);
+            assert!(p.spark_affinity >= -1.0 && p.spark_affinity <= 1.0);
+        }
+    }
+
+    #[test]
+    fn every_non_root_task_has_a_predecessor() {
+        let mut rng = Rng::new(11);
+        let d = random_dag(&mut rng, "conn", &GenParams::fig10());
+        // layer-0 tasks have no preds; all others must have at least one
+        let roots: Vec<usize> = (0..d.len()).filter(|&t| d.preds(t).is_empty()).collect();
+        assert!(!roots.is_empty());
+        assert!(roots.len() < d.len());
+    }
+}

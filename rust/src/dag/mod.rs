@@ -1,0 +1,346 @@
+//! DAG workload model: tasks, precedence, topological/critical-path
+//! analysis, and (de)serialization of DAG specs.
+
+pub mod generator;
+pub mod profile;
+pub mod workloads;
+
+use anyhow::{bail, Result};
+
+pub use profile::TaskProfile;
+
+use crate::util::Json;
+
+/// One task (vertex) of a pipeline DAG.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    /// Ground-truth scaling characteristics (hidden from the optimizer;
+    /// observed only through event logs, like the real system).
+    pub profile: TaskProfile,
+}
+
+/// A directed acyclic workflow graph.
+#[derive(Debug, Clone)]
+pub struct Dag {
+    pub name: String,
+    pub tasks: Vec<Task>,
+    /// Edges as (predecessor, successor) task-index pairs.
+    pub edges: Vec<(usize, usize)>,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+}
+
+impl Dag {
+    /// Build and validate a DAG. Errors on out-of-range edges, self-loops
+    /// and cycles.
+    pub fn new(name: &str, tasks: Vec<Task>, edges: Vec<(usize, usize)>) -> Result<Dag> {
+        let n = tasks.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            if a >= n || b >= n {
+                bail!("edge ({a}, {b}) out of range for {n} tasks");
+            }
+            if a == b {
+                bail!("self-loop on task {a}");
+            }
+            succs[a].push(b);
+            preds[b].push(a);
+        }
+        let dag = Dag {
+            name: name.to_string(),
+            tasks,
+            edges,
+            preds,
+            succs,
+        };
+        // Cycle check via topo sort.
+        dag.topo_order()?;
+        Ok(dag)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn preds(&self, task: usize) -> &[usize] {
+        &self.preds[task]
+    }
+
+    pub fn succs(&self, task: usize) -> &[usize] {
+        &self.succs[task]
+    }
+
+    /// Kahn topological order; error if the graph has a cycle.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.preds[i].len()).collect();
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &self.succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("cycle detected in DAG {:?}", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Length of the longest path in task count (the DAG "depth").
+    pub fn depth(&self) -> usize {
+        let order = self.topo_order().expect("validated at construction");
+        let mut d = vec![1usize; self.len()];
+        for &u in &order {
+            for &v in &self.succs[u] {
+                d[v] = d[v].max(d[u] + 1);
+            }
+        }
+        d.into_iter().max().unwrap_or(0)
+    }
+
+    /// Maximum antichain width estimate: max number of tasks at the same
+    /// topological level.
+    pub fn width(&self) -> usize {
+        let order = self.topo_order().expect("validated at construction");
+        let mut level = vec![0usize; self.len()];
+        for &u in &order {
+            for &v in &self.succs[u] {
+                level[v] = level[v].max(level[u] + 1);
+            }
+        }
+        let mut counts = std::collections::BTreeMap::new();
+        for l in level {
+            *counts.entry(l).or_insert(0usize) += 1;
+        }
+        counts.values().copied().max().unwrap_or(0)
+    }
+
+    /// Critical-path length under the given per-task durations; also the
+    /// classic makespan lower bound used by the CP solver.
+    pub fn critical_path(&self, durations: &[f64]) -> f64 {
+        assert_eq!(durations.len(), self.len());
+        let order = self.topo_order().expect("validated at construction");
+        let mut finish = vec![0.0f64; self.len()];
+        for &u in &order {
+            let start = self
+                .preds[u]
+                .iter()
+                .map(|&p| finish[p])
+                .fold(0.0f64, f64::max);
+            finish[u] = start + durations[u];
+        }
+        finish.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Per-task "criticality": length of the longest path through the task
+    /// (bottom level + top level - own duration). Used by CP-list baseline
+    /// and by the solver's branching order.
+    pub fn criticality(&self, durations: &[f64]) -> Vec<f64> {
+        let order = self.topo_order().expect("validated at construction");
+        let n = self.len();
+        let mut top = vec![0.0f64; n]; // longest path ending at start of u
+        for &u in &order {
+            for &v in &self.succs[u] {
+                top[v] = top[v].max(top[u] + durations[u]);
+            }
+        }
+        let mut bottom = vec![0.0f64; n]; // longest path from start of u
+        for &u in order.iter().rev() {
+            bottom[u] = durations[u]
+                + self.succs[u]
+                    .iter()
+                    .map(|&v| bottom[v])
+                    .fold(0.0f64, f64::max);
+        }
+        (0..n).map(|u| top[u] + bottom[u]).collect()
+    }
+
+    /// Transitive closure of the precedence relation as a boolean matrix
+    /// (row r reaches column c). Used by schedule-invariant checks.
+    pub fn reachability(&self) -> Vec<Vec<bool>> {
+        let n = self.len();
+        let order = self.topo_order().expect("validated at construction");
+        let mut reach = vec![vec![false; n]; n];
+        for &u in order.iter().rev() {
+            for &v in &self.succs[u] {
+                reach[u][v] = true;
+                let row = reach[v].clone();
+                for (w, r) in row.into_iter().enumerate() {
+                    if r {
+                        reach[u][w] = true;
+                    }
+                }
+            }
+        }
+        reach
+    }
+
+    // -- JSON spec ----------------------------------------------------------
+
+    /// Serialize to the on-disk DAG spec consumed by the CLI.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            (
+                "tasks",
+                Json::arr(self.tasks.iter().map(|t| {
+                    Json::obj(vec![
+                        ("name", Json::str(&t.name)),
+                        ("profile", t.profile.to_json()),
+                    ])
+                })),
+            ),
+            (
+                "edges",
+                Json::arr(self.edges.iter().map(|&(a, b)| {
+                    Json::arr(vec![Json::num(a as f64), Json::num(b as f64)])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Dag> {
+        let name = v.get("name")?.as_str()?;
+        let tasks = v
+            .get("tasks")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(Task {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    profile: TaskProfile::from_json(t.get("profile")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let edges = v
+            .get("edges")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                let pair = e.as_arr()?;
+                if pair.len() != 2 {
+                    bail!("edge must be a 2-array");
+                }
+                Ok((pair[0].as_usize()?, pair[1].as_usize()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Dag::new(name, tasks, edges)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(name: &str) -> Task {
+        Task {
+            name: name.to_string(),
+            profile: TaskProfile::example(),
+        }
+    }
+
+    fn diamond() -> Dag {
+        // 0 -> {1, 2} -> 3
+        Dag::new(
+            "diamond",
+            vec![task("a"), task("b"), task("c"), task("d")],
+            vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let d = diamond();
+        let order = d.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; 4];
+            for (i, &t) in order.iter().enumerate() {
+                p[t] = i;
+            }
+            p
+        };
+        for &(a, b) in &d.edges {
+            assert!(pos[a] < pos[b]);
+        }
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let r = Dag::new(
+            "cyc",
+            vec![task("a"), task("b")],
+            vec![(0, 1), (1, 0)],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn self_loop_rejected() {
+        assert!(Dag::new("l", vec![task("a")], vec![(0, 0)]).is_err());
+    }
+
+    #[test]
+    fn out_of_range_edge_rejected() {
+        assert!(Dag::new("o", vec![task("a")], vec![(0, 3)]).is_err());
+    }
+
+    #[test]
+    fn critical_path_of_diamond() {
+        let d = diamond();
+        // durations: a=1, b=5, c=2, d=1 -> cp = 1+5+1 = 7
+        assert_eq!(d.critical_path(&[1.0, 5.0, 2.0, 1.0]), 7.0);
+    }
+
+    #[test]
+    fn depth_and_width() {
+        let d = diamond();
+        assert_eq!(d.depth(), 3);
+        assert_eq!(d.width(), 2);
+    }
+
+    #[test]
+    fn criticality_peaks_on_critical_path() {
+        let d = diamond();
+        let cr = d.criticality(&[1.0, 5.0, 2.0, 1.0]);
+        assert_eq!(cr[1], 7.0); // b is on the critical path
+        assert_eq!(cr[2], 4.0);
+        assert_eq!(cr[0], 7.0);
+    }
+
+    #[test]
+    fn reachability_transitive() {
+        let d = diamond();
+        let r = d.reachability();
+        assert!(r[0][3]);
+        assert!(r[0][1] && r[1][3]);
+        assert!(!r[1][2]);
+        assert!(!r[3][0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let d = diamond();
+        let j = d.to_json();
+        let d2 = Dag::from_json(&j).unwrap();
+        assert_eq!(d2.name, d.name);
+        assert_eq!(d2.len(), d.len());
+        assert_eq!(d2.edges, d.edges);
+        let j2 = d2.to_json();
+        assert_eq!(j.to_string(), j2.to_string());
+    }
+}

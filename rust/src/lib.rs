@@ -1,0 +1,34 @@
+//! # AGORA — globally co-optimized resource allocation + DAG scheduling
+//!
+//! Reproduction of *"Global Optimization of Data Pipelines in
+//! Heterogeneous Cloud Environments"* (Lin et al., 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: DAG ingestion, the Predictor
+//!   orchestration, the simulated-annealing ⊗ CP co-optimizer, baseline
+//!   schedulers, the cluster execution simulator, and the multi-tenant
+//!   service loop.
+//! * **L2/L1 (python/compile)** — the Predictor's batched fit + grid
+//!   prediction, AOT-lowered to `artifacts/*.hlo.txt` and executed from
+//!   Rust through PJRT (`runtime` module). Python never runs at request
+//!   time.
+//!
+//! Quickstart: see `examples/quickstart.rs`; architecture: DESIGN.md.
+
+pub mod baselines;
+pub mod bench;
+pub mod cluster;
+pub mod config;
+pub mod dag;
+pub mod coordinator;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod trace;
+pub mod util;
+
+pub use cluster::{Capacity, Config, ConfigSpace, CostModel};
+pub use dag::{Dag, Task, TaskProfile};
+pub use predictor::{Grid, LearnedPredictor, OraclePredictor, Predictor};
+pub use solver::{Agora, AgoraOptions, Goal, Problem, Schedule};

@@ -1,0 +1,287 @@
+//! `agora` — the launcher binary.
+//!
+//! Subcommands:
+//!   optimize   co-optimize DAG(s) and print the plan + Gantt chart
+//!   execute    optimize then execute on the simulated cluster
+//!   serve      run the multi-tenant service demo (threaded)
+//!   trace      macro-benchmark an Alibaba-like trace (AGORA vs Airflow)
+//!   catalog    print the instance catalog (Table 1) and config space
+//!   artifacts  verify the AOT artifacts load + run through PJRT
+//!
+//! DAG inputs: built-ins `fig1`, `dag1`, `dag2`, or a JSON spec path
+//! (see `Dag::from_json`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use agora::cluster::{ConfigSpace, CostModel};
+use agora::config::AppConfig;
+use agora::coordinator::{BatchRunner, MacroSummary, Strategy};
+use agora::dag::workloads;
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
+use agora::runtime::{Engine, PjrtPredictor};
+use agora::solver::{Agora, AgoraOptions};
+use agora::trace::{generate, TraceParams};
+use agora::util::{fmt_cost, fmt_duration, Args, Json, Rng};
+use agora::{Dag, LearnedPredictor, Predictor};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(AppConfig::FLAGS)?;
+    let config = AppConfig::resolve(&args)?;
+    match args.subcommand.as_deref() {
+        Some("optimize") => cmd_optimize(&args, &config, false),
+        Some("execute") => cmd_optimize(&args, &config, true),
+        Some("serve") => cmd_serve(&config),
+        Some("trace") => cmd_trace(&config),
+        Some("catalog") => cmd_catalog(),
+        Some("artifacts") => cmd_artifacts(&config),
+        Some(other) => bail!("unknown subcommand {other:?}\n{}", usage()),
+        None => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn usage() -> String {
+    format!(
+        "usage: agora <optimize|execute|serve|trace|catalog|artifacts> [dags...] [flags]\n{}",
+        Args::usage_for(AppConfig::FLAGS)
+    )
+}
+
+/// Resolve a DAG argument: built-in name or JSON file path.
+fn load_dag(name: &str) -> Result<Dag> {
+    match name {
+        "fig1" => Ok(workloads::fig1_dag()),
+        "dag1" => Ok(workloads::dag1()),
+        "dag2" => Ok(workloads::dag2()),
+        path => {
+            let v = Json::parse_file(Path::new(path))
+                .with_context(|| format!("loading DAG spec {path}"))?;
+            Dag::from_json(&v)
+        }
+    }
+}
+
+fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
+    let names: Vec<String> = if args.positional.is_empty() {
+        vec!["dag1".to_string()]
+    } else {
+        args.positional.clone()
+    };
+    let dags: Vec<Dag> = names.iter().map(|n| load_dag(n)).collect::<Result<_>>()?;
+    let releases = vec![0.0; dags.len()];
+    let space = ConfigSpace::standard();
+    let mut rng = Rng::new(config.seed);
+
+    // Histories: one bootstrap profiling set per task (the paper's
+    // "triggered test run" when no prior log exists).
+    let logs: Vec<EventLog> = dags
+        .iter()
+        .flat_map(|d| {
+            d.tasks
+                .iter()
+                .map(|t| {
+                    bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng)
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+
+    // Predictor: PJRT path (AOT kernel) or host path.
+    let grid = if config.use_pjrt {
+        let engine = Engine::new(&config.artifacts_dir)?;
+        println!("predictor: PJRT ({})", engine.platform());
+        let (grid, _fits) = PjrtPredictor::new(&engine).fit_predict(&logs, &space)?;
+        grid
+    } else {
+        LearnedPredictor::fit(&logs).predict(&space)
+    };
+
+    let p = Agora::build_problem_with_grid(
+        &dags,
+        &releases,
+        grid,
+        config.capacity,
+        space,
+        CostModel::OnDemand,
+    );
+    let agora = Agora::new(AgoraOptions {
+        goal: config.goal,
+        mode: config.mode,
+        params: config.anneal.clone(),
+        makespan_budget: config.makespan_budget,
+        cost_budget: config.cost_budget,
+        seed: config.seed,
+    });
+    let plan = agora.optimize(&p);
+
+    println!(
+        "plan [{} | goal={}]: predicted makespan {}  cost {}  (optimizer overhead {:?})",
+        config.mode.name(),
+        config.goal.name(),
+        fmt_duration(plan.makespan),
+        fmt_cost(plan.cost),
+        plan.overhead
+    );
+    if let Some(a) = &plan.anneal {
+        println!(
+            "annealing: {} iterations, {} accepted, {} improvements, {} CP nodes",
+            a.stats.iterations, a.stats.accepted, a.stats.improved, a.stats.inner_nodes
+        );
+    }
+    println!("\n{}", plan.schedule.render(&p));
+
+    if execute {
+        let report = agora::sim::execute(&p, &dags, &plan.schedule, &CostModel::OnDemand, &mut rng);
+        println!(
+            "executed: actual makespan {}  cost {}  prediction MAPE {:.1}%",
+            fmt_duration(report.makespan),
+            fmt_cost(report.cost),
+            report.prediction_mape * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(config: &AppConfig) -> Result<()> {
+    use agora::coordinator::service::{Service, ServiceConfig};
+    println!("starting multi-tenant service (demo: three tenants submit DAGs)...");
+    let service = Service::start(ServiceConfig {
+        capacity: config.capacity,
+        goal: config.goal,
+        seed: config.seed,
+        ..Default::default()
+    });
+    let handle = service.handle();
+    let rxs = vec![
+        ("alice", handle.submit("alice", workloads::dag1())),
+        ("bob", handle.submit("bob", workloads::dag2())),
+        ("carol", handle.submit("carol", workloads::fig1_dag())),
+    ];
+    for (tenant, rx) in rxs {
+        let r = rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .with_context(|| format!("waiting for {tenant}"))?;
+        println!(
+            "tenant {:<6} dag {:<5} round {}: completion {}  cost {}",
+            r.tenant,
+            r.dag_name,
+            r.round,
+            fmt_duration(r.completion),
+            fmt_cost(r.cost)
+        );
+    }
+    let rounds = service.shutdown();
+    println!("service stopped after {rounds} round(s)");
+    Ok(())
+}
+
+fn cmd_trace(config: &AppConfig) -> Result<()> {
+    let params = TraceParams {
+        jobs: 40,
+        ..TraceParams::default()
+    };
+    let mut rng = Rng::new(config.seed);
+    let jobs = generate(&params, &mut rng);
+    println!(
+        "trace: {} DAG jobs over {}, batch capacity {:.0} cores / {:.0} GiB",
+        jobs.len(),
+        fmt_duration(params.window),
+        params.batch_capacity().vcpus,
+        params.batch_capacity().memory_gb
+    );
+
+    let mut base_runner = BatchRunner::new(
+        params.batch_capacity(),
+        ConfigSpace::standard(),
+        Strategy::Airflow,
+        config.seed,
+    );
+    let base = base_runner.run(&jobs);
+    let mut agora_runner = BatchRunner::new(
+        params.batch_capacity(),
+        ConfigSpace::standard(),
+        Strategy::Agora(config.goal),
+        config.seed,
+    );
+    let run = agora_runner.run(&jobs);
+    let summary = MacroSummary::against(&base, &run);
+    println!(
+        "airflow : cost {}  total completion {}",
+        fmt_cost(base.total_cost),
+        fmt_duration(base.total_completion)
+    );
+    println!(
+        "agora   : cost {} ({:.0}% of baseline)  total completion {} ({:.0}%)",
+        fmt_cost(run.total_cost),
+        summary.normalized_cost * 100.0,
+        fmt_duration(run.total_completion),
+        summary.normalized_completion * 100.0
+    );
+    println!(
+        "{:.0}% of DAGs improved; {:.0}% improved by >=95%; optimizer overhead {:?} over {} rounds",
+        summary.improved_fraction * 100.0,
+        summary.near_total_fraction * 100.0,
+        run.optimizer_overhead,
+        run.rounds
+    );
+    Ok(())
+}
+
+fn cmd_catalog() -> Result<()> {
+    print!("{}", agora::cluster::catalog::table1());
+    let space = ConfigSpace::standard();
+    println!(
+        "\nconfig space: {} candidates ({} instance types x {} node counts x {} Spark presets)",
+        space.len(),
+        agora::cluster::catalog::M5_CATALOG.len(),
+        agora::cluster::config::NODE_LADDER.len(),
+        agora::cluster::config::SPARK_PRESETS.len()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(config: &AppConfig) -> Result<()> {
+    let engine = Engine::new(&config.artifacts_dir)?;
+    println!(
+        "artifacts: {} entries from {} (platform {})",
+        engine.manifest.entries.len(),
+        config.artifacts_dir.display(),
+        engine.platform()
+    );
+    // Smoke-run the small predict artifact against the host oracle.
+    let space = ConfigSpace::standard();
+    let mut rng = Rng::new(1);
+    let logs: Vec<EventLog> = workloads::ALL_JOBS
+        .iter()
+        .map(|j| bootstrap_history(j.name(), &j.profile(), &default_profiling_configs(), &mut rng))
+        .collect();
+    let host = LearnedPredictor::fit(&logs);
+    let host_grid = host.predict(&space);
+    let pjrt = PjrtPredictor::new(&engine);
+    let pjrt_grid = pjrt.predict_fitted(&host.fits, &space)?;
+    let mut max_rel = 0.0f64;
+    for t in 0..host_grid.tasks() {
+        for c in 0..space.len() {
+            let h = host_grid.get(t, c);
+            let x = pjrt_grid.get(t, c);
+            max_rel = max_rel.max((h - x).abs() / h.max(1e-9));
+        }
+    }
+    println!("PJRT vs host predictor: max relative deviation {max_rel:.2e}");
+    if max_rel > 1e-4 {
+        bail!("PJRT and host predictor disagree (> 1e-4)");
+    }
+    println!("artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Ernest basis features — MUST mirror `python/compile/kernels/ref.py`
+//! (`ernest_basis`): the Rust coordinator builds these vectors and feeds
+//! them to the AOT-compiled kernels, so any drift between the two
+//! definitions silently corrupts predictions. `python/tests/test_kernel.py
+//! ::test_ernest_basis_matches_rust_convention` pins the layout.
+
+/// Number of basis features (padded to 8 so the kernel contraction is
+/// MXU-aligned).
+pub const K: usize = 8;
+
+/// Feature vector for effective parallelism `n` on an instance with the
+/// given speed factors. Layout:
+///   0: 1                (serial term)
+///   1: 1/n              (communication / all-to-one)
+///   2: log2(n+1)        (tree aggregation)
+///   3: n/64             (per-node overhead)
+///   4: cpu_factor       (instance speed)
+///   5: mem_factor       (instance memory headroom)
+///   6,7: zero padding
+pub fn ernest_basis(n: f64, cpu_factor: f64, mem_factor: f64) -> [f64; K] {
+    let n = n.max(1.0);
+    [
+        1.0,
+        1.0 / n,
+        (n + 1.0).log2(),
+        n / 64.0,
+        cpu_factor,
+        mem_factor,
+        0.0,
+        0.0,
+    ]
+}
+
+/// Basis for a cluster configuration: n is the m5.4xlarge-equivalent node
+/// count; the memory factor encodes usable memory relative to the m5
+/// baseline of 4 GiB/vCPU (constant within the family, but carried so the
+/// model generalizes to other catalogs).
+///
+/// Features 6 and 7 carry the Spark preset as a SIGNED pair
+/// (thin-leaning bias, fat-leaning bias): NNLS coefficients are
+/// non-negative, so a single monotone preset feature could only ever
+/// model "thinner is slower" — the pair lets the fit express either
+/// direction per task (shuffle-heavy jobs prefer fat executors,
+/// embarrassingly parallel jobs prefer thin; see TaskProfile::spark_eff).
+pub fn config_basis(cfg: &crate::cluster::Config) -> [f64; K] {
+    let it = cfg.instance_type();
+    let mem_factor =
+        it.memory_per_vcpu() / 4.0 * cfg.spark_params().memory_fraction;
+    let mut phi = ernest_basis(cfg.n_eff(), it.speed_factor, mem_factor);
+    let bias = cfg.spark_params().parallel_bias;
+    phi[6] = bias.max(0.0);
+    phi[7] = (-bias).max(0.0);
+    phi
+}
+
+/// Dot product against a coefficient vector.
+pub fn dot(theta: &[f64; K], phi: &[f64; K]) -> f64 {
+    theta.iter().zip(phi.iter()).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Config;
+
+    #[test]
+    fn basis_layout_matches_python_ref() {
+        // Pinned against python/tests/test_kernel.py
+        let b = ernest_basis(4.0, 1.5, 2.0);
+        assert_eq!(b[0], 1.0);
+        assert_eq!(b[1], 0.25);
+        assert!((b[2] - 5.0f64.log2()).abs() < 1e-12);
+        assert!((b[3] - 4.0 / 64.0).abs() < 1e-12);
+        assert_eq!(b[4], 1.5);
+        assert_eq!(b[5], 2.0);
+        assert_eq!(b[6], 0.0);
+        assert_eq!(b[7], 0.0);
+    }
+
+    #[test]
+    fn n_below_one_clamps() {
+        let b = ernest_basis(0.0, 1.0, 1.0);
+        assert_eq!(b[1], 1.0);
+    }
+
+    #[test]
+    fn config_basis_uses_n_eff() {
+        let c = Config {
+            instance: 3,
+            nodes: 2,
+            spark: 1,
+        }; // 2 x m5.16xlarge = 8 n_eff
+        let b = config_basis(&c);
+        assert!((b[1] - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_product() {
+        let mut theta = [0.0; K];
+        theta[0] = 2.0;
+        theta[1] = 4.0;
+        let phi = ernest_basis(2.0, 1.0, 1.0);
+        assert!((dot(&theta, &phi) - (2.0 + 4.0 * 0.5)).abs() < 1e-12);
+    }
+}

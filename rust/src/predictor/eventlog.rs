@@ -1,0 +1,231 @@
+//! Spark-style event logs — the Predictor's only view of the world.
+//!
+//! The real AGORA reads Spark history-server event logs; our simulated
+//! substrate produces the same information: per-run records of the
+//! configuration used and the observed runtime, plus a stage breakdown
+//! (read / compute / shuffle / write) whose proportions follow the task's
+//! ground-truth profile. The optimizer never touches `TaskProfile`
+//! directly — prediction error is real in every experiment.
+
+use crate::cluster::Config;
+use crate::dag::TaskProfile;
+use crate::util::{Json, Rng};
+
+/// One observed execution of a task.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub config: Config,
+    /// Observed wall-clock runtime in seconds (includes run noise).
+    pub runtime: f64,
+    /// Stage breakdown (seconds); sums to ~runtime.
+    pub stages: Vec<(String, f64)>,
+}
+
+/// Event-log history for one task, newest last.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    pub task: String,
+    pub runs: Vec<RunRecord>,
+}
+
+impl EventLog {
+    pub fn new(task: &str) -> Self {
+        EventLog {
+            task: task.to_string(),
+            runs: Vec::new(),
+        }
+    }
+
+    pub fn record(&mut self, config: Config, runtime: f64, stages: Vec<(String, f64)>) {
+        self.runs.push(RunRecord {
+            config,
+            runtime,
+            stages,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("task", Json::str(&self.task)),
+            (
+                "runs",
+                Json::arr(self.runs.iter().map(|r| {
+                    Json::obj(vec![
+                        ("instance", Json::num(r.config.instance as f64)),
+                        ("nodes", Json::num(r.config.nodes as f64)),
+                        ("spark", Json::num(r.config.spark as f64)),
+                        ("runtime", Json::num(r.runtime)),
+                        (
+                            "stages",
+                            Json::arr(r.stages.iter().map(|(name, secs)| {
+                                Json::arr(vec![Json::str(name), Json::num(*secs)])
+                            })),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Simulate one run of a task under a configuration and log it.
+/// Runtime = ground truth x lognormal(0, noise_sigma) noise.
+pub fn simulate_run(
+    profile: &TaskProfile,
+    config: Config,
+    rng: &mut Rng,
+) -> (f64, Vec<(String, f64)>) {
+    let truth = profile.runtime(&config);
+    let noise = rng.lognormal(0.0, profile.noise_sigma);
+    let runtime = (truth * noise).max(1.0);
+
+    // Stage split: IO-ish tasks (positive spark_affinity) spend more time
+    // reading/writing; shuffle-heavy (negative affinity) more in shuffle.
+    let io_frac = 0.15 + 0.10 * profile.spark_affinity.max(0.0);
+    let shuffle_frac = 0.10 + 0.20 * (-profile.spark_affinity).max(0.0);
+    let compute_frac = (1.0 - io_frac - shuffle_frac).max(0.1);
+    let stages = vec![
+        ("read".to_string(), runtime * io_frac * 0.6),
+        ("compute".to_string(), runtime * compute_frac),
+        ("shuffle".to_string(), runtime * shuffle_frac),
+        ("write".to_string(), runtime * io_frac * 0.4),
+    ];
+    (runtime, stages)
+}
+
+/// Produce the "one prior run" history the paper assumes users provide
+/// (a single run at a default configuration), optionally plus a few
+/// Ernest-style profiling runs at small scales.
+pub fn bootstrap_history(
+    task: &str,
+    profile: &TaskProfile,
+    profiling_runs: &[Config],
+    rng: &mut Rng,
+) -> EventLog {
+    let mut log = EventLog::new(task);
+    for &cfg in profiling_runs {
+        let (runtime, stages) = simulate_run(profile, cfg, rng);
+        log.record(cfg, runtime, stages);
+    }
+    log
+}
+
+/// Default profiling configs: Ernest-style sampling — small scales on
+/// the smallest instance plus one mid-scale anchor and one alternate
+/// instance type, so extrapolation to the full ladder is grounded
+/// (Ernest's "few training runs at small scales" methodology).
+pub fn default_profiling_configs() -> Vec<Config> {
+    vec![
+        Config { instance: 0, nodes: 1, spark: 1 },
+        Config { instance: 0, nodes: 2, spark: 1 },
+        Config { instance: 0, nodes: 4, spark: 1 },
+        Config { instance: 0, nodes: 8, spark: 1 },
+        Config { instance: 1, nodes: 4, spark: 1 },
+        // Spark-preset variation: without it the preset axis of the
+        // model is unidentified and the optimizer chases spurious minima
+        // (AGORA "tunes Spark configurations based on the
+        // characteristics from historical log" — it needs that signal).
+        Config { instance: 0, nodes: 4, spark: 0 },
+        Config { instance: 0, nodes: 4, spark: 2 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_runs_are_near_truth() {
+        let profile = TaskProfile::example();
+        let cfg = Config {
+            instance: 0,
+            nodes: 4,
+            spark: 1,
+        };
+        let truth = profile.runtime(&cfg);
+        let mut rng = Rng::new(1);
+        let mut total = 0.0;
+        let n = 200;
+        for _ in 0..n {
+            let (rt, _) = simulate_run(&profile, cfg, &mut rng);
+            total += rt;
+        }
+        let mean = total / n as f64;
+        assert!(
+            (mean - truth).abs() / truth < 0.05,
+            "mean {mean} vs truth {truth}"
+        );
+    }
+
+    #[test]
+    fn stages_sum_to_runtime() {
+        let profile = TaskProfile::example();
+        let cfg = Config {
+            instance: 1,
+            nodes: 2,
+            spark: 0,
+        };
+        let mut rng = Rng::new(2);
+        let (rt, stages) = simulate_run(&profile, cfg, &mut rng);
+        let sum: f64 = stages.iter().map(|(_, s)| s).sum();
+        assert!((sum - rt).abs() / rt < 0.2, "stages {sum} vs runtime {rt}");
+    }
+
+    #[test]
+    fn bootstrap_produces_one_run_per_config() {
+        let mut rng = Rng::new(3);
+        let log = bootstrap_history(
+            "t",
+            &TaskProfile::example(),
+            &default_profiling_configs(),
+            &mut rng,
+        );
+        assert_eq!(log.len(), default_profiling_configs().len());
+        assert!(log.runs.iter().all(|r| r.runtime > 0.0));
+    }
+
+    #[test]
+    fn eventlog_json_contains_runs() {
+        let mut rng = Rng::new(4);
+        let log = bootstrap_history(
+            "t",
+            &TaskProfile::example(),
+            &default_profiling_configs(),
+            &mut rng,
+        );
+        let j = log.to_json();
+        assert_eq!(
+            j.get("runs").unwrap().as_arr().unwrap().len(),
+            default_profiling_configs().len()
+        );
+    }
+
+    #[test]
+    fn shuffle_heavy_tasks_log_more_shuffle_time() {
+        let mut shuffle_heavy = TaskProfile::example();
+        shuffle_heavy.spark_affinity = -1.0;
+        let mut io_heavy = TaskProfile::example();
+        io_heavy.spark_affinity = 1.0;
+        let cfg = Config {
+            instance: 0,
+            nodes: 1,
+            spark: 1,
+        };
+        let mut rng = Rng::new(5);
+        let (_, s1) = simulate_run(&shuffle_heavy, cfg, &mut rng);
+        let (_, s2) = simulate_run(&io_heavy, cfg, &mut rng);
+        let frac = |stages: &[(String, f64)], name: &str| {
+            let total: f64 = stages.iter().map(|(_, s)| s).sum();
+            stages.iter().find(|(n, _)| n == name).unwrap().1 / total
+        };
+        assert!(frac(&s1, "shuffle") > frac(&s2, "shuffle"));
+    }
+}

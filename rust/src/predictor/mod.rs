@@ -1,0 +1,375 @@
+//! The AGORA **Predictor** (§4.4): runtime prediction for every
+//! (task, configuration) pair, learned from Spark event logs.
+//!
+//! Two implementations share one model family:
+//! * [`LearnedPredictor`] — fits per-task Ernest coefficients (NNLS) and
+//!   USL parameters from event logs; predictions run either on the host
+//!   (this module) or through the AOT-compiled L1 kernel via PJRT
+//!   (`runtime::PjrtPredictor`), bit-compatible by construction.
+//! * [`OraclePredictor`] — reads ground truth directly; used by ablations
+//!   (perfect-predictor bound) and by brute-force co-optimization.
+
+pub mod basis;
+pub mod eventlog;
+pub mod nnls;
+
+use crate::cluster::{Config, ConfigSpace};
+use crate::dag::profile::usl_penalty;
+use crate::dag::TaskProfile;
+
+pub use basis::{config_basis, ernest_basis, K};
+pub use eventlog::{bootstrap_history, default_profiling_configs, simulate_run, EventLog};
+
+/// Floor for predicted runtimes (mirrors python ref.EPS).
+pub const EPS: f64 = 1e-3;
+
+/// Predicted runtime surface: `durations[t][c]` seconds for task `t`
+/// under configuration `c` of the space it was built against.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub durations: Vec<Vec<f64>>,
+}
+
+impl Grid {
+    pub fn tasks(&self) -> usize {
+        self.durations.len()
+    }
+
+    pub fn get(&self, task: usize, config: usize) -> f64 {
+        self.durations[task][config]
+    }
+
+    /// Index of the config minimizing predicted runtime for a task.
+    pub fn fastest(&self, task: usize, feasible: &[usize]) -> usize {
+        *feasible
+            .iter()
+            .min_by(|&&a, &&b| {
+                self.durations[task][a]
+                    .partial_cmp(&self.durations[task][b])
+                    .unwrap()
+            })
+            .expect("non-empty feasible set")
+    }
+}
+
+/// Fitted per-task model parameters — exactly the tensors the L1 kernel
+/// consumes (theta row, USL row), plus per-Spark-preset multipliers.
+///
+/// The preset effect is multiplicative in runtime; because the kernel is
+/// linear in (theta, gamma) jointly, a preset multiplier folds exactly
+/// into a scaled (theta, gamma) row — the PJRT path expands each task
+/// into one row per preset and the kernel contract stays unchanged.
+#[derive(Debug, Clone)]
+pub struct FittedTask {
+    pub theta: [f64; K],
+    /// (gamma, alpha, beta, mix) — see python/compile/kernels/ref.py.
+    pub usl: [f64; 4],
+    /// Runtime multiplier per Spark preset (index = preset id),
+    /// relative to the balanced preset the Ernest fit is trained on.
+    pub preset_mult: [f64; 3],
+}
+
+/// Evaluate the canonical predictor model for one (task, config) pair.
+/// MUST match `predict_grid_ref` in python/compile/kernels/ref.py (the
+/// preset multiplier is equivalent to scaling theta and gamma, which is
+/// exactly how the PJRT path feeds it to the kernel).
+pub fn model_runtime(fit: &FittedTask, cfg: &Config) -> f64 {
+    let phi = config_basis(cfg);
+    let ernest = basis::dot(&fit.theta, &phi);
+    let [gamma, alpha, beta, mix] = fit.usl;
+    let pen = usl_penalty(cfg.n_eff(), alpha, beta);
+    let mult = fit.preset_mult[cfg.spark.min(2)];
+    ((mix * ernest + (1.0 - mix) * gamma * pen) * mult).max(EPS)
+}
+
+/// A predictor produces a runtime grid over a configuration space.
+pub trait Predictor {
+    fn predict(&self, space: &ConfigSpace) -> Grid;
+    /// Human-readable name for experiment tables.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+
+/// Perfect predictor: reads ground-truth profiles. Upper-bounds what any
+/// learned predictor could achieve; the paper's BF co-optimize motivation
+/// study effectively assumes this.
+#[derive(Debug, Clone)]
+pub struct OraclePredictor {
+    pub profiles: Vec<TaskProfile>,
+}
+
+impl Predictor for OraclePredictor {
+    fn predict(&self, space: &ConfigSpace) -> Grid {
+        let durations = self
+            .profiles
+            .iter()
+            .map(|p| space.configs.iter().map(|c| p.runtime(c)).collect())
+            .collect();
+        Grid { durations }
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Event-log-trained predictor (the real AGORA path).
+#[derive(Debug, Clone)]
+pub struct LearnedPredictor {
+    pub fits: Vec<FittedTask>,
+}
+
+/// Prior USL parameters used when the history is too thin to identify
+/// alpha/beta (single prior run — the paper's minimum requirement).
+const PRIOR_ALPHA: f64 = 0.10;
+const PRIOR_BETA: f64 = 0.005;
+
+impl LearnedPredictor {
+    /// Fit one task from its event log.
+    ///
+    /// Two-stage fit: (1) NNLS Ernest coefficients over the balanced-
+    /// preset samples (scaling with nodes/instances), (2) multiplicative
+    /// preset factors from the preset-varied samples — the runtime ratio
+    /// observed at matched (instance, nodes). Preset effects are
+    /// multiplicative in the ground truth (executor-shape efficiency),
+    /// so a ratio estimate converges far faster than forcing the
+    /// additive basis to absorb them.
+    pub fn fit_task(log: &EventLog) -> FittedTask {
+        assert!(!log.is_empty(), "predictor requires >= 1 prior run");
+        // Stage 1: Ernest NNLS over balanced-preset samples (fall back
+        // to all samples when the history has no balanced run).
+        let balanced: Vec<&eventlog::RunRecord> =
+            log.runs.iter().filter(|r| r.config.spark == 1).collect();
+        let train: Vec<&eventlog::RunRecord> = if balanced.is_empty() {
+            log.runs.iter().collect()
+        } else {
+            balanced
+        };
+        let x: Vec<[f64; K]> = train.iter().map(|r| config_basis(&r.config)).collect();
+        let y: Vec<f64> = train.iter().map(|r| r.runtime).collect();
+        let theta = nnls::fit_one(&x, &y, nnls::DEFAULT_ITERS);
+
+        // USL part: gamma chosen so the prior-shaped curve passes through
+        // the most recent observation; alpha/beta from priors (they become
+        // identifiable only through the Ernest term as history grows).
+        let last = train.last().unwrap();
+        let pen = usl_penalty(last.config.n_eff(), PRIOR_ALPHA, PRIOR_BETA);
+        let gamma = last.runtime / pen.max(1e-9);
+
+        // Trust the Ernest fit more as history grows: mix = S / (S + 2).
+        let s = train.len() as f64;
+        let mix = s / (s + 2.0);
+
+        // Stage 2: preset multipliers — geometric mean of observed /
+        // predicted-balanced ratios at each sampled preset.
+        let base_fit = FittedTask {
+            theta,
+            usl: [gamma, PRIOR_ALPHA, PRIOR_BETA, mix],
+            preset_mult: [1.0; 3],
+        };
+        let mut preset_mult = [1.0f64; 3];
+        for preset in [0usize, 2] {
+            let ratios: Vec<f64> = log
+                .runs
+                .iter()
+                .filter(|r| r.config.spark == preset)
+                .map(|r| {
+                    let mut balanced_cfg = r.config;
+                    balanced_cfg.spark = 1;
+                    r.runtime / model_runtime(&base_fit, &balanced_cfg).max(1e-9)
+                })
+                .collect();
+            if !ratios.is_empty() {
+                let g = (ratios.iter().map(|x| x.ln()).sum::<f64>() / ratios.len() as f64).exp();
+                preset_mult[preset] = g.clamp(0.25, 4.0);
+            }
+        }
+
+        FittedTask {
+            preset_mult,
+            ..base_fit
+        }
+    }
+
+    pub fn fit(logs: &[EventLog]) -> LearnedPredictor {
+        LearnedPredictor {
+            fits: logs.iter().map(Self::fit_task).collect(),
+        }
+    }
+
+    /// The tensors handed to the AOT kernel (theta [T,K], usl [T,4]).
+    pub fn tensors(&self) -> (Vec<[f64; K]>, Vec<[f64; 4]>) {
+        (
+            self.fits.iter().map(|f| f.theta).collect(),
+            self.fits.iter().map(|f| f.usl).collect(),
+        )
+    }
+}
+
+impl Predictor for LearnedPredictor {
+    fn predict(&self, space: &ConfigSpace) -> Grid {
+        let durations = self
+            .fits
+            .iter()
+            .map(|f| {
+                space
+                    .configs
+                    .iter()
+                    .map(|c| model_runtime(f, c))
+                    .collect()
+            })
+            .collect();
+        Grid { durations }
+    }
+
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+}
+
+/// Mean absolute percentage error of a grid against ground truth —
+/// the paper quotes <20% for Ernest; our learned predictor is in the
+/// same regime (asserted in tests).
+pub fn mape(grid: &Grid, profiles: &[TaskProfile], space: &ConfigSpace) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for (t, p) in profiles.iter().enumerate() {
+        for (c, cfg) in space.configs.iter().enumerate() {
+            let truth = p.runtime(cfg);
+            total += (grid.get(t, c) - truth).abs() / truth.max(1e-9);
+            count += 1;
+        }
+    }
+    total / count.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::workloads::{JobKind, ALL_JOBS};
+    use crate::util::Rng;
+
+    fn training_configs() -> Vec<Config> {
+        // Ernest-style sampling: small scales plus one larger anchor.
+        vec![
+            Config { instance: 0, nodes: 1, spark: 1 },
+            Config { instance: 0, nodes: 2, spark: 1 },
+            Config { instance: 0, nodes: 4, spark: 1 },
+            Config { instance: 1, nodes: 4, spark: 1 },
+            Config { instance: 0, nodes: 8, spark: 1 },
+        ]
+    }
+
+    #[test]
+    fn oracle_grid_matches_profiles() {
+        let profiles: Vec<_> = ALL_JOBS.iter().map(|j| j.profile()).collect();
+        let space = ConfigSpace::standard();
+        let grid = OraclePredictor {
+            profiles: profiles.clone(),
+        }
+        .predict(&space);
+        assert_eq!(grid.tasks(), 4);
+        for (t, p) in profiles.iter().enumerate() {
+            for (c, cfg) in space.configs.iter().enumerate() {
+                assert_eq!(grid.get(t, c), p.runtime(cfg));
+            }
+        }
+    }
+
+    #[test]
+    fn learned_predictor_mape_under_25_percent() {
+        // Paper: Ernest achieves < 20% error on most workloads; our
+        // learned predictor must land in the same regime on the library.
+        let mut rng = Rng::new(42);
+        let profiles: Vec<_> = ALL_JOBS.iter().map(|j| j.profile()).collect();
+        let logs: Vec<EventLog> = ALL_JOBS
+            .iter()
+            .map(|j| bootstrap_history(j.name(), &j.profile(), &training_configs(), &mut rng))
+            .collect();
+        let pred = LearnedPredictor::fit(&logs);
+        let space = ConfigSpace::standard();
+        let grid = pred.predict(&space);
+        let err = mape(&grid, &profiles, &space);
+        assert!(err < 0.25, "MAPE {err:.3} too high");
+    }
+
+    #[test]
+    fn single_run_history_is_enough() {
+        // Paper: "AGORA requires only one event log per task (one prior run)".
+        let mut rng = Rng::new(7);
+        let profile = JobKind::AirlineDelay.profile();
+        let one = vec![Config {
+            instance: 0,
+            nodes: 4,
+            spark: 1,
+        }];
+        let log = bootstrap_history("t", &profile, &one, &mut rng);
+        let fit = LearnedPredictor::fit_task(&log);
+        let space = ConfigSpace::standard();
+        let grid = LearnedPredictor { fits: vec![fit] }.predict(&space);
+        // Sanity: predictions are positive and finite everywhere.
+        for c in 0..space.len() {
+            let d = grid.get(0, c);
+            assert!(d.is_finite() && d > 0.0);
+        }
+    }
+
+    #[test]
+    fn more_history_improves_accuracy() {
+        let mut rng = Rng::new(9);
+        let profile = JobKind::MovieRecommendation.profile();
+        let space = ConfigSpace::standard();
+        let profiles = vec![profile.clone()];
+
+        let thin = bootstrap_history(
+            "t",
+            &profile,
+            &[Config { instance: 0, nodes: 4, spark: 1 }],
+            &mut rng,
+        );
+        let rich = bootstrap_history("t", &profile, &training_configs(), &mut rng);
+
+        let err_thin = mape(
+            &LearnedPredictor::fit(&[thin]).predict(&space),
+            &profiles,
+            &space,
+        );
+        let err_rich = mape(
+            &LearnedPredictor::fit(&[rich]).predict(&space),
+            &profiles,
+            &space,
+        );
+        assert!(
+            err_rich < err_thin,
+            "rich {err_rich:.3} should beat thin {err_thin:.3}"
+        );
+    }
+
+    #[test]
+    fn fastest_respects_feasible_set() {
+        let profiles: Vec<_> = vec![JobKind::IndexAnalysis.profile()];
+        let space = ConfigSpace::standard();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let feasible: Vec<usize> = vec![0, 1, 2];
+        let best = grid.fastest(0, &feasible);
+        assert!(feasible.contains(&best));
+    }
+
+    #[test]
+    fn model_runtime_floors_at_eps() {
+        let fit = FittedTask {
+            theta: [0.0; K],
+            usl: [0.0, 0.0, 0.0, 1.0],
+            preset_mult: [1.0; 3],
+        };
+        let cfg = Config {
+            instance: 0,
+            nodes: 1,
+            spark: 1,
+        };
+        assert_eq!(model_runtime(&fit, &cfg), EPS);
+    }
+}

@@ -1,0 +1,117 @@
+//! Host-side batched NNLS (projected gradient) — the exact algorithm the
+//! L2 `fit_theta` artifact implements, mirrored in Rust for two reasons:
+//! (1) a CPU fallback when artifacts are absent, and (2) a cross-language
+//! oracle: integration tests assert the PJRT path and this path agree.
+
+use super::basis::K;
+
+pub const DEFAULT_ITERS: usize = 300;
+
+/// Fit one task's non-negative coefficients from S (basis, runtime)
+/// samples. `x` is row-major [S][K]; returns theta[K] >= 0.
+pub fn fit_one(x: &[[f64; K]], y: &[f64], iters: usize) -> [f64; K] {
+    assert_eq!(x.len(), y.len());
+    // Gram = X^T X (K x K), xty = X^T y
+    let mut gram = [[0.0f64; K]; K];
+    let mut xty = [0.0f64; K];
+    for (row, &yi) in x.iter().zip(y.iter()) {
+        for a in 0..K {
+            xty[a] += row[a] * yi;
+            for b in 0..K {
+                gram[a][b] += row[a] * row[b];
+            }
+        }
+    }
+    let trace: f64 = (0..K).map(|i| gram[i][i]).sum();
+    let step = 1.0 / trace.max(1e-6);
+
+    let mut theta = [0.0f64; K];
+    for _ in 0..iters {
+        // grad = Gram * theta - xty
+        let mut grad = [0.0f64; K];
+        for a in 0..K {
+            let mut g = -xty[a];
+            for b in 0..K {
+                g += gram[a][b] * theta[b];
+            }
+            grad[a] = g;
+        }
+        for a in 0..K {
+            theta[a] = (theta[a] - step * grad[a]).max(0.0);
+        }
+    }
+    theta
+}
+
+/// Training loss 0.5*||X theta - y||^2 for convergence checks.
+pub fn loss(x: &[[f64; K]], y: &[f64], theta: &[f64; K]) -> f64 {
+    x.iter()
+        .zip(y.iter())
+        .map(|(row, &yi)| {
+            let pred: f64 = row.iter().zip(theta.iter()).map(|(a, b)| a * b).sum();
+            0.5 * (pred - yi) * (pred - yi)
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::basis::ernest_basis;
+    use crate::util::Rng;
+
+    #[test]
+    fn recovers_noiseless_predictions() {
+        let mut rng = Rng::new(1);
+        let mut true_theta = [0.0; K];
+        for t in true_theta.iter_mut().take(4) {
+            *t = rng.uniform(0.0, 20.0);
+        }
+        let ns = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let x: Vec<[f64; K]> = ns.iter().map(|&n| ernest_basis(n, 1.0, 1.0)).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|row| row.iter().zip(true_theta.iter()).map(|(a, b)| a * b).sum())
+            .collect();
+        let theta = fit_one(&x, &y, 5000);
+        for (row, &yi) in x.iter().zip(y.iter()) {
+            let pred: f64 = row.iter().zip(theta.iter()).map(|(a, b)| a * b).sum();
+            assert!(
+                (pred - yi).abs() / yi.max(1e-6) < 0.05,
+                "pred {pred} vs {yi}"
+            );
+        }
+    }
+
+    #[test]
+    fn theta_is_nonnegative() {
+        let mut rng = Rng::new(2);
+        let x: Vec<[f64; K]> = (0..8)
+            .map(|_| ernest_basis(rng.uniform(1.0, 32.0), 1.0, 1.0))
+            .collect();
+        let y: Vec<f64> = (0..8).map(|_| rng.uniform(-50.0, 50.0)).collect();
+        let theta = fit_one(&x, &y, 500);
+        assert!(theta.iter().all(|&t| t >= 0.0));
+    }
+
+    #[test]
+    fn fit_reduces_loss_vs_zero() {
+        let mut rng = Rng::new(3);
+        let x: Vec<[f64; K]> = (0..6)
+            .map(|_| ernest_basis(rng.uniform(1.0, 16.0), 1.0, 1.0))
+            .collect();
+        let y: Vec<f64> = (0..6).map(|_| rng.uniform(10.0, 100.0)).collect();
+        let theta = fit_one(&x, &y, DEFAULT_ITERS);
+        assert!(loss(&x, &y, &theta) < loss(&x, &y, &[0.0; K]));
+    }
+
+    #[test]
+    fn single_sample_fit_matches_observation() {
+        // The paper: "AGORA requires only one event log per task".
+        let x = vec![ernest_basis(4.0, 1.0, 1.0)];
+        let y = vec![120.0];
+        let theta = fit_one(&x, &y, 5000);
+        let pred: f64 = x[0].iter().zip(theta.iter()).map(|(a, b)| a * b).sum();
+        assert!((pred - 120.0).abs() < 1.0, "pred={pred}");
+    }
+}

@@ -1,0 +1,249 @@
+//! Artifact loading + compiled-executable cache over the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Shape variant of the compiled Predictor (see python VARIANTS).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Small,
+    Large,
+}
+
+impl Variant {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Small => "small",
+            Variant::Large => "large",
+        }
+    }
+
+    /// Pick the smallest variant that fits (tasks, configs).
+    pub fn for_problem(
+        manifest: &ArtifactManifest,
+        tasks: usize,
+        configs: usize,
+    ) -> Result<Variant> {
+        for v in [Variant::Small, Variant::Large] {
+            if let Some(e) = manifest.entries.get(&format!("predict_{}", v.name())) {
+                if tasks <= e.tasks && configs <= e.configs {
+                    return Ok(v);
+                }
+            }
+        }
+        bail!("no artifact variant fits {tasks} tasks x {configs} configs")
+    }
+}
+
+/// One artifact's shape metadata from manifest.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub entry: String,
+    pub tasks: usize,
+    pub configs: usize,
+    pub samples: usize,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub k: usize,
+    pub entries: HashMap<String, ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let manifest_path = dir.join("manifest.json");
+        let v = Json::parse_file(&manifest_path)?;
+        let k = v.get("k")?.as_usize()?;
+        let mut entries = HashMap::new();
+        for (name, e) in v.get("artifacts")?.as_obj()? {
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    entry: e.get("entry")?.as_str()?.to_string(),
+                    tasks: e.get("tasks")?.as_usize()?,
+                    configs: e.get("configs")?.as_usize()?,
+                    samples: e.get("samples")?.as_usize()?,
+                },
+            );
+        }
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            k,
+            entries,
+        })
+    }
+
+    /// Default artifact directory: $AGORA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("AGORA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+/// The PJRT execution engine: one CPU client + a lazy cache of compiled
+/// executables keyed by artifact name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create the engine and verify the artifact directory. Compilation
+    /// happens lazily per artifact (first use) and is cached.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = ArtifactManifest::load(artifact_dir)
+            .with_context(|| format!("loading artifacts from {}", artifact_dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name, e.g. "predict_small".
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        if !self.manifest.entries.contains_key(name) {
+            bail!(
+                "unknown artifact {name:?}; manifest has {:?}",
+                self.manifest.entries.keys().collect::<Vec<_>>()
+            );
+        }
+        let path = self.manifest.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute an artifact with f32 input tensors (shape: row-major dims)
+    /// and return the tuple elements as flat f32 vectors.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(Vec<f32>, Vec<i64>)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let expected: i64 = dims.iter().product();
+                assert_eq!(
+                    expected as usize,
+                    data.len(),
+                    "input buffer size mismatch for {name}"
+                );
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // Artifacts are lowered with return_tuple=True.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("reading f32 result: {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine integration tests live in rust/tests/integration.rs (they
+    // need `make artifacts` to have run). Here: manifest parsing only.
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join("agora-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"k": 8, "artifacts": {"predict_small": {
+                "entry": "predict", "variant": "small",
+                "tasks": 32, "configs": 64, "samples": 0, "k": 8,
+                "inputs": [[32,8]], "outputs": [[32,64]]}}}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.k, 8);
+        let e = &m.entries["predict_small"];
+        assert_eq!(e.tasks, 32);
+        assert_eq!(e.configs, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn variant_selection_prefers_smallest_fit() {
+        let mut entries = HashMap::new();
+        for (name, t, c) in [("predict_small", 32, 64), ("predict_large", 128, 512)] {
+            entries.insert(
+                name.to_string(),
+                ArtifactEntry {
+                    entry: "predict".into(),
+                    tasks: t,
+                    configs: c,
+                    samples: 0,
+                },
+            );
+        }
+        let m = ArtifactManifest {
+            dir: PathBuf::from("."),
+            k: 8,
+            entries,
+        };
+        assert_eq!(Variant::for_problem(&m, 8, 64).unwrap(), Variant::Small);
+        assert_eq!(Variant::for_problem(&m, 64, 64).unwrap(), Variant::Large);
+        assert!(Variant::for_problem(&m, 500, 64).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let r = ArtifactManifest::load(Path::new("/nonexistent-agora"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-compiled L1/L2 artifacts.
+//!
+//! `make artifacts` (build time, Python) lowers the Predictor's fit and
+//! grid-prediction graphs to HLO *text* under `artifacts/`; this module
+//! loads them through the `xla` crate (PJRT CPU client), compiles once at
+//! startup, and executes them on the request path. Python is never
+//! invoked at runtime.
+//!
+//! Interchange is HLO text, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod predictor;
+
+pub use engine::{ArtifactManifest, Engine, Variant};
+pub use predictor::PjrtPredictor;

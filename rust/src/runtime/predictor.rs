@@ -1,0 +1,190 @@
+//! PJRT-backed Predictor: the production path where the fitted model (or
+//! raw event-log samples) run through the AOT-compiled L1 Pallas kernel.
+//!
+//! Numerically interchangeable with the host `LearnedPredictor` — both
+//! implement the canonical model of python/compile/kernels/ref.py — and
+//! asserted equal (1e-4 relative) by rust/tests/integration.rs.
+//!
+//! Preset multipliers: the kernel is linear in (theta, gamma) jointly, so
+//! each task expands into one row per Spark preset with (theta, gamma)
+//! scaled by that preset's multiplier; after execution, cell (t, c) is
+//! read from the row matching config c's preset. The kernel contract is
+//! untouched. Tasks are processed in chunks when the expansion exceeds
+//! the artifact variant's static row count.
+
+use anyhow::Result;
+
+use super::engine::{Engine, Variant};
+use crate::cluster::ConfigSpace;
+use crate::predictor::{config_basis, EventLog, FittedTask, Grid, LearnedPredictor, K};
+
+/// Number of Spark presets a task row expands into.
+const PRESETS: usize = crate::cluster::config::SPARK_PRESETS.len();
+
+/// Batched grid prediction through the compiled artifacts.
+pub struct PjrtPredictor<'e> {
+    pub engine: &'e Engine,
+}
+
+impl<'e> PjrtPredictor<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        PjrtPredictor { engine }
+    }
+
+    /// Build the phi [C, K] and n [C] tensors for a config space, padded
+    /// to `configs` rows.
+    fn config_tensors(space: &ConfigSpace, configs: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut phi = vec![0f32; configs * K];
+        let mut n = vec![1f32; configs];
+        for (c, cfg) in space.configs.iter().enumerate() {
+            let basis = config_basis(cfg);
+            for (k, &b) in basis.iter().enumerate() {
+                phi[c * K + k] = b as f32;
+            }
+            n[c] = cfg.n_eff() as f32;
+        }
+        (phi, n)
+    }
+
+    /// Predict the runtime grid from an already-fitted model, via the
+    /// `predict_<variant>` artifact (pure L1 kernel).
+    pub fn predict_fitted(&self, fits: &[FittedTask], space: &ConfigSpace) -> Result<Grid> {
+        let c_real = space.len();
+        // Any variant must fit the config axis; rows are chunked.
+        let variant = Variant::for_problem(&self.engine.manifest, 1, c_real)?;
+        let name = format!("predict_{}", variant.name());
+        let entry = &self.engine.manifest.entries[&name];
+        let (rows_pad, c_pad) = (entry.tasks, entry.configs);
+        let tasks_per_chunk = (rows_pad / PRESETS).max(1);
+
+        let (phi, n) = Self::config_tensors(space, c_pad);
+        let mut durations: Vec<Vec<f64>> = Vec::with_capacity(fits.len());
+
+        for chunk in fits.chunks(tasks_per_chunk) {
+            // Expand: one row per (task, preset), theta/gamma scaled by
+            // the preset multiplier.
+            let mut theta = vec![0f32; rows_pad * K];
+            let mut usl = vec![0f32; rows_pad * 4];
+            for (t, fit) in chunk.iter().enumerate() {
+                for (s, &mult) in fit.preset_mult.iter().enumerate() {
+                    let row = t * PRESETS + s;
+                    for (k, &v) in fit.theta.iter().enumerate() {
+                        theta[row * K + k] = (v * mult) as f32;
+                    }
+                    usl[row * 4] = (fit.usl[0] * mult) as f32; // gamma
+                    usl[row * 4 + 1] = fit.usl[1] as f32;
+                    usl[row * 4 + 2] = fit.usl[2] as f32;
+                    usl[row * 4 + 3] = fit.usl[3] as f32;
+                }
+            }
+            // Padding rows: mix = 1 with zero theta -> EPS (inert).
+            for row in chunk.len() * PRESETS..rows_pad {
+                usl[row * 4 + 3] = 1.0;
+            }
+
+            let outputs = self.engine.run_f32(
+                &name,
+                &[
+                    (theta, vec![rows_pad as i64, K as i64]),
+                    (phi.clone(), vec![c_pad as i64, K as i64]),
+                    (usl, vec![rows_pad as i64, 4]),
+                    (n.clone(), vec![c_pad as i64]),
+                ],
+            )?;
+            let flat = &outputs[0];
+            for t in 0..chunk.len() {
+                let row_of = |c: usize| t * PRESETS + space.configs[c].spark.min(PRESETS - 1);
+                durations.push(
+                    (0..c_real)
+                        .map(|c| flat[row_of(c) * c_pad + c] as f64)
+                        .collect(),
+                );
+            }
+        }
+        Ok(Grid { durations })
+    }
+
+    /// Fit + predict: the batched NNLS runs in the fused
+    /// `fit_predict_<variant>` artifact (fitted theta comes back from
+    /// the device); preset multipliers are ratio estimates on the host
+    /// (data-dependent control flow); the final grid goes through
+    /// `predict_fitted` (kernel again).
+    pub fn fit_predict(
+        &self,
+        logs: &[EventLog],
+        space: &ConfigSpace,
+    ) -> Result<(Grid, Vec<FittedTask>)> {
+        let c_real = space.len();
+        let variant = Variant::for_problem(&self.engine.manifest, 1, c_real)?;
+        let name = format!("fit_predict_{}", variant.name());
+        let entry = &self.engine.manifest.entries[&name];
+        let (t_pad, c_pad, s_pad) = (entry.tasks, entry.configs, entry.samples);
+
+        // Host fits provide the USL rows + preset multipliers; the Ernest
+        // theta is recomputed on-device from the raw samples (balanced
+        // preset only — matching the host's two-stage fit).
+        let host_fits: Vec<FittedTask> = logs.iter().map(LearnedPredictor::fit_task).collect();
+        let (phi, n) = Self::config_tensors(space, c_pad);
+
+        let mut fits: Vec<FittedTask> = Vec::with_capacity(logs.len());
+        for (chunk_logs, chunk_host) in logs.chunks(t_pad).zip(host_fits.chunks(t_pad)) {
+            let mut x = vec![0f32; t_pad * s_pad * K];
+            let mut y = vec![0f32; t_pad * s_pad];
+            let mut usl = vec![0f32; t_pad * 4];
+            for (t, log) in chunk_logs.iter().enumerate() {
+                let mut s_i = 0usize;
+                for run in log.runs.iter().filter(|r| r.config.spark == 1).take(s_pad) {
+                    let basis = config_basis(&run.config);
+                    for (k, &b) in basis.iter().enumerate() {
+                        x[(t * s_pad + s_i) * K + k] = b as f32;
+                    }
+                    y[t * s_pad + s_i] = run.runtime as f32;
+                    s_i += 1;
+                }
+                if s_i == 0 {
+                    // no balanced history: train on everything, like host
+                    for run in log.runs.iter().take(s_pad) {
+                        let basis = config_basis(&run.config);
+                        for (k, &b) in basis.iter().enumerate() {
+                            x[(t * s_pad + s_i) * K + k] = b as f32;
+                        }
+                        y[t * s_pad + s_i] = run.runtime as f32;
+                        s_i += 1;
+                    }
+                }
+                for (k, &v) in chunk_host[t].usl.iter().enumerate() {
+                    usl[t * 4 + k] = v as f32;
+                }
+            }
+            for t in chunk_logs.len()..t_pad {
+                usl[t * 4 + 3] = 1.0;
+            }
+
+            let outputs = self.engine.run_f32(
+                &name,
+                &[
+                    (x, vec![t_pad as i64, s_pad as i64, K as i64]),
+                    (y, vec![t_pad as i64, s_pad as i64]),
+                    (phi.clone(), vec![c_pad as i64, K as i64]),
+                    (usl, vec![t_pad as i64, 4]),
+                    (n.clone(), vec![c_pad as i64]),
+                ],
+            )?;
+            let theta_flat = &outputs[1];
+            for (t, host) in chunk_host.iter().enumerate() {
+                let mut theta = [0f64; K];
+                for (k, th) in theta.iter_mut().enumerate() {
+                    *th = theta_flat[t * K + k] as f64;
+                }
+                fits.push(FittedTask {
+                    theta,
+                    usl: host.usl,
+                    preset_mult: host.preset_mult,
+                });
+            }
+        }
+
+        let grid = self.predict_fitted(&fits, space)?;
+        Ok((grid, fits))
+    }
+}

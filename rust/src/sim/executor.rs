@@ -1,0 +1,278 @@
+//! The execution engine: realize a schedule against ground truth.
+
+use crate::cluster::CostModel;
+use crate::dag::Dag;
+use crate::predictor::eventlog::{simulate_run, EventLog};
+use crate::solver::{Problem, Schedule};
+use crate::util::Rng;
+
+/// Execution record for one task.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: usize,
+    pub config: usize,
+    /// When the executor launched the task (actual, not planned).
+    pub start: f64,
+    /// Actual (noisy) runtime.
+    pub runtime: f64,
+    /// Predicted runtime from the plan's grid, for error accounting.
+    pub predicted: f64,
+}
+
+impl TaskRecord {
+    pub fn end(&self) -> f64 {
+        self.start + self.runtime
+    }
+}
+
+/// Result of executing one plan.
+#[derive(Debug, Clone)]
+pub struct ExecutionReport {
+    pub records: Vec<TaskRecord>,
+    pub makespan: f64,
+    pub cost: f64,
+    /// Realized per-DAG completion times.
+    pub dag_completion: Vec<f64>,
+    /// Mean absolute prediction error realized during this execution.
+    pub prediction_mape: f64,
+    /// Fresh event logs (one per task), for the adaptive feedback loop.
+    pub new_logs: Vec<EventLog>,
+}
+
+/// Execute a schedule. `dags`/`releases` must be the ones the problem was
+/// built from (the simulator needs ground-truth profiles the optimizer
+/// never saw). Dispatch: plan order (by planned start, FIFO tie-break);
+/// a task launches at the earliest instant when its predecessors have
+/// *actually* finished and capacity is free.
+pub fn execute(
+    p: &Problem,
+    dags: &[Dag],
+    schedule: &Schedule,
+    cost_model: &CostModel,
+    rng: &mut Rng,
+) -> ExecutionReport {
+    let n = p.len();
+    assert_eq!(schedule.start.len(), n);
+
+    // Ground-truth profile per flat task.
+    let profiles: Vec<_> = p
+        .tasks
+        .iter()
+        .map(|ft| dags[ft.dag].tasks[ft.local].profile.clone())
+        .collect();
+
+    // Actual durations + event logs, drawn once up front (deterministic
+    // in rng order: flat task order).
+    let mut runtimes = Vec::with_capacity(n);
+    let mut new_logs = Vec::with_capacity(n);
+    for t in 0..n {
+        let cfg = p.space.configs[schedule.assignment[t]];
+        let (rt, stages) = simulate_run(&profiles[t], cfg, rng);
+        runtimes.push(rt);
+        let mut log = EventLog::new(&p.tasks[t].name);
+        log.record(cfg, rt, stages);
+        new_logs.push(log);
+    }
+
+    // Dispatch order: planned start, FIFO tie-break.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        schedule.start[a]
+            .partial_cmp(&schedule.start[b])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+
+    // Event-driven placement with the same timeline machinery the
+    // schedulers use — but over ACTUAL durations.
+    let mut timeline =
+        crate::solver::sgs::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+    let mut start = vec![f64::NAN; n];
+    let mut placed = vec![false; n];
+
+    // Plan order is precedence-consistent for valid schedules, but actual
+    // runtimes can reorder finishes; we still launch in plan order,
+    // waiting on actual predecessor completion (Airflow semantics).
+    let mut remaining: Vec<usize> = order;
+    while !remaining.is_empty() {
+        // find the first dispatchable task in plan order
+        let pos = remaining
+            .iter()
+            .position(|&t| p.preds(t).iter().all(|&q| placed[q]))
+            .expect("valid plans always have a dispatchable task");
+        let t = remaining.remove(pos);
+        let est = p
+            .preds(t)
+            .iter()
+            .map(|&q| start[q] + runtimes[q])
+            .fold(p.release[t], f64::max);
+        let (cpu, mem) = p.demand(schedule.assignment[t]);
+        let s = timeline.earliest_fit(est, runtimes[t], cpu, mem);
+        timeline.place(s, runtimes[t], cpu, mem);
+        start[t] = s;
+        placed[t] = true;
+    }
+
+    let records: Vec<TaskRecord> = (0..n)
+        .map(|t| TaskRecord {
+            task: t,
+            config: schedule.assignment[t],
+            start: start[t],
+            runtime: runtimes[t],
+            predicted: p.duration(t, schedule.assignment[t]),
+        })
+        .collect();
+
+    let makespan = records.iter().map(|r| r.end()).fold(0.0, f64::max);
+    let cost = records
+        .iter()
+        .map(|r| cost_model.cost(&p.space.configs[r.config], r.runtime))
+        .sum();
+    let dag_completion = (0..dags.len())
+        .map(|d| {
+            records
+                .iter()
+                .filter(|r| p.tasks[r.task].dag == d)
+                .map(|r| r.end())
+                .fold(0.0, f64::max)
+        })
+        .collect();
+    let prediction_mape = records
+        .iter()
+        .map(|r| (r.runtime - r.predicted).abs() / r.runtime.max(1e-9))
+        .sum::<f64>()
+        / n.max(1) as f64;
+
+    ExecutionReport {
+        records,
+        makespan,
+        cost,
+        dag_completion,
+        prediction_mape,
+        new_logs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::solver::cp::{CpSolver, Limits};
+    use crate::Predictor;
+
+    fn setup() -> (Problem, Vec<Dag>) {
+        let dags = vec![dag1(), dag2()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[0.0, 0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        );
+        (p, dags)
+    }
+
+    fn plan(p: &Problem) -> Schedule {
+        let c = crate::solver::cooptimizer::Agora::default_config(&p.space);
+        let (s, _) = CpSolver::new(Limits::default()).solve(p, &vec![c; p.len()]);
+        s
+    }
+
+    #[test]
+    fn execution_respects_precedence_with_actual_times() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let mut rng = Rng::new(1);
+        let rep = execute(&p, &dags, &s, &CostModel::OnDemand, &mut rng);
+        for &(a, b) in &p.precedence {
+            let ra = &rep.records[a];
+            let rb = &rep.records[b];
+            assert!(
+                rb.start + 1e-6 >= ra.end(),
+                "task {b} started before {a} finished"
+            );
+        }
+    }
+
+    #[test]
+    fn execution_respects_capacity() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let mut rng = Rng::new(2);
+        let rep = execute(&p, &dags, &s, &CostModel::OnDemand, &mut rng);
+        for r in &rep.records {
+            let at = r.start + 1e-9;
+            let mut cpu = 0.0;
+            for o in &rep.records {
+                if o.start <= at && at < o.end() {
+                    cpu += p.space.configs[o.config].vcpus();
+                }
+            }
+            assert!(cpu <= p.capacity.vcpus + 1e-6);
+        }
+    }
+
+    #[test]
+    fn realized_makespan_close_to_predicted_with_oracle_grid() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let mut rng = Rng::new(3);
+        let rep = execute(&p, &dags, &s, &CostModel::OnDemand, &mut rng);
+        let predicted = s.makespan(&p);
+        assert!(
+            (rep.makespan - predicted).abs() / predicted < 0.25,
+            "actual {} vs predicted {predicted}",
+            rep.makespan
+        );
+        // oracle grid -> only run noise remains
+        assert!(rep.prediction_mape < 0.15, "mape {}", rep.prediction_mape);
+    }
+
+    #[test]
+    fn produces_one_event_log_per_task() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let mut rng = Rng::new(4);
+        let rep = execute(&p, &dags, &s, &CostModel::OnDemand, &mut rng);
+        assert_eq!(rep.new_logs.len(), p.len());
+        assert!(rep.new_logs.iter().all(|l| l.len() == 1));
+    }
+
+    #[test]
+    fn dag_completions_bounded_by_makespan() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let mut rng = Rng::new(5);
+        let rep = execute(&p, &dags, &s, &CostModel::OnDemand, &mut rng);
+        assert_eq!(rep.dag_completion.len(), 2);
+        for &c in &rep.dag_completion {
+            assert!(c <= rep.makespan + 1e-9);
+            assert!(c > 0.0);
+        }
+    }
+
+    #[test]
+    fn cost_reflects_actual_runtimes() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let mut rng = Rng::new(6);
+        let rep = execute(&p, &dags, &s, &CostModel::OnDemand, &mut rng);
+        let manual: f64 = rep
+            .records
+            .iter()
+            .map(|r| {
+                p.space.configs[r.config].hourly_cost() * r.runtime / 3600.0
+            })
+            .sum();
+        assert!((rep.cost - manual).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,17 @@
+//! Event-driven cluster execution simulator — the stand-in for the
+//! paper's AWS + Airflow testbed.
+//!
+//! Takes an optimized plan (config assignment + dispatch order) and plays
+//! it against ground truth: actual task runtimes are the profiles'
+//! `runtime(config)` with lognormal run noise, so predicted and realized
+//! makespans diverge exactly as they would in production. Tasks dispatch
+//! like Airflow executors do — a ready task starts as soon as its
+//! predecessors finished AND its resources are free, in plan order — so a
+//! task overrunning its prediction delays dependents naturally.
+//!
+//! The simulator also emits fresh event logs per executed task, closing
+//! the §4.1 adaptive loop (coordinator feeds them back to the Predictor).
+
+pub mod executor;
+
+pub use executor::{execute, ExecutionReport, TaskRecord};

@@ -1,0 +1,440 @@
+//! Simulated-annealing outer loop — Algorithm 1 of the paper.
+//!
+//! SA proposes per-task configuration vectors; the CP solver (cp.rs)
+//! schedules each proposal to (near-)optimal makespan; cost follows from
+//! the configuration alone (Eq. 6). Acceptance is Metropolis on the Eq. 1
+//! energy: improvements always accepted, regressions accepted with
+//! probability exp(-dE/T) so the search escapes local minima.
+//!
+//! As in the paper, the energy is a sum of *percentage* improvements, so
+//! a constant starting temperature (T0 = 1) works at every problem size;
+//! the cooling rate is a function of n, giving O(n) iterations to a fixed
+//! convergence criterion.
+
+use std::time::{Duration, Instant};
+
+use super::cp::{CpSolver, Limits};
+use super::objective::Objective;
+use super::rcpsp::Problem;
+use super::schedule::Schedule;
+use crate::util::Rng;
+
+/// Annealing hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct AnnealParams {
+    /// Starting temperature; None = calibrated from a warmup sample
+    /// (mean |dE| of the first proposals), which adapts the Metropolis
+    /// acceptance to the actual energy scale of the instance. The paper
+    /// fixes T0 = 1 on percentage energies; calibration preserves that
+    /// scale-freeness while giving meaningful rejection pressure.
+    pub t0: Option<f64>,
+    /// Multiplicative cooling per iteration; None = derived from n.
+    pub cooling: Option<f64>,
+    /// Stop after this many iterations without improvement.
+    pub patience: usize,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// Wall-clock budget.
+    pub max_time: Duration,
+    /// Inner CP budget per iteration.
+    pub inner_limits: Limits,
+    /// Tasks perturbed per proposal.
+    pub moves_per_proposal: usize,
+}
+
+impl Default for AnnealParams {
+    fn default() -> Self {
+        AnnealParams {
+            t0: None,
+            cooling: None,
+            patience: 400,
+            max_iters: 2_000,
+            max_time: Duration::from_secs(45),
+            inner_limits: Limits::inner_loop(),
+            moves_per_proposal: 1,
+        }
+    }
+}
+
+impl AnnealParams {
+    /// Cooling rate as a function of problem size (paper §4.3: "the
+    /// cooling rate we define as a function of n"): larger problems cool
+    /// slower so the expected accepted-move count scales linearly.
+    pub fn cooling_for(&self, n: usize) -> f64 {
+        self.cooling
+            .unwrap_or_else(|| 1.0 - 1.0 / (20.0 * (n.max(1) as f64)))
+    }
+
+    /// Fast preset for unit tests and the overhead micro-measurements.
+    pub fn fast() -> Self {
+        AnnealParams {
+            patience: 150,
+            max_iters: 600,
+            max_time: Duration::from_secs(10),
+            ..Default::default()
+        }
+    }
+}
+
+/// Propose a neighbour of a config assignment: half the time a uniform
+/// re-draw of one task's config, half the time a single-dimension tweak
+/// (node-ladder step / instance step / Spark preset) — the classic SA
+/// neighbourhood that makes small cost/runtime trades discoverable.
+pub fn propose(
+    p: &Problem,
+    current: &[usize],
+    moves: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let mut proposal = current.to_vec();
+    for _ in 0..moves {
+        let t = rng.below(p.len());
+        let cur = p.space.configs[proposal[t]];
+        let candidate = if rng.chance(0.5) {
+            p.feasible[rng.below(p.feasible.len())]
+        } else {
+            // Tweak one dimension; fall back to uniform if the tweaked
+            // config is not in the feasible set.
+            let mut cfg = cur;
+            match rng.below(3) {
+                0 => {
+                    // node ladder step
+                    let ladder = crate::cluster::config::NODE_LADDER;
+                    let pos = ladder.iter().position(|&n| n == cfg.nodes).unwrap_or(0);
+                    let next = if rng.chance(0.5) {
+                        pos.saturating_sub(1)
+                    } else {
+                        (pos + 1).min(ladder.len() - 1)
+                    };
+                    cfg.nodes = ladder[next];
+                }
+                1 => {
+                    let count = crate::cluster::catalog::M5_CATALOG.len();
+                    cfg.instance = if rng.chance(0.5) {
+                        cfg.instance.saturating_sub(1)
+                    } else {
+                        (cfg.instance + 1).min(count - 1)
+                    };
+                }
+                _ => {
+                    cfg.spark = rng.below(crate::cluster::config::SPARK_PRESETS.len());
+                }
+            }
+            match p.space.configs.iter().position(|c| *c == cfg) {
+                Some(idx) if p.feasible.contains(&idx) => idx,
+                _ => p.feasible[rng.below(p.feasible.len())],
+            }
+        };
+        proposal[t] = candidate;
+    }
+    proposal
+}
+
+/// Iteration telemetry (overhead analysis, Fig. 10).
+#[derive(Debug, Clone, Default)]
+pub struct AnnealStats {
+    pub iterations: usize,
+    pub accepted: usize,
+    pub improved: usize,
+    pub inner_nodes: u64,
+    pub wall_time: Duration,
+    /// Energy trace (best-so-far per iteration), for convergence plots.
+    pub trace: Vec<f64>,
+}
+
+/// Result of the co-optimization.
+#[derive(Debug, Clone)]
+pub struct AnnealResult {
+    pub schedule: Schedule,
+    pub makespan: f64,
+    pub cost: f64,
+    pub energy: f64,
+    pub stats: AnnealStats,
+}
+
+/// Algorithm 1: co-optimize configurations (SA) and schedule (CP).
+pub fn anneal(
+    p: &Problem,
+    objective: &Objective,
+    initial: &[usize],
+    params: &AnnealParams,
+    rng: &mut Rng,
+) -> AnnealResult {
+    let t_start = Instant::now();
+    let solver = CpSolver::new(params.inner_limits.clone());
+    let cooling = params.cooling_for(p.len());
+
+    // Evaluate the initial configuration.
+    let mut current = initial.to_vec();
+    let (mut cur_sched, stats0) = solver.solve(p, &current);
+    let mut cur_makespan = cur_sched.makespan(p);
+    let mut cur_cost = cur_sched.cost(p);
+    let mut cur_energy = objective.energy(cur_makespan, cur_cost);
+
+    let mut best = cur_sched.clone();
+    let mut best_makespan = cur_makespan;
+    let mut best_cost = cur_cost;
+    let mut best_energy = cur_energy;
+
+    let mut stats = AnnealStats {
+        inner_nodes: stats0.nodes,
+        ..Default::default()
+    };
+
+    // Warmup calibration: sample a few proposals to learn the energy
+    // scale, then set T0 so typical regressions are accepted with
+    // probability ~exp(-1) at the start and the walk turns greedy as the
+    // temperature cools.
+    let mut temperature = match params.t0 {
+        Some(t0) => t0,
+        None => {
+            let warmup = 12.min(params.max_iters / 4).max(3);
+            let mut des = Vec::new();
+            for _ in 0..warmup {
+                let proposal = propose(p, &current, params.moves_per_proposal, rng);
+                let (sched, cp_stats) = solver.solve(p, &proposal);
+                stats.inner_nodes += cp_stats.nodes;
+                let e = objective.energy(sched.makespan(p), sched.cost(p));
+                if e.is_finite() {
+                    des.push((e - cur_energy).abs());
+                    // Greedy seed: keep strict improvements found during
+                    // warmup (they are free information).
+                    if e < cur_energy {
+                        current = proposal;
+                        cur_sched = sched;
+                        cur_makespan = cur_sched.makespan(p);
+                        cur_cost = cur_sched.cost(p);
+                        cur_energy = e;
+                        if e < best_energy {
+                            best = cur_sched.clone();
+                            best_makespan = cur_makespan;
+                            best_cost = cur_cost;
+                            best_energy = e;
+                        }
+                    }
+                }
+            }
+            let mean = if des.is_empty() {
+                0.01
+            } else {
+                des.iter().sum::<f64>() / des.len() as f64
+            };
+            (0.8 * mean).max(1e-4)
+        }
+    };
+    let mut stale = 0usize;
+
+    while stats.iterations < params.max_iters
+        && stale < params.patience
+        && t_start.elapsed() < params.max_time
+    {
+        stats.iterations += 1;
+
+        // c <- get_new_configuration(c): perturb a few tasks.
+        let proposal = propose(p, &current, params.moves_per_proposal, rng);
+
+        // M_new, C_new <- SAT_Solver(c, d, P, R)
+        let (sched, cp_stats) = solver.solve(p, &proposal);
+        stats.inner_nodes += cp_stats.nodes;
+        let makespan = sched.makespan(p);
+        let cost = sched.cost(p);
+        let energy = objective.energy(makespan, cost);
+
+        // dE and acceptance (flip probability F).
+        let de = energy - cur_energy;
+        let accept = if de < 0.0 {
+            true
+        } else if energy.is_infinite() {
+            false
+        } else {
+            let f = (-de / temperature.max(1e-12)).exp();
+            rng.f64() < f
+        };
+
+        if accept {
+            stats.accepted += 1;
+            current = proposal;
+            cur_sched = sched;
+            cur_makespan = makespan;
+            cur_cost = cost;
+            cur_energy = energy;
+            if cur_energy < best_energy - 1e-12 {
+                stats.improved += 1;
+                best = cur_sched.clone();
+                best_makespan = cur_makespan;
+                best_cost = cur_cost;
+                best_energy = cur_energy;
+                stale = 0;
+            } else {
+                stale += 1;
+            }
+        } else {
+            stale += 1;
+        }
+
+        temperature *= cooling;
+        stats.trace.push(best_energy);
+    }
+
+    // Final polish: one full-budget CP solve on the best configuration —
+    // the inner loop runs with starved limits for speed (§Perf), so the
+    // winning assignment deserves an exact(-ish) schedule before returning.
+    let polish = CpSolver::new(Limits::default());
+    let (polished, _) = polish.solve(p, &best.assignment);
+    let pm = polished.makespan(p);
+    let pc = polished.cost(p);
+    let pe = objective.energy(pm, pc);
+    if pe <= best_energy {
+        best = polished;
+        best_makespan = pm;
+        best_cost = pc;
+        best_energy = pe;
+    }
+
+    stats.wall_time = t_start.elapsed();
+    AnnealResult {
+        schedule: best,
+        makespan: best_makespan,
+        cost: best_cost,
+        energy: best_energy,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::solver::objective::Goal;
+    use crate::Predictor;
+
+    fn problem() -> Problem {
+        let dags = vec![dag1()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &dags,
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    fn baseline(p: &Problem) -> (Vec<usize>, f64, f64) {
+        // default config: 4 x m5.4xlarge balanced for everything
+        let c = p
+            .space
+            .configs
+            .iter()
+            .position(|c| c.instance == 0 && c.nodes == 4 && c.spark == 1)
+            .unwrap();
+        let solver = CpSolver::new(Limits::default());
+        let (s, _) = solver.solve(p, &vec![c; p.len()]);
+        (vec![c; p.len()], s.makespan(p), s.cost(p))
+    }
+
+    #[test]
+    fn anneal_improves_over_initial() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let mut rng = Rng::new(42);
+        let r = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+        r.schedule.validate(&p).unwrap();
+        assert!(
+            r.energy < 0.0,
+            "co-optimization should improve the balanced objective, got {}",
+            r.energy
+        );
+    }
+
+    #[test]
+    fn runtime_goal_reduces_makespan() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Runtime, m0, c0);
+        let mut rng = Rng::new(7);
+        let r = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+        assert!(r.makespan <= m0 * 1.001, "{} vs {}", r.makespan, m0);
+    }
+
+    #[test]
+    fn cost_goal_reduces_cost() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Cost, m0, c0);
+        let mut rng = Rng::new(9);
+        let r = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+        assert!(r.cost <= c0 * 1.001, "{} vs {}", r.cost, c0);
+    }
+
+    #[test]
+    fn budget_constraints_respected() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        // runtime goal but cost must not exceed baseline
+        let obj = Objective::new(Goal::Runtime, m0, c0).with_budgets(f64::INFINITY, c0);
+        let mut rng = Rng::new(11);
+        let r = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+        if r.energy.is_finite() {
+            assert!(r.cost <= c0 * 1.0 + 1e-9, "cost {} over budget {}", r.cost, c0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            let r = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+            (r.makespan, r.cost)
+        };
+        assert_eq!(run(5), run(5));
+    }
+
+    #[test]
+    fn trace_is_monotone_nonincreasing() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let mut rng = Rng::new(3);
+        let r = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+        for w in r.stats.trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn multi_dag_problems_anneal() {
+        let dags = vec![dag1(), dag2()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[0.0, 0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        );
+        let c = p.feasible[0];
+        let solver = CpSolver::new(Limits::inner_loop());
+        let (s0, _) = solver.solve(&p, &vec![c; p.len()]);
+        let obj = Objective::new(Goal::Balanced, s0.makespan(&p), s0.cost(&p));
+        let mut rng = Rng::new(1);
+        let r = anneal(&p, &obj, &vec![c; p.len()], &AnnealParams::fast(), &mut rng);
+        r.schedule.validate(&p).unwrap();
+        assert!(r.energy <= 0.0);
+    }
+}

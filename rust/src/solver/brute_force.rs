@@ -1,0 +1,187 @@
+//! Brute-force co-optimization (the paper's *BF co-optimize*): exhaustive
+//! search over configuration vectors with an exact inner schedule solve.
+//! Used by the §3 motivational study (Table 2, Fig. 3) and the search
+//! space / solve-time scalability measurement (Fig. 4).
+
+use std::time::{Duration, Instant};
+
+use super::cp::{CpSolver, Limits};
+use super::objective::Objective;
+use super::rcpsp::Problem;
+use super::schedule::Schedule;
+
+/// Result of an exhaustive co-optimization.
+#[derive(Debug, Clone)]
+pub struct BruteForceResult {
+    pub schedule: Schedule,
+    pub makespan: f64,
+    pub cost: f64,
+    pub energy: f64,
+    /// Configuration vectors evaluated.
+    pub evaluated: u64,
+    pub wall_time: Duration,
+    /// Whether the full space was enumerated within the time budget.
+    pub complete: bool,
+}
+
+/// Size of the search space: |configs|^tasks (saturating; reported in
+/// Fig. 4's left panel).
+pub fn search_space_size(num_tasks: usize, num_configs: usize) -> f64 {
+    (num_configs as f64).powi(num_tasks as i32)
+}
+
+/// Exhaustively enumerate configuration vectors (odometer order), solve
+/// each schedule exactly, keep the best Eq. 1 energy.
+pub fn brute_force(
+    p: &Problem,
+    objective: &Objective,
+    inner_limits: Limits,
+    max_time: Duration,
+) -> BruteForceResult {
+    let t0 = Instant::now();
+    let solver = CpSolver::new(inner_limits);
+    let n = p.len();
+    let choices = &p.feasible;
+
+    let mut counter = vec![0usize; n];
+    let mut best: Option<(f64, Schedule, f64, f64)> = None;
+    let mut evaluated = 0u64;
+    let mut complete = true;
+
+    'outer: loop {
+        let assignment: Vec<usize> = counter.iter().map(|&i| choices[i]).collect();
+        let (sched, _) = solver.solve(p, &assignment);
+        let makespan = sched.makespan(p);
+        let cost = sched.cost(p);
+        let energy = objective.energy(makespan, cost);
+        evaluated += 1;
+        if best.as_ref().map_or(true, |(be, ..)| energy < *be) {
+            best = Some((energy, sched, makespan, cost));
+        }
+
+        if t0.elapsed() > max_time {
+            complete = false;
+            break;
+        }
+
+        // Odometer increment.
+        let mut i = 0;
+        loop {
+            if i == n {
+                break 'outer;
+            }
+            counter[i] += 1;
+            if counter[i] < choices.len() {
+                break;
+            }
+            counter[i] = 0;
+            i += 1;
+        }
+    }
+
+    let (energy, schedule, makespan, cost) = best.expect("at least one evaluation");
+    BruteForceResult {
+        schedule,
+        makespan,
+        cost,
+        energy,
+        evaluated,
+        wall_time: t0.elapsed(),
+        complete,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, Config, ConfigSpace, CostModel};
+    use crate::dag::workloads::fig1_dag;
+    use crate::predictor::OraclePredictor;
+    use crate::solver::anneal::{anneal, AnnealParams};
+    use crate::solver::objective::Goal;
+    use crate::util::Rng;
+    use crate::Predictor;
+
+    /// Small space so exhaustive search is fast: m5.4xlarge only,
+    /// ladder {1, 4, 8, 16}, balanced spark.
+    fn small_problem() -> Problem {
+        let dags = vec![fig1_dag()];
+        let mut space = ConfigSpace::with_ladder(&[1, 4, 8, 16]);
+        space.configs.retain(|c| c.instance == 0 && c.spark == 1);
+        assert_eq!(space.len(), 4);
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &dags,
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    fn default_objective(p: &Problem, goal: Goal) -> Objective {
+        // Baseline: everything on 4 nodes.
+        let c = p
+            .space
+            .configs
+            .iter()
+            .position(|c| {
+                *c == Config {
+                    instance: 0,
+                    nodes: 4,
+                    spark: 1,
+                }
+            })
+            .unwrap();
+        let solver = CpSolver::new(Limits::default());
+        let (s, _) = solver.solve(p, &vec![c; p.len()]);
+        Objective::new(goal, s.makespan(p), s.cost(p))
+    }
+
+    #[test]
+    fn enumerates_entire_space() {
+        let p = small_problem();
+        let obj = default_objective(&p, Goal::Runtime);
+        let r = brute_force(&p, &obj, Limits::default(), Duration::from_secs(120));
+        assert!(r.complete);
+        assert_eq!(r.evaluated, 4u64.pow(4));
+        r.schedule.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn search_space_size_grows_exponentially() {
+        assert_eq!(search_space_size(4, 4), 256.0);
+        assert!(search_space_size(10, 96) > 1e19);
+        // Fig. 4: "only four jobs in a DAG could result in tens of
+        // millions of values" (their space includes schedule orderings)
+        assert!(search_space_size(4, 4) < search_space_size(5, 4));
+    }
+
+    #[test]
+    fn brute_force_at_least_as_good_as_anneal() {
+        let p = small_problem();
+        let obj = default_objective(&p, Goal::Balanced);
+        let bf = brute_force(&p, &obj, Limits::default(), Duration::from_secs(120));
+        assert!(bf.complete);
+        let mut rng = Rng::new(2);
+        let init = vec![p.feasible[0]; p.len()];
+        let sa = anneal(&p, &obj, &init, &AnnealParams::fast(), &mut rng);
+        assert!(
+            bf.energy <= sa.energy + 1e-9,
+            "BF {} should lower-bound SA {}",
+            bf.energy,
+            sa.energy
+        );
+    }
+
+    #[test]
+    fn incomplete_under_tiny_budget_still_returns_valid() {
+        let p = small_problem();
+        let obj = default_objective(&p, Goal::Balanced);
+        let r = brute_force(&p, &obj, Limits::inner_loop(), Duration::from_millis(1));
+        r.schedule.validate(&p).unwrap();
+        assert!(r.evaluated >= 1);
+    }
+}

@@ -1,0 +1,413 @@
+//! CP-style scheduling solver — the inner "SAT solver" of Algorithm 1.
+//!
+//! Stand-in for OR-Tools CP-SAT (unavailable offline), with the same
+//! contract the paper relies on:
+//!   * given *fixed* per-task configurations, minimize makespan;
+//!   * prove optimality when the search completes (`optimal = true`);
+//!   * behave as an anytime solver under a node/time budget ("the
+//!     optimization can be stopped earlier", §5.4).
+//!
+//! Method: branch-and-bound over serial-SGS insertion orders. For a
+//! regular objective like makespan, some precedence-feasible insertion
+//! order generates an optimal active schedule, so complete enumeration is
+//! exact. Pruning:
+//!   * critical-path + energy (area) lower bounds on the completion of
+//!     the residual problem (cheap, always valid);
+//!   * no-good dominance: a memo of scheduled-task bitsets — if the same
+//!     subset was reached before with a pointwise-dominating end-time
+//!     profile, the current branch cannot improve on it (the lazy-clause
+//!     analogue: learned states that need not be revisited).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::rcpsp::Problem;
+use super::schedule::Schedule;
+use super::sgs::{self, Timeline};
+use crate::util::Rng;
+
+/// Search limits: the solver stops at whichever budget is hit first.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    pub max_nodes: u64,
+    pub max_time: Duration,
+    /// Random multistart-SGS restarts for the initial upper bound. The
+    /// annealing inner loop uses a small value (the B&B refines the bound
+    /// anyway and the loop is called thousands of times); one-shot solves
+    /// use more. See EXPERIMENTS.md §Perf for the tuning data.
+    pub sgs_restarts: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_nodes: 200_000,
+            max_time: Duration::from_secs(10),
+            sgs_restarts: 8,
+        }
+    }
+}
+
+impl Limits {
+    /// Tight budget for the annealing inner loop (called thousands of
+    /// times; see EXPERIMENTS.md §Perf for the tuning).
+    pub fn inner_loop() -> Self {
+        Limits {
+            max_nodes: 64,
+            max_time: Duration::from_millis(250),
+            sgs_restarts: 2,
+        }
+    }
+}
+
+/// Solve statistics for overhead reporting (Fig. 10).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub nodes: u64,
+    pub pruned_lb: u64,
+    pub pruned_dominance: u64,
+    pub solve_time: Duration,
+    pub proved_optimal: bool,
+}
+
+pub struct CpSolver {
+    pub limits: Limits,
+}
+
+struct Search<'a> {
+    p: &'a Problem,
+    assignment: &'a [usize],
+    durations: Vec<f64>,
+    demands: Vec<(f64, f64)>,
+    /// bottom-level (critical path to sink) per task for LB + branching.
+    bottom: Vec<f64>,
+    best: Schedule,
+    best_makespan: f64,
+    root_lb: f64,
+    stats: Stats,
+    limits: Limits,
+    deadline: Instant,
+    /// scheduled-set -> end-time profile(s) seen (dominance store).
+    seen: HashMap<u128, Vec<Vec<f64>>>,
+    exhausted: bool,
+}
+
+impl CpSolver {
+    pub fn new(limits: Limits) -> Self {
+        CpSolver { limits }
+    }
+
+    /// Minimize makespan for a fixed configuration assignment.
+    pub fn solve(&self, p: &Problem, assignment: &[usize]) -> (Schedule, Stats) {
+        let t0 = Instant::now();
+        assert_eq!(assignment.len(), p.len());
+
+        // Upper bound: multistart SGS (also the anytime fallback).
+        let mut rng = Rng::new(0xCB5A7);
+        let incumbent = sgs::multistart_sgs(p, assignment, self.limits.sgs_restarts, &mut rng);
+        let incumbent_makespan = incumbent.makespan(p);
+
+        let durations: Vec<f64> = (0..p.len())
+            .map(|t| p.duration(t, assignment[t]))
+            .collect();
+        let demands: Vec<(f64, f64)> = (0..p.len())
+            .map(|t| p.demand(assignment[t]))
+            .collect();
+        let bottom = {
+            let order = p.topo_order();
+            let mut b = vec![0.0f64; p.len()];
+            for &u in order.iter().rev() {
+                b[u] = durations[u]
+                    + p.succs(u).iter().map(|&v| b[v]).fold(0.0f64, f64::max);
+            }
+            b
+        };
+        let root_lb = p.lower_bound(assignment);
+
+        let mut search = Search {
+            p,
+            assignment,
+            durations,
+            demands,
+            bottom,
+            best: incumbent,
+            best_makespan: incumbent_makespan,
+            root_lb,
+            stats: Stats::default(),
+            limits: self.limits.clone(),
+            deadline: t0 + self.limits.max_time,
+            seen: HashMap::new(),
+            exhausted: false,
+        };
+
+        // Bitset dominance only works up to 128 tasks; beyond that the
+        // anytime SGS result stands (macro-scale problems).
+        if p.len() <= 128 && incumbent_makespan > root_lb + 1e-6 {
+            let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+            let mut start = vec![0.0f64; p.len()];
+            let mut indeg: Vec<usize> = (0..p.len()).map(|t| p.preds(t).len()).collect();
+            search.exhausted = true;
+            search.dfs(0u128, &mut start, &mut indeg, &mut timeline, 0, 0.0);
+        } else if incumbent_makespan <= root_lb + 1e-6 {
+            search.exhausted = true; // UB met LB: already optimal
+        }
+
+        let mut best = search.best;
+        best.optimal = search.exhausted;
+        let mut stats = search.stats;
+        stats.proved_optimal = search.exhausted;
+        stats.solve_time = t0.elapsed();
+        (best, stats)
+    }
+}
+
+impl<'a> Search<'a> {
+    /// DFS over eligible-task insertions. `scheduled` is a bitset,
+    /// `max_end` the latest end among placed tasks.
+    #[allow(clippy::too_many_arguments)]
+    fn dfs(
+        &mut self,
+        scheduled: u128,
+        start: &mut Vec<f64>,
+        indeg: &mut Vec<usize>,
+        timeline: &mut Timeline,
+        depth: usize,
+        max_end: f64,
+    ) {
+        self.stats.nodes += 1;
+        if self.stats.nodes >= self.limits.max_nodes
+            || (self.stats.nodes % 512 == 0 && Instant::now() >= self.deadline)
+        {
+            self.exhausted = false;
+            return;
+        }
+        let n = self.p.len();
+        if depth == n {
+            if max_end < self.best_makespan - 1e-9 {
+                self.best = Schedule {
+                    assignment: self.assignment.to_vec(),
+                    start: start.clone(),
+                    optimal: false,
+                };
+                self.best_makespan = max_end;
+            }
+            return;
+        }
+
+        // Dominance check on the scheduled set.
+        if self.dominated(scheduled, start) {
+            self.stats.pruned_dominance += 1;
+            return;
+        }
+
+        // Eligible tasks, ordered by bottom level (critical first) —
+        // branching order strongly affects pruning.
+        let mut eligible: Vec<usize> = (0..n)
+            .filter(|&t| scheduled & (1u128 << t) == 0 && indeg[t] == 0)
+            .collect();
+        eligible.sort_by(|&a, &b| self.bottom[b].partial_cmp(&self.bottom[a]).unwrap());
+
+        for t in eligible {
+            let est = self
+                .p
+                .preds(t)
+                .iter()
+                .map(|&q| start[q] + self.durations[q])
+                .fold(self.p.release[t], f64::max);
+            let (cpu, mem) = self.demands[t];
+            let s = timeline.earliest_fit(est, self.durations[t], cpu, mem);
+            let end = s + self.durations[t];
+
+            // Lower bound of any completion through this insertion.
+            let lb = (s + self.bottom[t]).max(max_end);
+            if lb >= self.best_makespan - 1e-9 {
+                self.stats.pruned_lb += 1;
+                continue;
+            }
+
+            // Apply.
+            timeline.place(s, self.durations[t], cpu, mem);
+            start[t] = s;
+            for &v in self.p.succs(t) {
+                indeg[v] -= 1;
+            }
+
+            self.dfs(
+                scheduled | (1u128 << t),
+                start,
+                indeg,
+                timeline,
+                depth + 1,
+                max_end.max(end),
+            );
+
+            // Undo.
+            timeline.pop();
+            for &v in self.p.succs(t) {
+                indeg[v] += 1;
+            }
+
+            if self.best_makespan <= self.root_lb + 1e-6 {
+                return; // proven optimal
+            }
+            if self.stats.nodes >= self.limits.max_nodes {
+                self.exhausted = false;
+                return;
+            }
+        }
+    }
+
+    /// True if a previously seen end-time profile for the same scheduled
+    /// set pointwise-dominates (every task ends no later than) this one.
+    fn dominated(&mut self, scheduled: u128, start: &[f64]) -> bool {
+        if scheduled == 0 {
+            return false;
+        }
+        let profile: Vec<f64> = (0..self.p.len())
+            .map(|t| {
+                if scheduled & (1u128 << t) != 0 {
+                    start[t] + self.durations[t]
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let entry = self.seen.entry(scheduled).or_default();
+        for old in entry.iter() {
+            if old
+                .iter()
+                .zip(profile.iter())
+                .all(|(o, n)| *o <= *n + 1e-9)
+            {
+                return true;
+            }
+        }
+        // Keep the store bounded per subset.
+        if entry.len() < 4 {
+            entry.push(profile);
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::generator::arbitrary_dag;
+    use crate::dag::workloads::{dag1, dag2, fig1_dag};
+    use crate::predictor::OraclePredictor;
+    use crate::util::propcheck;
+    use crate::Predictor;
+
+    fn problem_from(dags: Vec<crate::Dag>, cap: Capacity) -> Problem {
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let releases = vec![0.0; dags.len()];
+        Problem::new(&dags, &releases, cap, space, grid, CostModel::OnDemand)
+    }
+
+    #[test]
+    fn solves_fig1_to_optimality() {
+        let p = problem_from(vec![fig1_dag()], Capacity::micro());
+        let assignment = vec![p.feasible[0]; p.len()];
+        let solver = CpSolver::new(Limits::default());
+        let (s, stats) = solver.solve(&p, &assignment);
+        s.validate(&p).unwrap();
+        assert!(stats.proved_optimal, "4-task DAG must solve exactly");
+        assert!(s.optimal);
+    }
+
+    #[test]
+    fn optimal_at_least_lower_bound() {
+        let p = problem_from(vec![dag1()], Capacity::micro());
+        let assignment = vec![p.feasible[2]; p.len()];
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        assert!(s.makespan(&p) + 1e-6 >= p.lower_bound(&assignment));
+    }
+
+    #[test]
+    fn never_worse_than_sgs() {
+        let p = problem_from(vec![dag1(), dag2()], Capacity::micro());
+        let assignment = vec![p.feasible[1]; p.len()];
+        let mut rng = Rng::new(1);
+        let ub = sgs::multistart_sgs(&p, &assignment, 8, &mut rng);
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        assert!(s.makespan(&p) <= ub.makespan(&p) + 1e-6);
+        s.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn anytime_under_tiny_budget() {
+        let p = problem_from(vec![dag1(), dag2()], Capacity::micro());
+        let assignment = vec![p.feasible[0]; p.len()];
+        let (s, stats) = CpSolver::new(Limits {
+            max_nodes: 10,
+            max_time: Duration::from_millis(50),
+            sgs_restarts: 1,
+        })
+        .solve(&p, &assignment);
+        // Must still return a valid schedule even with a starved budget.
+        s.validate(&p).unwrap();
+        assert!(stats.nodes <= 11);
+    }
+
+    #[test]
+    fn tight_capacity_forces_serialization() {
+        // Capacity for exactly one task at a time -> makespan = sum.
+        let p = problem_from(vec![fig1_dag()], Capacity::new(16.0, 64.0));
+        let assignment = vec![p.feasible[0]; p.len()];
+        let (cpu, _) = p.demand(assignment[0]);
+        assert_eq!(cpu, 16.0);
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        s.validate(&p).unwrap();
+        let total: f64 = (0..p.len()).map(|t| p.duration(t, assignment[t])).sum();
+        assert!((s.makespan(&p) - total).abs() < 1e-6);
+    }
+
+    #[test]
+    fn property_cp_beats_or_ties_every_rule() {
+        propcheck::check(15, |rng| {
+            let dag = arbitrary_dag(rng, 8);
+            let p = problem_from(vec![dag], Capacity::micro());
+            let assignment: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+            s.validate(&p).map_err(|e| e.to_string())?;
+            for &rule in sgs::ALL_RULES {
+                let prio = sgs::priorities(&p, &assignment, rule);
+                let single = sgs::serial_sgs(&p, &assignment, &prio);
+                if s.makespan(&p) > single.makespan(&p) + 1e-6 {
+                    return Err(format!(
+                        "CP {} worse than {:?} {}",
+                        s.makespan(&p),
+                        rule,
+                        single.makespan(&p)
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_optimal_flag_implies_lb_or_complete() {
+        propcheck::check(10, |rng| {
+            let dag = arbitrary_dag(rng, 6);
+            let p = problem_from(vec![dag], Capacity::micro());
+            let assignment: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let (s, stats) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+            if stats.proved_optimal && !s.optimal {
+                return Err("stats/schedule optimal flags disagree".into());
+            }
+            s.validate(&p).map_err(|e| e.to_string())
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! The AGORA optimization engine (§4): extended-RCPSP problem model,
+//! CP-style exact/anytime schedule solver, simulated-annealing outer loop
+//! (Algorithm 1), brute-force reference, and the co-optimizer facade.
+
+pub mod anneal;
+pub mod brute_force;
+pub mod cooptimizer;
+pub mod cp;
+pub mod objective;
+pub mod rcpsp;
+pub mod schedule;
+pub mod sgs;
+
+pub use anneal::{anneal, AnnealParams, AnnealResult};
+pub use cooptimizer::{Agora, AgoraOptions, Mode, Plan};
+pub use cp::{CpSolver, Limits};
+pub use objective::{Goal, Objective};
+pub use rcpsp::Problem;
+pub use schedule::Schedule;

@@ -1,0 +1,158 @@
+//! Optimization objective — Eq. 1 of the paper, with budgets (Eq. 7–8).
+//!
+//!   minimize  w * (M_opt - M)/M + (1 - w) * (C_opt - C)/C
+//!
+//! where (M, C) are the baseline makespan/cost (the incumbent the
+//! improvement is measured against) and w slides between pure-cost
+//! (w = 0) and pure-runtime (w = 1) optimization.
+
+/// Named goals used across the evaluation (§5.1/§5.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Goal {
+    /// w = 0: lowest cost.
+    Cost,
+    /// w = 0.5: balanced.
+    Balanced,
+    /// w = 1: shortest runtime.
+    Runtime,
+    /// Arbitrary weight in [0, 1].
+    Weighted(f64),
+}
+
+impl Goal {
+    pub fn weight(&self) -> f64 {
+        match self {
+            Goal::Cost => 0.0,
+            Goal::Balanced => 0.5,
+            Goal::Runtime => 1.0,
+            Goal::Weighted(w) => w.clamp(0.0, 1.0),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Goal::Cost => "cost".into(),
+            Goal::Balanced => "balanced".into(),
+            Goal::Runtime => "runtime".into(),
+            Goal::Weighted(w) => format!("w={w:.2}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Goal> {
+        match s {
+            "cost" => Some(Goal::Cost),
+            "balanced" => Some(Goal::Balanced),
+            "runtime" => Some(Goal::Runtime),
+            _ => s.strip_prefix("w=")?.parse().ok().map(Goal::Weighted),
+        }
+    }
+}
+
+/// The Eq. 1 objective with baselines and budgets.
+#[derive(Debug, Clone)]
+pub struct Objective {
+    pub goal: Goal,
+    /// Baseline makespan M (original, pre-optimization).
+    pub base_makespan: f64,
+    /// Baseline cost C.
+    pub base_cost: f64,
+    /// M_budget (Eq. 7); infinity when unset.
+    pub makespan_budget: f64,
+    /// C_budget (Eq. 8); infinity when unset.
+    pub cost_budget: f64,
+}
+
+impl Objective {
+    pub fn new(goal: Goal, base_makespan: f64, base_cost: f64) -> Self {
+        Objective {
+            goal,
+            base_makespan: base_makespan.max(1e-9),
+            base_cost: base_cost.max(1e-9),
+            makespan_budget: f64::INFINITY,
+            cost_budget: f64::INFINITY,
+        }
+    }
+
+    pub fn with_budgets(mut self, makespan_budget: f64, cost_budget: f64) -> Self {
+        self.makespan_budget = makespan_budget;
+        self.cost_budget = cost_budget;
+        self
+    }
+
+    /// The energy of a candidate (lower is better). Budget violations
+    /// (Eq. 7–8) are infeasible: +infinity energy.
+    pub fn energy(&self, makespan: f64, cost: f64) -> f64 {
+        if makespan > self.makespan_budget || cost > self.cost_budget {
+            return f64::INFINITY;
+        }
+        let w = self.goal.weight();
+        w * (makespan - self.base_makespan) / self.base_makespan
+            + (1.0 - w) * (cost - self.base_cost) / self.base_cost
+    }
+
+    /// Feasibility test alone (for filtering candidates).
+    pub fn within_budgets(&self, makespan: f64, cost: f64) -> bool {
+        makespan <= self.makespan_budget && cost <= self.cost_budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goal_weights() {
+        assert_eq!(Goal::Cost.weight(), 0.0);
+        assert_eq!(Goal::Balanced.weight(), 0.5);
+        assert_eq!(Goal::Runtime.weight(), 1.0);
+        assert_eq!(Goal::Weighted(0.3).weight(), 0.3);
+        assert_eq!(Goal::Weighted(7.0).weight(), 1.0); // clamped
+    }
+
+    #[test]
+    fn goal_parse_roundtrip() {
+        assert_eq!(Goal::parse("cost"), Some(Goal::Cost));
+        assert_eq!(Goal::parse("balanced"), Some(Goal::Balanced));
+        assert_eq!(Goal::parse("runtime"), Some(Goal::Runtime));
+        assert_eq!(Goal::parse("w=0.25"), Some(Goal::Weighted(0.25)));
+        assert_eq!(Goal::parse("speed"), None);
+    }
+
+    #[test]
+    fn runtime_goal_ignores_cost() {
+        let o = Objective::new(Goal::Runtime, 100.0, 10.0);
+        // halving makespan at double cost is still -0.5 energy
+        assert!((o.energy(50.0, 20.0) - (-0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cost_goal_ignores_makespan() {
+        let o = Objective::new(Goal::Cost, 100.0, 10.0);
+        assert!((o.energy(200.0, 5.0) - (-0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_mixes_both() {
+        let o = Objective::new(Goal::Balanced, 100.0, 10.0);
+        let e = o.energy(80.0, 8.0); // both improved 20%
+        assert!((e - (-0.2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budgets_are_hard() {
+        let o = Objective::new(Goal::Balanced, 100.0, 10.0).with_budgets(90.0, 12.0);
+        assert!(o.energy(95.0, 5.0).is_infinite());
+        assert!(o.energy(80.0, 13.0).is_infinite());
+        assert!(o.energy(85.0, 11.0).is_finite());
+        assert!(o.within_budgets(90.0, 12.0));
+        assert!(!o.within_budgets(90.1, 12.0));
+    }
+
+    #[test]
+    fn improvement_is_negative_energy() {
+        let o = Objective::new(Goal::Balanced, 100.0, 10.0);
+        assert!(o.energy(90.0, 9.0) < 0.0);
+        assert!(o.energy(110.0, 11.0) > 0.0);
+        assert_eq!(o.energy(100.0, 10.0), 0.0);
+    }
+}

@@ -1,0 +1,293 @@
+//! The extended RCPSP of §4.2: scheduling with *malleable* durations and
+//! demands — both are functions of the per-task configuration choice,
+//! which is itself a decision variable (the key departure from classic
+//! RCPSP that enables co-optimization).
+
+use crate::cluster::{Capacity, Config, ConfigSpace, CostModel};
+use crate::dag::Dag;
+use crate::predictor::Grid;
+
+/// A task flattened into the multi-DAG optimization problem.
+#[derive(Debug, Clone)]
+pub struct FlatTask {
+    /// Which input DAG this task came from.
+    pub dag: usize,
+    /// Index within that DAG.
+    pub local: usize,
+    pub name: String,
+}
+
+/// One co-optimization problem instance (possibly spanning several DAGs —
+/// AGORA "supports optimization for one DAG as well as multiple DAGs").
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub tasks: Vec<FlatTask>,
+    /// Precedence pairs (pred, succ) over global task indices — the set P.
+    pub precedence: Vec<(usize, usize)>,
+    /// Earliest allowed start per task (DAG submission time; 0 for batch).
+    pub release: Vec<f64>,
+    /// Cluster capacity — the R_m of Eq. 4.
+    pub capacity: Capacity,
+    /// Candidate configuration space shared by all tasks.
+    pub space: ConfigSpace,
+    /// Indices into `space` that fit the capacity (precomputed).
+    pub feasible: Vec<usize>,
+    /// Predicted durations d[t][c] — the malleable-runtime extension.
+    pub grid: Grid,
+    pub cost_model: CostModel,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+}
+
+impl Problem {
+    /// Assemble a problem from DAGs + a prediction grid whose task rows
+    /// follow the DAG-concatenation order.
+    pub fn new(
+        dags: &[Dag],
+        releases: &[f64],
+        capacity: Capacity,
+        space: ConfigSpace,
+        grid: Grid,
+        cost_model: CostModel,
+    ) -> Self {
+        assert_eq!(dags.len(), releases.len());
+        let mut tasks = Vec::new();
+        let mut precedence = Vec::new();
+        let mut release = Vec::new();
+        let mut offset = 0usize;
+        for (di, dag) in dags.iter().enumerate() {
+            for (li, t) in dag.tasks.iter().enumerate() {
+                tasks.push(FlatTask {
+                    dag: di,
+                    local: li,
+                    name: format!("{}/{}", dag.name, t.name),
+                });
+                release.push(releases[di]);
+            }
+            for &(a, b) in &dag.edges {
+                precedence.push((offset + a, offset + b));
+            }
+            offset += dag.len();
+        }
+        assert_eq!(grid.tasks(), tasks.len(), "grid rows must match task count");
+
+        let n = tasks.len();
+        let mut preds = vec![Vec::new(); n];
+        let mut succs = vec![Vec::new(); n];
+        for &(a, b) in &precedence {
+            succs[a].push(b);
+            preds[b].push(a);
+        }
+        let feasible = space.feasible(&capacity);
+        assert!(!feasible.is_empty(), "no feasible configuration fits the cluster");
+
+        Problem {
+            tasks,
+            precedence,
+            release,
+            capacity,
+            space,
+            feasible,
+            grid,
+            cost_model,
+            preds,
+            succs,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    pub fn preds(&self, t: usize) -> &[usize] {
+        &self.preds[t]
+    }
+
+    pub fn succs(&self, t: usize) -> &[usize] {
+        &self.succs[t]
+    }
+
+    /// Predicted duration of task `t` under config index `c` — d_ijc.
+    pub fn duration(&self, t: usize, c: usize) -> f64 {
+        self.grid.get(t, c)
+    }
+
+    /// Resource demand of config index `c` — r_jtmc (constant over the
+    /// task's execution window, per the paper's formulation).
+    pub fn demand(&self, c: usize) -> (f64, f64) {
+        let cfg = &self.space.configs[c];
+        (cfg.vcpus(), cfg.memory_gb())
+    }
+
+    pub fn config(&self, c: usize) -> &Config {
+        &self.space.configs[c]
+    }
+
+    /// Dollar cost of task `t` under config `c` (Eq. 6 component) —
+    /// schedule-independent, which is what lets the inner solver optimize
+    /// makespan alone while the outer loop owns cost.
+    pub fn cost(&self, t: usize, c: usize) -> f64 {
+        self.cost_model
+            .cost(&self.space.configs[c], self.duration(t, c))
+    }
+
+    /// Total cost of a config assignment (Eq. 6).
+    pub fn assignment_cost(&self, assignment: &[usize]) -> f64 {
+        assignment
+            .iter()
+            .enumerate()
+            .map(|(t, &c)| self.cost(t, c))
+            .sum()
+    }
+
+    /// Topological order of the flattened task set.
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.len();
+        let mut indeg: Vec<usize> = (0..n).map(|i| self.preds[i].len()).collect();
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            for &v in &self.succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        assert_eq!(queue.len(), n, "problem contains a cycle");
+        queue
+    }
+
+    /// Critical-path lower bound on makespan for a given assignment
+    /// (ignores resources — always a valid LB).
+    pub fn critical_path_lb(&self, assignment: &[usize]) -> f64 {
+        let order = self.topo_order();
+        let mut finish = vec![0.0f64; self.len()];
+        for &u in &order {
+            let start = self.preds[u]
+                .iter()
+                .map(|&p| finish[p])
+                .fold(self.release[u], f64::max);
+            finish[u] = start + self.duration(u, assignment[u]);
+        }
+        finish.into_iter().fold(0.0, f64::max)
+    }
+
+    /// Energy (area) lower bound: total cpu-seconds / cluster cpus, and
+    /// the memory analogue — valid because no preemption can beat the
+    /// aggregate-capacity constraint (Eq. 4 integrated over time).
+    pub fn energy_lb(&self, assignment: &[usize]) -> f64 {
+        let mut cpu_area = 0.0;
+        let mut mem_area = 0.0;
+        for (t, &c) in assignment.iter().enumerate() {
+            let d = self.duration(t, c);
+            let (cpu, mem) = self.demand(c);
+            cpu_area += cpu * d;
+            mem_area += mem * d;
+        }
+        let release_min = self.release.iter().cloned().fold(f64::INFINITY, f64::min);
+        let release_min = if release_min.is_finite() { release_min } else { 0.0 };
+        release_min + (cpu_area / self.capacity.vcpus).max(mem_area / self.capacity.memory_gb)
+    }
+
+    /// Combined makespan lower bound.
+    pub fn lower_bound(&self, assignment: &[usize]) -> f64 {
+        self.critical_path_lb(assignment)
+            .max(self.energy_lb(assignment))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::Predictor;
+
+    pub fn toy_problem() -> Problem {
+        let dags = vec![dag1(), dag2()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &dags,
+            &[0.0, 0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn flattening_preserves_structure() {
+        let p = toy_problem();
+        assert_eq!(p.len(), 16);
+        assert_eq!(p.tasks[8].dag, 1);
+        // dag1 has 9 edges, dag2 has 7
+        assert_eq!(p.precedence.len(), 16);
+        // cross-DAG edges must not exist
+        for &(a, b) in &p.precedence {
+            assert_eq!(p.tasks[a].dag, p.tasks[b].dag);
+        }
+    }
+
+    #[test]
+    fn durations_and_costs_consistent() {
+        let p = toy_problem();
+        let c = p.feasible[0];
+        for t in 0..p.len() {
+            let d = p.duration(t, c);
+            assert!(d > 0.0);
+            let cost = p.cost(t, c);
+            let expect = p.space.configs[c].hourly_cost() * d / 3600.0;
+            assert!((cost - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn cp_lower_bound_at_least_longest_task() {
+        let p = toy_problem();
+        let assignment = vec![p.feasible[0]; p.len()];
+        let lb = p.critical_path_lb(&assignment);
+        let longest = (0..p.len())
+            .map(|t| p.duration(t, assignment[t]))
+            .fold(0.0, f64::max);
+        assert!(lb >= longest);
+    }
+
+    #[test]
+    fn energy_bound_positive() {
+        let p = toy_problem();
+        let assignment = vec![p.feasible[0]; p.len()];
+        assert!(p.energy_lb(&assignment) > 0.0);
+        assert!(p.lower_bound(&assignment) >= p.energy_lb(&assignment));
+    }
+
+    #[test]
+    fn releases_delay_lower_bound() {
+        let dags = vec![dag1()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[1000.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        );
+        let assignment = vec![p.feasible[0]; p.len()];
+        assert!(p.critical_path_lb(&assignment) > 1000.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Schedule representation + the feasibility invariants (Eq. 2–5) every
+//! scheduler in the repo must satisfy. `validate` is used by unit tests,
+//! property tests, and (in debug builds) the execution simulator.
+
+use anyhow::{bail, Result};
+
+use super::rcpsp::Problem;
+
+/// A complete solution: per-task configuration choice and start time.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Config index (into the problem's space) per task.
+    pub assignment: Vec<usize>,
+    /// Start time per task — ts_ij.
+    pub start: Vec<f64>,
+    /// Whether the producing solver proved optimality (CP-SAT contract).
+    pub optimal: bool,
+}
+
+impl Schedule {
+    /// End time of task `t` — te_ij = ts_ij + d_ijc (Eq. 2).
+    pub fn end(&self, p: &Problem, t: usize) -> f64 {
+        self.start[t] + p.duration(t, self.assignment[t])
+    }
+
+    /// Makespan — max end time (Eq. 5), relative to t = 0.
+    pub fn makespan(&self, p: &Problem) -> f64 {
+        (0..p.len())
+            .map(|t| self.end(p, t))
+            .fold(0.0, f64::max)
+    }
+
+    /// Total dollar cost (Eq. 6).
+    pub fn cost(&self, p: &Problem) -> f64 {
+        p.assignment_cost(&self.assignment)
+    }
+
+    /// Per-DAG completion time (max end over the DAG's tasks) — used by
+    /// the multi-DAG macro benchmark (Fig. 11).
+    pub fn dag_completion(&self, p: &Problem, dag: usize) -> f64 {
+        (0..p.len())
+            .filter(|&t| p.tasks[t].dag == dag)
+            .map(|t| self.end(p, t))
+            .fold(0.0, f64::max)
+    }
+
+    /// Check every constraint of the §4.2 formulation:
+    ///   Eq. 3 precedence, Eq. 4 capacity at every instant, release times,
+    ///   and assignment validity. O(n^2) sweep over start/end events.
+    pub fn validate(&self, p: &Problem) -> Result<()> {
+        let n = p.len();
+        if self.assignment.len() != n || self.start.len() != n {
+            bail!(
+                "schedule arity mismatch: {} tasks, {} assignments, {} starts",
+                n,
+                self.assignment.len(),
+                self.start.len()
+            );
+        }
+        for t in 0..n {
+            let c = self.assignment[t];
+            if !p.feasible.contains(&c) {
+                bail!("task {t} assigned infeasible config {c}");
+            }
+            if !self.start[t].is_finite() || self.start[t] < -1e-9 {
+                bail!("task {t} has invalid start {}", self.start[t]);
+            }
+            if self.start[t] + 1e-9 < p.release[t] {
+                bail!(
+                    "task {t} starts at {} before release {}",
+                    self.start[t],
+                    p.release[t]
+                );
+            }
+        }
+        // Eq. 3: ts_j >= te_k for (k, j) in P
+        for &(a, b) in &p.precedence {
+            let end_a = self.end(p, a);
+            if self.start[b] + 1e-6 < end_a {
+                bail!(
+                    "precedence violated: {} (ends {end_a:.3}) -> {} (starts {:.3})",
+                    p.tasks[a].name,
+                    p.tasks[b].name,
+                    self.start[b]
+                );
+            }
+        }
+        // Eq. 4: capacity at every event point. Demands are rectangular,
+        // so checking at each task start suffices.
+        for t in 0..n {
+            let at = self.start[t] + 1e-9;
+            let mut cpu = 0.0;
+            let mut mem = 0.0;
+            for u in 0..n {
+                if self.start[u] <= at && at < self.end(p, u) {
+                    let (c, m) = p.demand(self.assignment[u]);
+                    cpu += c;
+                    mem += m;
+                }
+            }
+            if cpu > p.capacity.vcpus + 1e-6 {
+                bail!(
+                    "cpu capacity exceeded at t={:.3}: {cpu:.1} > {:.1}",
+                    self.start[t],
+                    p.capacity.vcpus
+                );
+            }
+            if mem > p.capacity.memory_gb + 1e-6 {
+                bail!(
+                    "memory capacity exceeded at t={:.3}: {mem:.1} > {:.1}",
+                    self.start[t],
+                    p.capacity.memory_gb
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Gantt-style text rendering for reports and examples.
+    pub fn render(&self, p: &Problem) -> String {
+        let mut rows: Vec<usize> = (0..p.len()).collect();
+        rows.sort_by(|&a, &b| self.start[a].partial_cmp(&self.start[b]).unwrap());
+        let makespan = self.makespan(p).max(1e-9);
+        let width = 60usize;
+        let mut out = String::new();
+        for t in rows {
+            let s = self.start[t];
+            let e = self.end(p, t);
+            let i0 = ((s / makespan) * width as f64).round() as usize;
+            let i1 = (((e / makespan) * width as f64).round() as usize).max(i0 + 1);
+            let mut bar = String::new();
+            for i in 0..width {
+                bar.push(if i >= i0 && i < i1.min(width) { '#' } else { '.' });
+            }
+            out.push_str(&format!(
+                "{:<28} |{bar}| {:>8.0}s..{:>8.0}s  {}\n",
+                p.tasks[t].name,
+                s,
+                e,
+                p.config(self.assignment[t]).label()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::dag1;
+    use crate::predictor::OraclePredictor;
+    use crate::Predictor;
+
+    fn problem() -> Problem {
+        let dags = vec![dag1()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &dags,
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    /// A trivially valid schedule: every task sequential in topo order.
+    fn sequential(p: &Problem) -> Schedule {
+        let c = p.feasible[0];
+        let order = p.topo_order();
+        let mut start = vec![0.0; p.len()];
+        let mut clock = 0.0;
+        for &t in &order {
+            start[t] = clock;
+            clock += p.duration(t, c);
+        }
+        Schedule {
+            assignment: vec![c; p.len()],
+            start,
+            optimal: false,
+        }
+    }
+
+    #[test]
+    fn sequential_schedule_is_valid() {
+        let p = problem();
+        let s = sequential(&p);
+        s.validate(&p).unwrap();
+        assert!(s.makespan(&p) > 0.0);
+        assert!(s.cost(&p) > 0.0);
+    }
+
+    #[test]
+    fn precedence_violation_detected() {
+        let p = problem();
+        let mut s = sequential(&p);
+        // dag1 edge (0, 1): force task 1 to start at 0
+        s.start[1] = 0.0;
+        assert!(s.validate(&p).is_err());
+    }
+
+    #[test]
+    fn capacity_violation_detected() {
+        let p = problem();
+        let mut s = sequential(&p);
+        // Give every task the largest feasible config and run all at once.
+        let biggest = *p
+            .feasible
+            .iter()
+            .max_by(|&&a, &&b| {
+                p.demand(a).0.partial_cmp(&p.demand(b).0).unwrap()
+            })
+            .unwrap();
+        for t in 0..p.len() {
+            s.assignment[t] = biggest;
+            s.start[t] = 0.0;
+        }
+        assert!(s.validate(&p).is_err());
+    }
+
+    #[test]
+    fn infeasible_config_detected() {
+        let p = problem();
+        let mut s = sequential(&p);
+        // find an infeasible config index (too big for the cluster)
+        let infeasible = (0..p.space.len()).find(|c| !p.feasible.contains(c));
+        if let Some(c) = infeasible {
+            s.assignment[0] = c;
+            assert!(s.validate(&p).is_err());
+        }
+    }
+
+    #[test]
+    fn release_violation_detected() {
+        let dags = vec![dag1()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[500.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        );
+        let mut s = sequential(&p);
+        // sequential() starts at release? No: it starts at 0 -> violation.
+        s.start[0] = 0.0;
+        assert!(s.validate(&p).is_err());
+    }
+
+    #[test]
+    fn makespan_equals_last_end() {
+        let p = problem();
+        let s = sequential(&p);
+        let total: f64 = (0..p.len())
+            .map(|t| p.duration(t, s.assignment[t]))
+            .sum();
+        assert!((s.makespan(&p) - total).abs() < 1e-6);
+    }
+
+    #[test]
+    fn render_contains_all_tasks() {
+        let p = problem();
+        let s = sequential(&p);
+        let g = s.render(&p);
+        assert_eq!(g.lines().count(), p.len());
+    }
+}

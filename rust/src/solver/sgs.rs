@@ -1,0 +1,388 @@
+//! Serial schedule-generation scheme (SGS) — the workhorse primitive
+//! under both the CP solver's upper bounds and the heuristic baselines.
+//!
+//! Given a configuration assignment and a priority rule, the serial SGS
+//! repeatedly takes the highest-priority *eligible* task (all
+//! predecessors placed) and schedules it at the earliest
+//! resource-feasible time. For RCPSP, some priority list always generates
+//! an optimal active schedule, which is why the CP solver's
+//! branch-and-bound searches over SGS insertion orders.
+
+use super::rcpsp::Problem;
+use super::schedule::Schedule;
+use crate::util::Rng;
+
+/// Priority rules (classic RCPSP dispatch heuristics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Longest path through the task first (critical-path priority).
+    CriticalPath,
+    /// Longest processing time first.
+    LongestFirst,
+    /// Shortest processing time first.
+    ShortestFirst,
+    /// Most total successors (transitive) first.
+    MostSuccessors,
+    /// Largest resource demand x duration ("hardest to pack", Graphene's
+    /// troublesome-task intuition).
+    HardestToPack,
+}
+
+pub const ALL_RULES: &[Rule] = &[
+    Rule::CriticalPath,
+    Rule::LongestFirst,
+    Rule::ShortestFirst,
+    Rule::MostSuccessors,
+    Rule::HardestToPack,
+];
+
+/// Priority value per task (higher = schedule earlier).
+pub fn priorities(p: &Problem, assignment: &[usize], rule: Rule) -> Vec<f64> {
+    let durations: Vec<f64> = (0..p.len())
+        .map(|t| p.duration(t, assignment[t]))
+        .collect();
+    match rule {
+        Rule::CriticalPath => {
+            // bottom level: longest path from task start to sink
+            let order = p.topo_order();
+            let mut bottom = vec![0.0f64; p.len()];
+            for &u in order.iter().rev() {
+                bottom[u] = durations[u]
+                    + p.succs(u)
+                        .iter()
+                        .map(|&v| bottom[v])
+                        .fold(0.0f64, f64::max);
+            }
+            bottom
+        }
+        Rule::LongestFirst => durations,
+        Rule::ShortestFirst => durations.iter().map(|d| -d).collect(),
+        Rule::MostSuccessors => {
+            let order = p.topo_order();
+            let mut count = vec![0.0f64; p.len()];
+            for &u in order.iter().rev() {
+                count[u] = p.succs(u).len() as f64
+                    + p.succs(u).iter().map(|&v| count[v]).sum::<f64>();
+            }
+            count
+        }
+        Rule::HardestToPack => (0..p.len())
+            .map(|t| {
+                let (cpu, mem) = p.demand(assignment[t]);
+                (cpu / p.capacity.vcpus + mem / p.capacity.memory_gb) * durations[t]
+            })
+            .collect(),
+    }
+}
+
+/// Resource timeline of placed rectangular tasks.
+pub struct Timeline {
+    /// (start, end, cpu, mem) of each placed task.
+    placed: Vec<(f64, f64, f64, f64)>,
+    cap_cpu: f64,
+    cap_mem: f64,
+}
+
+impl Timeline {
+    pub fn new(cap_cpu: f64, cap_mem: f64) -> Self {
+        Timeline {
+            placed: Vec::new(),
+            cap_cpu,
+            cap_mem,
+        }
+    }
+
+    /// Can a (cpu, mem) demand run throughout [s, s+d)?
+    fn fits(&self, s: f64, d: f64, cpu: f64, mem: f64) -> bool {
+        // Capacity must hold at every event point in the window; events
+        // are the window start and starts of overlapping placed tasks.
+        let e = s + d;
+        let mut points = vec![s];
+        for &(ps, pe, _, _) in &self.placed {
+            if ps > s && ps < e && pe > s {
+                points.push(ps);
+            }
+        }
+        for &point in &points {
+            let mut used_cpu = cpu;
+            let mut used_mem = mem;
+            for &(ps, pe, pc, pm) in &self.placed {
+                if ps <= point + 1e-9 && point + 1e-9 < pe {
+                    used_cpu += pc;
+                    used_mem += pm;
+                }
+            }
+            if used_cpu > self.cap_cpu + 1e-6 || used_mem > self.cap_mem + 1e-6 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Earliest s >= est such that the demand fits throughout [s, s+d).
+    pub fn earliest_fit(&self, est: f64, d: f64, cpu: f64, mem: f64) -> f64 {
+        if self.fits(est, d, cpu, mem) {
+            return est;
+        }
+        // Candidate starts: ends of placed tasks after est, sorted.
+        let mut candidates: Vec<f64> = self
+            .placed
+            .iter()
+            .map(|&(_, e, _, _)| e)
+            .filter(|&e| e > est)
+            .collect();
+        candidates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for s in candidates {
+            if self.fits(s, d, cpu, mem) {
+                return s;
+            }
+        }
+        // Fallback: after everything ends (always feasible for a demand
+        // that fits capacity alone).
+        self.placed
+            .iter()
+            .map(|&(_, e, _, _)| e)
+            .fold(est, f64::max)
+    }
+
+    pub fn place(&mut self, s: f64, d: f64, cpu: f64, mem: f64) {
+        self.placed.push((s, s + d, cpu, mem));
+    }
+
+    /// Remove the most recently placed task (backtracking support for the
+    /// CP solver's DFS).
+    pub fn pop(&mut self) {
+        self.placed.pop();
+    }
+
+    pub fn len(&self) -> usize {
+        self.placed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.placed.is_empty()
+    }
+}
+
+/// Serial SGS with a static priority vector. Ties break on task index so
+/// results are deterministic.
+pub fn serial_sgs(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
+    let n = p.len();
+    let mut start = vec![0.0f64; n];
+    let mut done = vec![false; n];
+    let mut n_unplaced_preds: Vec<usize> = (0..n).map(|t| p.preds(t).len()).collect();
+    let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+    let mut placed_count = 0;
+
+    while placed_count < n {
+        // Highest-priority eligible task.
+        let mut best: Option<usize> = None;
+        for t in 0..n {
+            if !done[t] && n_unplaced_preds[t] == 0 {
+                match best {
+                    None => best = Some(t),
+                    Some(b) if prio[t] > prio[b] => best = Some(t),
+                    _ => {}
+                }
+            }
+        }
+        let t = best.expect("acyclic problem always has an eligible task");
+        let est = p.preds(t)
+            .iter()
+            .map(|&q| start[q] + p.duration(q, assignment[q]))
+            .fold(p.release[t], f64::max);
+        let d = p.duration(t, assignment[t]);
+        let (cpu, mem) = p.demand(assignment[t]);
+        let s = timeline.earliest_fit(est, d, cpu, mem);
+        timeline.place(s, d, cpu, mem);
+        start[t] = s;
+        done[t] = true;
+        placed_count += 1;
+        for &v in p.succs(t) {
+            n_unplaced_preds[v] -= 1;
+        }
+    }
+
+    Schedule {
+        assignment: assignment.to_vec(),
+        start,
+        optimal: false,
+    }
+}
+
+/// Best schedule over all static rules plus `extra_random` noisy
+/// restarts — the CP solver's initial upper bound and the anytime
+/// fallback at scale.
+pub fn multistart_sgs(
+    p: &Problem,
+    assignment: &[usize],
+    extra_random: usize,
+    rng: &mut Rng,
+) -> Schedule {
+    let mut best: Option<(f64, Schedule)> = None;
+    let mut consider = |s: Schedule, p: &Problem| {
+        let m = s.makespan(p);
+        if best.as_ref().map_or(true, |(bm, _)| m < *bm) {
+            best = Some((m, s));
+        }
+    };
+    for &rule in ALL_RULES {
+        let prio = priorities(p, assignment, rule);
+        consider(serial_sgs(p, assignment, &prio), p);
+    }
+    // Noisy critical-path restarts.
+    let base = priorities(p, assignment, Rule::CriticalPath);
+    let scale = base.iter().cloned().fold(0.0f64, f64::max).max(1.0);
+    for _ in 0..extra_random {
+        let noisy: Vec<f64> = base
+            .iter()
+            .map(|&b| b + rng.uniform(0.0, 0.3 * scale))
+            .collect();
+        consider(serial_sgs(p, assignment, &noisy), p);
+    }
+    best.expect("at least one rule ran").1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::generator::{arbitrary_dag, fig10_batch};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::util::propcheck;
+    use crate::Predictor;
+
+    fn problem_from(dags: Vec<crate::Dag>) -> Problem {
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let releases = vec![0.0; dags.len()];
+        Problem::new(
+            &dags,
+            &releases,
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn sgs_schedules_are_valid_for_all_rules() {
+        let p = problem_from(vec![dag1(), dag2()]);
+        let assignment = vec![p.feasible[0]; p.len()];
+        for &rule in ALL_RULES {
+            let prio = priorities(&p, &assignment, rule);
+            let s = serial_sgs(&p, &assignment, &prio);
+            s.validate(&p)
+                .unwrap_or_else(|e| panic!("rule {rule:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn sgs_beats_sequential() {
+        let p = problem_from(vec![dag2()]);
+        // pick a small config so several tasks fit side by side
+        let small = *p
+            .feasible
+            .iter()
+            .min_by(|&&a, &&b| p.demand(a).0.partial_cmp(&p.demand(b).0).unwrap())
+            .unwrap();
+        let assignment = vec![small; p.len()];
+        let prio = priorities(&p, &assignment, Rule::CriticalPath);
+        let s = serial_sgs(&p, &assignment, &prio);
+        let sequential: f64 = (0..p.len()).map(|t| p.duration(t, assignment[t])).sum();
+        assert!(
+            s.makespan(&p) < sequential * 0.8,
+            "SGS should exploit DAG2 parallelism: {} vs {}",
+            s.makespan(&p),
+            sequential
+        );
+    }
+
+    #[test]
+    fn makespan_at_least_critical_path() {
+        let p = problem_from(vec![dag1()]);
+        let assignment = vec![p.feasible[0]; p.len()];
+        let prio = priorities(&p, &assignment, Rule::CriticalPath);
+        let s = serial_sgs(&p, &assignment, &prio);
+        assert!(s.makespan(&p) + 1e-6 >= p.critical_path_lb(&assignment));
+    }
+
+    #[test]
+    fn multistart_never_worse_than_single_rule() {
+        let mut rng = Rng::new(3);
+        let p = problem_from(vec![dag1(), dag2()]);
+        let assignment = vec![p.feasible[1]; p.len()];
+        let multi = multistart_sgs(&p, &assignment, 10, &mut rng);
+        for &rule in ALL_RULES {
+            let prio = priorities(&p, &assignment, rule);
+            let single = serial_sgs(&p, &assignment, &prio);
+            assert!(multi.makespan(&p) <= single.makespan(&p) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn property_sgs_valid_on_random_dags() {
+        propcheck::check(40, |rng| {
+            let dag = arbitrary_dag(rng, 15);
+            let p = problem_from(vec![dag]);
+            let assignment: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let rule = *rng.choice(ALL_RULES);
+            let prio = priorities(&p, &assignment, rule);
+            let s = serial_sgs(&p, &assignment, &prio);
+            s.validate(&p).map_err(|e| e.to_string())?;
+            if s.makespan(&p) + 1e-6 < p.lower_bound(&assignment) {
+                return Err(format!(
+                    "makespan {} below lower bound {}",
+                    s.makespan(&p),
+                    p.lower_bound(&assignment)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_fig10_batches_schedule_cleanly() {
+        propcheck::check(10, |rng| {
+            let dags = fig10_batch(rng, 3);
+            let p = problem_from(dags);
+            let assignment = vec![p.feasible[0]; p.len()];
+            let prio = priorities(&p, &assignment, Rule::MostSuccessors);
+            let s = serial_sgs(&p, &assignment, &prio);
+            s.validate(&p).map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn timeline_earliest_fit_respects_capacity() {
+        let mut tl = Timeline::new(10.0, 100.0);
+        tl.place(0.0, 10.0, 8.0, 50.0);
+        // demand 4 cpus cannot run concurrently with the 8-cpu task
+        let s = tl.earliest_fit(0.0, 5.0, 4.0, 10.0);
+        assert_eq!(s, 10.0);
+        // but 2 cpus can
+        let s = tl.earliest_fit(0.0, 5.0, 2.0, 10.0);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn timeline_finds_gap_between_tasks() {
+        let mut tl = Timeline::new(10.0, 100.0);
+        tl.place(0.0, 5.0, 10.0, 10.0);
+        tl.place(8.0, 5.0, 10.0, 10.0);
+        // a 3-second task fits exactly in the [5, 8) gap
+        let s = tl.earliest_fit(0.0, 3.0, 10.0, 10.0);
+        assert_eq!(s, 5.0);
+        // a 4-second task does not; next fit is after the second task
+        let s = tl.earliest_fit(0.0, 4.0, 10.0, 10.0);
+        assert_eq!(s, 13.0);
+    }
+}

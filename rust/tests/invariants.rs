@@ -1,0 +1,266 @@
+//! Property-based invariant tests across the whole scheduling stack
+//! (in-repo `propcheck` harness; every failure message carries a replay
+//! seed).
+//!
+//! Invariants:
+//!   * every scheduler's output satisfies Eq. 2-5 (precedence, capacity,
+//!     release, assignment validity) on arbitrary DAGs;
+//!   * makespans never beat the problem lower bound;
+//!   * the co-optimizer never returns worse Eq.-1 energy than its own
+//!     baseline; budget-constrained runs respect budgets;
+//!   * the execution simulator preserves precedence/capacity under
+//!     actual (noisy) runtimes;
+//!   * trigger policy batching covers every submission exactly once.
+
+use agora::baselines::{
+    AirflowScheduler, CriticalPathScheduler, ErnestGoal, MilpScheduler, Scheduler,
+    StratusScheduler,
+};
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::generator::{arbitrary_dag, fig10_batch};
+use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog, OraclePredictor};
+use agora::solver::{Agora, AgoraOptions, AnnealParams, Goal, Mode, Problem};
+use agora::util::{propcheck, Rng};
+use agora::{Dag, Predictor};
+
+fn oracle_problem(dags: Vec<Dag>, cap: Capacity) -> Problem {
+    let space = ConfigSpace::standard();
+    let profiles: Vec<_> = dags
+        .iter()
+        .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+        .collect();
+    let grid = OraclePredictor { profiles }.predict(&space);
+    let releases = vec![0.0; dags.len()];
+    Problem::new(&dags, &releases, cap, space, grid, CostModel::OnDemand)
+}
+
+fn learned_problem(dags: Vec<Dag>, rng: &mut Rng) -> Problem {
+    let space = ConfigSpace::standard();
+    let logs: Vec<EventLog> = dags
+        .iter()
+        .flat_map(|d| {
+            d.tasks
+                .iter()
+                .map(|t| bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), rng))
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let releases = vec![0.0; dags.len()];
+    Agora::build_problem(
+        &dags,
+        &releases,
+        &logs,
+        Capacity::micro(),
+        space,
+        CostModel::OnDemand,
+    )
+}
+
+#[test]
+fn all_schedulers_valid_on_arbitrary_dags() {
+    propcheck::check(25, |rng| {
+        let dag = arbitrary_dag(rng, 12);
+        let p = oracle_problem(vec![dag], Capacity::micro());
+        let goal = *rng.choice(&[Goal::Cost, Goal::Balanced, Goal::Runtime]);
+        let schedulers: Vec<Box<dyn Scheduler>> = vec![
+            Box::new(AirflowScheduler::default()),
+            Box::new(CriticalPathScheduler::with_ernest(ErnestGoal(goal))),
+            Box::new(MilpScheduler::with_ernest(ErnestGoal(goal))),
+            Box::new(StratusScheduler::default()),
+        ];
+        for s in schedulers {
+            let sched = s.schedule(&p);
+            sched
+                .validate(&p)
+                .map_err(|e| format!("{}: {e}", s.name()))?;
+            let lb = p.lower_bound(&sched.assignment);
+            if sched.makespan(&p) + 1e-6 < lb {
+                return Err(format!(
+                    "{}: makespan {} beats lower bound {lb}",
+                    s.name(),
+                    sched.makespan(&p)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cooptimizer_schedules_valid_and_never_worse_than_baseline() {
+    propcheck::check(8, |rng| {
+        let dag = arbitrary_dag(rng, 10);
+        let p = learned_problem(vec![dag], rng);
+        let goal = *rng.choice(&[Goal::Cost, Goal::Balanced, Goal::Runtime]);
+        let plan = Agora::new(AgoraOptions {
+            goal,
+            mode: Mode::CoOptimize,
+            params: AnnealParams::fast(),
+            seed: rng.next_u64(),
+            ..Default::default()
+        })
+        .optimize(&p);
+        plan.schedule.validate(&p).map_err(|e| e.to_string())?;
+
+        // Energy of the plan must be <= 0 relative to the baseline the
+        // optimizer itself measured (it can always keep the default).
+        if let Some(a) = &plan.anneal {
+            if a.energy > 1e-9 {
+                return Err(format!("positive final energy {}", a.energy));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn budgets_are_respected_when_feasible() {
+    propcheck::check(8, |rng| {
+        let dag = arbitrary_dag(rng, 8);
+        let p = learned_problem(vec![dag], rng);
+        // Baseline to derive a satisfiable budget.
+        let base = Agora::new(AgoraOptions {
+            goal: Goal::Balanced,
+            mode: Mode::SchedulerOnly,
+            ..Default::default()
+        })
+        .optimize(&p);
+
+        let plan = Agora::new(AgoraOptions {
+            goal: Goal::Cost,
+            mode: Mode::CoOptimize,
+            params: AnnealParams::fast(),
+            makespan_budget: base.makespan * 1.5,
+            cost_budget: f64::INFINITY,
+            seed: rng.next_u64(),
+        })
+        .optimize(&p);
+        if let Some(a) = &plan.anneal {
+            if a.energy.is_finite() && plan.makespan > base.makespan * 1.5 + 1e-6 {
+                return Err(format!(
+                    "makespan {} exceeds budget {}",
+                    plan.makespan,
+                    base.makespan * 1.5
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn executor_preserves_invariants_under_noise() {
+    propcheck::check(15, |rng| {
+        let dags = fig10_batch(rng, 2);
+        let p = oracle_problem(dags.clone(), Capacity::micro());
+        let plan = Agora::new(AgoraOptions {
+            mode: Mode::SchedulerOnly,
+            ..Default::default()
+        })
+        .optimize(&p);
+        let report = agora::sim::execute(&p, &dags, &plan.schedule, &CostModel::OnDemand, rng);
+
+        // precedence under ACTUAL runtimes
+        for &(a, b) in &p.precedence {
+            let ra = &report.records[a];
+            let rb = &report.records[b];
+            if rb.start + 1e-6 < ra.start + ra.runtime {
+                return Err(format!("task {b} started before predecessor {a} finished"));
+            }
+        }
+        // capacity at every start event
+        for r in &report.records {
+            let at = r.start + 1e-9;
+            let mut cpu = 0.0;
+            let mut mem = 0.0;
+            for o in &report.records {
+                if o.start <= at && at < o.start + o.runtime {
+                    cpu += p.space.configs[o.config].vcpus();
+                    mem += p.space.configs[o.config].memory_gb();
+                }
+            }
+            if cpu > p.capacity.vcpus + 1e-6 || mem > p.capacity.memory_gb + 1e-6 {
+                return Err(format!("capacity exceeded at t={}", r.start));
+            }
+        }
+        // all DAG completions positive, bounded by makespan
+        for (d, &c) in report.dag_completion.iter().enumerate() {
+            if c <= 0.0 || c > report.makespan + 1e-9 {
+                return Err(format!("dag {d} completion {c} out of range"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn trigger_policy_batches_cover_all_submissions_once() {
+    use agora::coordinator::{BatchRunner, Strategy};
+    use agora::trace::{generate, TraceParams};
+    propcheck::check(5, |rng| {
+        let params = TraceParams {
+            jobs: rng.range(3, 10),
+            window: 3600.0,
+            machines: 8,
+            ..TraceParams::default()
+        };
+        let jobs = generate(&params, rng);
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::Airflow,
+            rng.next_u64(),
+        );
+        let report = runner.run(&jobs);
+        if report.outcomes.len() != jobs.len() {
+            return Err(format!(
+                "{} jobs submitted, {} outcomes",
+                jobs.len(),
+                report.outcomes.len()
+            ));
+        }
+        // each job appears exactly once and completion > 0
+        let mut names: Vec<&str> = report.outcomes.iter().map(|o| o.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != jobs.len() {
+            return Err("duplicate or missing DAG outcomes".into());
+        }
+        for o in &report.outcomes {
+            if o.completion <= 0.0 {
+                return Err(format!("{} has non-positive completion", o.name));
+            }
+            if o.finish_time + 1e-9 < o.submit_time {
+                return Err(format!("{} finished before submission", o.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_task_best_is_locally_optimal() {
+    use agora::solver::cooptimizer::per_task_best;
+    propcheck::check(20, |rng| {
+        let dag = arbitrary_dag(rng, 8);
+        let p = oracle_problem(vec![dag], Capacity::micro());
+        for goal in [Goal::Runtime, Goal::Cost] {
+            let sel = per_task_best(&p, goal);
+            for (t, &c) in sel.iter().enumerate() {
+                for &other in &p.feasible {
+                    let better = match goal {
+                        Goal::Runtime => p.duration(t, other) + 1e-9 < p.duration(t, c),
+                        Goal::Cost => p.cost(t, other) + 1e-9 < p.cost(t, c),
+                        _ => false,
+                    };
+                    if better {
+                        return Err(format!(
+                            "task {t}: config {other} dominates chosen {c} for {goal:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
