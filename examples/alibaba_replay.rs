@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         Strategy::Airflow,
         seed,
     );
-    let base = base_runner.run(&jobs);
+    let base = base_runner.run(&jobs)?;
     println!(
         "airflow : {} rounds, cost {}, total completion {} ({:?})",
         base.rounds,
@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         Strategy::Agora(Goal::Balanced),
         seed,
     );
-    let run = agora_runner.run(&jobs);
+    let run = agora_runner.run(&jobs)?;
     println!(
         "agora   : {} rounds, cost {}, total completion {} ({:?}, optimizer {:?})",
         run.rounds,

@@ -79,16 +79,16 @@ fn main() -> anyhow::Result<()> {
         rows.push((name, rep.makespan, rep.cost));
     };
 
-    run("airflow (default)".into(), AirflowScheduler::default().schedule(&p));
+    run("airflow (default)".into(), AirflowScheduler::default().schedule(&p)?);
     run(
         "ernest+cp (separate)".into(),
-        CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p),
+        CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p)?,
     );
     run(
         "ernest+milp (separate)".into(),
-        MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p),
+        MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p)?,
     );
-    run("stratus (cost-aware)".into(), StratusScheduler::default().schedule(&p));
+    run("stratus (cost-aware)".into(), StratusScheduler::default().schedule(&p)?);
 
     for goal in [Goal::Cost, Goal::Balanced, Goal::Runtime] {
         let agora_opt = Agora::new(AgoraOptions {

@@ -38,7 +38,7 @@ fn main() {
         let (p, _dags) = common::learned_problem(dags, &mut rng);
 
         // Baseline runtime: default Airflow plan (predicted).
-        let airflow = AirflowScheduler::default().schedule(&p);
+        let airflow = AirflowScheduler::default().schedule(&p).expect("airflow");
         let base_makespan = airflow.makespan(&p);
 
         let t0 = std::time::Instant::now();

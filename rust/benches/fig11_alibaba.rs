@@ -53,7 +53,7 @@ fn main() {
         Strategy::Airflow,
         common::SEED,
     );
-    let base = base_runner.run(&trace);
+    let base = base_runner.run(&trace).expect("airflow macro run");
     println!(
         "airflow: {} rounds, total cost {}, total completion {} ({:?})",
         base.rounds,
@@ -69,7 +69,7 @@ fn main() {
         Strategy::Agora(Goal::Balanced),
         common::SEED,
     );
-    let run = agora_runner.run(&trace);
+    let run = agora_runner.run(&trace).expect("agora macro run");
     println!(
         "agora  : {} rounds, total cost {}, total completion {} ({:?}; optimizer {:?})",
         run.rounds,

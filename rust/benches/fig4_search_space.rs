@@ -18,7 +18,7 @@ use agora::dag::{Dag, Task};
 use agora::predictor::OraclePredictor;
 use agora::solver::brute_force::{brute_force, search_space_size};
 use agora::solver::cp::Limits;
-use agora::solver::{anneal, AnnealParams, Goal, Objective, Problem};
+use agora::solver::{anneal, portfolio_anneal, AnnealParams, Goal, Objective, Problem};
 use agora::util::Rng;
 use agora::Predictor;
 
@@ -72,10 +72,27 @@ fn main() {
         let bf = brute_force(&p, &obj, Limits::default(), cap);
         let bf_time = t0.elapsed();
 
+        // T0 pinned on both sides (no uncounted warmup evaluations) and
+        // patience >= max_iters (no early stop), so the 1-chain vs
+        // 4-chain budgets match exactly.
+        let sa_params = AnnealParams {
+            t0: Some(0.05),
+            patience: AnnealParams::fast().max_iters,
+            ..AnnealParams::fast()
+        };
         let t1 = std::time::Instant::now();
         let mut rng = Rng::new(common::SEED);
-        let sa = anneal(&p, &obj, &vec![c0; p.len()], &AnnealParams::fast(), &mut rng);
+        let sa = anneal(&p, &obj, &vec![c0; p.len()], &sa_params, &mut rng);
         let sa_time = t1.elapsed();
+
+        // Portfolio at the same total budget split 4 ways.
+        let t2 = std::time::Instant::now();
+        let quad_params = AnnealParams {
+            max_iters: sa_params.max_iters / 4,
+            ..sa_params.clone()
+        };
+        let quad = portfolio_anneal(&p, &obj, &vec![c0; p.len()], &quad_params, 4, common::SEED);
+        let quad_time = t2.elapsed();
 
         rows.push(vec![
             jobs.to_string(),
@@ -88,6 +105,12 @@ fn main() {
             format!("{}", bf.evaluated),
             format!("{:.3}s", sa_time.as_secs_f64()),
             format!("{:+.1}%", (sa.energy - bf.energy) * 100.0),
+            format!(
+                "{:.3}s ({})",
+                quad_time.as_secs_f64(),
+                bench::speedup(sa_time, quad_time)
+            ),
+            format!("{:+.1}%", (quad.energy - bf.energy) * 100.0),
         ]);
     }
     bench::table(
@@ -98,6 +121,8 @@ fn main() {
             "BF evaluated",
             "AGORA time",
             "AGORA gap vs BF",
+            "portfolio x4 time",
+            "portfolio gap vs BF",
         ],
         &rows,
     );

@@ -31,7 +31,7 @@ fn main() {
         let (p, dags) = common::learned_problem(vec![dag_fn()], &mut rng);
 
         // Baseline anchor: default Airflow.
-        let airflow = AirflowScheduler::default().schedule(&p);
+        let airflow = AirflowScheduler::default().schedule(&p).expect("airflow");
         let (air_m, air_c) = common::realize(&p, &dags, &airflow);
 
         for goal in [Goal::Balanced, Goal::Runtime, Goal::Cost] {
@@ -52,18 +52,22 @@ fn main() {
             let (m, c) = common::realize(&p, &dags, &plan.schedule);
             push("AGORA", m, c);
 
-            let cp = CriticalPathScheduler::with_ernest(ErnestGoal(goal)).schedule(&p);
+            let cp = CriticalPathScheduler::with_ernest(ErnestGoal(goal))
+                .schedule(&p)
+                .expect("ernest+cp");
             let (m, c) = common::realize(&p, &dags, &cp);
             push("ernest+cp", m, c);
 
-            let milp = MilpScheduler::with_ernest(ErnestGoal(goal)).schedule(&p);
+            let milp = MilpScheduler::with_ernest(ErnestGoal(goal))
+                .schedule(&p)
+                .expect("ernest+milp");
             let (m, c) = common::realize(&p, &dags, &milp);
             push("ernest+milp", m, c);
 
             if goal == Goal::Cost {
                 // Stratus only optimizes cost (paper: implemented
                 // "specially for cost").
-                let stratus = StratusScheduler::default().schedule(&p);
+                let stratus = StratusScheduler::default().schedule(&p).expect("stratus");
                 let (m, c) = common::realize(&p, &dags, &stratus);
                 push("stratus", m, c);
             }

@@ -27,7 +27,7 @@ fn main() {
     for (dag_name, dag_fn) in [("DAG1", dag1 as fn() -> agora::Dag), ("DAG2", dag2)] {
         let mut rng = Rng::new(common::SEED);
         let (p, dags) = common::learned_problem(vec![dag_fn()], &mut rng);
-        let airflow = AirflowScheduler::default().schedule(&p);
+        let airflow = AirflowScheduler::default().schedule(&p).expect("airflow");
         let (air_m, air_c) = common::realize(&p, &dags, &airflow);
 
         println!("\n-- {dag_name} (airflow anchor: {} / {}) --", fmt_duration(air_m), fmt_cost(air_c));

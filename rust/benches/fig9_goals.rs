@@ -23,7 +23,7 @@ fn main() {
         // anchor for the cost goal's makespan budget
         let base = {
             use agora::baselines::{AirflowScheduler, Scheduler};
-            let s = AirflowScheduler::default().schedule(&p);
+            let s = AirflowScheduler::default().schedule(&p).expect("airflow");
             common::realize(&p, &dags, &s).0
         };
 

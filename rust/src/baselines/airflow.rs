@@ -6,9 +6,11 @@
 //! order." No resource optimization: every task keeps the user's default
 //! configuration (the expert-chosen Spark setup of §5).
 
+use anyhow::Result;
+
 use super::Scheduler;
 use crate::solver::cooptimizer::Agora;
-use crate::solver::sgs::{serial_sgs, Timeline};
+use crate::solver::sgs::serial_sgs;
 use crate::solver::{Problem, Schedule};
 
 #[derive(Debug, Clone, Default)]
@@ -38,7 +40,7 @@ impl Scheduler for AirflowScheduler {
         "airflow"
     }
 
-    fn schedule(&self, p: &Problem) -> Schedule {
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
         let cfg = self.config.unwrap_or_else(|| Agora::default_config(&p.space));
         let assignment = vec![cfg; p.len()];
         // Priority weight with FIFO tie-break (task index): encode as
@@ -49,7 +51,7 @@ impl Scheduler for AirflowScheduler {
             .enumerate()
             .map(|(i, &w)| w - 1e-9 * i as f64)
             .collect();
-        serial_sgs(p, &assignment, &prio)
+        Ok(serial_sgs(p, &assignment, &prio))
     }
 }
 
@@ -66,10 +68,6 @@ pub fn first_dispatched(p: &Problem, ready: &[usize]) -> usize {
         })
         .expect("non-empty ready set")
 }
-
-// Re-export for the trait object in mod.rs tests.
-#[allow(unused_imports)]
-use Timeline as _;
 
 #[cfg(test)]
 mod tests {
@@ -107,7 +105,7 @@ mod tests {
     #[test]
     fn produces_valid_schedule_with_default_configs() {
         let p = problem(fig1_dag());
-        let s = AirflowScheduler::default().schedule(&p);
+        let s = AirflowScheduler::default().schedule(&p).unwrap();
         s.validate(&p).unwrap();
         let def = Agora::default_config(&p.space);
         assert!(s.assignment.iter().all(|&c| c == def));

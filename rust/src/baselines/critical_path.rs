@@ -2,6 +2,8 @@
 //! representative heuristic scheduler, combined with Ernest VM selection
 //! ("Ernest+CP" in Fig. 7).
 
+use anyhow::Result;
+
 use super::ernest::{ernest_selection, ErnestGoal};
 use super::Scheduler;
 use crate::solver::sgs::{priorities, serial_sgs, Rule};
@@ -37,7 +39,7 @@ impl Scheduler for CriticalPathScheduler {
         "ernest+cp"
     }
 
-    fn schedule(&self, p: &Problem) -> Schedule {
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
         let assignment = match (&self.assignment, self.ernest_goal) {
             (Some(a), _) => a.clone(),
             (None, Some(goal)) => ernest_selection(p, goal),
@@ -47,7 +49,7 @@ impl Scheduler for CriticalPathScheduler {
             }
         };
         let prio = priorities(p, &assignment, Rule::CriticalPath);
-        serial_sgs(p, &assignment, &prio)
+        Ok(serial_sgs(p, &assignment, &prio))
     }
 }
 
@@ -78,7 +80,9 @@ mod tests {
     fn valid_on_both_evaluation_dags() {
         for dag in [dag1(), dag2()] {
             let p = problem(dag);
-            let s = CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p);
+            let s = CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Balanced))
+                .schedule(&p)
+                .unwrap();
             s.validate(&p).unwrap();
         }
     }
@@ -88,7 +92,9 @@ mod tests {
         // List scheduling is within 2x of the resource LB + CP LB
         // (loose Graham-style sanity bound).
         let p = problem(dag2());
-        let s = CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Runtime)).schedule(&p);
+        let s = CriticalPathScheduler::with_ernest(ErnestGoal(Goal::Runtime))
+            .schedule(&p)
+            .unwrap();
         let lb = p.lower_bound(&s.assignment);
         assert!(s.makespan(&p) <= 2.5 * lb + 1e-6);
     }
@@ -97,7 +103,9 @@ mod tests {
     fn fixed_assignment_is_respected() {
         let p = problem(dag1());
         let a = vec![p.feasible[3]; p.len()];
-        let s = CriticalPathScheduler::with_assignment(a.clone()).schedule(&p);
+        let s = CriticalPathScheduler::with_assignment(a.clone())
+            .schedule(&p)
+            .unwrap();
         assert_eq!(s.assignment, a);
     }
 }

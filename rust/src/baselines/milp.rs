@@ -13,6 +13,8 @@
 
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use super::ernest::{ernest_selection, ErnestGoal};
 use super::Scheduler;
 use crate::solver::sgs::{priorities, serial_sgs, Rule};
@@ -152,7 +154,7 @@ impl Scheduler for MilpScheduler {
         "ernest+milp"
     }
 
-    fn schedule(&self, p: &Problem) -> Schedule {
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
         let assignment = match (&self.assignment, self.ernest_goal) {
             (Some(a), _) => a.clone(),
             (None, Some(goal)) => ernest_selection(p, goal),
@@ -200,7 +202,7 @@ impl Scheduler for MilpScheduler {
         };
         search.dfs(0, 0);
 
-        match search.best {
+        Ok(match search.best {
             Some(start_buckets) => {
                 let start: Vec<f64> = start_buckets.iter().map(|&s| s as f64 * bucket).collect();
                 // Continuous-time durations are <= bucketized ones, so the
@@ -218,7 +220,7 @@ impl Scheduler for MilpScheduler {
                 }
             }
             None => fallback,
-        }
+        })
     }
 }
 
@@ -250,7 +252,9 @@ mod tests {
     fn valid_schedules_on_evaluation_dags() {
         for dag in [fig1_dag(), dag1(), dag2()] {
             let p = problem(dag);
-            let s = MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced)).schedule(&p);
+            let s = MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced))
+                .schedule(&p)
+                .unwrap();
             s.validate(&p).unwrap();
         }
     }
@@ -261,7 +265,7 @@ mod tests {
         // the exact continuous solver for the same assignment.
         let p = problem(dag1());
         let a = ernest_selection(&p, ErnestGoal(Goal::Runtime));
-        let milp = MilpScheduler::with_assignment(a.clone()).schedule(&p);
+        let milp = MilpScheduler::with_assignment(a.clone()).schedule(&p).unwrap();
         let (exact, _) = CpSolver::new(Limits::default()).solve(&p, &a);
         let slack = 1.3; // quantization overhead bound
         assert!(
@@ -280,12 +284,14 @@ mod tests {
             buckets: 16,
             ..MilpScheduler::with_assignment(a.clone())
         }
-        .schedule(&p);
+        .schedule(&p)
+        .unwrap();
         let fine = MilpScheduler {
             buckets: 128,
             ..MilpScheduler::with_assignment(a)
         }
-        .schedule(&p);
+        .schedule(&p)
+        .unwrap();
         assert!(fine.makespan(&p) <= coarse.makespan(&p) * 1.05 + 1e-6);
     }
 }

@@ -12,13 +12,20 @@ pub mod ernest;
 pub mod milp;
 pub mod stratus;
 
+use anyhow::Result;
+
 use crate::solver::{Problem, Schedule};
 
 /// A scheduling policy producing a complete (assignment, start-times)
 /// solution for a problem.
+///
+/// `schedule` returns `Result` so a degenerate problem (e.g. a capacity
+/// with no feasible candidate slice for a policy's selection rule) is an
+/// error the coordinator can handle per-round instead of a panic that
+/// aborts a multi-tenant run.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
-    fn schedule(&self, p: &Problem) -> Schedule;
+    fn schedule(&self, p: &Problem) -> Result<Schedule>;
 }
 
 pub use airflow::AirflowScheduler;
@@ -55,7 +62,8 @@ mod tests {
     }
 
     #[test]
-    fn every_baseline_produces_valid_schedules() {
+    fn every_baseline_produces_valid_schedules() -> anyhow::Result<()> {
+        use anyhow::Context;
         let p = problem();
         let baselines: Vec<Box<dyn Scheduler>> = vec![
             Box::new(AirflowScheduler::default()),
@@ -64,10 +72,10 @@ mod tests {
             Box::new(StratusScheduler::default()),
         ];
         for b in baselines {
-            let s = b.schedule(&p);
-            s.validate(&p)
-                .unwrap_or_else(|e| panic!("{}: {e}", b.name()));
+            let s = b.schedule(&p).with_context(|| b.name().to_string())?;
+            s.validate(&p).with_context(|| b.name().to_string())?;
             assert!(s.makespan(&p) > 0.0, "{}", b.name());
         }
+        Ok(())
     }
 }

@@ -16,8 +16,10 @@
 //! higher cost than AGORA because "it simply utilizes any resources
 //! available") emerges from that rule.
 
+use anyhow::{anyhow, Result};
+
 use super::Scheduler;
-use crate::solver::sgs::{serial_sgs, Timeline};
+use crate::solver::sgs::serial_sgs;
 use crate::solver::{Problem, Schedule};
 
 #[derive(Debug, Clone)]
@@ -35,14 +37,22 @@ impl Default for StratusScheduler {
 impl StratusScheduler {
     /// Stratus VM selection: cheapest config inside the fastest runtime
     /// bin. Spark parameters stay at the predefined default (Stratus
-    /// assumes fixed per-task demands).
-    pub fn select(&self, p: &Problem) -> Vec<usize> {
+    /// assumes fixed per-task demands). Errors when the policy's
+    /// candidate slice (balanced-Spark feasible configs) is empty —
+    /// propagated instead of panicking so one degenerate tenant problem
+    /// cannot abort a coordinator round.
+    pub fn select(&self, p: &Problem) -> Result<Vec<usize>> {
         let candidates: Vec<usize> = p
             .feasible
             .iter()
             .copied()
             .filter(|&c| p.space.configs[c].spark == 1)
             .collect();
+        if candidates.is_empty() {
+            return Err(anyhow!(
+                "stratus: no feasible balanced-Spark configuration fits the cluster"
+            ));
+        }
         (0..p.len())
             .map(|t| {
                 let fastest = candidates
@@ -51,15 +61,14 @@ impl StratusScheduler {
                     .fold(f64::INFINITY, f64::min);
                 // The bin: [fastest, fastest * 2^octaves)
                 let ceiling = fastest * 2.0f64.powf(self.bin_octaves);
-                let in_bin: Vec<usize> = candidates
+                candidates
                     .iter()
                     .copied()
                     .filter(|&c| p.duration(t, c) <= ceiling)
-                    .collect();
-                *in_bin
-                    .iter()
-                    .min_by(|&&a, &&b| p.cost(t, a).partial_cmp(&p.cost(t, b)).unwrap())
-                    .expect("bin contains at least the fastest config")
+                    .min_by(|&a, &b| p.cost(t, a).partial_cmp(&p.cost(t, b)).unwrap())
+                    .ok_or_else(|| {
+                        anyhow!("stratus: task {t} has an empty runtime bin")
+                    })
             })
             .collect()
     }
@@ -85,16 +94,12 @@ impl Scheduler for StratusScheduler {
         "stratus"
     }
 
-    fn schedule(&self, p: &Problem) -> Schedule {
-        let assignment = self.select(p);
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
+        let assignment = self.select(p)?;
         let prio = Self::alignment_priorities(p, &assignment);
-        serial_sgs(p, &assignment, &prio)
+        Ok(serial_sgs(p, &assignment, &prio))
     }
 }
-
-// Timeline is pulled in for doc-consistency with other baselines.
-#[allow(unused_imports)]
-use Timeline as _;
 
 #[cfg(test)]
 mod tests {
@@ -123,7 +128,7 @@ mod tests {
     fn valid_schedule() {
         for dag in [dag1(), dag2()] {
             let p = problem(dag);
-            let s = StratusScheduler::default().schedule(&p);
+            let s = StratusScheduler::default().schedule(&p).unwrap();
             s.validate(&p).unwrap();
         }
     }
@@ -133,7 +138,7 @@ mod tests {
         // The paper's Fig. 7 signature: Stratus shows the lowest runtime
         // but not the lowest cost.
         let p = problem(dag2());
-        let stratus = StratusScheduler::default().schedule(&p);
+        let stratus = StratusScheduler::default().schedule(&p).unwrap();
         let cheap = super::super::ernest::ernest_selection(
             &p,
             super::super::ernest::ErnestGoal(Goal::Cost),
@@ -151,7 +156,7 @@ mod tests {
     fn selection_is_within_runtime_bin() {
         let p = problem(dag1());
         let sched = StratusScheduler::default();
-        let sel = sched.select(&p);
+        let sel = sched.select(&p).unwrap();
         for (t, &c) in sel.iter().enumerate() {
             let fastest = p
                 .feasible

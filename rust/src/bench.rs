@@ -88,6 +88,16 @@ pub fn series(title: &str, x_label: &str, y_labels: &[&str], points: &[(f64, Vec
     table(&cols, &rows);
 }
 
+/// Wall-clock speedup of `new` relative to `base`, formatted "3.2x".
+pub fn speedup(base: Duration, new: Duration) -> String {
+    let b = base.as_secs_f64();
+    let n = new.as_secs_f64();
+    if n <= 0.0 || b <= 0.0 {
+        return "n/a".into();
+    }
+    format!("{:.1}x", b / n)
+}
+
 /// Relative change formatted as the paper quotes it ("45% faster").
 pub fn pct(base: f64, new: f64) -> String {
     if base <= 0.0 {
@@ -112,6 +122,15 @@ mod tests {
         assert_eq!(calls, 7);
         assert_eq!(m.reps, 5);
         assert!(m.min <= m.mean && m.mean <= m.max);
+    }
+
+    #[test]
+    fn speedup_formats() {
+        assert_eq!(
+            speedup(Duration::from_secs(4), Duration::from_secs(1)),
+            "4.0x"
+        );
+        assert_eq!(speedup(Duration::from_secs(1), Duration::ZERO), "n/a");
     }
 
     #[test]

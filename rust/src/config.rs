@@ -28,6 +28,8 @@ pub struct AppConfig {
     pub makespan_budget: f64,
     pub cost_budget: f64,
     pub anneal: AnnealParams,
+    /// Portfolio co-optimizer chains (1 = deterministic single chain).
+    pub parallelism: usize,
     pub verbose: bool,
 }
 
@@ -43,6 +45,7 @@ impl Default for AppConfig {
             makespan_budget: f64::INFINITY,
             cost_budget: f64::INFINITY,
             anneal: AnnealParams::default(),
+            parallelism: 1,
             verbose: false,
         }
     }
@@ -62,6 +65,7 @@ impl AppConfig {
         ("makespan-budget", "Eq. 7 budget in seconds"),
         ("cost-budget", "Eq. 8 budget in dollars"),
         ("max-iters", "annealing iteration cap"),
+        ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
         ("verbose", "chatty output"),
     ];
 
@@ -97,6 +101,9 @@ impl AppConfig {
         if let Some(x) = v.opt("max_iters") {
             c.anneal.max_iters = x.as_usize()?;
         }
+        if let Some(x) = v.opt("parallelism") {
+            c.parallelism = x.as_usize()?.max(1);
+        }
         Ok(c)
     }
 
@@ -122,6 +129,7 @@ impl AppConfig {
         self.makespan_budget = args.f64_or("makespan-budget", self.makespan_budget)?;
         self.cost_budget = args.f64_or("cost-budget", self.cost_budget)?;
         self.anneal.max_iters = args.usize_or("max-iters", self.anneal.max_iters)?;
+        self.parallelism = args.usize_or("parallelism", self.parallelism)?.max(1);
         self.verbose = args.bool_or("verbose", self.verbose)?;
         Ok(self)
     }
@@ -199,5 +207,19 @@ mod tests {
     fn weighted_goal_parses() {
         let c = AppConfig::resolve(&args(&["run", "--goal", "w=0.75"])).unwrap();
         assert_eq!(c.goal, Goal::Weighted(0.75));
+    }
+
+    #[test]
+    fn parallelism_parses_and_clamps() {
+        let c = AppConfig::resolve(&args(&["run", "--parallelism", "4"])).unwrap();
+        assert_eq!(c.parallelism, 4);
+        // 0 is clamped to the deterministic single chain.
+        let c = AppConfig::resolve(&args(&["run", "--parallelism", "0"])).unwrap();
+        assert_eq!(c.parallelism, 1);
+        // JSON path.
+        let v = Json::parse(r#"{"parallelism": 8}"#).unwrap();
+        assert_eq!(AppConfig::from_json(&v).unwrap().parallelism, 8);
+        // default
+        assert_eq!(AppConfig::default().parallelism, 1);
     }
 }

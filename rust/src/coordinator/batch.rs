@@ -9,6 +9,8 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
+use anyhow::{Context, Result};
+
 use super::TriggerPolicy;
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
@@ -74,6 +76,9 @@ pub struct BatchRunner {
     pub trigger: TriggerPolicy,
     pub strategy: Strategy,
     pub seed: u64,
+    /// Portfolio chains handed to the co-optimizer per round
+    /// (1 = deterministic single chain).
+    pub parallelism: usize,
     /// Event-log database (task name -> history), persisted across rounds.
     pub log_db: HashMap<String, EventLog>,
 }
@@ -87,8 +92,15 @@ impl BatchRunner {
             trigger: TriggerPolicy::default(),
             strategy,
             seed,
+            parallelism: 1,
             log_db: HashMap::new(),
         }
+    }
+
+    /// Builder-style portfolio knob.
+    pub fn with_parallelism(mut self, parallelism: usize) -> Self {
+        self.parallelism = parallelism.max(1);
+        self
     }
 
     /// History for a task: the database entry if present, else a
@@ -112,8 +124,10 @@ impl BatchRunner {
             .collect()
     }
 
-    /// Run the whole trace; returns the per-DAG outcomes.
-    pub fn run(&mut self, jobs: &[TracedJob]) -> MacroReport {
+    /// Run the whole trace; returns the per-DAG outcomes. A failing
+    /// per-round scheduler is propagated as an error (with round context)
+    /// instead of panicking the coordinator.
+    pub fn run(&mut self, jobs: &[TracedJob]) -> Result<MacroReport> {
         let mut rng = Rng::new(self.seed);
         let mut outcomes = Vec::new();
         let mut rounds = 0usize;
@@ -179,7 +193,9 @@ impl BatchRunner {
                 let schedule = match &self.strategy {
                     Strategy::Airflow => {
                         use crate::baselines::{AirflowScheduler, Scheduler};
-                        AirflowScheduler::default().schedule(&p)
+                        AirflowScheduler::default()
+                            .schedule(&p)
+                            .with_context(|| format!("scheduling round {rounds}"))?
                     }
                     Strategy::Agora(goal) => {
                         let agora = Agora::new(AgoraOptions {
@@ -187,6 +203,7 @@ impl BatchRunner {
                             mode: Mode::CoOptimize,
                             params: crate::solver::AnnealParams::fast(),
                             seed: rng.next_u64(),
+                            parallelism: self.parallelism,
                             ..Default::default()
                         });
                         let plan = agora.optimize(&p);
@@ -199,6 +216,7 @@ impl BatchRunner {
                             mode: *mode,
                             params: crate::solver::AnnealParams::fast(),
                             seed: rng.next_u64(),
+                            parallelism: self.parallelism,
                             ..Default::default()
                         });
                         let plan = agora.optimize(&p);
@@ -258,14 +276,14 @@ impl BatchRunner {
 
         let total_cost = outcomes.iter().map(|o| o.cost).sum();
         let total_completion = outcomes.iter().map(|o| o.completion).sum();
-        MacroReport {
+        Ok(MacroReport {
             strategy: self.strategy.name(),
             outcomes,
             total_cost,
             total_completion,
             rounds,
             optimizer_overhead: overhead,
-        }
+        })
     }
 }
 
@@ -284,7 +302,7 @@ mod tests {
             strategy,
             seed,
         );
-        runner.run(&jobs)
+        runner.run(&jobs).expect("macro run")
     }
 
     #[test]
@@ -319,6 +337,23 @@ mod tests {
     }
 
     #[test]
+    fn portfolio_strategy_completes_all_jobs() {
+        let params = TraceParams::tiny();
+        let mut rng = Rng::new(7);
+        let jobs = generate(&params, &mut rng);
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::Agora(Goal::Balanced),
+            5,
+        )
+        .with_parallelism(2);
+        let rep = runner.run(&jobs).expect("macro run");
+        assert_eq!(rep.outcomes.len(), 12);
+        assert!(rep.optimizer_overhead > Duration::ZERO);
+    }
+
+    #[test]
     fn event_log_database_grows_across_rounds() {
         let params = TraceParams::tiny();
         let mut rng = Rng::new(7);
@@ -329,7 +364,7 @@ mod tests {
             Strategy::Airflow,
             3,
         );
-        runner.run(&jobs);
+        runner.run(&jobs).expect("macro run");
         assert!(!runner.log_db.is_empty());
         // every executed task has bootstrap + at least one real run
         let total_jobs: usize = jobs.iter().map(|j| j.dag.len()).sum();

@@ -53,6 +53,8 @@ pub struct ServiceConfig {
     /// Demand trigger: optimize immediately once this many DAGs queue up.
     pub max_queue: usize,
     pub seed: u64,
+    /// Portfolio chains per co-optimization round (1 = single chain).
+    pub parallelism: usize,
 }
 
 impl Default for ServiceConfig {
@@ -63,6 +65,7 @@ impl Default for ServiceConfig {
             batch_window: Duration::from_millis(50),
             max_queue: 8,
             seed: 0x5E21,
+            parallelism: 1,
         }
     }
 }
@@ -212,6 +215,7 @@ fn serve_round(
         mode: Mode::CoOptimize,
         params: crate::solver::AnnealParams::fast(),
         seed: rng.next_u64(),
+        parallelism: config.parallelism.max(1),
         ..Default::default()
     });
     let plan = agora.optimize(&p);
@@ -285,6 +289,20 @@ mod tests {
         let r1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(r1.round, r2.round);
+        service.shutdown();
+    }
+
+    #[test]
+    fn portfolio_service_round_trip() {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_millis(30),
+            parallelism: 2,
+            ..Default::default()
+        });
+        let handle = service.handle();
+        let rx = handle.submit("dora", dag1());
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.completion > 0.0 && r.cost > 0.0);
         service.shutdown();
     }
 

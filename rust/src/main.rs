@@ -122,13 +122,15 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
         makespan_budget: config.makespan_budget,
         cost_budget: config.cost_budget,
         seed: config.seed,
+        parallelism: config.parallelism,
     });
     let plan = agora.optimize(&p);
 
     println!(
-        "plan [{} | goal={}]: predicted makespan {}  cost {}  (optimizer overhead {:?})",
+        "plan [{} | goal={} | chains={}]: predicted makespan {}  cost {}  (optimizer overhead {:?})",
         config.mode.name(),
         config.goal.name(),
+        config.parallelism,
         fmt_duration(plan.makespan),
         fmt_cost(plan.cost),
         plan.overhead
@@ -160,6 +162,7 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
         capacity: config.capacity,
         goal: config.goal,
         seed: config.seed,
+        parallelism: config.parallelism,
         ..Default::default()
     });
     let handle = service.handle();
@@ -207,14 +210,15 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         Strategy::Airflow,
         config.seed,
     );
-    let base = base_runner.run(&jobs);
+    let base = base_runner.run(&jobs)?;
     let mut agora_runner = BatchRunner::new(
         params.batch_capacity(),
         ConfigSpace::standard(),
         Strategy::Agora(config.goal),
         config.seed,
-    );
-    let run = agora_runner.run(&jobs);
+    )
+    .with_parallelism(config.parallelism);
+    let run = agora_runner.run(&jobs)?;
     let summary = MacroSummary::against(&base, &run);
     println!(
         "airflow : cost {}  total completion {}",

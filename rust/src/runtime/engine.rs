@@ -5,6 +5,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+// The real PJRT bindings are unavailable in the offline vendor set; the
+// stub keeps this module compiling and fails cleanly at Engine::new.
+use super::xla_stub as xla;
 use crate::util::Json;
 
 /// Shape variant of the compiled Predictor (see python VARIANTS).

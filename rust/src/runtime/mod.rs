@@ -13,6 +13,7 @@
 
 pub mod engine;
 pub mod predictor;
+pub mod xla_stub;
 
 pub use engine::{ArtifactManifest, Engine, Variant};
 pub use predictor::PjrtPredictor;

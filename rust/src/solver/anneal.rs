@@ -1,4 +1,5 @@
-//! Simulated-annealing outer loop — Algorithm 1 of the paper.
+//! Simulated-annealing outer loop — Algorithm 1 of the paper — plus the
+//! parallel portfolio driver.
 //!
 //! SA proposes per-task configuration vectors; the CP solver (cp.rs)
 //! schedules each proposal to (near-)optimal makespan; cost follows from
@@ -10,13 +11,39 @@
 //! a constant starting temperature (T0 = 1) works at every problem size;
 //! the cooling rate is a function of n, giving O(n) iterations to a fixed
 //! convergence criterion.
+//!
+//! ## Portfolio mode (`portfolio_anneal`)
+//!
+//! K chains run simultaneously on scoped threads with diversified seeds,
+//! temperature scales and `moves_per_proposal`, sharing the best plan
+//! found so far through a mutex-guarded [`Exchange`] polled every
+//! `exchange_interval` iterations. Odd chains evaluate proposals with the
+//! O(affected-suffix) [`IncrementalSgs`] cone evaluator instead of the
+//! full CP pass (explorers); even chains keep the exact inner solve
+//! (exploiters). Chain 0 always runs the undiversified base parameters,
+//! so the portfolio contains the single-chain search as a member.
+//!
+//! Determinism contract: `parallelism = 1` never constructs an exchange
+//! or diversified chains; the outer RNG consumption is unchanged and the
+//! evaluation cache memoizes the inner CP solve (its internal RNG is
+//! fixed-seeded), so seeded runs are bit-identical to the historical
+//! single-chain implementation whenever the inner solver is itself
+//! deterministic — i.e. its node budget binds before the 250 ms
+//! wall-clock cutoff, which is the regime of every seeded test. When the
+//! wall-clock cutoff binds, re-solving a revisited assignment was
+//! load-dependent even before the cache existed; the cache replays the
+//! first solve, which *removes* that nondeterminism rather than adding
+//! any.
 
+use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::cp::{CpSolver, Limits};
 use super::objective::Objective;
 use super::rcpsp::Problem;
 use super::schedule::Schedule;
+use super::sgs::IncrementalSgs;
 use crate::util::Rng;
 
 /// Annealing hyper-parameters.
@@ -28,6 +55,10 @@ pub struct AnnealParams {
     /// fixes T0 = 1 on percentage energies; calibration preserves that
     /// scale-freeness while giving meaningful rejection pressure.
     pub t0: Option<f64>,
+    /// Multiplier applied to the (fixed or calibrated) starting
+    /// temperature — the portfolio's temperature-diversification knob.
+    /// 1.0 = historical behaviour.
+    pub t0_scale: f64,
     /// Multiplicative cooling per iteration; None = derived from n.
     pub cooling: Option<f64>,
     /// Stop after this many iterations without improvement.
@@ -40,18 +71,28 @@ pub struct AnnealParams {
     pub inner_limits: Limits,
     /// Tasks perturbed per proposal.
     pub moves_per_proposal: usize,
+    /// Evaluate proposals with the incremental suffix-SGS instead of the
+    /// full CP solve (portfolio explorer chains; the final polish still
+    /// runs a full-budget CP solve).
+    pub incremental: bool,
+    /// Poll/publish the portfolio exchange every N iterations
+    /// (0 = never; irrelevant outside portfolio mode).
+    pub exchange_interval: usize,
 }
 
 impl Default for AnnealParams {
     fn default() -> Self {
         AnnealParams {
             t0: None,
+            t0_scale: 1.0,
             cooling: None,
             patience: 400,
             max_iters: 2_000,
             max_time: Duration::from_secs(45),
             inner_limits: Limits::inner_loop(),
             moves_per_proposal: 1,
+            incremental: false,
+            exchange_interval: 16,
         }
     }
 }
@@ -140,6 +181,10 @@ pub struct AnnealStats {
     pub wall_time: Duration,
     /// Energy trace (best-so-far per iteration), for convergence plots.
     pub trace: Vec<f64>,
+    /// Schedule evaluations answered by the memo cache (no CP solve ran).
+    pub cache_hits: usize,
+    /// Plans adopted from the portfolio exchange.
+    pub adopted: usize,
 }
 
 /// Result of the co-optimization.
@@ -152,6 +197,168 @@ pub struct AnnealResult {
     pub stats: AnnealStats,
 }
 
+// ---------------------------------------------------------------------------
+// Schedule evaluation: memoized full CP solve or incremental suffix SGS.
+
+struct CachedEval {
+    schedule: Schedule,
+    makespan: f64,
+    cost: f64,
+    nodes: u64,
+}
+
+/// Memo of assignment -> evaluated schedule. The CP solve is
+/// deterministic per assignment (fixed internal seed) as long as its
+/// node budget binds before the wall-clock cutoff, so replaying a cached
+/// result is bit-identical to re-solving in that regime — and strictly
+/// *more* deterministic than re-solving when the cutoff binds (a re-solve
+/// was load-dependent even pre-cache). Either way the cache is invisible
+/// to the seeded walk's RNG stream.
+const EVAL_CACHE_CAP: usize = 8_192;
+
+enum Evaluator {
+    Full {
+        solver: CpSolver,
+        cache: HashMap<Vec<usize>, CachedEval>,
+        /// Schedule of the most recent `eval`, handed out by
+        /// `take_schedule` — so rejected proposals never pay for a
+        /// schedule materialization.
+        last: Option<Schedule>,
+    },
+    Incremental(IncrementalSgs),
+}
+
+impl Evaluator {
+    fn new(p: &Problem, initial: &[usize], params: &AnnealParams) -> Evaluator {
+        if params.incremental {
+            Evaluator::Incremental(IncrementalSgs::new(p, initial))
+        } else {
+            Evaluator::Full {
+                solver: CpSolver::new(params.inner_limits.clone()),
+                cache: HashMap::new(),
+                last: None,
+            }
+        }
+    }
+
+    /// Evaluate an assignment: (makespan, cost). The schedule itself is
+    /// only materialized on demand via [`Evaluator::take_schedule`].
+    fn eval(&mut self, p: &Problem, assignment: &[usize], stats: &mut AnnealStats) -> (f64, f64) {
+        match self {
+            Evaluator::Full { solver, cache, last } => {
+                if let Some(hit) = cache.get(assignment) {
+                    stats.inner_nodes += hit.nodes;
+                    stats.cache_hits += 1;
+                    // Hits store nothing: take_schedule re-reads the cache,
+                    // so the (mostly rejected) hot path stays clone-free.
+                    // Clearing `last` keeps a stale miss-schedule from
+                    // being handed out for this assignment.
+                    *last = None;
+                    return (hit.makespan, hit.cost);
+                }
+                let (sched, cp_stats) = solver.solve(p, assignment);
+                stats.inner_nodes += cp_stats.nodes;
+                let makespan = sched.makespan(p);
+                let cost = sched.cost(p);
+                if cache.len() < EVAL_CACHE_CAP {
+                    cache.insert(
+                        assignment.to_vec(),
+                        CachedEval {
+                            schedule: sched.clone(),
+                            makespan,
+                            cost,
+                            nodes: cp_stats.nodes,
+                        },
+                    );
+                }
+                *last = Some(sched);
+                (makespan, cost)
+            }
+            Evaluator::Incremental(inc) => {
+                let makespan = inc.evaluate(p, assignment);
+                (makespan, p.assignment_cost(assignment))
+            }
+        }
+    }
+
+    /// Materialize the schedule of the most recent `eval` call.
+    /// `assignment` must be the one passed to that call.
+    fn take_schedule(&mut self, assignment: &[usize]) -> Schedule {
+        match self {
+            Evaluator::Full { cache, last, .. } => match last.take() {
+                Some(sched) => sched,
+                // The most recent eval was a cache hit.
+                None => cache
+                    .get(assignment)
+                    .map(|hit| hit.schedule.clone())
+                    .expect("take_schedule immediately follows eval"),
+            },
+            Evaluator::Incremental(inc) => inc.schedule(assignment),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portfolio exchange.
+
+struct SharedPlan {
+    energy: f64,
+    schedule: Schedule,
+    makespan: f64,
+    cost: f64,
+}
+
+/// Best-so-far plan shared between portfolio chains: a mutex-guarded
+/// cell, published on improvement and polled every `exchange_interval`
+/// iterations — contention is negligible because both operations touch
+/// the lock O(iterations / interval) times.
+#[derive(Default)]
+pub struct Exchange {
+    best: Mutex<Option<SharedPlan>>,
+}
+
+impl Exchange {
+    pub fn new() -> Exchange {
+        Exchange::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Option<SharedPlan>> {
+        // A panicked chain must not poison the whole portfolio.
+        self.best.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish a plan if it beats the current global best.
+    fn publish(&self, energy: f64, schedule: &Schedule, makespan: f64, cost: f64) {
+        if !energy.is_finite() {
+            return;
+        }
+        let mut guard = self.lock();
+        let better = guard.as_ref().map_or(true, |s| energy < s.energy - 1e-12);
+        if better {
+            *guard = Some(SharedPlan {
+                energy,
+                schedule: schedule.clone(),
+                makespan,
+                cost,
+            });
+        }
+    }
+
+    /// Fetch the global best if it strictly beats `energy`.
+    fn steal(&self, energy: f64) -> Option<(f64, Schedule, f64, f64)> {
+        let guard = self.lock();
+        match guard.as_ref() {
+            Some(s) if s.energy < energy - 1e-12 => {
+                Some((s.energy, s.schedule.clone(), s.makespan, s.cost))
+            }
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The annealing chain.
+
 /// Algorithm 1: co-optimize configurations (SA) and schedule (CP).
 pub fn anneal(
     p: &Problem,
@@ -160,53 +367,59 @@ pub fn anneal(
     params: &AnnealParams,
     rng: &mut Rng,
 ) -> AnnealResult {
+    anneal_chain(p, objective, initial, params, rng, None)
+}
+
+/// One annealing chain, optionally wired to a portfolio [`Exchange`].
+/// With `exchange = None` this is exactly the historical single-chain
+/// algorithm (same RNG draw sequence, same outputs for a given seed).
+pub fn anneal_chain(
+    p: &Problem,
+    objective: &Objective,
+    initial: &[usize],
+    params: &AnnealParams,
+    rng: &mut Rng,
+    exchange: Option<&Exchange>,
+) -> AnnealResult {
     let t_start = Instant::now();
-    let solver = CpSolver::new(params.inner_limits.clone());
     let cooling = params.cooling_for(p.len());
+    let mut stats = AnnealStats::default();
+    let mut evaluator = Evaluator::new(p, initial, params);
 
     // Evaluate the initial configuration.
     let mut current = initial.to_vec();
-    let (mut cur_sched, stats0) = solver.solve(p, &current);
-    let mut cur_makespan = cur_sched.makespan(p);
-    let mut cur_cost = cur_sched.cost(p);
+    let (mut cur_makespan, mut cur_cost) = evaluator.eval(p, &current, &mut stats);
     let mut cur_energy = objective.energy(cur_makespan, cur_cost);
 
-    let mut best = cur_sched.clone();
+    let mut best = evaluator.take_schedule(&current);
     let mut best_makespan = cur_makespan;
     let mut best_cost = cur_cost;
     let mut best_energy = cur_energy;
-
-    let mut stats = AnnealStats {
-        inner_nodes: stats0.nodes,
-        ..Default::default()
-    };
 
     // Warmup calibration: sample a few proposals to learn the energy
     // scale, then set T0 so typical regressions are accepted with
     // probability ~exp(-1) at the start and the walk turns greedy as the
     // temperature cools.
     let mut temperature = match params.t0 {
-        Some(t0) => t0,
+        Some(t0) => t0 * params.t0_scale,
         None => {
             let warmup = 12.min(params.max_iters / 4).max(3);
             let mut des = Vec::new();
             for _ in 0..warmup {
                 let proposal = propose(p, &current, params.moves_per_proposal, rng);
-                let (sched, cp_stats) = solver.solve(p, &proposal);
-                stats.inner_nodes += cp_stats.nodes;
-                let e = objective.energy(sched.makespan(p), sched.cost(p));
+                let (makespan, cost) = evaluator.eval(p, &proposal, &mut stats);
+                let e = objective.energy(makespan, cost);
                 if e.is_finite() {
                     des.push((e - cur_energy).abs());
                     // Greedy seed: keep strict improvements found during
                     // warmup (they are free information).
                     if e < cur_energy {
                         current = proposal;
-                        cur_sched = sched;
-                        cur_makespan = cur_sched.makespan(p);
-                        cur_cost = cur_sched.cost(p);
+                        cur_makespan = makespan;
+                        cur_cost = cost;
                         cur_energy = e;
                         if e < best_energy {
-                            best = cur_sched.clone();
+                            best = evaluator.take_schedule(&current);
                             best_makespan = cur_makespan;
                             best_cost = cur_cost;
                             best_energy = e;
@@ -219,10 +432,14 @@ pub fn anneal(
             } else {
                 des.iter().sum::<f64>() / des.len() as f64
             };
-            (0.8 * mean).max(1e-4)
+            (0.8 * mean).max(1e-4) * params.t0_scale
         }
     };
     let mut stale = 0usize;
+
+    if let Some(ex) = exchange {
+        ex.publish(best_energy, &best, best_makespan, best_cost);
+    }
 
     while stats.iterations < params.max_iters
         && stale < params.patience
@@ -234,10 +451,7 @@ pub fn anneal(
         let proposal = propose(p, &current, params.moves_per_proposal, rng);
 
         // M_new, C_new <- SAT_Solver(c, d, P, R)
-        let (sched, cp_stats) = solver.solve(p, &proposal);
-        stats.inner_nodes += cp_stats.nodes;
-        let makespan = sched.makespan(p);
-        let cost = sched.cost(p);
+        let (makespan, cost) = evaluator.eval(p, &proposal, &mut stats);
         let energy = objective.energy(makespan, cost);
 
         // dE and acceptance (flip probability F).
@@ -254,22 +468,59 @@ pub fn anneal(
         if accept {
             stats.accepted += 1;
             current = proposal;
-            cur_sched = sched;
             cur_makespan = makespan;
             cur_cost = cost;
             cur_energy = energy;
             if cur_energy < best_energy - 1e-12 {
                 stats.improved += 1;
-                best = cur_sched.clone();
+                best = evaluator.take_schedule(&current);
                 best_makespan = cur_makespan;
                 best_cost = cur_cost;
                 best_energy = cur_energy;
                 stale = 0;
+                if let Some(ex) = exchange {
+                    ex.publish(best_energy, &best, best_makespan, best_cost);
+                }
             } else {
                 stale += 1;
             }
         } else {
             stale += 1;
+        }
+
+        // Portfolio exchange: adopt the global best when it strictly
+        // beats this chain's OWN best. Gating on best (not current)
+        // means adoption fires at most once per global improvement — a
+        // chain whose evaluator cannot reproduce the published energy
+        // (explorer suffix-SGS vs. a full-CP plan) is not teleported
+        // back to the same plan every poll, which would discard its
+        // walk progress between polls.
+        if let Some(ex) = exchange {
+            if params.exchange_interval > 0
+                && stats.iterations % params.exchange_interval == 0
+            {
+                if let Some((e, sched, makespan, cost)) = ex.steal(best_energy) {
+                    stats.adopted += 1;
+                    // The stolen plan's energy is genuine (published from
+                    // a real schedule) — it becomes this chain's best.
+                    best_makespan = makespan;
+                    best_cost = cost;
+                    best_energy = e;
+                    stale = 0;
+                    current = sched.assignment.clone();
+                    best = sched;
+                    // Continue the walk from the adopted assignment,
+                    // re-evaluated with THIS chain's evaluator so later dE
+                    // comparisons stay on the chain's own energy scale: an
+                    // explorer (suffix-SGS) chain cannot reproduce a
+                    // full-CP makespan and would otherwise reject every
+                    // subsequent proposal until patience ran out.
+                    let (own_makespan, own_cost) = evaluator.eval(p, &current, &mut stats);
+                    cur_makespan = own_makespan;
+                    cur_cost = own_cost;
+                    cur_energy = objective.energy(own_makespan, own_cost);
+                }
+            }
         }
 
         temperature *= cooling;
@@ -291,6 +542,10 @@ pub fn anneal(
         best_energy = pe;
     }
 
+    if let Some(ex) = exchange {
+        ex.publish(best_energy, &best, best_makespan, best_cost);
+    }
+
     stats.wall_time = t_start.elapsed();
     AnnealResult {
         schedule: best,
@@ -301,13 +556,114 @@ pub fn anneal(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Portfolio driver.
+
+/// Deterministic per-chain seed derivation (SplitMix64 increment).
+pub fn chain_seed(seed: u64, chain: usize) -> u64 {
+    seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(chain as u64))
+}
+
+/// Diversified parameters for chain `i` of a portfolio. Chain 0 is the
+/// undiversified base chain; higher chains vary temperature scale and
+/// moves-per-proposal, and odd chains switch to the incremental
+/// suffix-SGS evaluator (fast explorers).
+pub fn chain_params(base: &AnnealParams, chain: usize) -> AnnealParams {
+    let mut p = base.clone();
+    if chain == 0 {
+        return p;
+    }
+    p.moves_per_proposal = 1 + (chain % 3);
+    p.t0_scale = base.t0_scale * (1.0 + 0.5 * (chain % 4) as f64);
+    p.incremental = chain % 2 == 1;
+    p
+}
+
+/// Run `parallelism` annealing chains concurrently (scoped threads) with
+/// diversified seeds/parameters and a shared best-plan exchange; return
+/// the best chain result with portfolio-aggregated statistics.
+///
+/// `parallelism <= 1` falls back to the plain deterministic single chain
+/// seeded with `seed`.
+pub fn portfolio_anneal(
+    p: &Problem,
+    objective: &Objective,
+    initial: &[usize],
+    params: &AnnealParams,
+    parallelism: usize,
+    seed: u64,
+) -> AnnealResult {
+    let k = parallelism.max(1);
+    if k == 1 {
+        let mut rng = Rng::new(seed);
+        return anneal(p, objective, initial, params, &mut rng);
+    }
+
+    let t_start = Instant::now();
+    let exchange = Exchange::new();
+    let configs: Vec<AnnealParams> = (0..k).map(|i| chain_params(params, i)).collect();
+
+    let mut results: Vec<AnnealResult> = Vec::with_capacity(k);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = configs
+            .iter()
+            .enumerate()
+            .map(|(i, cp)| {
+                let ex = &exchange;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(chain_seed(seed, i));
+                    anneal_chain(p, objective, initial, cp, &mut rng, Some(ex))
+                })
+            })
+            .collect();
+        for handle in handles {
+            match handle.join() {
+                Ok(r) => results.push(r),
+                // A panicking chain is a solver bug, not a condition to
+                // mask by returning the surviving chains' best: re-raise
+                // with the original payload (scope joins the remaining
+                // chains before unwinding).
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+
+    // Aggregate telemetry across chains.
+    let mut agg = AnnealStats::default();
+    for r in &results {
+        agg.iterations += r.stats.iterations;
+        agg.accepted += r.stats.accepted;
+        agg.improved += r.stats.improved;
+        agg.inner_nodes += r.stats.inner_nodes;
+        agg.cache_hits += r.stats.cache_hits;
+        agg.adopted += r.stats.adopted;
+    }
+    agg.wall_time = t_start.elapsed();
+
+    // Deterministic winner selection: strictly better energy wins, ties
+    // go to the lowest chain index (results are in chain order).
+    let mut best: Option<AnnealResult> = None;
+    for r in results {
+        let take = best.as_ref().map_or(true, |b| r.energy < b.energy);
+        if take {
+            best = Some(r);
+        }
+    }
+    let mut best = best.expect("portfolio ran at least one chain");
+    agg.trace = std::mem::take(&mut best.stats.trace);
+    best.stats = agg;
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::generator::arbitrary_dag;
     use crate::dag::workloads::{dag1, dag2};
     use crate::predictor::OraclePredictor;
     use crate::solver::objective::Goal;
+    use crate::util::propcheck;
     use crate::Predictor;
 
     fn problem() -> Problem {
@@ -436,5 +792,124 @@ mod tests {
         let r = anneal(&p, &obj, &vec![c; p.len()], &AnnealParams::fast(), &mut rng);
         r.schedule.validate(&p).unwrap();
         assert!(r.energy <= 0.0);
+    }
+
+    #[test]
+    fn incremental_chain_produces_valid_improving_plans() {
+        use crate::solver::sgs;
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams {
+            incremental: true,
+            ..AnnealParams::fast()
+        };
+        let mut rng = Rng::new(13);
+        let r = anneal(&p, &obj, &init, &params, &mut rng);
+        r.schedule.validate(&p).unwrap();
+        // Guaranteed bound: the chain's best is monotone from the
+        // incremental evaluation of the initial assignment (a plain
+        // critical-path serial SGS), and the polish can only improve it.
+        let prio = sgs::priorities(&p, &init, sgs::Rule::CriticalPath);
+        let init_sgs = sgs::serial_sgs(&p, &init, &prio);
+        let e_init = obj.energy(init_sgs.makespan(&p), init_sgs.cost(&p));
+        assert!(
+            r.energy <= e_init + 1e-9,
+            "incremental chain regressed: {} vs initial {}",
+            r.energy,
+            e_init
+        );
+    }
+
+    #[test]
+    fn portfolio_is_deterministic_at_parallelism_one() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams::fast();
+        let a = portfolio_anneal(&p, &obj, &init, &params, 1, 5);
+        let mut rng = Rng::new(5);
+        let b = anneal(&p, &obj, &init, &params, &mut rng);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.schedule.assignment, b.schedule.assignment);
+        assert_eq!(a.schedule.start, b.schedule.start);
+    }
+
+    #[test]
+    fn portfolio_produces_valid_plans() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams {
+            max_iters: 150,
+            patience: 150,
+            ..AnnealParams::fast()
+        };
+        let r = portfolio_anneal(&p, &obj, &init, &params, 4, 17);
+        r.schedule.validate(&p).unwrap();
+        assert!(r.energy <= 1e-9, "portfolio regressed: {}", r.energy);
+        assert!(r.stats.iterations > 0);
+    }
+
+    #[test]
+    fn property_portfolio_never_worse_than_best_single_chain() {
+        // With the exchange disabled, the portfolio is exactly the
+        // independent union of its chains, so its result must equal the
+        // best standalone chain on the same budget.
+        propcheck::check(5, |rng| {
+            let dag = arbitrary_dag(rng, 7);
+            let space = ConfigSpace::standard();
+            let profiles: Vec<_> = dag.tasks.iter().map(|t| t.profile.clone()).collect();
+            let grid = OraclePredictor { profiles }.predict(&space);
+            let dags = vec![dag];
+            let p = Problem::new(
+                &dags,
+                &[0.0],
+                Capacity::micro(),
+                space,
+                grid,
+                CostModel::OnDemand,
+            );
+            let init = vec![p.feasible[0]; p.len()];
+            let solver = CpSolver::new(Limits::inner_loop());
+            let (s0, _) = solver.solve(&p, &init);
+            let obj = Objective::new(Goal::Balanced, s0.makespan(&p), s0.cost(&p));
+
+            let seed = rng.next_u64();
+            let k = 3usize;
+            let params = AnnealParams {
+                max_iters: 60,
+                patience: 60,
+                exchange_interval: 0, // isolate chains
+                ..AnnealParams::fast()
+            };
+            let portfolio = portfolio_anneal(&p, &obj, &init, &params, k, seed);
+            portfolio.schedule.validate(&p).map_err(|e| e.to_string())?;
+
+            let mut best_single = f64::INFINITY;
+            for i in 0..k {
+                let cp = chain_params(&params, i);
+                let mut crng = Rng::new(chain_seed(seed, i));
+                let r = anneal(&p, &obj, &init, &cp, &mut crng);
+                best_single = best_single.min(r.energy);
+            }
+            if portfolio.energy > best_single + 1e-9 {
+                return Err(format!(
+                    "portfolio energy {} worse than best single chain {}",
+                    portfolio.energy, best_single
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn problem_and_exchange_are_shareable_across_threads() {
+        fn assert_sync_send<T: Sync + Send>() {}
+        assert_sync_send::<Problem>();
+        assert_sync_send::<Objective>();
+        assert_sync_send::<AnnealParams>();
+        assert_sync_send::<Exchange>();
     }
 }

@@ -11,7 +11,7 @@ pub mod rcpsp;
 pub mod schedule;
 pub mod sgs;
 
-pub use anneal::{anneal, AnnealParams, AnnealResult};
+pub use anneal::{anneal, portfolio_anneal, AnnealParams, AnnealResult};
 pub use cooptimizer::{Agora, AgoraOptions, Mode, Plan};
 pub use cp::{CpSolver, Limits};
 pub use objective::{Goal, Objective};

@@ -155,6 +155,14 @@ impl Timeline {
         self.placed.pop();
     }
 
+    /// Keep only the first `len` placements (prefix-reuse support for the
+    /// incremental evaluator: placements are pushed in SGS order, so
+    /// truncating to `len` restores the timeline state after the first
+    /// `len` insertions).
+    pub fn truncate(&mut self, len: usize) {
+        self.placed.truncate(len);
+    }
+
     pub fn len(&self) -> usize {
         self.placed.len()
     }
@@ -164,17 +172,18 @@ impl Timeline {
     }
 }
 
-/// Serial SGS with a static priority vector. Ties break on task index so
-/// results are deterministic.
-pub fn serial_sgs(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
+/// The task *selection order* of a serial SGS run under a static priority
+/// vector: repeatedly pick the highest-priority eligible task (ties break
+/// on task index). Eligibility depends only on precedence — not on
+/// durations or placements — so the order is a pure function of
+/// (precedence, prio). This is the invariant the incremental evaluator
+/// exploits: changing a task's configuration never changes the order.
+pub fn selection_order(p: &Problem, prio: &[f64]) -> Vec<usize> {
     let n = p.len();
-    let mut start = vec![0.0f64; n];
     let mut done = vec![false; n];
     let mut n_unplaced_preds: Vec<usize> = (0..n).map(|t| p.preds(t).len()).collect();
-    let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
-    let mut placed_count = 0;
-
-    while placed_count < n {
+    let mut order = Vec::with_capacity(n);
+    while order.len() < n {
         // Highest-priority eligible task.
         let mut best: Option<usize> = None;
         for t in 0..n {
@@ -187,6 +196,24 @@ pub fn serial_sgs(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
             }
         }
         let t = best.expect("acyclic problem always has an eligible task");
+        done[t] = true;
+        order.push(t);
+        for &v in p.succs(t) {
+            n_unplaced_preds[v] -= 1;
+        }
+    }
+    order
+}
+
+/// Serial SGS with a static priority vector. Ties break on task index so
+/// results are deterministic.
+pub fn serial_sgs(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
+    let n = p.len();
+    let order = selection_order(p, prio);
+    let mut start = vec![0.0f64; n];
+    let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+
+    for &t in &order {
         let est = p.preds(t)
             .iter()
             .map(|&q| start[q] + p.duration(q, assignment[q]))
@@ -196,17 +223,94 @@ pub fn serial_sgs(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
         let s = timeline.earliest_fit(est, d, cpu, mem);
         timeline.place(s, d, cpu, mem);
         start[t] = s;
-        done[t] = true;
-        placed_count += 1;
-        for &v in p.succs(t) {
-            n_unplaced_preds[v] -= 1;
-        }
     }
 
     Schedule {
         assignment: assignment.to_vec(),
         start,
         optimal: false,
+    }
+}
+
+/// Incremental schedule evaluator for the SA inner loop: a serial SGS
+/// with a *frozen* selection order that, for each new configuration
+/// assignment, re-places only the suffix starting at the first task whose
+/// configuration changed (the affected cone of the perturbation, closed
+/// under the placement order).
+///
+/// Soundness: with a static priority vector the SGS selection order is
+/// duration-independent (see [`selection_order`]), and the placement of
+/// position `i` depends only on the placements of positions `0..i` and
+/// the durations/demands of those tasks. A proposal that perturbs task
+/// set `S` therefore leaves every position before the first occurrence of
+/// `S` in the order bit-identical — those placements are reused from the
+/// retained [`Timeline`] prefix.
+///
+/// `evaluate` is exactly equivalent to `serial_sgs(p, assignment, prio0)`
+/// with the frozen priorities (asserted by a property test), at
+/// O(suffix) instead of O(n) timeline work per proposal — the SA hot
+/// path perturbs 1-3 tasks, so the expected suffix is short.
+pub struct IncrementalSgs {
+    /// Frozen selection order (critical-path priorities of the initial
+    /// assignment).
+    order: Vec<usize>,
+    /// Start time per task from the most recent evaluation.
+    start: Vec<f64>,
+    /// The most recently evaluated assignment (usize::MAX = never).
+    last: Vec<usize>,
+    timeline: Timeline,
+}
+
+impl IncrementalSgs {
+    pub fn new(p: &Problem, initial: &[usize]) -> IncrementalSgs {
+        let prio = priorities(p, initial, Rule::CriticalPath);
+        IncrementalSgs {
+            order: selection_order(p, &prio),
+            start: vec![0.0; p.len()],
+            last: vec![usize::MAX; p.len()],
+            timeline: Timeline::new(p.capacity.vcpus, p.capacity.memory_gb),
+        }
+    }
+
+    /// Schedule `assignment`, reusing the placement prefix shared with
+    /// the previously evaluated assignment. Returns the makespan.
+    pub fn evaluate(&mut self, p: &Problem, assignment: &[usize]) -> f64 {
+        let n = p.len();
+        assert_eq!(assignment.len(), n);
+        let first_changed = self
+            .order
+            .iter()
+            .position(|&t| assignment[t] != self.last[t])
+            .unwrap_or(n);
+        self.timeline.truncate(first_changed);
+        for i in first_changed..n {
+            let t = self.order[i];
+            let est = p
+                .preds(t)
+                .iter()
+                .map(|&q| self.start[q] + p.duration(q, assignment[q]))
+                .fold(p.release[t], f64::max);
+            let d = p.duration(t, assignment[t]);
+            let (cpu, mem) = p.demand(assignment[t]);
+            let s = self.timeline.earliest_fit(est, d, cpu, mem);
+            self.timeline.place(s, d, cpu, mem);
+            self.start[t] = s;
+        }
+        self.last.copy_from_slice(assignment);
+        (0..n)
+            .map(|t| self.start[t] + p.duration(t, assignment[t]))
+            .fold(0.0, f64::max)
+    }
+
+    /// Materialize the schedule of the most recent `evaluate` call.
+    /// `assignment` must be the one passed to that call.
+    pub fn schedule(&self, assignment: &[usize]) -> Schedule {
+        debug_assert_eq!(assignment, &self.last[..]);
+        Schedule {
+            assignment: assignment.to_vec(),
+            start: self.start.clone(),
+            optimal: false,
+        }
     }
 }
 
@@ -272,15 +376,75 @@ mod tests {
     }
 
     #[test]
-    fn sgs_schedules_are_valid_for_all_rules() {
+    fn sgs_schedules_are_valid_for_all_rules() -> anyhow::Result<()> {
+        use anyhow::Context;
         let p = problem_from(vec![dag1(), dag2()]);
         let assignment = vec![p.feasible[0]; p.len()];
         for &rule in ALL_RULES {
             let prio = priorities(&p, &assignment, rule);
             let s = serial_sgs(&p, &assignment, &prio);
-            s.validate(&p)
-                .unwrap_or_else(|e| panic!("rule {rule:?}: {e}"));
+            s.validate(&p).with_context(|| format!("rule {rule:?}"))?;
         }
+        Ok(())
+    }
+
+    #[test]
+    fn selection_order_is_duration_independent() {
+        // The invariant IncrementalSgs rests on: perturbing configs (and
+        // hence durations/demands) never changes the selection order.
+        let p = problem_from(vec![dag1(), dag2()]);
+        let a0 = vec![p.feasible[0]; p.len()];
+        let prio = priorities(&p, &a0, Rule::CriticalPath);
+        let order = selection_order(&p, &prio);
+        // Precedence-consistent and a permutation.
+        let mut pos = vec![0usize; p.len()];
+        for (i, &t) in order.iter().enumerate() {
+            pos[t] = i;
+        }
+        for &(a, b) in &p.precedence {
+            assert!(pos[a] < pos[b], "order violates precedence {a}->{b}");
+        }
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..p.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn property_incremental_matches_full_sgs() {
+        // IncrementalSgs::evaluate must be bit-identical to a full
+        // serial_sgs pass under the frozen priorities, for arbitrary
+        // perturbation sequences.
+        propcheck::check(20, |rng| {
+            let dag = arbitrary_dag(rng, 12);
+            let p = problem_from(vec![dag]);
+            let initial: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let prio0 = priorities(&p, &initial, Rule::CriticalPath);
+            let mut inc = IncrementalSgs::new(&p, &initial);
+            let mut current = initial;
+            for step in 0..12 {
+                let makespan = inc.evaluate(&p, &current);
+                let full = serial_sgs(&p, &current, &prio0);
+                if (makespan - full.makespan(&p)).abs() > 1e-12 {
+                    return Err(format!(
+                        "step {step}: incremental {makespan} != full {}",
+                        full.makespan(&p)
+                    ));
+                }
+                let sched = inc.schedule(&current);
+                if sched.start != full.start {
+                    return Err(format!("step {step}: start vectors diverge"));
+                }
+                sched.validate(&p).map_err(|e| e.to_string())?;
+                // Perturb 1-2 tasks like the SA proposal kernel does.
+                for _ in 0..rng.range(1, 2) {
+                    let t = rng.below(p.len());
+                    current[t] = p.feasible[rng.below(p.feasible.len())];
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

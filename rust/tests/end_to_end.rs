@@ -34,7 +34,7 @@ fn micro_pipeline_balanced_beats_airflow_on_both_axes() {
         ConfigSpace::standard(),
         CostModel::OnDemand,
     );
-    let airflow = AirflowScheduler::default().schedule(&p);
+    let airflow = AirflowScheduler::default().schedule(&p).expect("airflow");
     let plan = Agora::new(AgoraOptions {
         goal: Goal::Balanced,
         seed: 2022,
@@ -139,14 +139,16 @@ fn macro_trace_agora_beats_airflow_on_cost_and_completion() {
         Strategy::Airflow,
         11,
     )
-    .run(&jobs);
+    .run(&jobs)
+    .expect("airflow macro run");
     let run = BatchRunner::new(
         params.batch_capacity(),
         ConfigSpace::standard(),
         Strategy::Agora(Goal::Balanced),
         11,
     )
-    .run(&jobs);
+    .run(&jobs)
+    .expect("agora macro run");
 
     let s = MacroSummary::against(&base, &run);
     assert!(

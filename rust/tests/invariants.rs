@@ -69,7 +69,9 @@ fn all_schedulers_valid_on_arbitrary_dags() {
             Box::new(StratusScheduler::default()),
         ];
         for s in schedulers {
-            let sched = s.schedule(&p);
+            let sched = s
+                .schedule(&p)
+                .map_err(|e| format!("{}: {e:#}", s.name()))?;
             sched
                 .validate(&p)
                 .map_err(|e| format!("{}: {e}", s.name()))?;
@@ -133,6 +135,7 @@ fn budgets_are_respected_when_feasible() {
             makespan_budget: base.makespan * 1.5,
             cost_budget: f64::INFINITY,
             seed: rng.next_u64(),
+            ..Default::default()
         })
         .optimize(&p);
         if let Some(a) = &plan.anneal {
@@ -211,7 +214,7 @@ fn trigger_policy_batches_cover_all_submissions_once() {
             Strategy::Airflow,
             rng.next_u64(),
         );
-        let report = runner.run(&jobs);
+        let report = runner.run(&jobs).map_err(|e| e.to_string())?;
         if report.outcomes.len() != jobs.len() {
             return Err(format!(
                 "{} jobs submitted, {} outcomes",
