@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::cluster::Capacity;
+use crate::sim::{CapacityOutage, ReplanPolicy};
 use crate::solver::anneal::AnnealParams;
 use crate::solver::{Goal, Mode};
 use crate::util::{Args, Json};
@@ -30,6 +31,9 @@ pub struct AppConfig {
     pub anneal: AnnealParams,
     /// Portfolio co-optimizer chains (1 = deterministic single chain).
     pub parallelism: usize,
+    /// Mid-flight re-planning + divergence injection for `execute`-style
+    /// runs (off by default: bit-identical to the open-loop executor).
+    pub replan: ReplanPolicy,
     pub verbose: bool,
 }
 
@@ -46,6 +50,7 @@ impl Default for AppConfig {
             cost_budget: f64::INFINITY,
             anneal: AnnealParams::default(),
             parallelism: 1,
+            replan: ReplanPolicy::off(),
             verbose: false,
         }
     }
@@ -66,6 +71,17 @@ impl AppConfig {
         ("cost-budget", "Eq. 8 budget in dollars"),
         ("max-iters", "annealing iteration cap"),
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
+        ("replan-max", "max mid-flight suffix replans per execution (0 = off)"),
+        ("replan-threshold", "completion divergence fraction that triggers a replan"),
+        ("replan-iters", "annealing iterations per suffix replan"),
+        ("replan-seed", "seed for the replan search + divergence injection"),
+        ("replan-straggler-prob", "injected per-task straggler probability"),
+        ("replan-straggler-factor", "runtime multiplier for straggling tasks"),
+        ("replan-fail-prob", "injected per-task failure probability (one retry)"),
+        ("replan-outage-at", "capacity outage start in seconds"),
+        ("replan-outage-duration", "capacity outage length in seconds (0 = none)"),
+        ("replan-outage-cpu", "fraction of cluster vCPUs lost during the outage"),
+        ("replan-outage-mem", "fraction of cluster memory lost during the outage"),
         ("verbose", "chatty output"),
     ];
 
@@ -104,6 +120,41 @@ impl AppConfig {
         if let Some(x) = v.opt("parallelism") {
             c.parallelism = x.as_usize()?.max(1);
         }
+        if let Some(x) = v.opt("replan_max") {
+            c.replan.max_replans = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("replan_threshold") {
+            c.replan.threshold = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_iters") {
+            c.replan.iters = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("replan_seed") {
+            let seed = x.as_f64()? as u64;
+            c.replan.seed = seed;
+            c.replan.divergence.seed = seed;
+        }
+        if let Some(x) = v.opt("replan_straggler_prob") {
+            c.replan.divergence.straggler_prob = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_straggler_factor") {
+            c.replan.divergence.straggler_factor = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_fail_prob") {
+            c.replan.divergence.fail_prob = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_outage_at") {
+            outage_mut(&mut c.replan).at = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_outage_duration") {
+            outage_mut(&mut c.replan).duration = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_outage_cpu") {
+            outage_mut(&mut c.replan).cpu_fraction = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("replan_outage_mem") {
+            outage_mut(&mut c.replan).mem_fraction = x.as_f64()?;
+        }
         Ok(c)
     }
 
@@ -130,6 +181,37 @@ impl AppConfig {
         self.cost_budget = args.f64_or("cost-budget", self.cost_budget)?;
         self.anneal.max_iters = args.usize_or("max-iters", self.anneal.max_iters)?;
         self.parallelism = args.usize_or("parallelism", self.parallelism)?.max(1);
+        self.replan.max_replans = args.usize_or("replan-max", self.replan.max_replans)?;
+        self.replan.threshold = args.f64_or("replan-threshold", self.replan.threshold)?;
+        self.replan.iters = args.usize_or("replan-iters", self.replan.iters)?;
+        if args.has("replan-seed") {
+            let seed = args.u64_or("replan-seed", self.replan.seed)?;
+            self.replan.seed = seed;
+            self.replan.divergence.seed = seed;
+        }
+        self.replan.divergence.straggler_prob =
+            args.f64_or("replan-straggler-prob", self.replan.divergence.straggler_prob)?;
+        self.replan.divergence.straggler_factor = args.f64_or(
+            "replan-straggler-factor",
+            self.replan.divergence.straggler_factor,
+        )?;
+        self.replan.divergence.fail_prob =
+            args.f64_or("replan-fail-prob", self.replan.divergence.fail_prob)?;
+        if args.has("replan-outage-at") {
+            outage_mut(&mut self.replan).at = args.f64_or("replan-outage-at", 0.0)?;
+        }
+        if args.has("replan-outage-duration") {
+            outage_mut(&mut self.replan).duration =
+                args.f64_or("replan-outage-duration", 0.0)?;
+        }
+        if args.has("replan-outage-cpu") {
+            outage_mut(&mut self.replan).cpu_fraction =
+                args.f64_or("replan-outage-cpu", 0.0)?;
+        }
+        if args.has("replan-outage-mem") {
+            outage_mut(&mut self.replan).mem_fraction =
+                args.f64_or("replan-outage-mem", 0.0)?;
+        }
         self.verbose = args.bool_or("verbose", self.verbose)?;
         Ok(self)
     }
@@ -142,6 +224,18 @@ impl AppConfig {
         };
         base.apply_args(args)
     }
+}
+
+/// The outage knobs compose onto one optional window: the first
+/// `replan-outage-*` key materializes a default-off window (duration 0),
+/// later keys refine it.
+fn outage_mut(policy: &mut ReplanPolicy) -> &mut CapacityOutage {
+    policy.divergence.outage.get_or_insert(CapacityOutage {
+        at: 0.0,
+        duration: 0.0,
+        cpu_fraction: 0.5,
+        mem_fraction: 0.5,
+    })
 }
 
 pub fn parse_goal(s: &str) -> Result<Goal> {
@@ -207,6 +301,66 @@ mod tests {
     fn weighted_goal_parses() {
         let c = AppConfig::resolve(&args(&["run", "--goal", "w=0.75"])).unwrap();
         assert_eq!(c.goal, Goal::Weighted(0.75));
+    }
+
+    #[test]
+    fn replan_flags_parse_from_cli_and_json() {
+        // Default: fully off — the executor stays bit-identical.
+        assert!(AppConfig::default().replan.is_off());
+
+        let c = AppConfig::resolve(&args(&[
+            "execute",
+            "--replan-max",
+            "2",
+            "--replan-threshold",
+            "0.3",
+            "--replan-iters",
+            "50",
+            "--replan-seed",
+            "99",
+            "--replan-straggler-prob",
+            "0.25",
+            "--replan-straggler-factor",
+            "5",
+            "--replan-fail-prob",
+            "0.1",
+        ]))
+        .unwrap();
+        assert_eq!(c.replan.max_replans, 2);
+        assert_eq!(c.replan.threshold, 0.3);
+        assert_eq!(c.replan.iters, 50);
+        assert_eq!(c.replan.seed, 99);
+        assert_eq!(c.replan.divergence.seed, 99);
+        assert_eq!(c.replan.divergence.straggler_prob, 0.25);
+        assert_eq!(c.replan.divergence.straggler_factor, 5.0);
+        assert_eq!(c.replan.divergence.fail_prob, 0.1);
+        assert!(c.replan.divergence.outage.is_none());
+
+        let v = Json::parse(
+            r#"{"replan_max": 1, "replan_threshold": 0.15,
+                "replan_straggler_prob": 0.4,
+                "replan_outage_at": 100, "replan_outage_duration": 60,
+                "replan_outage_cpu": 0.25}"#,
+        )
+        .unwrap();
+        let c = AppConfig::from_json(&v).unwrap();
+        assert_eq!(c.replan.max_replans, 1);
+        assert_eq!(c.replan.threshold, 0.15);
+        assert_eq!(c.replan.divergence.straggler_prob, 0.4);
+        let outage = c.replan.divergence.outage.expect("outage window set");
+        assert_eq!(outage.at, 100.0);
+        assert_eq!(outage.duration, 60.0);
+        assert_eq!(outage.cpu_fraction, 0.25);
+    }
+
+    #[test]
+    fn cli_replan_flags_override_json_outage() {
+        let v = Json::parse(r#"{"replan_outage_duration": 60}"#).unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        let c = base
+            .apply_args(&args(&["run", "--replan-outage-duration", "120"]))
+            .unwrap();
+        assert_eq!(c.replan.divergence.outage.unwrap().duration, 120.0);
     }
 
     #[test]

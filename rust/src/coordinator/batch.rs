@@ -17,7 +17,7 @@ use crate::dag::Dag;
 use crate::predictor::{
     bootstrap_history, default_profiling_configs, EventLog, LearnedPredictor, Predictor,
 };
-use crate::sim;
+use crate::sim::{self, ReplanPolicy};
 use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem};
 use crate::trace::TracedJob;
 use crate::util::Rng;
@@ -66,6 +66,9 @@ pub struct MacroReport {
     pub total_completion: f64,
     pub rounds: usize,
     pub optimizer_overhead: Duration,
+    /// Mid-flight replans fired across all rounds (0 when the policy is
+    /// off).
+    pub replans: usize,
 }
 
 /// Virtual-time batch runner.
@@ -79,6 +82,9 @@ pub struct BatchRunner {
     /// Portfolio chains handed to the co-optimizer per round
     /// (1 = deterministic single chain).
     pub parallelism: usize,
+    /// Mid-flight re-planning + divergence injection applied to every
+    /// round's execution (off by default).
+    pub replan: ReplanPolicy,
     /// Event-log database (task name -> history), persisted across rounds.
     pub log_db: HashMap<String, EventLog>,
 }
@@ -93,6 +99,7 @@ impl BatchRunner {
             strategy,
             seed,
             parallelism: 1,
+            replan: ReplanPolicy::off(),
             log_db: HashMap::new(),
         }
     }
@@ -100,6 +107,12 @@ impl BatchRunner {
     /// Builder-style portfolio knob.
     pub fn with_parallelism(mut self, parallelism: usize) -> Self {
         self.parallelism = parallelism.max(1);
+        self
+    }
+
+    /// Builder-style replan/divergence knob.
+    pub fn with_replan(mut self, replan: ReplanPolicy) -> Self {
+        self.replan = replan;
         self
     }
 
@@ -132,6 +145,7 @@ impl BatchRunner {
         let mut outcomes = Vec::new();
         let mut rounds = 0usize;
         let mut overhead = Duration::ZERO;
+        let mut replans = 0usize;
 
         // Virtual clock: advance to each trigger firing.
         let mut queue: Vec<&TracedJob> = Vec::new();
@@ -225,8 +239,18 @@ impl BatchRunner {
                     }
                 };
 
-                // Execute on the simulated cluster.
-                let report = sim::execute(&p, &dags, &schedule, &self.cost_model, &mut rng);
+                // Execute on the simulated cluster (closed-loop when the
+                // replan policy is armed; per-round seed derivation keeps
+                // injected divergence decorrelated across rounds).
+                let report = sim::execute_with_policy(
+                    &p,
+                    &dags,
+                    &schedule,
+                    &self.cost_model,
+                    &mut rng,
+                    &self.replan.for_round(rounds as u64 - 1),
+                );
+                replans += report.replans.len();
                 cluster_free = round_start + report.makespan;
 
                 // Record outcomes + feed logs back.
@@ -283,6 +307,7 @@ impl BatchRunner {
             total_completion,
             rounds,
             optimizer_overhead: overhead,
+            replans,
         })
     }
 }
@@ -351,6 +376,38 @@ mod tests {
         let rep = runner.run(&jobs).expect("macro run");
         assert_eq!(rep.outcomes.len(), 12);
         assert!(rep.optimizer_overhead > Duration::ZERO);
+    }
+
+    #[test]
+    fn replanning_macro_run_completes_all_jobs() {
+        use crate::sim::DivergenceSpec;
+        let params = TraceParams::tiny();
+        let mut rng = Rng::new(7);
+        let jobs = generate(&params, &mut rng);
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::Airflow,
+            9,
+        )
+        .with_replan(ReplanPolicy {
+            max_replans: 1,
+            threshold: 0.1,
+            iters: 30,
+            divergence: DivergenceSpec {
+                straggler_prob: 0.3,
+                straggler_factor: 6.0,
+                seed: 5,
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let rep = runner.run(&jobs).expect("macro run");
+        assert_eq!(rep.outcomes.len(), 12);
+        for o in &rep.outcomes {
+            assert!(o.completion > 0.0);
+            assert!(o.cost > 0.0);
+        }
     }
 
     #[test]

@@ -77,6 +77,7 @@ mod tests {
             total_completion: completions.iter().map(|c| c.1).sum(),
             rounds: 1,
             optimizer_overhead: Duration::ZERO,
+            replans: 0,
         }
     }
 

@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::{bootstrap_history, default_profiling_configs, EventLog, LearnedPredictor, Predictor};
-use crate::sim;
+use crate::sim::{self, ReplanPolicy};
 use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem};
 use crate::util::Rng;
 
@@ -55,6 +55,9 @@ pub struct ServiceConfig {
     pub seed: u64,
     /// Portfolio chains per co-optimization round (1 = single chain).
     pub parallelism: usize,
+    /// Mid-flight re-planning + divergence injection per round (off by
+    /// default).
+    pub replan: ReplanPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -66,6 +69,7 @@ impl Default for ServiceConfig {
             max_queue: 8,
             seed: 0x5E21,
             parallelism: 1,
+            replan: ReplanPolicy::off(),
         }
     }
 }
@@ -219,7 +223,14 @@ fn serve_round(
         ..Default::default()
     });
     let plan = agora.optimize(&p);
-    let report = sim::execute(&p, &dags, &plan.schedule, cost_model, rng);
+    let report = sim::execute_with_policy(
+        &p,
+        &dags,
+        &plan.schedule,
+        cost_model,
+        rng,
+        &config.replan.for_round(round as u64 - 1),
+    );
 
     // Feed logs back (adaptive loop) and answer tenants.
     for (t, log) in report.new_logs.iter().enumerate() {
@@ -301,6 +312,32 @@ mod tests {
         });
         let handle = service.handle();
         let rx = handle.submit("dora", dag1());
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.completion > 0.0 && r.cost > 0.0);
+        service.shutdown();
+    }
+
+    #[test]
+    fn replanning_service_round_trip() {
+        use crate::sim::DivergenceSpec;
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_millis(30),
+            replan: ReplanPolicy {
+                max_replans: 1,
+                threshold: 0.1,
+                iters: 30,
+                divergence: DivergenceSpec {
+                    straggler_prob: 0.4,
+                    straggler_factor: 5.0,
+                    seed: 21,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        let handle = service.handle();
+        let rx = handle.submit("erin", dag2());
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
         assert!(r.completion > 0.0 && r.cost > 0.0);
         service.shutdown();

@@ -144,13 +144,33 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
     println!("\n{}", plan.schedule.render(&p));
 
     if execute {
-        let report = agora::sim::execute(&p, &dags, &plan.schedule, &CostModel::OnDemand, &mut rng);
+        let report = agora::sim::execute_with_policy(
+            &p,
+            &dags,
+            &plan.schedule,
+            &CostModel::OnDemand,
+            &mut rng,
+            &config.replan,
+        );
         println!(
             "executed: actual makespan {}  cost {}  prediction MAPE {:.1}%",
             fmt_duration(report.makespan),
             fmt_cost(report.cost),
             report.prediction_mape * 100.0
         );
+        for r in &report.replans {
+            println!(
+                "replan {}: trigger {} at {} (divergence {:.0}%)  cone {} task(s), {} reassigned  projected {} -> {}",
+                r.round,
+                p.tasks[r.trigger_task].name,
+                fmt_duration(r.at),
+                r.divergence * 100.0,
+                r.replanned,
+                r.reassigned,
+                fmt_duration(r.stale_makespan),
+                fmt_duration(r.planned_makespan),
+            );
+        }
     }
     Ok(())
 }
@@ -163,6 +183,7 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
         goal: config.goal,
         seed: config.seed,
         parallelism: config.parallelism,
+        replan: config.replan.clone(),
         ..Default::default()
     });
     let handle = service.handle();
@@ -209,7 +230,8 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         ConfigSpace::standard(),
         Strategy::Airflow,
         config.seed,
-    );
+    )
+    .with_replan(config.replan.clone());
     let base = base_runner.run(&jobs)?;
     let mut agora_runner = BatchRunner::new(
         params.batch_capacity(),
@@ -217,7 +239,8 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         Strategy::Agora(config.goal),
         config.seed,
     )
-    .with_parallelism(config.parallelism);
+    .with_parallelism(config.parallelism)
+    .with_replan(config.replan.clone());
     let run = agora_runner.run(&jobs)?;
     let summary = MacroSummary::against(&base, &run);
     println!(
@@ -239,6 +262,12 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         run.optimizer_overhead,
         run.rounds
     );
+    if !config.replan.is_off() {
+        println!(
+            "mid-flight replans: airflow {}  agora {}",
+            base.replans, run.replans
+        );
+    }
     Ok(())
 }
 

@@ -7,6 +7,8 @@
 //! ground-truth profile. The optimizer never touches `TaskProfile`
 //! directly — prediction error is real in every experiment.
 
+use anyhow::{bail, Context, Result};
+
 use crate::cluster::Config;
 use crate::dag::TaskProfile;
 use crate::util::{Json, Rng};
@@ -73,6 +75,69 @@ impl EventLog {
                 })),
             ),
         ])
+    }
+
+    /// Parse an event log from its [`EventLog::to_json`] form. Event logs
+    /// cross the process boundary (history import, replayed experiments),
+    /// so this is untrusted input: every field access is checked and
+    /// errors carry the task/run they occurred in instead of panicking.
+    pub fn from_json(v: &Json) -> Result<EventLog> {
+        let task = v
+            .get("task")
+            .and_then(|t| t.as_str())
+            .context("event log task name")?
+            .to_string();
+        let runs_json = v
+            .get("runs")
+            .and_then(|r| r.as_arr())
+            .with_context(|| format!("runs of task {task:?}"))?;
+        let mut runs = Vec::with_capacity(runs_json.len());
+        for (i, r) in runs_json.iter().enumerate() {
+            let ctx = || format!("run {i} of task {task:?}");
+            let index_field = |key: &str| -> Result<usize> {
+                r.get(key).and_then(|x| x.as_usize()).with_context(ctx)
+            };
+            // Range-check the config against the catalog: a config that
+            // parses but indexes out of range would panic at first use.
+            let instance = index_field("instance")?;
+            if instance >= crate::cluster::M5_CATALOG.len() {
+                bail!("instance index {instance} out of range in {}", ctx());
+            }
+            let nodes = index_field("nodes")?;
+            if nodes == 0 || nodes > 4096 {
+                bail!("invalid node count {nodes} in {}", ctx());
+            }
+            let spark = index_field("spark")?;
+            if spark >= crate::cluster::SPARK_PRESETS.len() {
+                bail!("spark preset index {spark} out of range in {}", ctx());
+            }
+            let config = Config {
+                instance,
+                nodes: nodes as u32,
+                spark,
+            };
+            let runtime = r.get("runtime").and_then(|x| x.as_f64()).with_context(ctx)?;
+            if !runtime.is_finite() || runtime < 0.0 {
+                bail!("invalid runtime {runtime} in {}", ctx());
+            }
+            let mut stages = Vec::new();
+            for s in r.get("stages").and_then(|s| s.as_arr()).with_context(ctx)? {
+                let pair = s.as_arr().with_context(ctx)?;
+                if pair.len() != 2 {
+                    bail!("stage entry must be [name, seconds] in {}", ctx());
+                }
+                stages.push((
+                    pair[0].as_str().with_context(ctx)?.to_string(),
+                    pair[1].as_f64().with_context(ctx)?,
+                ));
+            }
+            runs.push(RunRecord {
+                config,
+                runtime,
+                stages,
+            });
+        }
+        Ok(EventLog { task, runs })
     }
 }
 
@@ -193,7 +258,7 @@ mod tests {
     }
 
     #[test]
-    fn eventlog_json_contains_runs() {
+    fn eventlog_json_round_trips() -> Result<()> {
         let mut rng = Rng::new(4);
         let log = bootstrap_history(
             "t",
@@ -203,9 +268,61 @@ mod tests {
         );
         let j = log.to_json();
         assert_eq!(
-            j.get("runs").unwrap().as_arr().unwrap().len(),
+            j.get("runs")?.as_arr()?.len(),
             default_profiling_configs().len()
         );
+        let back = EventLog::from_json(&j)?;
+        assert_eq!(back.task, log.task);
+        assert_eq!(back.len(), log.len());
+        for (a, b) in back.runs.iter().zip(log.runs.iter()) {
+            assert_eq!(a.config, b.config);
+            assert!((a.runtime - b.runtime).abs() < 1e-12);
+            assert_eq!(a.stages.len(), b.stages.len());
+            for ((an, av), (bn, bv)) in a.stages.iter().zip(b.stages.iter()) {
+                assert_eq!(an, bn);
+                assert!((av - bv).abs() < 1e-12);
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn eventlog_from_json_rejects_malformed_input_with_context() {
+        // Missing field.
+        let v = Json::parse(r#"{"task": "t"}"#).unwrap();
+        let err = EventLog::from_json(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("runs"), "{err:#}");
+
+        // Wrong type deep in a run record: the error names the run.
+        let v = Json::parse(
+            r#"{"task": "t", "runs": [{"instance": 0, "nodes": "two",
+                "spark": 1, "runtime": 5.0, "stages": []}]}"#,
+        )
+        .unwrap();
+        let err = EventLog::from_json(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("run 0"), "{err:#}");
+
+        // Non-finite runtime rejected.
+        let v = Json::parse(
+            r#"{"task": "t", "runs": [{"instance": 0, "nodes": 2,
+                "spark": 1, "runtime": -3.0, "stages": []}]}"#,
+        )
+        .unwrap();
+        assert!(EventLog::from_json(&v).is_err());
+
+        // Out-of-range catalog indices rejected up front (would panic at
+        // first Config use otherwise).
+        for bad in [
+            r#"{"task": "t", "runs": [{"instance": 99, "nodes": 2,
+                "spark": 1, "runtime": 5.0, "stages": []}]}"#,
+            r#"{"task": "t", "runs": [{"instance": 0, "nodes": 0,
+                "spark": 1, "runtime": 5.0, "stages": []}]}"#,
+            r#"{"task": "t", "runs": [{"instance": 0, "nodes": 2,
+                "spark": 7, "runtime": 5.0, "stages": []}]}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(EventLog::from_json(&v).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

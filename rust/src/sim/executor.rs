@@ -1,4 +1,15 @@
 //! The execution engine: realize a schedule against ground truth.
+//!
+//! [`execute`] plays a plan open-loop, exactly as the historical
+//! implementation did. [`execute_with_policy`] is the event-driven
+//! closed-loop variant: it injects configurable divergence (stragglers,
+//! failures with retry, capacity outages) from the policy's seeded
+//! stream, scans realized completions in time order, and when one
+//! diverges from its plan expectation past the policy threshold it
+//! commits everything already started and re-optimizes the
+//! not-yet-started cone (`sim::replan`), then continues under the new
+//! suffix plan. With [`ReplanPolicy::off`] the two entry points are the
+//! same code path and bit-identical output.
 
 use crate::cluster::CostModel;
 use crate::dag::Dag;
@@ -6,17 +17,23 @@ use crate::predictor::eventlog::{simulate_run, EventLog};
 use crate::solver::{Problem, Schedule};
 use crate::util::Rng;
 
+use super::replan::{replan_suffix, ReplanEvent, ReplanPolicy};
+
 /// Execution record for one task.
 #[derive(Debug, Clone)]
 pub struct TaskRecord {
     pub task: usize,
+    /// Configuration the task actually ran under (a replan may differ
+    /// from the original plan's choice).
     pub config: usize,
     /// When the executor launched the task (actual, not planned).
     pub start: f64,
-    /// Actual (noisy) runtime.
+    /// Actual (noisy, possibly divergence-inflated) runtime.
     pub runtime: f64,
     /// Predicted runtime from the plan's grid, for error accounting.
     pub predicted: f64,
+    /// Failed attempts absorbed before the successful run.
+    pub retries: u32,
 }
 
 impl TaskRecord {
@@ -37,19 +54,38 @@ pub struct ExecutionReport {
     pub prediction_mape: f64,
     /// Fresh event logs (one per task), for the adaptive feedback loop.
     pub new_logs: Vec<EventLog>,
+    /// Mid-flight replan provenance (empty when the policy is off or
+    /// never triggered).
+    pub replans: Vec<ReplanEvent>,
 }
 
-/// Execute a schedule. `dags`/`releases` must be the ones the problem was
-/// built from (the simulator needs ground-truth profiles the optimizer
-/// never saw). Dispatch: plan order (by planned start, FIFO tie-break);
-/// a task launches at the earliest instant when its predecessors have
-/// *actually* finished and capacity is free.
+/// Execute a schedule open-loop (no injected divergence, no replanning).
+/// `dags`/`releases` must be the ones the problem was built from (the
+/// simulator needs ground-truth profiles the optimizer never saw).
+/// Dispatch: plan order (by planned start, FIFO tie-break); a task
+/// launches at the earliest instant when its predecessors have *actually*
+/// finished and capacity is free.
 pub fn execute(
     p: &Problem,
     dags: &[Dag],
     schedule: &Schedule,
     cost_model: &CostModel,
     rng: &mut Rng,
+) -> ExecutionReport {
+    execute_with_policy(p, dags, schedule, cost_model, rng, &ReplanPolicy::off())
+}
+
+/// Event-driven execution under a [`ReplanPolicy`]: injected divergence
+/// plus mid-flight suffix re-planning. See the module docs for the
+/// trigger/commit semantics; [`ReplanPolicy::off`] reproduces [`execute`]
+/// bit-identically (same RNG stream, same placements).
+pub fn execute_with_policy(
+    p: &Problem,
+    dags: &[Dag],
+    schedule: &Schedule,
+    cost_model: &CostModel,
+    rng: &mut Rng,
+    policy: &ReplanPolicy,
 ) -> ExecutionReport {
     let n = p.len();
     assert_eq!(schedule.start.len(), n);
@@ -61,65 +97,239 @@ pub fn execute(
         .map(|ft| dags[ft.dag].tasks[ft.local].profile.clone())
         .collect();
 
-    // Actual durations + event logs, drawn once up front (deterministic
-    // in rng order: flat task order).
+    // Actual durations + stage splits, drawn once up front at the planned
+    // configurations (deterministic in rng order: flat task order — the
+    // same stream as the historical executor).
+    let mut assignment: Vec<usize> = schedule.assignment.clone();
     let mut runtimes = Vec::with_capacity(n);
-    let mut new_logs = Vec::with_capacity(n);
+    let mut stages_of = Vec::with_capacity(n);
     for t in 0..n {
-        let cfg = p.space.configs[schedule.assignment[t]];
+        let cfg = p.space.configs[assignment[t]];
         let (rt, stages) = simulate_run(&profiles[t], cfg, rng);
         runtimes.push(rt);
-        let mut log = EventLog::new(&p.tasks[t].name);
-        log.record(cfg, rt, stages);
-        new_logs.push(log);
+        stages_of.push(stages);
     }
 
-    // Dispatch order: planned start, FIFO tie-break.
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| {
-        schedule.start[a]
-            .partial_cmp(&schedule.start[b])
-            .unwrap()
-            .then(a.cmp(&b))
+    // Injected divergence from the policy's own seeded stream; with the
+    // spec off every modifier is exactly 1.0 and nothing below mutates.
+    let divergence = policy.divergence.draw(n);
+    for t in 0..n {
+        if divergence[t].modifier != 1.0 {
+            runtimes[t] *= divergence[t].modifier;
+            for s in stages_of[t].iter_mut() {
+                s.1 *= divergence[t].modifier;
+            }
+        }
+    }
+
+    // Capacity-outage blocker rectangle, if any.
+    let outage_rect: Option<(f64, f64, f64, f64)> = policy.divergence.outage.and_then(|o| {
+        if o.duration > 0.0 && (o.cpu_fraction > 0.0 || o.mem_fraction > 0.0) {
+            Some((
+                o.at,
+                o.duration,
+                p.capacity.vcpus * o.cpu_fraction.clamp(0.0, 1.0),
+                p.capacity.memory_gb * o.mem_fraction.clamp(0.0, 1.0),
+            ))
+        } else {
+            None
+        }
     });
 
-    // Event-driven placement with the same timeline machinery the
-    // schedulers use — but over ACTUAL durations.
-    let mut timeline =
-        crate::solver::sgs::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
-    let mut start = vec![f64::NAN; n];
-    let mut placed = vec![false; n];
+    // Current plan state: dispatch priority + expected completions.
+    let mut plan_start: Vec<f64> = schedule.start.clone();
+    let mut expected_end: Vec<f64> = (0..n)
+        .map(|t| schedule.start[t] + p.duration(t, assignment[t]))
+        .collect();
+    let plan_makespan = schedule.makespan(p).max(1e-9);
 
-    // Plan order is precedence-consistent for valid schedules, but actual
-    // runtimes can reorder finishes; we still launch in plan order,
-    // waiting on actual predecessor completion (Airflow semantics).
-    let mut remaining: Vec<usize> = order;
-    while !remaining.is_empty() {
-        // find the first dispatchable task in plan order
-        let pos = remaining
-            .iter()
-            .position(|&t| p.preds(t).iter().all(|&q| placed[q]))
-            .expect("valid plans always have a dispatchable task");
-        let t = remaining.remove(pos);
-        let est = p
-            .preds(t)
-            .iter()
-            .map(|&q| start[q] + runtimes[q])
-            .fold(p.release[t], f64::max);
-        let (cpu, mem) = p.demand(schedule.assignment[t]);
-        let s = timeline.earliest_fit(est, runtimes[t], cpu, mem);
-        timeline.place(s, runtimes[t], cpu, mem);
-        start[t] = s;
-        placed[t] = true;
+    let mut committed = vec![false; n];
+    let mut checked = vec![false; n];
+    let mut start = vec![f64::NAN; n];
+    let mut replans: Vec<ReplanEvent> = Vec::new();
+    // Replanned tasks can never be dispatched before the replan instant.
+    let mut floor = f64::NEG_INFINITY;
+
+    loop {
+        // --- (Re)place every not-yet-committed task under the current
+        // plan: plan order (planned start, FIFO tie-break), waiting on
+        // actual predecessor completion (Airflow semantics), packed with
+        // the same timeline machinery the schedulers use — but over
+        // ACTUAL durations.
+        let mut timeline =
+            crate::solver::sgs::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+        if let Some((at, dur, cpu, mem)) = outage_rect {
+            timeline.place(at, dur, cpu, mem);
+        }
+        for t in 0..n {
+            if committed[t] {
+                let (cpu, mem) = p.demand(assignment[t]);
+                timeline.place(start[t], runtimes[t], cpu, mem);
+            }
+        }
+        let mut remaining: Vec<usize> = (0..n).filter(|&t| !committed[t]).collect();
+        remaining.sort_by(|&a, &b| {
+            plan_start[a]
+                .partial_cmp(&plan_start[b])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut placed = committed.clone();
+        while !remaining.is_empty() {
+            // find the first dispatchable task in plan order
+            let pos = remaining
+                .iter()
+                .position(|&t| p.preds(t).iter().all(|&q| placed[q]))
+                .expect("valid plans always have a dispatchable task");
+            let t = remaining.remove(pos);
+            let est = p
+                .preds(t)
+                .iter()
+                .map(|&q| start[q] + runtimes[q])
+                .fold(p.release[t].max(floor), f64::max);
+            let (cpu, mem) = p.demand(assignment[t]);
+            let s = timeline.earliest_fit(est, runtimes[t], cpu, mem);
+            timeline.place(s, runtimes[t], cpu, mem);
+            start[t] = s;
+            placed[t] = true;
+        }
+
+        // --- Scan realized completions in time order for a divergence
+        // trigger. Events before the firing instant have truly happened
+        // (their tasks started earlier still), so marking them checked is
+        // causally sound.
+        let mut fired = false;
+        if replans.len() < policy.max_replans {
+            let mut events: Vec<usize> = (0..n).filter(|&t| !checked[t]).collect();
+            events.sort_by(|&a, &b| {
+                let ea = start[a] + runtimes[a];
+                let eb = start[b] + runtimes[b];
+                ea.partial_cmp(&eb).unwrap().then(a.cmp(&b))
+            });
+            for &t in &events {
+                let end_t = start[t] + runtimes[t];
+                let div = (end_t - expected_end[t]) / plan_makespan;
+                checked[t] = true;
+                if div <= policy.threshold {
+                    continue;
+                }
+
+                // Trigger at this completion: freeze everything already
+                // started, re-optimize the cone that has not.
+                let tnow = end_t;
+                for u in 0..n {
+                    if !committed[u] && start[u] < tnow - 1e-9 {
+                        committed[u] = true;
+                    }
+                }
+                let active: Vec<usize> = (0..n).filter(|&u| !committed[u]).collect();
+                if active.is_empty() {
+                    // Everything is already running or done; nothing a
+                    // replan could change, now or at any later event.
+                    break;
+                }
+                // Committed work enters the replanning context below with
+                // its realized rectangle, so its eventual completion
+                // carries no new information — it must not burn another
+                // replan out of the budget.
+                for u in 0..n {
+                    if committed[u] {
+                        checked[u] = true;
+                    }
+                }
+
+                let mut preplaced: Vec<(f64, f64, f64, f64)> = Vec::new();
+                if let Some(r) = outage_rect {
+                    preplaced.push(r);
+                }
+                for u in 0..n {
+                    if committed[u] {
+                        let (cpu, mem) = p.demand(assignment[u]);
+                        preplaced.push((start[u], runtimes[u], cpu, mem));
+                    }
+                }
+                let fixed_end: Vec<f64> = (0..n)
+                    .map(|u| {
+                        if committed[u] {
+                            start[u] + runtimes[u]
+                        } else {
+                            f64::NAN
+                        }
+                    })
+                    .collect();
+                let stale_makespan = (0..n)
+                    .map(|u| start[u] + runtimes[u])
+                    .fold(0.0, f64::max);
+
+                let suffix = replan_suffix(
+                    p,
+                    &assignment,
+                    &active,
+                    tnow,
+                    &fixed_end,
+                    &preplaced,
+                    policy,
+                    replans.len() + 1,
+                );
+
+                // Adopt the suffix plan: new configurations (fresh draws
+                // for changed ones — same task, new machine shape), new
+                // dispatch priorities and expectations for the cone.
+                let mut reassigned = 0usize;
+                for &u in &active {
+                    if suffix.assignment[u] != assignment[u] {
+                        reassigned += 1;
+                        assignment[u] = suffix.assignment[u];
+                        let cfg = p.space.configs[assignment[u]];
+                        let (rt, mut stages) = simulate_run(&profiles[u], cfg, rng);
+                        runtimes[u] = rt * divergence[u].modifier;
+                        if divergence[u].modifier != 1.0 {
+                            for s in stages.iter_mut() {
+                                s.1 *= divergence[u].modifier;
+                            }
+                        }
+                        stages_of[u] = stages;
+                    }
+                    plan_start[u] = suffix.start[u];
+                    expected_end[u] = suffix.start[u] + p.duration(u, assignment[u]);
+                }
+                replans.push(ReplanEvent {
+                    round: replans.len() + 1,
+                    trigger_task: t,
+                    at: tnow,
+                    divergence: div,
+                    replanned: active.len(),
+                    reassigned,
+                    stale_makespan,
+                    planned_makespan: suffix.makespan,
+                });
+                floor = tnow;
+                fired = true;
+                break;
+            }
+        }
+        if !fired {
+            break;
+        }
     }
 
     let records: Vec<TaskRecord> = (0..n)
         .map(|t| TaskRecord {
             task: t,
-            config: schedule.assignment[t],
+            config: assignment[t],
             start: start[t],
             runtime: runtimes[t],
-            predicted: p.duration(t, schedule.assignment[t]),
+            predicted: p.duration(t, assignment[t]),
+            retries: divergence[t].retries,
+        })
+        .collect();
+
+    // Event logs carry the configuration each task actually ran under.
+    let new_logs: Vec<EventLog> = (0..n)
+        .map(|t| {
+            let mut log = EventLog::new(&p.tasks[t].name);
+            log.record(p.space.configs[assignment[t]], runtimes[t], stages_of[t].clone());
+            log
         })
         .collect();
 
@@ -137,11 +347,7 @@ pub fn execute(
                 .fold(0.0, f64::max)
         })
         .collect();
-    let prediction_mape = records
-        .iter()
-        .map(|r| (r.runtime - r.predicted).abs() / r.runtime.max(1e-9))
-        .sum::<f64>()
-        / n.max(1) as f64;
+    let prediction_mape = mean_absolute_prediction_error(&records);
 
     ExecutionReport {
         records,
@@ -150,7 +356,28 @@ pub fn execute(
         dag_completion,
         prediction_mape,
         new_logs,
+        replans,
     }
+}
+
+/// Mean absolute prediction error over the executed records, guarded
+/// against degenerate inputs: empty record sets, non-finite values, and
+/// zero/near-zero runtimes or predictions cannot produce inf/NaN in
+/// reports (each term is floored at a 1e-9 denominator and clamped).
+fn mean_absolute_prediction_error(records: &[TaskRecord]) -> f64 {
+    if records.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = records
+        .iter()
+        .map(|r| {
+            if !r.predicted.is_finite() || !r.runtime.is_finite() {
+                return 0.0;
+            }
+            ((r.runtime - r.predicted).abs() / r.runtime.max(1e-9)).min(1e6)
+        })
+        .sum();
+    sum / records.len() as f64
 }
 
 #[cfg(test)]
@@ -159,6 +386,7 @@ mod tests {
     use crate::cluster::{Capacity, ConfigSpace, CostModel};
     use crate::dag::workloads::{dag1, dag2};
     use crate::predictor::OraclePredictor;
+    use crate::sim::replan::DivergenceSpec;
     use crate::solver::cp::{CpSolver, Limits};
     use crate::Predictor;
 
@@ -274,5 +502,129 @@ mod tests {
             })
             .sum();
         assert!((rep.cost - manual).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_policy_is_bit_identical_to_execute() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let a = execute(&p, &dags, &s, &CostModel::OnDemand, &mut Rng::new(9));
+        let b = execute_with_policy(
+            &p,
+            &dags,
+            &s,
+            &CostModel::OnDemand,
+            &mut Rng::new(9),
+            &ReplanPolicy::off(),
+        );
+        assert!(b.replans.is_empty());
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.prediction_mape, b.prediction_mape);
+        for (x, y) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(x.task, y.task);
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.runtime, y.runtime);
+            assert_eq!(x.predicted, y.predicted);
+            assert_eq!(x.retries, 0);
+            assert_eq!(y.retries, 0);
+        }
+    }
+
+    #[test]
+    fn straggler_injection_inflates_the_straggling_task() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let base = execute(&p, &dags, &s, &CostModel::OnDemand, &mut Rng::new(11));
+        let policy = ReplanPolicy {
+            divergence: DivergenceSpec {
+                straggler_tasks: vec![0],
+                straggler_factor: 4.0,
+                ..Default::default()
+            },
+            ..ReplanPolicy::off()
+        };
+        let hit = execute_with_policy(
+            &p,
+            &dags,
+            &s,
+            &CostModel::OnDemand,
+            &mut Rng::new(11),
+            &policy,
+        );
+        // Same base draws (same stream), inflated by exactly the factor.
+        assert!(
+            (hit.records[0].runtime - 4.0 * base.records[0].runtime).abs() < 1e-9,
+            "straggler runtime {} vs base {}",
+            hit.records[0].runtime,
+            base.records[0].runtime
+        );
+        // (No makespan-monotonicity assertion: list-scheduling anomalies
+        // can legitimately shrink the packed makespan when one task
+        // grows.) The straggler's own completion is monotone:
+        assert!(hit.records[0].end() > base.records[0].end());
+        assert!(hit.makespan >= hit.records[0].end() - 1e-9);
+    }
+
+    #[test]
+    fn failed_task_records_one_retry() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let base = execute(&p, &dags, &s, &CostModel::OnDemand, &mut Rng::new(12));
+        let policy = ReplanPolicy {
+            divergence: DivergenceSpec {
+                fail_tasks: vec![3],
+                ..Default::default()
+            },
+            ..ReplanPolicy::off()
+        };
+        let hit = execute_with_policy(
+            &p,
+            &dags,
+            &s,
+            &CostModel::OnDemand,
+            &mut Rng::new(12),
+            &policy,
+        );
+        assert_eq!(hit.records[3].retries, 1);
+        assert!(hit.records.iter().enumerate().all(|(t, r)| t == 3 || r.retries == 0));
+        // Wasted attempt inflates runtime by 20-80%.
+        let ratio = hit.records[3].runtime / base.records[3].runtime;
+        assert!((1.2..=1.8).contains(&ratio), "retry ratio {ratio}");
+    }
+
+    #[test]
+    fn mape_guard_handles_degenerate_records() {
+        assert_eq!(mean_absolute_prediction_error(&[]), 0.0);
+        let records = vec![
+            TaskRecord {
+                task: 0,
+                config: 0,
+                start: 0.0,
+                runtime: 0.0,
+                predicted: 0.0,
+                retries: 0,
+            },
+            TaskRecord {
+                task: 1,
+                config: 0,
+                start: 0.0,
+                runtime: 10.0,
+                predicted: f64::NAN,
+                retries: 0,
+            },
+            TaskRecord {
+                task: 2,
+                config: 0,
+                start: 0.0,
+                runtime: 1e-12,
+                predicted: f64::INFINITY,
+                retries: 0,
+            },
+        ];
+        let mape = mean_absolute_prediction_error(&records);
+        assert!(mape.is_finite(), "mape must stay finite, got {mape}");
+        assert!(mape >= 0.0);
     }
 }

@@ -11,7 +11,16 @@
 //!
 //! The simulator also emits fresh event logs per executed task, closing
 //! the §4.1 adaptive loop (coordinator feeds them back to the Predictor).
+//!
+//! `replan` closes that loop *inside* a batch as well: under a
+//! [`ReplanPolicy`], injected divergence (stragglers, failures, capacity
+//! outages) is detected at realized completions and the not-yet-started
+//! cone of the DAG is re-optimized mid-flight (`execute_with_policy`).
 
 pub mod executor;
+pub mod replan;
 
-pub use executor::{execute, ExecutionReport, TaskRecord};
+pub use executor::{execute, execute_with_policy, ExecutionReport, TaskRecord};
+pub use replan::{
+    CapacityOutage, DivergenceSpec, ReplanEvent, ReplanPolicy, TaskDivergence,
+};

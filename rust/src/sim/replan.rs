@@ -1,0 +1,407 @@
+//! Mid-flight re-planning: divergence injection, the replan policy, and
+//! the suffix re-optimizer that closes the §4.1 loop *inside* a batch.
+//!
+//! The executor feeds realized completions back between batches (the
+//! coordinator's adaptive loop), but a plan that is already dispatched
+//! used to run open-loop: a straggling or failed task silently blew the
+//! makespan. [`ReplanPolicy`] arms the executor with a trigger — a
+//! completion diverging from its plan expectation by more than a
+//! threshold fraction of the plan makespan — and a response: re-optimize
+//! the *not-yet-started cone* of the DAG (configurations + packing) with
+//! the [`SuffixSgs`](crate::solver::sgs::SuffixSgs) cone evaluator and a
+//! small memoized annealing search, then continue executing the new
+//! suffix plan. Committed work is never rewritten.
+//!
+//! Divergence itself is injected from a dedicated seeded [`Rng`] stream
+//! ([`DivergenceSpec`]), so scenario replay is exact and the main
+//! execution stream is untouched — with the spec off, the executor is
+//! bit-identical to the historical (pre-replanning) implementation.
+
+use std::collections::HashMap;
+
+use crate::solver::cooptimizer::per_task_best;
+use crate::solver::sgs::SuffixSgs;
+use crate::solver::{Goal, Problem};
+use crate::util::Rng;
+
+/// A capacity-loss window: the cluster loses a slice of its resources
+/// (instance failure, preemption wave) for `duration` seconds starting at
+/// `at`. Modeled as a blocker rectangle on the execution timeline, so
+/// both dispatch and replanning pack around it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacityOutage {
+    /// Outage start (virtual seconds from batch start).
+    pub at: f64,
+    /// Outage length in seconds; <= 0 disables the outage.
+    pub duration: f64,
+    /// Fraction of cluster vCPUs lost during the window, in [0, 1].
+    pub cpu_fraction: f64,
+    /// Fraction of cluster memory lost during the window, in [0, 1].
+    pub mem_fraction: f64,
+}
+
+/// Divergence injected into an execution, drawn from a seeded [`Rng`]
+/// stream independent of the main execution stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DivergenceSpec {
+    /// Per-task probability of straggling.
+    pub straggler_prob: f64,
+    /// Runtime multiplier applied to straggling tasks (>= 1).
+    pub straggler_factor: f64,
+    /// Flat task indices that straggle unconditionally (pinned scenarios).
+    pub straggler_tasks: Vec<usize>,
+    /// Per-task probability of one failed attempt (followed by a retry
+    /// that succeeds; the wasted partial attempt inflates the runtime).
+    pub fail_prob: f64,
+    /// Flat task indices that fail once unconditionally.
+    pub fail_tasks: Vec<usize>,
+    /// Optional capacity-loss window.
+    pub outage: Option<CapacityOutage>,
+    /// Seed of the divergence stream.
+    pub seed: u64,
+}
+
+impl Default for DivergenceSpec {
+    fn default() -> Self {
+        DivergenceSpec {
+            straggler_prob: 0.0,
+            straggler_factor: 4.0,
+            straggler_tasks: Vec::new(),
+            fail_prob: 0.0,
+            fail_tasks: Vec::new(),
+            outage: None,
+            seed: 0xD117,
+        }
+    }
+}
+
+/// Divergence drawn for one task.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskDivergence {
+    /// Multiplier on the task's ground-truth runtime (>= 1).
+    pub modifier: f64,
+    pub straggled: bool,
+    /// Failed attempts before the successful run.
+    pub retries: u32,
+}
+
+impl DivergenceSpec {
+    /// Whether the spec injects nothing at all.
+    pub fn is_off(&self) -> bool {
+        self.straggler_prob <= 0.0
+            && self.straggler_tasks.is_empty()
+            && self.fail_prob <= 0.0
+            && self.fail_tasks.is_empty()
+            && self.outage.is_none()
+    }
+
+    /// Per-task runtime modifiers, drawn in flat task order from the
+    /// spec's own seeded stream.
+    pub fn draw(&self, n: usize) -> Vec<TaskDivergence> {
+        let mut rng = Rng::new(self.seed);
+        (0..n)
+            .map(|t| {
+                let straggled = self.straggler_tasks.contains(&t)
+                    || (self.straggler_prob > 0.0 && rng.chance(self.straggler_prob));
+                let failed = self.fail_tasks.contains(&t)
+                    || (self.fail_prob > 0.0 && rng.chance(self.fail_prob));
+                let mut modifier = 1.0;
+                let mut retries = 0;
+                if straggled {
+                    modifier *= self.straggler_factor.max(1.0);
+                }
+                if failed {
+                    // The first attempt dies partway through; the retry
+                    // runs to completion, so the wasted fraction stacks
+                    // on top of the full runtime.
+                    modifier *= 1.0 + rng.uniform(0.2, 0.8);
+                    retries = 1;
+                }
+                TaskDivergence {
+                    modifier,
+                    straggled,
+                    retries,
+                }
+            })
+            .collect()
+    }
+}
+
+/// When and how the executor re-plans mid-flight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanPolicy {
+    /// Trigger: a completion whose (realized - expected) end exceeds this
+    /// fraction of the plan makespan fires a replan.
+    pub threshold: f64,
+    /// Maximum suffix re-optimizations per execution; 0 disables
+    /// replanning entirely.
+    pub max_replans: usize,
+    /// Annealing iterations per suffix re-optimization.
+    pub iters: usize,
+    /// Objective of the suffix re-optimization (default: recover
+    /// runtime — the divergence already blew the makespan).
+    pub goal: Goal,
+    /// Seed of the replan search stream.
+    pub seed: u64,
+    /// Divergence injected into the execution.
+    pub divergence: DivergenceSpec,
+}
+
+impl Default for ReplanPolicy {
+    fn default() -> Self {
+        ReplanPolicy {
+            threshold: 0.2,
+            max_replans: 0,
+            iters: 200,
+            goal: Goal::Runtime,
+            seed: 0x2EF1A,
+            divergence: DivergenceSpec::default(),
+        }
+    }
+}
+
+impl ReplanPolicy {
+    /// Fully inert policy: no injected divergence, no replanning. The
+    /// executor reproduces the historical behaviour bit-identically.
+    pub fn off() -> ReplanPolicy {
+        ReplanPolicy::default()
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.max_replans == 0 && self.divergence.is_off()
+    }
+
+    /// Per-round policy for multi-round coordinators: same knobs,
+    /// decorrelated seed streams (round 0 keeps the base seeds). Without
+    /// this, probabilistic divergence would replay the identical pattern
+    /// every batch round, biasing macro comparisons.
+    pub fn for_round(&self, round: u64) -> ReplanPolicy {
+        let mut p = self.clone();
+        p.seed = round_seed(self.seed, round as usize);
+        p.divergence.seed = round_seed(self.divergence.seed, round as usize);
+        p
+    }
+}
+
+/// Provenance of one mid-flight replan, carried on the execution report
+/// so benches and the service can quantify adaptation gains.
+#[derive(Debug, Clone)]
+pub struct ReplanEvent {
+    /// 1-based replan round within this execution.
+    pub round: usize,
+    /// Flat task whose divergent completion fired the trigger.
+    pub trigger_task: usize,
+    /// Virtual time of the trigger (the task's realized completion).
+    pub at: f64,
+    /// Relative divergence that fired:
+    /// (realized end - expected end) / plan makespan.
+    pub divergence: f64,
+    /// Tasks in the re-optimized cone.
+    pub replanned: usize,
+    /// Cone tasks whose configuration the replan changed.
+    pub reassigned: usize,
+    /// Projected makespan had execution continued on the stale plan.
+    pub stale_makespan: f64,
+    /// Predicted makespan of the adopted suffix plan (committed work
+    /// included).
+    pub planned_makespan: f64,
+}
+
+/// The suffix plan a replan adopts.
+#[derive(Debug, Clone)]
+pub struct SuffixPlan {
+    /// Full-length assignment vector; entries outside the cone are the
+    /// incumbent's.
+    pub assignment: Vec<usize>,
+    /// Full-length planned-start vector; only cone entries meaningful.
+    pub start: Vec<f64>,
+    /// Predicted makespan over committed work plus the cone.
+    pub makespan: f64,
+}
+
+/// Deterministic per-round replan seed (SplitMix64 increment, mirroring
+/// `solver::anneal::chain_seed`).
+fn round_seed(seed: u64, round: usize) -> u64 {
+    seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(round as u64))
+}
+
+/// Evaluate one cone assignment: (projected makespan, cone cost), memoized
+/// so the annealing walk never pays twice for a revisited assignment.
+fn eval_candidate(
+    p: &Problem,
+    active: &[usize],
+    committed_peak: f64,
+    sgs: &mut SuffixSgs,
+    memo: &mut HashMap<Vec<usize>, (f64, f64)>,
+    assignment: &[usize],
+) -> (f64, f64) {
+    if let Some(&hit) = memo.get(assignment) {
+        return hit;
+    }
+    let makespan = sgs.evaluate(p, assignment).max(committed_peak);
+    let cost: f64 = active.iter().map(|&t| p.cost(t, assignment[t])).sum();
+    memo.insert(assignment.to_vec(), (makespan, cost));
+    (makespan, cost)
+}
+
+/// Re-optimize the not-yet-started cone at a replan trigger.
+///
+/// The search seeds from the incumbent assignment *and* the per-task-best
+/// assignment for the policy goal, keeps the best plan ever evaluated,
+/// and refines with a short mostly-greedy annealing walk over cone
+/// configurations (memoized, suffix-incremental evaluation). The result
+/// is therefore never predicted-worse than continuing the incumbent
+/// suffix as-scheduled by the same evaluator.
+#[allow(clippy::too_many_arguments)]
+pub fn replan_suffix(
+    p: &Problem,
+    incumbent: &[usize],
+    active: &[usize],
+    floor: f64,
+    fixed_end: &[f64],
+    preplaced: &[(f64, f64, f64, f64)],
+    policy: &ReplanPolicy,
+    round: usize,
+) -> SuffixPlan {
+    let mut sgs = SuffixSgs::new(p, incumbent, active, floor, fixed_end, preplaced);
+    let committed_peak = preplaced
+        .iter()
+        .map(|&(s, d, _, _)| s + d)
+        .fold(floor, f64::max);
+    let mut memo: HashMap<Vec<usize>, (f64, f64)> = HashMap::new();
+
+    // Incumbent continuation: the scale-free reference for the blend.
+    let mut best = incumbent.to_vec();
+    let (m0, c0) = eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &best);
+    let base_m = m0.max(1e-9);
+    let base_c = c0.max(1e-9);
+    let w = policy.goal.weight();
+    let energy = |m: f64, c: f64| w * m / base_m + (1.0 - w) * c / base_c;
+    let mut best_e = energy(m0, c0);
+
+    // Per-task-best candidate (what a task-local optimizer would pick for
+    // the goal) — a strong, deterministic lower anchor for the search.
+    let ptb = per_task_best(p, policy.goal);
+    let mut cand = incumbent.to_vec();
+    for &t in active {
+        cand[t] = ptb[t];
+    }
+    let (m1, c1) = eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &cand);
+    let e1 = energy(m1, c1);
+    let (mut cur, mut cur_e) = if e1 < best_e {
+        best = cand.clone();
+        best_e = e1;
+        (cand, e1)
+    } else {
+        (best.clone(), best_e)
+    };
+
+    // Short, mostly-greedy SA over cone configurations.
+    let mut rng = Rng::new(round_seed(policy.seed, round));
+    let mut temperature = 0.05;
+    if !active.is_empty() {
+        for _ in 0..policy.iters {
+            let mut proposal = cur.clone();
+            let t = active[rng.below(active.len())];
+            proposal[t] = p.feasible[rng.below(p.feasible.len())];
+            let (m, c) =
+                eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &proposal);
+            let e = energy(m, c);
+            let de = e - cur_e;
+            let accept = de < 0.0
+                || (e.is_finite() && rng.f64() < (-de / temperature.max(1e-12)).exp());
+            if accept {
+                cur = proposal;
+                cur_e = e;
+                if e < best_e - 1e-12 {
+                    best = cur.clone();
+                    best_e = e;
+                }
+            }
+            temperature *= 0.97;
+        }
+    }
+
+    // Materialize the winning cone plan (re-evaluate so the evaluator's
+    // start vector reflects `best`, not the last SA proposal).
+    let makespan = sgs.evaluate(p, &best).max(committed_peak);
+    let start: Vec<f64> = (0..p.len()).map(|t| sgs.start_of(t)).collect();
+    SuffixPlan {
+        assignment: best,
+        start,
+        makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_policy_is_off() {
+        let policy = ReplanPolicy::off();
+        assert!(policy.is_off());
+        assert!(policy.divergence.is_off());
+        assert_eq!(policy.max_replans, 0);
+    }
+
+    #[test]
+    fn for_round_decorrelates_but_keeps_round_zero_identity() {
+        let base = ReplanPolicy {
+            max_replans: 1,
+            divergence: DivergenceSpec {
+                straggler_prob: 0.5,
+                seed: 9,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert_eq!(base.for_round(0), base);
+        let r1 = base.for_round(1);
+        let r2 = base.for_round(2);
+        assert_ne!(r1.divergence.seed, base.divergence.seed);
+        assert_ne!(r1.divergence.seed, r2.divergence.seed);
+        assert_ne!(r1.seed, r2.seed);
+        // Knobs are untouched; only seed streams move.
+        assert_eq!(r1.max_replans, base.max_replans);
+        assert_eq!(r1.divergence.straggler_prob, base.divergence.straggler_prob);
+        // Derivation is itself deterministic.
+        assert_eq!(base.for_round(1), base.for_round(1));
+    }
+
+    #[test]
+    fn divergence_draw_is_deterministic_and_respects_pins() {
+        let spec = DivergenceSpec {
+            straggler_prob: 0.3,
+            straggler_factor: 5.0,
+            straggler_tasks: vec![2],
+            fail_prob: 0.2,
+            fail_tasks: vec![4],
+            seed: 77,
+            ..Default::default()
+        };
+        let a = spec.draw(8);
+        let b = spec.draw(8);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.modifier, y.modifier);
+            assert_eq!(x.straggled, y.straggled);
+            assert_eq!(x.retries, y.retries);
+        }
+        assert!(a[2].straggled, "pinned straggler must straggle");
+        assert!(a[2].modifier >= 5.0);
+        assert_eq!(a[4].retries, 1, "pinned failure must retry once");
+        assert!(a[4].modifier > 1.0);
+    }
+
+    #[test]
+    fn off_divergence_draws_identity_modifiers() {
+        let spec = DivergenceSpec::default();
+        assert!(spec.is_off());
+        for d in spec.draw(16) {
+            assert_eq!(d.modifier, 1.0);
+            assert_eq!(d.retries, 0);
+            assert!(!d.straggled);
+        }
+    }
+}

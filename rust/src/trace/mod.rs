@@ -138,7 +138,9 @@ pub fn generate(params: &TraceParams, rng: &mut Rng) -> Vec<TracedJob> {
             submit_time: rng.uniform(0.0, params.window),
         })
         .collect();
-    jobs.sort_by(|a, b| a.submit_time.partial_cmp(&b.submit_time).unwrap());
+    // NaN-safe total order: a degenerate submit time must never panic the
+    // trace generator (total_cmp sorts NaN last instead of unwrapping).
+    jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
     jobs
 }
 

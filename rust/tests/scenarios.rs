@@ -1,0 +1,572 @@
+//! Golden-scenario regression corpus for the closed-loop executor.
+//!
+//! Each scenario pins one (DAG, cluster, divergence) combination with
+//! zero-noise profiles and hand-built plans, so realized timelines are
+//! exactly computable: the tests assert bit-identical determinism across
+//! repeated runs with fixed seeds AND pin makespan/cost against
+//! hand-derived references. The corpus is the contract the re-planning
+//! subsystem must never drift from:
+//!
+//!   1. chain, no divergence      — closed-loop == open-loop == predicted
+//!   2. diamond + pinned straggler, replanning off — exact stale makespan
+//!   3. straggler + replanning    — replanning strictly beats the stale
+//!                                  plan (the headline adaptation gain)
+//!   4. pinned task failure       — one retry, bounded inflation
+//!   5. capacity outage window    — execution packs around the lost slice
+//!   6. seeded random multi-DAG   — bitwise determinism under
+//!                                  probabilistic divergence + replans
+//!   7. policy-off equivalence    — the event-driven executor reproduces
+//!                                  the historical executor bit-for-bit
+
+use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::dag::generator::arbitrary_dag;
+use agora::dag::{Dag, Task, TaskProfile};
+use agora::predictor::OraclePredictor;
+use agora::sim::{
+    execute, execute_with_policy, CapacityOutage, DivergenceSpec, ExecutionReport,
+    ReplanPolicy,
+};
+use agora::solver::{Agora, AgoraOptions, Mode, Problem, Schedule};
+use agora::util::Rng;
+use agora::Predictor;
+
+/// Deterministic profile: zero noise, zero contention, tiny working set —
+/// realized runtime at `nodes` x m5.4xlarge (balanced preset) is exactly
+/// `work / n_eff`.
+fn exact_profile(work: f64) -> TaskProfile {
+    TaskProfile {
+        work,
+        alpha: 0.0,
+        beta: 0.0,
+        mem_gb: 4.0,
+        spark_affinity: 0.0,
+        noise_sigma: 0.0,
+    }
+}
+
+fn exact_task(name: &str, work: f64) -> Task {
+    Task {
+        name: name.to_string(),
+        profile: exact_profile(work),
+    }
+}
+
+fn oracle_problem(dags: &[Dag], capacity: Capacity) -> Problem {
+    let space = ConfigSpace::standard();
+    let profiles: Vec<_> = dags
+        .iter()
+        .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+        .collect();
+    let grid = OraclePredictor { profiles }.predict(&space);
+    let releases = vec![0.0; dags.len()];
+    Problem::new(dags, &releases, capacity, space, grid, CostModel::OnDemand)
+}
+
+/// Index of `nodes` x m5.4xlarge with the balanced Spark preset.
+fn m5_4xl(space: &ConfigSpace, nodes: u32) -> usize {
+    space
+        .configs
+        .iter()
+        .position(|c| c.instance == 0 && c.nodes == nodes && c.spark == 1)
+        .expect("standard space carries the m5.4xlarge ladder")
+}
+
+/// A two-wide cluster: exactly two 1 x m5.4xlarge tasks fit side by side.
+fn two_wide() -> Capacity {
+    Capacity::new(32.0, 128.0)
+}
+
+fn manual_plan(p: &Problem, config: usize, starts: &[f64]) -> Schedule {
+    let s = Schedule {
+        assignment: vec![config; p.len()],
+        start: starts.to_vec(),
+        optimal: false,
+    };
+    s.validate(p).expect("pinned plans are valid by construction");
+    s
+}
+
+fn assert_reports_bit_identical(a: &ExecutionReport, b: &ExecutionReport) {
+    assert_eq!(a.records.len(), b.records.len());
+    for (x, y) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(x.task, y.task);
+        assert_eq!(x.config, y.config);
+        assert!(x.start == y.start, "start {} != {}", x.start, y.start);
+        assert!(x.runtime == y.runtime, "runtime {} != {}", x.runtime, y.runtime);
+        assert!(x.predicted == y.predicted);
+        assert_eq!(x.retries, y.retries);
+    }
+    assert!(a.makespan == b.makespan);
+    assert!(a.cost == b.cost);
+    assert!(a.prediction_mape == b.prediction_mape);
+    assert_eq!(a.dag_completion.len(), b.dag_completion.len());
+    for (x, y) in a.dag_completion.iter().zip(b.dag_completion.iter()) {
+        assert!(x == y);
+    }
+    assert_eq!(a.replans.len(), b.replans.len());
+    for (x, y) in a.replans.iter().zip(b.replans.iter()) {
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.trigger_task, y.trigger_task);
+        assert!(x.at == y.at);
+        assert!(x.divergence == y.divergence);
+        assert_eq!(x.replanned, y.replanned);
+        assert_eq!(x.reassigned, y.reassigned);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Chain, no divergence: closed-loop == open-loop == predicted.
+
+#[test]
+fn scenario_chain_baseline_matches_prediction_exactly() {
+    let dag = Dag::new(
+        "chain",
+        vec![exact_task("x", 20.0), exact_task("y", 30.0), exact_task("z", 10.0)],
+        vec![(0, 1), (1, 2)],
+    )
+    .unwrap();
+    let p = oracle_problem(std::slice::from_ref(&dag), two_wide());
+    let c1 = m5_4xl(&p.space, 1);
+    let plan = manual_plan(&p, c1, &[0.0, 20.0, 50.0]);
+
+    let run = |seed| {
+        execute_with_policy(
+            &p,
+            &[dag.clone()],
+            &plan,
+            &CostModel::OnDemand,
+            &mut Rng::new(seed),
+            &ReplanPolicy::off(),
+        )
+    };
+    let a = run(1);
+    let b = run(1);
+    assert_reports_bit_identical(&a, &b);
+
+    // Zero noise: realized == predicted, to the last bit of arithmetic.
+    assert!((a.makespan - 60.0).abs() < 1e-9, "makespan {}", a.makespan);
+    let expected_cost = 0.768 * 60.0 / 3600.0;
+    assert!((a.cost - expected_cost).abs() < 1e-9, "cost {}", a.cost);
+    assert!(a.prediction_mape < 1e-9, "mape {}", a.prediction_mape);
+    assert!(a.replans.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// 2. Diamond + pinned straggler, replanning off: exact stale makespan.
+
+fn diamond() -> Dag {
+    Dag::new(
+        "diamond",
+        vec![
+            exact_task("a", 10.0),
+            exact_task("b", 10.0),
+            exact_task("c", 10.0),
+            exact_task("d", 10.0),
+        ],
+        vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+    )
+    .unwrap()
+}
+
+#[test]
+fn scenario_diamond_straggler_stale_plan_pinned() {
+    let dag = diamond();
+    let p = oracle_problem(std::slice::from_ref(&dag), two_wide());
+    let c1 = m5_4xl(&p.space, 1);
+    let plan = manual_plan(&p, c1, &[0.0, 10.0, 10.0, 20.0]);
+    let policy = ReplanPolicy {
+        divergence: DivergenceSpec {
+            straggler_tasks: vec![1],
+            straggler_factor: 3.0,
+            ..Default::default()
+        },
+        ..ReplanPolicy::off()
+    };
+    let run = |seed| {
+        execute_with_policy(
+            &p,
+            &[dag.clone()],
+            &plan,
+            &CostModel::OnDemand,
+            &mut Rng::new(seed),
+            &policy,
+        )
+    };
+    let a = run(2);
+    assert_reports_bit_identical(&a, &run(2));
+
+    // Hand timeline: a 0-10, b (straggles x3) 10-40, c 10-20, d 40-50.
+    assert!((a.records[0].end() - 10.0).abs() < 1e-9);
+    assert!((a.records[1].runtime - 30.0).abs() < 1e-9);
+    assert!((a.records[2].end() - 20.0).abs() < 1e-9);
+    assert!((a.records[3].start - 40.0).abs() < 1e-9);
+    assert!((a.makespan - 50.0).abs() < 1e-9, "makespan {}", a.makespan);
+}
+
+// ---------------------------------------------------------------------------
+// 3. The headline: replanning strictly beats the stale plan.
+
+/// Four tasks on the two-wide cluster: a (straggles x3), independent b
+/// and d, and c depending on a. The stale plan holds c on the 1-node
+/// config and realizes makespan 40; a replan triggered by a's divergent
+/// completion at t=30 reassigns c to the 2-node config (5 s instead of
+/// 10 s on the now-empty cluster) and realizes 35.
+fn straggler_scenario() -> (Problem, Vec<Dag>, Schedule) {
+    let dag = Dag::new(
+        "replan-win",
+        vec![
+            exact_task("a", 10.0),
+            exact_task("b", 10.0),
+            exact_task("c", 10.0),
+            exact_task("d", 12.0),
+        ],
+        vec![(0, 2)],
+    )
+    .unwrap();
+    let dags = vec![dag];
+    let p = oracle_problem(&dags, two_wide());
+    let c1 = m5_4xl(&p.space, 1);
+    let plan = manual_plan(&p, c1, &[0.0, 0.0, 10.0, 10.0]);
+    (p, dags, plan)
+}
+
+#[test]
+fn scenario_replanning_strictly_beats_stale_plan_under_straggler() {
+    let (p, dags, plan) = straggler_scenario();
+    let divergence = DivergenceSpec {
+        straggler_tasks: vec![0],
+        straggler_factor: 3.0,
+        ..Default::default()
+    };
+    let stale_policy = ReplanPolicy {
+        divergence: divergence.clone(),
+        ..ReplanPolicy::off()
+    };
+    let replan_policy = ReplanPolicy {
+        threshold: 0.2,
+        max_replans: 2,
+        iters: 120,
+        divergence,
+        ..Default::default()
+    };
+
+    let stale = execute_with_policy(
+        &p,
+        &dags,
+        &plan,
+        &CostModel::OnDemand,
+        &mut Rng::new(3),
+        &stale_policy,
+    );
+    let adapted = execute_with_policy(
+        &p,
+        &dags,
+        &plan,
+        &CostModel::OnDemand,
+        &mut Rng::new(3),
+        &replan_policy,
+    );
+    assert_reports_bit_identical(
+        &adapted,
+        &execute_with_policy(
+            &p,
+            &dags,
+            &plan,
+            &CostModel::OnDemand,
+            &mut Rng::new(3),
+            &replan_policy,
+        ),
+    );
+
+    // Stale timeline: a 0-30, b 0-10, d 10-22 (backfilled), c 30-40.
+    assert!((stale.makespan - 40.0).abs() < 1e-9, "stale {}", stale.makespan);
+    assert!(stale.replans.is_empty());
+
+    // Adapted: trigger at a's completion (t=30, divergence (30-10)/22),
+    // cone = {c}, reassigned to 2 nodes -> c 30-35.
+    assert_eq!(adapted.replans.len(), 1);
+    let e = &adapted.replans[0];
+    assert_eq!(e.round, 1);
+    assert_eq!(e.trigger_task, 0);
+    assert!((e.at - 30.0).abs() < 1e-9, "trigger at {}", e.at);
+    assert!(e.divergence > 0.2);
+    assert_eq!(e.replanned, 1);
+    assert_eq!(e.reassigned, 1);
+    assert!((adapted.makespan - 35.0).abs() < 1e-9, "adapted {}", adapted.makespan);
+    assert!(
+        adapted.makespan < stale.makespan - 1.0,
+        "replanning must strictly improve realized makespan: {} vs {}",
+        adapted.makespan,
+        stale.makespan
+    );
+    // The 2-node reassignment halves the runtime at the same node-seconds:
+    // adaptation here is cost-neutral.
+    assert!(
+        (adapted.cost - stale.cost).abs() < 1e-9,
+        "cost drifted: {} vs {}",
+        adapted.cost,
+        stale.cost
+    );
+    // Replan provenance records the projected gain.
+    assert!((e.stale_makespan - 40.0).abs() < 1e-9);
+    assert!((e.planned_makespan - 35.0).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// 4. Pinned task failure: one retry, bounded inflation.
+
+#[test]
+fn scenario_pinned_failure_costs_one_bounded_retry() {
+    let dag = Dag::new(
+        "retry",
+        vec![exact_task("x", 10.0), exact_task("y", 10.0)],
+        vec![(0, 1)],
+    )
+    .unwrap();
+    let p = oracle_problem(std::slice::from_ref(&dag), two_wide());
+    let c1 = m5_4xl(&p.space, 1);
+    let plan = manual_plan(&p, c1, &[0.0, 10.0]);
+    let policy = ReplanPolicy {
+        divergence: DivergenceSpec {
+            fail_tasks: vec![0],
+            seed: 40,
+            ..Default::default()
+        },
+        ..ReplanPolicy::off()
+    };
+    let run = |seed| {
+        execute_with_policy(
+            &p,
+            &[dag.clone()],
+            &plan,
+            &CostModel::OnDemand,
+            &mut Rng::new(seed),
+            &policy,
+        )
+    };
+    let a = run(4);
+    assert_reports_bit_identical(&a, &run(4));
+    assert_eq!(a.records[0].retries, 1);
+    assert_eq!(a.records[1].retries, 0);
+    // Failure wastes 20-80% of an attempt: x in [12, 18), chain in [22, 28).
+    assert!(a.records[0].runtime >= 12.0 - 1e-9 && a.records[0].runtime < 18.0 + 1e-9);
+    assert!((a.records[1].start - a.records[0].end()).abs() < 1e-9);
+    assert!(a.makespan >= 22.0 - 1e-9 && a.makespan < 28.0 + 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// 5. Capacity outage: execution packs around the lost slice.
+
+#[test]
+fn scenario_capacity_outage_serializes_the_window() {
+    let dag = Dag::new(
+        "outage",
+        vec![exact_task("e", 10.0), exact_task("f", 10.0)],
+        vec![],
+    )
+    .unwrap();
+    let p = oracle_problem(std::slice::from_ref(&dag), two_wide());
+    let c1 = m5_4xl(&p.space, 1);
+    let plan = manual_plan(&p, c1, &[0.0, 0.0]);
+
+    // Baseline: both run side by side.
+    let free = execute(
+        &p,
+        &[dag.clone()],
+        &plan,
+        &CostModel::OnDemand,
+        &mut Rng::new(5),
+    );
+    assert!((free.makespan - 10.0).abs() < 1e-9);
+
+    // Half the cluster is gone for [0, 20): only one task fits at a time.
+    let policy = ReplanPolicy {
+        divergence: DivergenceSpec {
+            outage: Some(CapacityOutage {
+                at: 0.0,
+                duration: 20.0,
+                cpu_fraction: 0.5,
+                mem_fraction: 0.5,
+            }),
+            ..Default::default()
+        },
+        ..ReplanPolicy::off()
+    };
+    let run = |seed| {
+        execute_with_policy(
+            &p,
+            &[dag.clone()],
+            &plan,
+            &CostModel::OnDemand,
+            &mut Rng::new(seed),
+            &policy,
+        )
+    };
+    let a = run(5);
+    assert_reports_bit_identical(&a, &run(5));
+    assert!((a.records[0].start - 0.0).abs() < 1e-9);
+    assert!((a.records[1].start - 10.0).abs() < 1e-9);
+    assert!((a.makespan - 20.0).abs() < 1e-9, "makespan {}", a.makespan);
+}
+
+// ---------------------------------------------------------------------------
+// 6. Seeded random multi-DAG: bitwise determinism under probabilistic
+//    divergence with replanning armed.
+
+#[test]
+fn scenario_random_batch_with_replans_is_bitwise_deterministic() {
+    let dags = vec![
+        arbitrary_dag(&mut Rng::new(601), 10),
+        arbitrary_dag(&mut Rng::new(602), 8),
+    ];
+    let p = oracle_problem(&dags, Capacity::micro());
+    // Plan once (the inner CP solver has a wall-clock cutoff; execution
+    // itself must be load-independent, which is what this scenario pins).
+    let plan = Agora::new(AgoraOptions {
+        mode: Mode::SchedulerOnly,
+        ..Default::default()
+    })
+    .optimize(&p);
+    let policy = ReplanPolicy {
+        threshold: 0.1,
+        max_replans: 2,
+        iters: 60,
+        seed: 606,
+        divergence: DivergenceSpec {
+            straggler_prob: 0.3,
+            straggler_factor: 5.0,
+            fail_prob: 0.15,
+            seed: 607,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let run = |seed| {
+        execute_with_policy(
+            &p,
+            &dags,
+            &plan.schedule,
+            &CostModel::OnDemand,
+            &mut Rng::new(seed),
+            &policy,
+        )
+    };
+    let a = run(608);
+    assert_reports_bit_identical(&a, &run(608));
+
+    // Loose physical pins: the longest task bounds makespan below; each
+    // execution phase (initial dispatch + one per replan floor) can add
+    // at most one serial pass, bounding it above.
+    let serial: f64 = a.records.iter().map(|r| r.runtime).sum();
+    let longest = a.records.iter().map(|r| r.runtime).fold(0.0, f64::max);
+    let phases = (policy.max_replans + 1) as f64;
+    assert!(a.makespan <= serial * phases + 1e-6);
+    assert!(a.makespan >= longest - 1e-6);
+    assert!(a.cost > 0.0 && a.cost.is_finite());
+    assert!(a.prediction_mape.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// 7. Policy-off equivalence: the event-driven executor reproduces the
+//    historical (pre-replanning) executor bit-for-bit.
+
+/// The seed repo's executor, reimplemented verbatim against public APIs:
+/// draw runtimes in flat order, dispatch in plan order with earliest-fit
+/// over actual durations. Any behavioural drift in `execute` under an
+/// off policy shows up as a mismatch here.
+fn historical_execute(
+    p: &Problem,
+    dags: &[Dag],
+    schedule: &Schedule,
+    rng: &mut Rng,
+) -> (Vec<f64>, Vec<f64>, f64) {
+    use agora::predictor::simulate_run;
+    let n = p.len();
+    let profiles: Vec<_> = p
+        .tasks
+        .iter()
+        .map(|ft| dags[ft.dag].tasks[ft.local].profile.clone())
+        .collect();
+    let mut runtimes = Vec::with_capacity(n);
+    for t in 0..n {
+        let cfg = p.space.configs[schedule.assignment[t]];
+        let (rt, _) = simulate_run(&profiles[t], cfg, rng);
+        runtimes.push(rt);
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        schedule.start[a]
+            .partial_cmp(&schedule.start[b])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut timeline =
+        agora::solver::sgs::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+    let mut start = vec![f64::NAN; n];
+    let mut placed = vec![false; n];
+    let mut remaining = order;
+    while !remaining.is_empty() {
+        let pos = remaining
+            .iter()
+            .position(|&t| p.preds(t).iter().all(|&q| placed[q]))
+            .expect("valid plans always have a dispatchable task");
+        let t = remaining.remove(pos);
+        let est = p
+            .preds(t)
+            .iter()
+            .map(|&q| start[q] + runtimes[q])
+            .fold(p.release[t], f64::max);
+        let (cpu, mem) = p.demand(schedule.assignment[t]);
+        let s = timeline.earliest_fit(est, runtimes[t], cpu, mem);
+        timeline.place(s, runtimes[t], cpu, mem);
+        start[t] = s;
+        placed[t] = true;
+    }
+    let makespan = (0..n)
+        .map(|t| start[t] + runtimes[t])
+        .fold(0.0, f64::max);
+    (start, runtimes, makespan)
+}
+
+#[test]
+fn scenario_off_policy_reproduces_historical_executor_bitwise() {
+    for (dag_seed, exec_seed) in [(701u64, 702u64), (703, 704), (705, 706)] {
+        let dags = vec![
+            arbitrary_dag(&mut Rng::new(dag_seed), 9),
+            arbitrary_dag(&mut Rng::new(dag_seed + 10), 7),
+        ];
+        let p = oracle_problem(&dags, Capacity::micro());
+        let plan = Agora::new(AgoraOptions {
+            mode: Mode::SchedulerOnly,
+            ..Default::default()
+        })
+        .optimize(&p);
+
+        let (start, runtimes, makespan) =
+            historical_execute(&p, &dags, &plan.schedule, &mut Rng::new(exec_seed));
+        let report = execute(
+            &p,
+            &dags,
+            &plan.schedule,
+            &CostModel::OnDemand,
+            &mut Rng::new(exec_seed),
+        );
+        assert!(report.replans.is_empty());
+        assert!(
+            report.makespan == makespan,
+            "makespan drifted: {} vs historical {makespan}",
+            report.makespan
+        );
+        for r in &report.records {
+            assert!(
+                r.start == start[r.task],
+                "task {} start drifted: {} vs historical {}",
+                r.task,
+                r.start,
+                start[r.task]
+            );
+            assert!(r.runtime == runtimes[r.task]);
+            assert_eq!(r.config, plan.schedule.assignment[r.task]);
+        }
+    }
+}
