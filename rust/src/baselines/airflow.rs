@@ -13,6 +13,8 @@ use crate::solver::cooptimizer::Agora;
 use crate::solver::sgs::serial_sgs;
 use crate::solver::{Problem, Schedule};
 
+/// Default Airflow scheduling: expert-default configs, priority-weight
+/// dispatch (see module docs).
 #[derive(Debug, Clone, Default)]
 pub struct AirflowScheduler {
     /// Override the default config index (None = 4 x m5.4xlarge balanced).

@@ -9,6 +9,7 @@ use super::Scheduler;
 use crate::solver::sgs::{priorities, serial_sgs, Rule};
 use crate::solver::{Problem, Schedule};
 
+/// Ernest VM selection + critical-path list scheduling ("Ernest+CP").
 #[derive(Debug, Clone)]
 pub struct CriticalPathScheduler {
     /// How per-task configs are chosen before scheduling (the "separate"
@@ -19,6 +20,7 @@ pub struct CriticalPathScheduler {
 }
 
 impl CriticalPathScheduler {
+    /// Two-step pipeline: Ernest picks configs, CP-list schedules them.
     pub fn with_ernest(goal: ErnestGoal) -> Self {
         CriticalPathScheduler {
             ernest_goal: Some(goal),
@@ -26,6 +28,7 @@ impl CriticalPathScheduler {
         }
     }
 
+    /// Schedule a fixed externally chosen assignment.
     pub fn with_assignment(assignment: Vec<usize>) -> Self {
         CriticalPathScheduler {
             ernest_goal: None,

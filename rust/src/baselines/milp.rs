@@ -20,17 +20,23 @@ use super::Scheduler;
 use crate::solver::sgs::{priorities, serial_sgs, Rule};
 use crate::solver::{Problem, Schedule};
 
+/// Ernest VM selection + time-indexed MILP scheduling ("Ernest+MILP").
 #[derive(Debug, Clone)]
 pub struct MilpScheduler {
+    /// How per-task configs are chosen before scheduling.
     pub ernest_goal: Option<ErnestGoal>,
+    /// Fixed assignment override (scheduler-only ablations).
     pub assignment: Option<Vec<usize>>,
     /// Time-discretization granularity (number of buckets in the horizon).
     pub buckets: usize,
+    /// Branch-and-bound node budget.
     pub max_nodes: u64,
+    /// Branch-and-bound wall-clock budget.
     pub max_time: Duration,
 }
 
 impl MilpScheduler {
+    /// Two-step pipeline: Ernest picks configs, the MILP schedules them.
     pub fn with_ernest(goal: ErnestGoal) -> Self {
         MilpScheduler {
             ernest_goal: Some(goal),
@@ -41,6 +47,7 @@ impl MilpScheduler {
         }
     }
 
+    /// Schedule a fixed externally chosen assignment.
     pub fn with_assignment(assignment: Vec<usize>) -> Self {
         MilpScheduler {
             ernest_goal: None,
@@ -60,9 +67,16 @@ struct MilpSearch<'a> {
     /// bottom level in buckets
     bottom: Vec<usize>,
     order: Vec<usize>,
-    /// capacity usage per bucket (cpu, mem)
+    /// capacity usage per bucket (cpu, mem), pre-loaded with the
+    /// problem's occupancy reservations
     cpu_used: Vec<f64>,
     mem_used: Vec<f64>,
+    /// bucket indices where occupancy reservations end (extra candidate
+    /// start points; empty for unseeded problems)
+    reserve_ends: Vec<usize>,
+    /// earliest allowed start bucket per task (release / admission floor,
+    /// rounded up so bucket starts never precede the continuous release)
+    rel: Vec<usize>,
     start: Vec<usize>,
     best: Option<Vec<usize>>,
     best_makespan: usize,
@@ -115,15 +129,21 @@ impl<'a> MilpSearch<'a> {
             .preds(t)
             .iter()
             .map(|&q| self.start[q] + self.dur[q])
-            .fold(0usize, usize::max);
+            .fold(self.rel[t], usize::max);
 
-        // Candidate start buckets: est plus ends of already-placed tasks.
+        // Candidate start buckets: est plus ends of already-placed tasks
+        // and of occupancy reservations.
         let mut candidates: Vec<usize> = vec![est];
         for d in 0..depth {
             let q = self.order[d];
             let end = self.start[q] + self.dur[q];
             if end > est {
                 candidates.push(end);
+            }
+        }
+        for &e in &self.reserve_ends {
+            if e > est {
+                candidates.push(e);
             }
         }
         candidates.sort_unstable();
@@ -182,8 +202,44 @@ impl Scheduler for MilpScheduler {
             }
             b
         };
-        // Generous bucket horizon: sequential worst case.
-        let total_buckets: usize = dur.iter().sum::<usize>() + 1;
+        // Generous bucket horizon: sequential worst case, extended past
+        // the end of any occupancy reservation so seeded problems retain
+        // free buckets after the reserved window.
+        let reserved_horizon: usize = p
+            .preplaced
+            .iter()
+            .map(|&(s, d, _, _)| (((s + d) / bucket).ceil().max(0.0)) as usize)
+            .max()
+            .unwrap_or(0);
+        let total_buckets: usize = dur.iter().sum::<usize>() + 1 + reserved_horizon;
+
+        // Pre-load the occupancy reservations (continuous admission),
+        // bucketized conservatively (rounded outward): any bucket-feasible
+        // solution stays feasible against the real rectangles.
+        let mut cpu_used = vec![0.0; total_buckets];
+        let mut mem_used = vec![0.0; total_buckets];
+        for &(rs, rd, rcpu, rmem) in &p.preplaced {
+            let lo = (rs / bucket).floor().max(0.0) as usize;
+            let hi = ((((rs + rd) / bucket).ceil()).max(0.0) as usize).min(total_buckets);
+            for b in lo..hi {
+                cpu_used[b] += rcpu;
+                mem_used[b] += rmem;
+            }
+        }
+
+        let mut reserve_ends: Vec<usize> = p
+            .preplaced
+            .iter()
+            .map(|&(s, d, _, _)| (((s + d) / bucket).ceil().max(0.0)) as usize)
+            .collect();
+        reserve_ends.sort_unstable();
+        reserve_ends.dedup();
+
+        // Release / admission-floor anchoring, rounded up: a start at
+        // bucket rel[t] is at or after the continuous-time release.
+        let rel: Vec<usize> = (0..p.len())
+            .map(|t| ((p.release[t] / bucket).ceil().max(0.0)) as usize)
+            .collect();
 
         let mut search = MilpSearch {
             p,
@@ -191,8 +247,10 @@ impl Scheduler for MilpScheduler {
             demands,
             bottom,
             order,
-            cpu_used: vec![0.0; total_buckets],
-            mem_used: vec![0.0; total_buckets],
+            cpu_used,
+            mem_used,
+            reserve_ends,
+            rel,
             start: vec![0usize; p.len()],
             best: None,
             best_makespan: usize::MAX,
@@ -212,7 +270,8 @@ impl Scheduler for MilpScheduler {
                     start,
                     optimal: false,
                 };
-                // Releases > 0 are not bucket-anchored; fall back if invalid.
+                // Releases/occupancy are bucket-anchored conservatively,
+                // but keep the seed-aware fallback as the safety net.
                 if s.validate(p).is_ok() {
                     s
                 } else {
@@ -256,6 +315,46 @@ mod tests {
                 .schedule(&p)
                 .unwrap();
             s.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn milp_respects_occupancy_seed() {
+        // Full-capacity reservation over [0, 50): the returned schedule
+        // (bucket solution or the seed-aware fallback) must stay clear of
+        // the reserved window and pass the occupancy-aware validation.
+        let cap = Capacity::micro();
+        let p = problem(fig1_dag())
+            .with_occupancy(vec![(0.0, 50.0, cap.vcpus, cap.memory_gb)], 50.0);
+        let s = MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced))
+            .schedule(&p)
+            .unwrap();
+        s.validate(&p).unwrap();
+        for t in 0..p.len() {
+            assert!(
+                s.start[t] + 1e-9 >= 50.0,
+                "task {t} scheduled at {} inside the reservation",
+                s.start[t]
+            );
+        }
+    }
+
+    #[test]
+    fn milp_respects_admission_floor_without_reservations() {
+        // Floor only, no reservation rectangles: the bucket search must
+        // anchor starts at the release the floor was folded into (not
+        // merely survive via the validate-fallback path).
+        let p = problem(fig1_dag()).with_occupancy(Vec::new(), 40.0);
+        let s = MilpScheduler::with_ernest(ErnestGoal(Goal::Balanced))
+            .schedule(&p)
+            .unwrap();
+        s.validate(&p).unwrap();
+        for t in 0..p.len() {
+            assert!(
+                s.start[t] + 1e-9 >= 40.0,
+                "task {t} scheduled at {} before the floor",
+                s.start[t]
+            );
         }
     }
 

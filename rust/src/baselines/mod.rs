@@ -24,7 +24,9 @@ use crate::solver::{Problem, Schedule};
 /// error the coordinator can handle per-round instead of a panic that
 /// aborts a multi-tenant run.
 pub trait Scheduler {
+    /// Stable policy name for report tables.
     fn name(&self) -> &'static str;
+    /// Produce a complete feasible schedule for the problem.
     fn schedule(&self, p: &Problem) -> Result<Schedule>;
 }
 

@@ -22,6 +22,7 @@ use super::Scheduler;
 use crate::solver::sgs::serial_sgs;
 use crate::solver::{Problem, Schedule};
 
+/// Stratus cost-aware packing with runtime binning (see module docs).
 #[derive(Debug, Clone)]
 pub struct StratusScheduler {
     /// Runtime-bin width in powers of two (1.0 = one octave).

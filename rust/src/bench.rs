@@ -7,14 +7,20 @@ use std::time::{Duration, Instant};
 /// Timing summary of a measured closure.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Label of the measured operation.
     pub name: String,
+    /// Measured repetitions (warmup runs excluded).
     pub reps: usize,
+    /// Mean wall-clock time per repetition.
     pub mean: Duration,
+    /// Fastest repetition.
     pub min: Duration,
+    /// Slowest repetition.
     pub max: Duration,
 }
 
 impl Measurement {
+    /// Mean wall-clock time in milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
     }

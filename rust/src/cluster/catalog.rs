@@ -3,8 +3,11 @@
 /// One purchasable VM instance type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InstanceType {
+    /// AWS instance-type name, e.g. `m5.4xlarge`.
     pub name: &'static str,
+    /// vCPUs per node.
     pub vcpus: u32,
+    /// Memory per node in GiB.
     pub memory_gb: u32,
     /// On-demand price in $ per hour.
     pub hourly_cost: f64,
@@ -21,6 +24,7 @@ impl InstanceType {
         self.hourly_cost / self.vcpus as f64
     }
 
+    /// GiB of memory per vCPU (4.0 across the m5 family).
     pub fn memory_per_vcpu(&self) -> f64 {
         self.memory_gb as f64 / self.vcpus as f64
     }

@@ -9,6 +9,7 @@ use super::catalog::{InstanceType, M5_CATALOG};
 /// for, following the paper's experimental setup.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparkParams {
+    /// Preset name (`fat` | `balanced` | `thin`).
     pub name: &'static str,
     /// Executors per node (scales task-level parallelism granularity).
     pub executors_per_node: u32,
@@ -62,10 +63,12 @@ pub struct Config {
 }
 
 impl Config {
+    /// Catalog row of this configuration's instance type.
     pub fn instance_type(&self) -> &'static InstanceType {
         &M5_CATALOG[self.instance]
     }
 
+    /// Spark preset of this configuration.
     pub fn spark_params(&self) -> &'static SparkParams {
         &SPARK_PRESETS[self.spark]
     }
@@ -92,6 +95,7 @@ impl Config {
         self.nodes as f64 * self.instance_type().hourly_cost
     }
 
+    /// Human-readable label, e.g. `4 x m5.4xlarge (balanced)`.
     pub fn label(&self) -> String {
         format!(
             "{} x {} ({})",
@@ -105,6 +109,7 @@ impl Config {
 /// The enumerated candidate set handed to the optimizer and the predictor.
 #[derive(Debug, Clone)]
 pub struct ConfigSpace {
+    /// Enumerated candidate configurations.
     pub configs: Vec<Config>,
 }
 
@@ -149,10 +154,12 @@ impl ConfigSpace {
         ConfigSpace { configs }
     }
 
+    /// Number of candidate configurations.
     pub fn len(&self) -> usize {
         self.configs.len()
     }
 
+    /// Whether the space is empty.
     pub fn is_empty(&self) -> bool {
         self.configs.is_empty()
     }

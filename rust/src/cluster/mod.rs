@@ -14,11 +14,14 @@ pub use cost::CostModel;
 /// resource "can be any cluster capacity constraint".
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Capacity {
+    /// Total cluster vCPUs available to the batch workload.
     pub vcpus: f64,
+    /// Total cluster memory (GiB) available to the batch workload.
     pub memory_gb: f64,
 }
 
 impl Capacity {
+    /// Capacity from explicit vCPU and memory limits.
     pub fn new(vcpus: f64, memory_gb: f64) -> Self {
         Capacity { vcpus, memory_gb }
     }

@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::cluster::Capacity;
+use crate::coordinator::Admission;
 use crate::sim::{CapacityOutage, ReplanPolicy};
 use crate::solver::anneal::AnnealParams;
 use crate::solver::{Goal, Mode};
@@ -19,21 +20,34 @@ pub use crate::util::cli::Args as CliArgs;
 /// Fully resolved launcher configuration.
 #[derive(Debug, Clone)]
 pub struct AppConfig {
+    /// Optimization goal (Eq. 1 trade-off).
     pub goal: Goal,
+    /// Which parts of AGORA are active (ablations).
     pub mode: Mode,
+    /// Simulated cluster capacity.
     pub capacity: Capacity,
+    /// RNG seed of the run.
     pub seed: u64,
+    /// Directory holding the AOT artifacts (PJRT path).
     pub artifacts_dir: PathBuf,
     /// Use the PJRT predictor path (requires artifacts) instead of host.
     pub use_pjrt: bool,
+    /// Hard Eq. 7 budget in seconds (infinity = unconstrained).
     pub makespan_budget: f64,
+    /// Hard Eq. 8 budget in dollars (infinity = unconstrained).
     pub cost_budget: f64,
+    /// Annealing hyper-parameters.
     pub anneal: AnnealParams,
     /// Portfolio co-optimizer chains (1 = deterministic single chain).
     pub parallelism: usize,
     /// Mid-flight re-planning + divergence injection for `execute`-style
     /// runs (off by default: bit-identical to the open-loop executor).
     pub replan: ReplanPolicy,
+    /// Coordinator admission mode for `trace`/`serve`: round-barrier
+    /// (default, the historical behaviour) or continuous admission onto
+    /// the occupied-cluster timeline.
+    pub admission: Admission,
+    /// Chatty output.
     pub verbose: bool,
 }
 
@@ -51,6 +65,7 @@ impl Default for AppConfig {
             anneal: AnnealParams::default(),
             parallelism: 1,
             replan: ReplanPolicy::off(),
+            admission: Admission::Rounds,
             verbose: false,
         }
     }
@@ -71,6 +86,7 @@ impl AppConfig {
         ("cost-budget", "Eq. 8 budget in dollars"),
         ("max-iters", "annealing iteration cap"),
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
+        ("admission", "rounds | continuous (trace/serve batch admission)"),
         ("replan-max", "max mid-flight suffix replans per execution (0 = off)"),
         ("replan-threshold", "completion divergence fraction that triggers a replan"),
         ("replan-iters", "annealing iterations per suffix replan"),
@@ -85,6 +101,7 @@ impl AppConfig {
         ("verbose", "chatty output"),
     ];
 
+    /// Parse a JSON config file's contents over the defaults.
     pub fn from_json(v: &Json) -> Result<AppConfig> {
         let mut c = AppConfig::default();
         if let Some(goal) = v.opt("goal") {
@@ -119,6 +136,9 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("parallelism") {
             c.parallelism = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("admission") {
+            c.admission = parse_admission(x.as_str()?)?;
         }
         if let Some(x) = v.opt("replan_max") {
             c.replan.max_replans = x.as_usize()?;
@@ -158,6 +178,7 @@ impl AppConfig {
         Ok(c)
     }
 
+    /// Load a JSON config file over the defaults.
     pub fn load(path: &Path) -> Result<AppConfig> {
         Self::from_json(&Json::parse_file(path)?)
     }
@@ -181,6 +202,9 @@ impl AppConfig {
         self.cost_budget = args.f64_or("cost-budget", self.cost_budget)?;
         self.anneal.max_iters = args.usize_or("max-iters", self.anneal.max_iters)?;
         self.parallelism = args.usize_or("parallelism", self.parallelism)?.max(1);
+        if let Some(s) = args.get("admission") {
+            self.admission = parse_admission(s)?;
+        }
         self.replan.max_replans = args.usize_or("replan-max", self.replan.max_replans)?;
         self.replan.threshold = args.f64_or("replan-threshold", self.replan.threshold)?;
         self.replan.iters = args.usize_or("replan-iters", self.replan.iters)?;
@@ -238,12 +262,20 @@ fn outage_mut(policy: &mut ReplanPolicy) -> &mut CapacityOutage {
     })
 }
 
+/// Parse an admission-mode spelling (`rounds` | `continuous`).
+pub fn parse_admission(s: &str) -> Result<Admission> {
+    Admission::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("invalid admission {s:?}; expected rounds | continuous"))
+}
+
+/// Parse a goal spelling (`cost` | `balanced` | `runtime` | `w=<0..1>`).
 pub fn parse_goal(s: &str) -> Result<Goal> {
     Goal::parse(s).ok_or_else(|| {
         anyhow::anyhow!("invalid goal {s:?}; expected cost | balanced | runtime | w=<0..1>")
     })
 }
 
+/// Parse an ablation-mode spelling (see [`AppConfig::FLAGS`]).
 pub fn parse_mode(s: &str) -> Result<Mode> {
     match s {
         "agora" => Ok(Mode::CoOptimize),
@@ -361,6 +393,23 @@ mod tests {
             .apply_args(&args(&["run", "--replan-outage-duration", "120"]))
             .unwrap();
         assert_eq!(c.replan.divergence.outage.unwrap().duration, 120.0);
+    }
+
+    #[test]
+    fn admission_parses_from_cli_and_json() {
+        // Default: the historical round-barrier mode.
+        assert_eq!(AppConfig::default().admission, Admission::Rounds);
+        let c = AppConfig::resolve(&args(&["trace", "--admission", "continuous"])).unwrap();
+        assert_eq!(c.admission, Admission::Continuous);
+        let c = AppConfig::resolve(&args(&["trace", "--admission", "rounds"])).unwrap();
+        assert_eq!(c.admission, Admission::Rounds);
+        let v = Json::parse(r#"{"admission": "continuous"}"#).unwrap();
+        assert_eq!(AppConfig::from_json(&v).unwrap().admission, Admission::Continuous);
+        // CLI overrides the file value; unknown spellings are rejected.
+        let base = AppConfig::from_json(&v).unwrap();
+        let c = base.apply_args(&args(&["trace", "--admission", "rounds"])).unwrap();
+        assert_eq!(c.admission, Admission::Rounds);
+        assert!(AppConfig::resolve(&args(&["trace", "--admission", "overlap"])).is_err());
     }
 
     #[test]

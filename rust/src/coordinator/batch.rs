@@ -5,22 +5,35 @@
 //! co-optimized (or scheduled by a baseline) and executed on the
 //! simulated cluster; completed runs feed event logs back into the
 //! Predictor database (the §4.1 adaptive loop).
+//!
+//! Two admission modes are supported ([`Admission`]):
+//!
+//! * **rounds** — the historical bulk-synchronous barrier: a round's
+//!   batch is planned against an empty cluster and the next round cannot
+//!   start until the previous one has fully drained.
+//! * **continuous** — at each trigger the coordinator prunes its
+//!   occupancy ledger to the still-in-flight reservations, seeds the new
+//!   round's [`Problem`] with them ([`Problem::with_occupancy`]), and
+//!   plans + executes the batch *into the gaps* of the occupied-cluster
+//!   timeline. Outcomes are accounted at true finish times in absolute
+//!   virtual time, so rounds overlap instead of queueing.
 
 use std::collections::HashMap;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::TriggerPolicy;
+use super::{Admission, OccupancyLedger, TriggerPolicy};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::{
-    bootstrap_history, default_profiling_configs, EventLog, LearnedPredictor, Predictor,
+    bootstrap_history, default_profiling_configs, scoped_task_name, EventLog, LearnedPredictor,
+    Predictor,
 };
 use crate::sim::{self, ReplanPolicy};
-use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem};
+use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Reservation, Schedule};
 use crate::trace::TracedJob;
-use crate::util::Rng;
+use crate::util::{stats, Rng};
 
 /// How each round is scheduled.
 #[derive(Debug, Clone)]
@@ -34,6 +47,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Stable name used in report tables.
     pub fn name(&self) -> String {
         match self {
             Strategy::Airflow => "airflow".into(),
@@ -46,25 +60,47 @@ impl Strategy {
 /// Per-DAG outcome in a macro run.
 #[derive(Debug, Clone)]
 pub struct DagOutcome {
+    /// DAG name (job id in the trace).
     pub name: String,
+    /// When the DAG was submitted (virtual time).
     pub submit_time: f64,
+    /// When the DAG's first task actually launched (virtual time);
+    /// `first_start - submit_time` is the queueing delay.
+    pub first_start: f64,
     /// Wall-clock completion instant (virtual time).
     pub finish_time: f64,
     /// finish - submit.
     pub completion: f64,
+    /// Realized dollar cost of the DAG's tasks.
     pub cost: f64,
 }
 
 /// Full macro-run report.
 #[derive(Debug, Clone)]
 pub struct MacroReport {
+    /// Name of the scheduling strategy that produced this run.
     pub strategy: String,
+    /// Admission-mode name (`"rounds"` or `"continuous"`).
+    pub admission: String,
+    /// Per-DAG outcomes, in admission order.
     pub outcomes: Vec<DagOutcome>,
+    /// Realized total dollar cost across all DAGs.
     pub total_cost: f64,
     /// Sum of per-DAG completion times (the paper's "total DAG completion
     /// time" metric).
     pub total_completion: f64,
+    /// Mean per-DAG completion time.
+    pub mean_completion: f64,
+    /// 95th-percentile per-DAG completion time.
+    pub p95_completion: f64,
+    /// Mean queueing delay: first task launch minus submission.
+    pub mean_queue_delay: f64,
+    /// Cluster utilization: busy core-seconds over cluster cores times
+    /// the run horizon (virtual t = 0 to the last finish).
+    pub utilization: f64,
+    /// Optimization rounds fired by the trigger policy.
     pub rounds: usize,
+    /// Total optimizer wall-clock overhead across rounds.
     pub optimizer_overhead: Duration,
     /// Mid-flight replans fired across all rounds (0 when the policy is
     /// off).
@@ -73,11 +109,17 @@ pub struct MacroReport {
 
 /// Virtual-time batch runner.
 pub struct BatchRunner {
+    /// Cluster capacity shared by every round.
     pub capacity: Capacity,
+    /// Candidate configuration space handed to the optimizer.
     pub space: ConfigSpace,
+    /// Pricing model for realized costs.
     pub cost_model: CostModel,
+    /// When to fire optimization rounds.
     pub trigger: TriggerPolicy,
+    /// How each round is scheduled.
     pub strategy: Strategy,
+    /// Seed of the runner's RNG stream (bootstraps, noise, optimizer).
     pub seed: u64,
     /// Portfolio chains handed to the co-optimizer per round
     /// (1 = deterministic single chain).
@@ -85,11 +127,17 @@ pub struct BatchRunner {
     /// Mid-flight re-planning + divergence injection applied to every
     /// round's execution (off by default).
     pub replan: ReplanPolicy,
-    /// Event-log database (task name -> history), persisted across rounds.
+    /// Round-barrier or continuous admission (default: rounds, the
+    /// historical bulk-synchronous behaviour).
+    pub admission: Admission,
+    /// Event-log database (scoped task name -> history), persisted
+    /// across rounds.
     pub log_db: HashMap<String, EventLog>,
 }
 
 impl BatchRunner {
+    /// A runner with default trigger policy, on-demand pricing, a single
+    /// optimizer chain, replanning off and round-barrier admission.
     pub fn new(capacity: Capacity, space: ConfigSpace, strategy: Strategy, seed: u64) -> Self {
         BatchRunner {
             capacity,
@@ -100,6 +148,7 @@ impl BatchRunner {
             seed,
             parallelism: 1,
             replan: ReplanPolicy::off(),
+            admission: Admission::Rounds,
             log_db: HashMap::new(),
         }
     }
@@ -116,17 +165,27 @@ impl BatchRunner {
         self
     }
 
+    /// Builder-style admission knob.
+    pub fn with_admission(mut self, admission: Admission) -> Self {
+        self.admission = admission;
+        self
+    }
+
     /// History for a task: the database entry if present, else a
-    /// bootstrap profiling run (the paper's "triggered test run").
+    /// bootstrap profiling run (the paper's "triggered test run"). Keys
+    /// and the logs' own names both use the canonical scoped task name,
+    /// the same key realized runs are written back under — the adaptive
+    /// loop only closes because the two match.
     fn history(&mut self, dag: &Dag, rng: &mut Rng) -> Vec<EventLog> {
         dag.tasks
             .iter()
             .map(|t| {
+                let key = scoped_task_name(&dag.name, &t.name);
                 self.log_db
-                    .entry(format!("{}/{}", dag.name, t.name))
+                    .entry(key.clone())
                     .or_insert_with(|| {
                         bootstrap_history(
-                            &t.name,
+                            &key,
                             &t.profile,
                             &default_profiling_configs(),
                             rng,
@@ -137,15 +196,214 @@ impl BatchRunner {
             .collect()
     }
 
+    /// Core demand of one queued task at the default configuration (the
+    /// unit the trigger policy measures queue pressure in).
+    fn default_cores(&self) -> f64 {
+        let c = Agora::default_config(&self.space);
+        self.space.configs[c].vcpus()
+    }
+
+    /// Assemble one round's problem in round-local time (releases 0):
+    /// fetch/bootstrap each DAG's history, fit the predictor, predict
+    /// the grid. Shared by both admission modes so their RNG draw
+    /// sequences stay aligned per seed.
+    fn build_round_problem(&mut self, dags: &[Dag], rng: &mut Rng) -> Problem {
+        let releases = vec![0.0f64; dags.len()];
+        let logs: Vec<EventLog> = dags
+            .iter()
+            .flat_map(|d| self.history(d, rng))
+            .collect();
+        let predictor = LearnedPredictor::fit(&logs);
+        let grid = predictor.predict(&self.space);
+        Problem::new(
+            dags,
+            &releases,
+            self.capacity,
+            self.space.clone(),
+            grid,
+            self.cost_model.clone(),
+        )
+    }
+
+    /// Record per-DAG outcomes of one executed round. `origin` is the
+    /// round's virtual-time origin (the round start under the barrier,
+    /// the admission instant under continuous admission); realized
+    /// record times are round-local and shift by it.
+    fn record_outcomes(
+        &self,
+        outcomes: &mut Vec<DagOutcome>,
+        p: &Problem,
+        batch: &[TracedJob],
+        report: &sim::ExecutionReport,
+        origin: f64,
+    ) {
+        for (d, job) in batch.iter().enumerate() {
+            let finish = origin + report.dag_completion[d];
+            let first = report
+                .records
+                .iter()
+                .filter(|r| p.tasks[r.task].dag == d)
+                .map(|r| r.start)
+                .fold(f64::INFINITY, f64::min);
+            outcomes.push(DagOutcome {
+                name: job.dag.name.clone(),
+                submit_time: job.submit_time,
+                first_start: if first.is_finite() {
+                    origin + first
+                } else {
+                    origin
+                },
+                finish_time: finish,
+                completion: finish - job.submit_time,
+                cost: report
+                    .records
+                    .iter()
+                    .filter(|r| p.tasks[r.task].dag == d)
+                    .map(|r| {
+                        self.cost_model
+                            .cost(&p.space.configs[r.config], r.runtime)
+                    })
+                    .sum(),
+            });
+        }
+    }
+
+    /// Plan one round's batch with the configured strategy. Portfolio and
+    /// seed handling are identical across admission modes (same RNG draw
+    /// sequence), so the two runners stay comparable per seed.
+    fn plan_round(
+        &self,
+        p: &Problem,
+        round: usize,
+        rng: &mut Rng,
+        overhead: &mut Duration,
+    ) -> Result<Schedule> {
+        Ok(match &self.strategy {
+            Strategy::Airflow => {
+                use crate::baselines::{AirflowScheduler, Scheduler};
+                AirflowScheduler::default()
+                    .schedule(p)
+                    .with_context(|| format!("scheduling round {round}"))?
+            }
+            Strategy::Agora(goal) => {
+                let agora = Agora::new(AgoraOptions {
+                    goal: *goal,
+                    mode: Mode::CoOptimize,
+                    params: crate::solver::AnnealParams::fast(),
+                    seed: rng.next_u64(),
+                    parallelism: self.parallelism,
+                    ..Default::default()
+                });
+                let plan = agora.optimize(p);
+                *overhead += plan.overhead;
+                plan.schedule
+            }
+            Strategy::AgoraMode(goal, mode) => {
+                let agora = Agora::new(AgoraOptions {
+                    goal: *goal,
+                    mode: *mode,
+                    params: crate::solver::AnnealParams::fast(),
+                    seed: rng.next_u64(),
+                    parallelism: self.parallelism,
+                    ..Default::default()
+                });
+                let plan = agora.optimize(p);
+                *overhead += plan.overhead;
+                plan.schedule
+            }
+        })
+    }
+
+    /// Feed realized runs back into the event-log database under the
+    /// canonical scoped key (the §4.1 adaptive loop).
+    fn feed_back(&mut self, p: &Problem, report: &sim::ExecutionReport) {
+        for (t, log) in report.new_logs.iter().enumerate() {
+            let key = p.tasks[t].name.clone();
+            let entry = self
+                .log_db
+                .entry(key)
+                .or_insert_with(|| EventLog::new(&p.tasks[t].name));
+            entry.runs.extend(log.runs.iter().cloned());
+        }
+    }
+
+    /// Aggregate per-DAG outcomes into the macro report.
+    fn summarize(
+        &self,
+        outcomes: Vec<DagOutcome>,
+        rounds: usize,
+        overhead: Duration,
+        replans: usize,
+        busy_core_seconds: f64,
+    ) -> MacroReport {
+        let total_cost = outcomes.iter().map(|o| o.cost).sum();
+        let total_completion = outcomes.iter().map(|o| o.completion).sum();
+        let completions: Vec<f64> = outcomes.iter().map(|o| o.completion).collect();
+        let delays: Vec<f64> = outcomes
+            .iter()
+            .map(|o| (o.first_start - o.submit_time).max(0.0))
+            .collect();
+        let horizon = outcomes.iter().map(|o| o.finish_time).fold(0.0, f64::max);
+        let utilization = if horizon > 0.0 {
+            busy_core_seconds / (self.capacity.vcpus * horizon)
+        } else {
+            0.0
+        };
+        MacroReport {
+            strategy: self.strategy.name(),
+            admission: self.admission.name().to_string(),
+            mean_completion: stats::mean(&completions),
+            p95_completion: stats::percentile(&completions, 95.0),
+            mean_queue_delay: stats::mean(&delays),
+            utilization,
+            outcomes,
+            total_cost,
+            total_completion,
+            rounds,
+            optimizer_overhead: overhead,
+            replans,
+        }
+    }
+
     /// Run the whole trace; returns the per-DAG outcomes. A failing
     /// per-round scheduler is propagated as an error (with round context)
     /// instead of panicking the coordinator.
+    ///
+    /// ```
+    /// use agora::cluster::ConfigSpace;
+    /// use agora::coordinator::{BatchRunner, Strategy};
+    /// use agora::trace::{generate, TraceParams};
+    /// use agora::util::Rng;
+    ///
+    /// let params = TraceParams::tiny();
+    /// let jobs = generate(&params, &mut Rng::new(7));
+    /// let mut runner = BatchRunner::new(
+    ///     params.batch_capacity(),
+    ///     ConfigSpace::standard(),
+    ///     Strategy::Airflow,
+    ///     1,
+    /// );
+    /// let report = runner.run(&jobs)?;
+    /// assert_eq!(report.outcomes.len(), jobs.len());
+    /// assert!(report.total_cost > 0.0);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
     pub fn run(&mut self, jobs: &[TracedJob]) -> Result<MacroReport> {
+        match self.admission {
+            Admission::Rounds => self.run_rounds(jobs),
+            Admission::Continuous => self.run_continuous(jobs),
+        }
+    }
+
+    /// The historical bulk-synchronous runner: each round is planned
+    /// against an empty cluster and `cluster_free` serializes rounds.
+    fn run_rounds(&mut self, jobs: &[TracedJob]) -> Result<MacroReport> {
         let mut rng = Rng::new(self.seed);
         let mut outcomes = Vec::new();
         let mut rounds = 0usize;
         let mut overhead = Duration::ZERO;
         let mut replans = 0usize;
+        let mut busy = 0.0f64;
 
         // Virtual clock: advance to each trigger firing.
         let mut queue: Vec<&TracedJob> = Vec::new();
@@ -154,12 +412,8 @@ impl BatchRunner {
         let mut last_round = 0.0f64;
         // when the cluster frees up from the previous round
         let mut cluster_free = 0.0f64;
-
-        let default_cores = {
-            // queue demand measured at the default config
-            let c = Agora::default_config(&self.space);
-            self.space.configs[c].vcpus()
-        };
+        // queue demand measured at the default config
+        let default_cores = self.default_cores();
 
         loop {
             // Admit arrivals up to the clock.
@@ -185,59 +439,10 @@ impl BatchRunner {
                 let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
                 let round_start = clock.max(cluster_free);
 
-                // Build the problem: releases are relative to round start.
+                // Build the problem (round-local time) and plan.
                 let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
-                let releases = vec![0.0f64; dags.len()];
-                let logs: Vec<EventLog> = dags
-                    .iter()
-                    .flat_map(|d| self.history(d, &mut rng))
-                    .collect();
-                let predictor = LearnedPredictor::fit(&logs);
-                let grid = predictor.predict(&self.space);
-                let p = Problem::new(
-                    &dags,
-                    &releases,
-                    self.capacity,
-                    self.space.clone(),
-                    grid,
-                    self.cost_model.clone(),
-                );
-
-                // Plan the round.
-                let schedule = match &self.strategy {
-                    Strategy::Airflow => {
-                        use crate::baselines::{AirflowScheduler, Scheduler};
-                        AirflowScheduler::default()
-                            .schedule(&p)
-                            .with_context(|| format!("scheduling round {rounds}"))?
-                    }
-                    Strategy::Agora(goal) => {
-                        let agora = Agora::new(AgoraOptions {
-                            goal: *goal,
-                            mode: Mode::CoOptimize,
-                            params: crate::solver::AnnealParams::fast(),
-                            seed: rng.next_u64(),
-                            parallelism: self.parallelism,
-                            ..Default::default()
-                        });
-                        let plan = agora.optimize(&p);
-                        overhead += plan.overhead;
-                        plan.schedule
-                    }
-                    Strategy::AgoraMode(goal, mode) => {
-                        let agora = Agora::new(AgoraOptions {
-                            goal: *goal,
-                            mode: *mode,
-                            params: crate::solver::AnnealParams::fast(),
-                            seed: rng.next_u64(),
-                            parallelism: self.parallelism,
-                            ..Default::default()
-                        });
-                        let plan = agora.optimize(&p);
-                        overhead += plan.overhead;
-                        plan.schedule
-                    }
-                };
+                let p = self.build_round_problem(&dags, &mut rng);
+                let schedule = self.plan_round(&p, rounds, &mut rng, &mut overhead)?;
 
                 // Execute on the simulated cluster (closed-loop when the
                 // replan policy is armed; per-round seed derivation keeps
@@ -252,63 +457,164 @@ impl BatchRunner {
                 );
                 replans += report.replans.len();
                 cluster_free = round_start + report.makespan;
+                busy += busy_core_seconds(&p, &report);
 
                 // Record outcomes + feed logs back.
-                for (d, job) in batch.iter().enumerate() {
-                    let finish = round_start + report.dag_completion[d];
-                    outcomes.push(DagOutcome {
-                        name: job.dag.name.clone(),
-                        submit_time: job.submit_time,
-                        finish_time: finish,
-                        completion: finish - job.submit_time,
-                        cost: report
-                            .records
-                            .iter()
-                            .filter(|r| p.tasks[r.task].dag == d)
-                            .map(|r| {
-                                self.cost_model
-                                    .cost(&p.space.configs[r.config], r.runtime)
-                            })
-                            .sum(),
-                    });
-                }
-                for (t, log) in report.new_logs.iter().enumerate() {
-                    let key = p.tasks[t].name.clone();
-                    let entry = self
-                        .log_db
-                        .entry(key)
-                        .or_insert_with(|| EventLog::new(&p.tasks[t].name));
-                    entry.runs.extend(log.runs.iter().cloned());
-                }
+                self.record_outcomes(&mut outcomes, &p, &batch, &report, round_start);
+                self.feed_back(&p, &report);
             }
 
-            // Advance virtual time.
-            if next_job < jobs.len() {
-                let next_arrival = jobs[next_job].submit_time;
-                let next_tick = last_round + self.trigger.interval;
-                clock = if queue.is_empty() {
-                    next_arrival.max(clock)
-                } else {
-                    next_arrival.min(next_tick).max(clock + 1.0)
-                };
-            } else if !queue.is_empty() {
-                clock = (last_round + self.trigger.interval).max(clock + 1.0);
-            } else {
-                break;
+            match next_clock(
+                jobs,
+                next_job,
+                queue.is_empty(),
+                last_round,
+                self.trigger.interval,
+                clock,
+            ) {
+                Some(c) => clock = c,
+                None => break,
             }
         }
 
-        let total_cost = outcomes.iter().map(|o| o.cost).sum();
-        let total_completion = outcomes.iter().map(|o| o.completion).sum();
-        Ok(MacroReport {
-            strategy: self.strategy.name(),
-            outcomes,
-            total_cost,
-            total_completion,
-            rounds,
-            optimizer_overhead: overhead,
-            replans,
+        Ok(self.summarize(outcomes, rounds, overhead, replans, busy))
+    }
+
+    /// Continuous multi-tenant admission: each round is planned and
+    /// executed against the residual capacity left by the still-in-flight
+    /// reservations of prior rounds (round-local time, occupancy shifted
+    /// to the admission instant), and outcomes are accounted at true
+    /// finish times in absolute virtual time — a new batch starts filling
+    /// the cluster's gaps at the trigger instant instead of queueing
+    /// behind the previous round's tail.
+    fn run_continuous(&mut self, jobs: &[TracedJob]) -> Result<MacroReport> {
+        let mut rng = Rng::new(self.seed);
+        let mut outcomes = Vec::new();
+        let mut rounds = 0usize;
+        let mut overhead = Duration::ZERO;
+        let mut replans = 0usize;
+        let mut busy = 0.0f64;
+
+        let mut queue: Vec<&TracedJob> = Vec::new();
+        let mut next_job = 0usize;
+        let mut clock = 0.0f64;
+        let mut last_round = 0.0f64;
+        // Occupancy ledger: realized reservations of every admitted task,
+        // in absolute virtual time. Pruned to the in-flight suffix at
+        // each admission instant.
+        let mut ledger = OccupancyLedger::default();
+        let default_cores = self.default_cores();
+
+        loop {
+            while next_job < jobs.len() && jobs[next_job].submit_time <= clock {
+                queue.push(&jobs[next_job]);
+                next_job += 1;
+            }
+
+            let queued_demand: f64 = queue
+                .iter()
+                .map(|j| j.dag.len() as f64 * default_cores)
+                .sum();
+            let fire = self.trigger.should_fire(
+                queued_demand,
+                self.capacity.vcpus,
+                clock - last_round,
+                queue.len(),
+            );
+
+            if fire {
+                rounds += 1;
+                last_round = clock;
+                let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
+
+                // Snapshot the occupied-cluster timeline and build the
+                // problem in round-local time (origin = the admission
+                // instant): the ledger prunes to the in-flight suffix
+                // and shifts by -clock; releases/floor are 0, so no task
+                // of this batch can start in the past and every
+                // scheduler packs into the gaps. Timeline packing is
+                // translation-invariant; the local origin keeps the
+                // optimizer's percentage energies scale-free regardless
+                // of how deep into the trace the round fires.
+                let shifted: Vec<Reservation> = ledger.snapshot(clock);
+                let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
+                let p = self
+                    .build_round_problem(&dags, &mut rng)
+                    .with_occupancy(shifted, 0.0);
+
+                let schedule = self.plan_round(&p, rounds, &mut rng, &mut overhead)?;
+
+                let report = sim::execute_with_policy(
+                    &p,
+                    &dags,
+                    &schedule,
+                    &self.cost_model,
+                    &mut rng,
+                    &self.replan.for_round(rounds as u64 - 1),
+                );
+                replans += report.replans.len();
+                busy += busy_core_seconds(&p, &report);
+
+                // Every realized record becomes a reservation later
+                // rounds must pack around (ledger is absolute time).
+                ledger.absorb(&p, &report, clock);
+
+                // Outcomes at true finish times (absolute virtual time)
+                // + feed logs back.
+                self.record_outcomes(&mut outcomes, &p, &batch, &report, clock);
+                self.feed_back(&p, &report);
+            }
+
+            match next_clock(
+                jobs,
+                next_job,
+                queue.is_empty(),
+                last_round,
+                self.trigger.interval,
+                clock,
+            ) {
+                Some(c) => clock = c,
+                None => break,
+            }
+        }
+
+        Ok(self.summarize(outcomes, rounds, overhead, replans, busy))
+    }
+}
+
+/// Busy core-seconds realized by one execution report.
+fn busy_core_seconds(p: &Problem, report: &sim::ExecutionReport) -> f64 {
+    report
+        .records
+        .iter()
+        .map(|r| p.space.configs[r.config].vcpus() * r.runtime)
+        .sum()
+}
+
+/// Advance the virtual clock to the next interesting instant — the next
+/// arrival, or the next interval tick while work is queued — or `None`
+/// when the trace is fully served. Shared verbatim by both admission
+/// modes, so their trigger firing sequences are identical per trace.
+fn next_clock(
+    jobs: &[TracedJob],
+    next_job: usize,
+    queue_empty: bool,
+    last_round: f64,
+    interval: f64,
+    clock: f64,
+) -> Option<f64> {
+    if next_job < jobs.len() {
+        let next_arrival = jobs[next_job].submit_time;
+        let next_tick = last_round + interval;
+        Some(if queue_empty {
+            next_arrival.max(clock)
+        } else {
+            next_arrival.min(next_tick).max(clock + 1.0)
         })
+    } else if !queue_empty {
+        Some((last_round + interval).max(clock + 1.0))
+    } else {
+        None
     }
 }
 
@@ -427,5 +733,99 @@ mod tests {
         let total_jobs: usize = jobs.iter().map(|j| j.dag.len()).sum();
         assert_eq!(runner.log_db.len(), total_jobs);
         assert!(runner.log_db.values().all(|l| l.len() >= 2));
+        // the database key and the log's own name agree (the canonical
+        // scoped task name) for every entry — bootstrap and write-back
+        // address the same record.
+        assert!(runner.log_db.iter().all(|(k, l)| *k == l.task));
+    }
+
+    #[test]
+    fn realized_runs_feed_the_predictor_under_the_same_key() {
+        // The same DAG submitted in two different rounds: round 2's
+        // training history must contain round 1's realized run. This is
+        // the regression pin for the bootstrap/write-back key contract —
+        // a mismatch (e.g. bare task names on one side) would leave the
+        // LearnedPredictor training on bootstrap data forever.
+        use crate::dag::{Task, TaskProfile};
+        let profile = TaskProfile {
+            work: 800.0,
+            alpha: 0.0,
+            beta: 0.0,
+            mem_gb: 4.0,
+            spark_affinity: 0.0,
+            noise_sigma: 0.0,
+        };
+        let dag = Dag::new(
+            "etl",
+            vec![Task {
+                name: "t0".into(),
+                profile,
+            }],
+            vec![],
+        )
+        .unwrap();
+        let jobs = vec![
+            TracedJob {
+                dag: dag.clone(),
+                submit_time: 0.0,
+            },
+            TracedJob {
+                dag,
+                submit_time: 1000.0,
+            },
+        ];
+        let mut runner = BatchRunner::new(
+            Capacity::micro(),
+            ConfigSpace::standard(),
+            Strategy::Airflow,
+            11,
+        );
+        let rep = runner.run(&jobs).expect("macro run");
+        assert_eq!(rep.outcomes.len(), 2);
+        assert!(rep.rounds >= 2, "resubmission must land in a later round");
+        let boot = default_profiling_configs().len();
+        let log = runner.log_db.get("etl/t0").expect("scoped key present");
+        assert_eq!(log.task, "etl/t0", "log name must match the scoped key");
+        assert_eq!(
+            log.len(),
+            boot + 2,
+            "each executed round appends exactly one realized run"
+        );
+        // No stray entry under the bare task name.
+        assert!(runner.log_db.get("t0").is_none());
+        assert_eq!(runner.log_db.len(), 1);
+    }
+
+    #[test]
+    fn continuous_admission_completes_all_jobs_and_respects_submissions() {
+        let params = TraceParams::tiny();
+        let mut rng = Rng::new(7);
+        let jobs = generate(&params, &mut rng);
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::Airflow,
+            3,
+        )
+        .with_admission(Admission::Continuous);
+        let rep = runner.run(&jobs).expect("macro run");
+        assert_eq!(rep.admission, "continuous");
+        assert_eq!(rep.outcomes.len(), 12);
+        for o in &rep.outcomes {
+            assert!(o.completion > 0.0);
+            assert!(o.cost > 0.0);
+            // Arrivals landing mid-round: no task may launch before its
+            // DAG was submitted.
+            assert!(
+                o.first_start + 1e-9 >= o.submit_time,
+                "{} launched at {} before submission {}",
+                o.name,
+                o.first_start,
+                o.submit_time
+            );
+            assert!(o.finish_time + 1e-9 >= o.first_start);
+        }
+        assert!(rep.utilization > 0.0 && rep.utilization <= 1.0 + 1e-9);
+        assert!(rep.mean_completion > 0.0 && rep.p95_completion > 0.0);
     }
 }

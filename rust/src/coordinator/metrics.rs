@@ -6,8 +6,11 @@ use crate::util::stats;
 /// Headline macro comparison: normalized cost + completion vs a baseline.
 #[derive(Debug, Clone)]
 pub struct MacroSummary {
+    /// Strategy name of the compared run.
     pub strategy: String,
+    /// Run cost / baseline cost.
     pub normalized_cost: f64,
+    /// Run total completion / baseline total completion.
     pub normalized_completion: f64,
     /// Fraction of DAGs whose completion improved vs the baseline.
     pub improved_fraction: f64,
@@ -29,6 +32,54 @@ impl MacroSummary {
             improved_fraction: improved as f64 / improvements.len().max(1) as f64,
             near_total_fraction: near_total as f64 / improvements.len().max(1) as f64,
         }
+    }
+}
+
+/// One row of the continuous-vs-round-barrier admission comparison the
+/// macro benchmarks print: DAG-completion distribution, queueing delay
+/// and cluster utilization at the run's realized cost.
+#[derive(Debug, Clone)]
+pub struct AdmissionStats {
+    /// Admission-mode name (`"rounds"` or `"continuous"`).
+    pub admission: String,
+    /// Mean per-DAG completion time (seconds).
+    pub mean_completion: f64,
+    /// 95th-percentile per-DAG completion time (seconds).
+    pub p95_completion: f64,
+    /// Mean queueing delay: first task launch minus submission (seconds).
+    pub mean_queue_delay: f64,
+    /// Busy core-seconds over cluster cores times the run horizon
+    /// (virtual t = 0 to the last finish).
+    pub utilization: f64,
+    /// Realized total dollar cost (the equal-budget axis of the
+    /// comparison).
+    pub total_cost: f64,
+}
+
+impl AdmissionStats {
+    /// Extract the comparison row from a macro report.
+    pub fn of(report: &MacroReport) -> AdmissionStats {
+        AdmissionStats {
+            admission: report.admission.clone(),
+            mean_completion: report.mean_completion,
+            p95_completion: report.p95_completion,
+            mean_queue_delay: report.mean_queue_delay,
+            utilization: report.utilization,
+            total_cost: report.total_cost,
+        }
+    }
+
+    /// Render as a bench-table row: mode, mean, p95, queue delay,
+    /// utilization %, cost.
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.admission.clone(),
+            format!("{:.0}s", self.mean_completion),
+            format!("{:.0}s", self.p95_completion),
+            format!("{:.0}s", self.mean_queue_delay),
+            format!("{:.0}%", self.utilization * 100.0),
+            format!("${:.2}", self.total_cost),
+        ]
     }
 }
 
@@ -61,20 +112,27 @@ mod tests {
     use std::time::Duration;
 
     fn report(strategy: &str, completions: &[(&str, f64, f64)]) -> MacroReport {
+        let values: Vec<f64> = completions.iter().map(|c| c.1).collect();
         MacroReport {
             strategy: strategy.into(),
+            admission: "rounds".into(),
             outcomes: completions
                 .iter()
                 .map(|&(name, completion, cost)| DagOutcome {
                     name: name.into(),
                     submit_time: 0.0,
+                    first_start: 0.0,
                     finish_time: completion,
                     completion,
                     cost,
                 })
                 .collect(),
             total_cost: completions.iter().map(|c| c.2).sum(),
-            total_completion: completions.iter().map(|c| c.1).sum(),
+            total_completion: values.iter().sum(),
+            mean_completion: crate::util::stats::mean(&values),
+            p95_completion: crate::util::stats::percentile(&values, 95.0),
+            mean_queue_delay: 0.0,
+            utilization: 0.5,
             rounds: 1,
             optimizer_overhead: Duration::ZERO,
             replans: 0,
@@ -87,6 +145,16 @@ mod tests {
         let run = report("run", &[("b", 100.0, 1.0), ("a", 50.0, 0.5)]);
         let cdf = improvement_cdf(&base, &run);
         assert_eq!(cdf, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn admission_stats_extract_report_fields() {
+        let r = report("airflow", &[("a", 100.0, 1.0), ("b", 300.0, 3.0)]);
+        let s = AdmissionStats::of(&r);
+        assert_eq!(s.admission, "rounds");
+        assert!((s.mean_completion - 200.0).abs() < 1e-9);
+        assert!((s.total_cost - 4.0).abs() < 1e-9);
+        assert_eq!(s.row().len(), 6);
     }
 
     #[test]

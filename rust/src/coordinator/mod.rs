@@ -10,9 +10,83 @@ pub mod batch;
 pub mod metrics;
 pub mod service;
 
-pub use batch::{BatchRunner, MacroReport, Strategy};
-pub use metrics::{improvement_cdf, MacroSummary};
+pub use batch::{BatchRunner, DagOutcome, MacroReport, Strategy};
+pub use metrics::{improvement_cdf, AdmissionStats, MacroSummary};
 pub use service::{Service, ServiceHandle, SubmitResult};
+
+/// How the coordinator admits triggered batches onto the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Bulk-synchronous rounds (the historical behaviour): round *N+1*
+    /// cannot place a single task until every DAG of round *N* has
+    /// drained — head-of-line blocking that idles the cluster during a
+    /// round's tail.
+    Rounds,
+    /// Continuous multi-tenant admission: at each trigger the coordinator
+    /// snapshots the in-flight work of prior rounds as an occupancy
+    /// ledger ([`crate::solver::Problem::with_occupancy`]) and
+    /// co-optimizes the new batch *into the gaps*, so rounds overlap
+    /// instead of queueing.
+    Continuous,
+}
+
+impl Admission {
+    /// Stable name used by reports and the CLI.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Admission::Rounds => "rounds",
+            Admission::Continuous => "continuous",
+        }
+    }
+
+    /// Parse a CLI/JSON spelling; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Admission> {
+        match s {
+            "rounds" => Some(Admission::Rounds),
+            "continuous" => Some(Admission::Continuous),
+            _ => None,
+        }
+    }
+}
+
+/// Occupancy ledger shared by the continuous coordinators
+/// ([`BatchRunner`] and the threaded [`Service`]): realized reservations
+/// of admitted work in absolute virtual time, with one prune/shift/absorb
+/// protocol so the two front-ends cannot drift semantically.
+#[derive(Debug, Default)]
+pub(crate) struct OccupancyLedger {
+    reservations: Vec<crate::solver::Reservation>,
+}
+
+impl OccupancyLedger {
+    /// Drop reservations ending at or before the admission instant
+    /// `now` (they cannot constrain work floored at it), then return the
+    /// survivors shifted into the round-local time base (origin `now`)
+    /// for [`crate::solver::Problem::with_occupancy`].
+    pub(crate) fn snapshot(&mut self, now: f64) -> Vec<crate::solver::Reservation> {
+        self.reservations.retain(|&(s, d, _, _)| s + d > now);
+        self.reservations
+            .iter()
+            .map(|&(s, d, cpu, mem)| (s - now, d, cpu, mem))
+            .collect()
+    }
+
+    /// Absorb one executed round's realized records (round-local times,
+    /// origin `now`) as absolute-time reservations later rounds must
+    /// pack around.
+    pub(crate) fn absorb(
+        &mut self,
+        p: &crate::solver::Problem,
+        report: &crate::sim::ExecutionReport,
+        now: f64,
+    ) {
+        for r in &report.records {
+            let cfg = p.space.configs[r.config];
+            self.reservations
+                .push((now + r.start, r.runtime, cfg.vcpus(), cfg.memory_gb()));
+        }
+    }
+}
 
 /// Trigger policy for batching queued DAGs into optimization rounds.
 #[derive(Debug, Clone)]
@@ -76,5 +150,36 @@ mod tests {
     fn never_fires_on_empty_queue() {
         let p = TriggerPolicy::default();
         assert!(!p.should_fire(1e9, 100.0, 1e9, 0));
+    }
+
+    #[test]
+    fn interval_elapsed_with_empty_queue_stays_quiet() {
+        // The periodic trigger alone must never produce an empty round:
+        // exactly at the interval boundary (and far past it) with nothing
+        // queued, the policy stays quiet; one queued DAG arms it again.
+        let p = TriggerPolicy::default();
+        assert!(!p.should_fire(0.0, 100.0, p.interval, 0));
+        assert!(!p.should_fire(0.0, 100.0, p.interval * 10.0, 0));
+        assert!(p.should_fire(0.0, 100.0, p.interval, 1));
+    }
+
+    #[test]
+    fn demand_exactly_at_threshold_waits_for_strict_excess() {
+        // §5.5.1: fire when demand is *greater than* 3x the cores — the
+        // boundary itself does not fire.
+        let p = TriggerPolicy::default();
+        let cores = 128.0;
+        assert!(!p.should_fire(3.0 * cores, cores, 0.0, 4));
+        assert!(p.should_fire(3.0 * cores + 1e-9, cores, 0.0, 4));
+    }
+
+    #[test]
+    fn admission_parses_and_names_round_trip() {
+        assert_eq!(Admission::parse("rounds"), Some(Admission::Rounds));
+        assert_eq!(Admission::parse("continuous"), Some(Admission::Continuous));
+        assert_eq!(Admission::parse("overlapped"), None);
+        for a in [Admission::Rounds, Admission::Continuous] {
+            assert_eq!(Admission::parse(a.name()), Some(a));
+        }
     }
 }

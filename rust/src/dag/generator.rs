@@ -9,8 +9,9 @@ use crate::util::Rng;
 pub struct GenParams {
     /// Max tasks per layer.
     pub width: usize,
-    /// Layer count range (inclusive).
+    /// Minimum layer count (inclusive).
     pub depth_min: usize,
+    /// Maximum layer count (inclusive).
     pub depth_max: usize,
     /// Total task budget (generation stops when reached).
     pub tasks: usize,

@@ -14,6 +14,7 @@ use crate::util::Json;
 /// One task (vertex) of a pipeline DAG.
 #[derive(Debug, Clone)]
 pub struct Task {
+    /// Task name, unique within its DAG.
     pub name: String,
     /// Ground-truth scaling characteristics (hidden from the optimizer;
     /// observed only through event logs, like the real system).
@@ -23,7 +24,9 @@ pub struct Task {
 /// A directed acyclic workflow graph.
 #[derive(Debug, Clone)]
 pub struct Dag {
+    /// DAG (job) name.
     pub name: String,
+    /// Tasks, indexed by position.
     pub tasks: Vec<Task>,
     /// Edges as (predecessor, successor) task-index pairs.
     pub edges: Vec<(usize, usize)>,
@@ -60,18 +63,22 @@ impl Dag {
         Ok(dag)
     }
 
+    /// Number of tasks.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Whether the DAG has no tasks.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
 
+    /// Direct predecessors of a task.
     pub fn preds(&self, task: usize) -> &[usize] {
         &self.preds[task]
     }
 
+    /// Direct successors of a task.
     pub fn succs(&self, task: usize) -> &[usize] {
         &self.succs[task]
     }
@@ -213,6 +220,7 @@ impl Dag {
         ])
     }
 
+    /// Parse a DAG from its [`Dag::to_json`] spec form.
     pub fn from_json(v: &Json) -> Result<Dag> {
         let name = v.get("name")?.as_str()?;
         let tasks = v

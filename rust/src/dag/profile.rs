@@ -88,6 +88,7 @@ impl TaskProfile {
         }
     }
 
+    /// Serialize to the on-disk profile spec.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("work", Json::num(self.work)),
@@ -99,6 +100,7 @@ impl TaskProfile {
         ])
     }
 
+    /// Parse a profile from its [`TaskProfile::to_json`] form.
     pub fn from_json(v: &Json) -> Result<TaskProfile> {
         Ok(TaskProfile {
             work: v.get("work")?.as_f64()?,

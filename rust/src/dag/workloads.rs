@@ -27,6 +27,7 @@ pub enum JobKind {
     MovieRecommendation,
 }
 
+/// Every job of the library, in §3 order.
 pub const ALL_JOBS: &[JobKind] = &[
     JobKind::IndexAnalysis,
     JobKind::SentimentAnalysis,
@@ -35,6 +36,7 @@ pub const ALL_JOBS: &[JobKind] = &[
 ];
 
 impl JobKind {
+    /// Kebab-case job name used in reports and task names.
     pub fn name(&self) -> &'static str {
         match self {
             JobKind::IndexAnalysis => "index-analysis",
@@ -85,6 +87,7 @@ impl JobKind {
         }
     }
 
+    /// A single task of this job (name + profile).
     pub fn task(&self) -> Task {
         Task {
             name: self.name().to_string(),

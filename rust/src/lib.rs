@@ -14,6 +14,15 @@
 //!   time.
 //!
 //! Quickstart: see `examples/quickstart.rs`; architecture: DESIGN.md.
+//!
+//! The multi-tenant coordinator ([`coordinator`]) serves triggered
+//! batches either bulk-synchronously or with continuous admission onto
+//! the occupied-cluster timeline
+//! ([`coordinator::Admission`]); the occupancy mechanism itself is a
+//! first-class input of the optimization problem
+//! ([`solver::Problem::with_occupancy`]).
+
+#![warn(missing_docs)]
 
 pub mod baselines;
 pub mod bench;

@@ -3,8 +3,10 @@
 //! Subcommands:
 //!   optimize   co-optimize DAG(s) and print the plan + Gantt chart
 //!   execute    optimize then execute on the simulated cluster
-//!   serve      run the multi-tenant service demo (threaded)
-//!   trace      macro-benchmark an Alibaba-like trace (AGORA vs Airflow)
+//!   serve      run the multi-tenant service demo (threaded;
+//!              --admission rounds|continuous)
+//!   trace      macro-benchmark an Alibaba-like trace (AGORA vs Airflow,
+//!              plus the round-barrier vs continuous admission columns)
 //!   catalog    print the instance catalog (Table 1) and config space
 //!   artifacts  verify the AOT artifacts load + run through PJRT
 //!
@@ -17,7 +19,7 @@ use anyhow::{bail, Context, Result};
 
 use agora::cluster::{ConfigSpace, CostModel};
 use agora::config::AppConfig;
-use agora::coordinator::{BatchRunner, MacroSummary, Strategy};
+use agora::coordinator::{Admission, AdmissionStats, BatchRunner, MacroSummary, Strategy};
 use agora::dag::workloads;
 use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
 use agora::runtime::{Engine, PjrtPredictor};
@@ -184,6 +186,7 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
         seed: config.seed,
         parallelism: config.parallelism,
         replan: config.replan.clone(),
+        admission: config.admission,
         ..Default::default()
     });
     let handle = service.handle();
@@ -231,7 +234,8 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         Strategy::Airflow,
         config.seed,
     )
-    .with_replan(config.replan.clone());
+    .with_replan(config.replan.clone())
+    .with_admission(config.admission);
     let base = base_runner.run(&jobs)?;
     let mut agora_runner = BatchRunner::new(
         params.batch_capacity(),
@@ -240,9 +244,14 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         config.seed,
     )
     .with_parallelism(config.parallelism)
-    .with_replan(config.replan.clone());
+    .with_replan(config.replan.clone())
+    .with_admission(config.admission);
     let run = agora_runner.run(&jobs)?;
     let summary = MacroSummary::against(&base, &run);
+    println!(
+        "admission: {} (switch with --admission rounds|continuous)",
+        config.admission.name()
+    );
     println!(
         "airflow : cost {}  total completion {}",
         fmt_cost(base.total_cost),
@@ -266,6 +275,38 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         println!(
             "mid-flight replans: airflow {}  agora {}",
             base.replans, run.replans
+        );
+    }
+
+    // Round-barrier vs continuous admission at equal cost budget: the
+    // same strategy and seed draw the same runtimes in both modes, so
+    // the completion/utilization columns isolate the admission effect.
+    // Measured on the admission-stress slice (multi-slot capacity +
+    // compressed arrivals) where triggered rounds genuinely overlap.
+    let stress = TraceParams::admission_stress(params.jobs);
+    let stress_jobs = generate(&stress, &mut Rng::new(config.seed));
+    println!(
+        "\n-- admission: round-barrier vs continuous (airflow configs, equal cost; {} DAGs over {}) --",
+        stress_jobs.len(),
+        fmt_duration(stress.window)
+    );
+    println!(
+        "{:<11} {:>10} {:>10} {:>10} {:>6} {:>10}",
+        "mode", "mean", "p95", "queue", "util", "cost"
+    );
+    for admission in [Admission::Rounds, Admission::Continuous] {
+        let mut runner = BatchRunner::new(
+            stress.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::Airflow,
+            config.seed,
+        )
+        .with_admission(admission);
+        let s = AdmissionStats::of(&runner.run(&stress_jobs)?);
+        let row = s.row();
+        println!(
+            "{:<11} {:>10} {:>10} {:>10} {:>6} {:>10}",
+            row[0], row[1], row[2], row[3], row[4], row[5]
         );
     }
     Ok(())

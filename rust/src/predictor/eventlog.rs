@@ -16,6 +16,7 @@ use crate::util::{Json, Rng};
 /// One observed execution of a task.
 #[derive(Debug, Clone)]
 pub struct RunRecord {
+    /// Configuration the run executed under.
     pub config: Config,
     /// Observed wall-clock runtime in seconds (includes run noise).
     pub runtime: f64,
@@ -26,11 +27,14 @@ pub struct RunRecord {
 /// Event-log history for one task, newest last.
 #[derive(Debug, Clone, Default)]
 pub struct EventLog {
+    /// Scoped task name (see [`scoped_task_name`]).
     pub task: String,
+    /// Observed runs, newest last.
     pub runs: Vec<RunRecord>,
 }
 
 impl EventLog {
+    /// Empty history for a task.
     pub fn new(task: &str) -> Self {
         EventLog {
             task: task.to_string(),
@@ -38,6 +42,7 @@ impl EventLog {
         }
     }
 
+    /// Append one observed run.
     pub fn record(&mut self, config: Config, runtime: f64, stages: Vec<(String, f64)>) {
         self.runs.push(RunRecord {
             config,
@@ -46,14 +51,17 @@ impl EventLog {
         });
     }
 
+    /// Number of recorded runs.
     pub fn len(&self) -> usize {
         self.runs.len()
     }
 
+    /// Whether the history has no runs.
     pub fn is_empty(&self) -> bool {
         self.runs.is_empty()
     }
 
+    /// Serialize for history export (see [`EventLog::from_json`]).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("task", Json::str(&self.task)),
@@ -139,6 +147,18 @@ impl EventLog {
         }
         Ok(EventLog { task, runs })
     }
+}
+
+/// Canonical fully qualified task name — the single key scheme for the
+/// coordinator's event-log database and for flat tasks in
+/// [`Problem`](crate::solver::Problem). Bootstrap histories and realized
+/// run write-backs both address `"{dag}/{task}"`; a bare task name must
+/// never be used as a database key (task names are only unique within one
+/// DAG, and a key mismatch silently starves the
+/// [`LearnedPredictor`](crate::predictor::LearnedPredictor) of executed
+/// rounds).
+pub fn scoped_task_name(dag: &str, task: &str) -> String {
+    format!("{dag}/{task}")
 }
 
 /// Simulate one run of a task under a configuration and log it.

@@ -18,7 +18,9 @@ use crate::dag::profile::usl_penalty;
 use crate::dag::TaskProfile;
 
 pub use basis::{config_basis, ernest_basis, K};
-pub use eventlog::{bootstrap_history, default_profiling_configs, simulate_run, EventLog};
+pub use eventlog::{
+    bootstrap_history, default_profiling_configs, scoped_task_name, simulate_run, EventLog,
+};
 
 /// Floor for predicted runtimes (mirrors python ref.EPS).
 pub const EPS: f64 = 1e-3;
@@ -27,14 +29,17 @@ pub const EPS: f64 = 1e-3;
 /// under configuration `c` of the space it was built against.
 #[derive(Debug, Clone)]
 pub struct Grid {
+    /// `durations[t][c]` = predicted seconds for task `t` on config `c`.
     pub durations: Vec<Vec<f64>>,
 }
 
 impl Grid {
+    /// Number of task rows.
     pub fn tasks(&self) -> usize {
         self.durations.len()
     }
 
+    /// Predicted runtime of one (task, config) pair.
     pub fn get(&self, task: usize, config: usize) -> f64 {
         self.durations[task][config]
     }
@@ -61,6 +66,7 @@ impl Grid {
 /// into one row per preset and the kernel contract stays unchanged.
 #[derive(Debug, Clone)]
 pub struct FittedTask {
+    /// Ernest NNLS coefficients over the config basis.
     pub theta: [f64; K],
     /// (gamma, alpha, beta, mix) — see python/compile/kernels/ref.py.
     pub usl: [f64; 4],
@@ -84,6 +90,7 @@ pub fn model_runtime(fit: &FittedTask, cfg: &Config) -> f64 {
 
 /// A predictor produces a runtime grid over a configuration space.
 pub trait Predictor {
+    /// Predict the full (task, config) runtime grid for a space.
     fn predict(&self, space: &ConfigSpace) -> Grid;
     /// Human-readable name for experiment tables.
     fn name(&self) -> &'static str;
@@ -96,6 +103,7 @@ pub trait Predictor {
 /// study effectively assumes this.
 #[derive(Debug, Clone)]
 pub struct OraclePredictor {
+    /// Ground-truth profile per task, in problem order.
     pub profiles: Vec<TaskProfile>,
 }
 
@@ -119,6 +127,7 @@ impl Predictor for OraclePredictor {
 /// Event-log-trained predictor (the real AGORA path).
 #[derive(Debug, Clone)]
 pub struct LearnedPredictor {
+    /// Fitted model per task, in log order.
     pub fits: Vec<FittedTask>,
 }
 
@@ -194,6 +203,7 @@ impl LearnedPredictor {
         }
     }
 
+    /// Fit one model per event log, in order.
     pub fn fit(logs: &[EventLog]) -> LearnedPredictor {
         LearnedPredictor {
             fits: logs.iter().map(Self::fit_task).collect(),

@@ -5,10 +5,11 @@
 
 use super::basis::K;
 
+/// Default projected-gradient iteration budget of [`fit_one`].
 pub const DEFAULT_ITERS: usize = 300;
 
 /// Fit one task's non-negative coefficients from S (basis, runtime)
-/// samples. `x` is row-major [S][K]; returns theta[K] >= 0.
+/// samples. `x` is row-major `[S][K]`; returns `theta[K] >= 0`.
 pub fn fit_one(x: &[[f64; K]], y: &[f64], iters: usize) -> [f64; K] {
     assert_eq!(x.len(), y.len());
     // Gram = X^T X (K x K), xty = X^T y

@@ -13,11 +13,14 @@ use crate::util::Json;
 /// Shape variant of the compiled Predictor (see python VARIANTS).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Variant {
+    /// Small static shapes (unit-test sized problems).
     Small,
+    /// Large static shapes (macro-scale problems).
     Large,
 }
 
 impl Variant {
+    /// Manifest-key suffix of this variant.
     pub fn name(&self) -> &'static str {
         match self {
             Variant::Small => "small",
@@ -45,21 +48,29 @@ impl Variant {
 /// One artifact's shape metadata from manifest.json.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// HLO text file name of the compiled entry point.
     pub entry: String,
+    /// Static task-row capacity.
     pub tasks: usize,
+    /// Static config-column capacity.
     pub configs: usize,
+    /// Static sample-row capacity of the fit artifact.
     pub samples: usize,
 }
 
 /// Parsed artifacts/manifest.json.
 #[derive(Debug, Clone)]
 pub struct ArtifactManifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Ernest basis dimension K the artifacts were compiled for.
     pub k: usize,
+    /// Artifact name -> shape metadata.
     pub entries: HashMap<String, ArtifactEntry>,
 }
 
 impl ArtifactManifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<ArtifactManifest> {
         let manifest_path = dir.join("manifest.json");
         let v = Json::parse_file(&manifest_path)?;
@@ -95,6 +106,7 @@ impl ArtifactManifest {
 /// executables keyed by artifact name.
 pub struct Engine {
     client: xla::PjRtClient,
+    /// Shape metadata of the loaded artifact set.
     pub manifest: ArtifactManifest,
     cache: std::sync::Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
@@ -113,6 +125,7 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (e.g. `cpu`; `stub` offline).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

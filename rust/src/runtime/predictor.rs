@@ -23,15 +23,17 @@ const PRESETS: usize = crate::cluster::config::SPARK_PRESETS.len();
 
 /// Batched grid prediction through the compiled artifacts.
 pub struct PjrtPredictor<'e> {
+    /// The PJRT engine executing the compiled artifacts.
     pub engine: &'e Engine,
 }
 
 impl<'e> PjrtPredictor<'e> {
+    /// Predictor over a loaded engine.
     pub fn new(engine: &'e Engine) -> Self {
         PjrtPredictor { engine }
     }
 
-    /// Build the phi [C, K] and n [C] tensors for a config space, padded
+    /// Build the phi `[C, K]` and n `[C]` tensors for a config space, padded
     /// to `configs` rows.
     fn config_tensors(space: &ConfigSpace, configs: usize) -> (Vec<f32>, Vec<f32>) {
         let mut phi = vec![0f32; configs * K];

@@ -39,14 +39,17 @@ fn unavailable<T>() -> Result<T, Error> {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Stub: always fails with the offline-build message.
     pub fn cpu() -> Result<PjRtClient, Error> {
         unavailable()
     }
 
+    /// Stub platform name.
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Stub: always fails.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         unavailable()
     }
@@ -56,6 +59,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Stub: always fails.
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
         unavailable()
     }
@@ -65,6 +69,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Stub: returns the unit computation.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -74,6 +79,7 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Stub: always fails.
     pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         unavailable()
     }
@@ -83,6 +89,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Stub: always fails.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable()
     }
@@ -93,18 +100,22 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Stub: returns the unit literal.
     pub fn vec1(_data: &[f32]) -> Literal {
         Literal
     }
 
+    /// Stub: always fails.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
         unavailable()
     }
 
+    /// Stub: always fails.
     pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
         unavailable()
     }
 
+    /// Stub: always fails.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         unavailable()
     }

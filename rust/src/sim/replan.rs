@@ -80,6 +80,7 @@ impl Default for DivergenceSpec {
 pub struct TaskDivergence {
     /// Multiplier on the task's ground-truth runtime (>= 1).
     pub modifier: f64,
+    /// Whether the straggler draw fired for this task.
     pub straggled: bool,
     /// Failed attempts before the successful run.
     pub retries: u32,
@@ -167,6 +168,7 @@ impl ReplanPolicy {
         ReplanPolicy::default()
     }
 
+    /// Whether the policy neither injects divergence nor replans.
     pub fn is_off(&self) -> bool {
         self.max_replans == 0 && self.divergence.is_off()
     }

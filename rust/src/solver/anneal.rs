@@ -174,10 +174,15 @@ pub fn propose(
 /// Iteration telemetry (overhead analysis, Fig. 10).
 #[derive(Debug, Clone, Default)]
 pub struct AnnealStats {
+    /// SA iterations executed (warmup excluded).
     pub iterations: usize,
+    /// Accepted proposals (improvements + Metropolis).
     pub accepted: usize,
+    /// Proposals that improved the best-so-far energy.
     pub improved: usize,
+    /// Inner CP solver nodes across all evaluations.
     pub inner_nodes: u64,
+    /// Wall-clock time of the whole search.
     pub wall_time: Duration,
     /// Energy trace (best-so-far per iteration), for convergence plots.
     pub trace: Vec<f64>,
@@ -190,10 +195,15 @@ pub struct AnnealStats {
 /// Result of the co-optimization.
 #[derive(Debug, Clone)]
 pub struct AnnealResult {
+    /// Best schedule found (polished with a full-budget CP solve).
     pub schedule: Schedule,
+    /// Makespan of the best schedule.
     pub makespan: f64,
+    /// Cost of the best schedule.
     pub cost: f64,
+    /// Eq. 1 energy of the best schedule.
     pub energy: f64,
+    /// Search telemetry.
     pub stats: AnnealStats,
 }
 
@@ -318,6 +328,7 @@ pub struct Exchange {
 }
 
 impl Exchange {
+    /// Empty exchange (no plan published yet).
     pub fn new() -> Exchange {
         Exchange::default()
     }

@@ -13,12 +13,17 @@ use super::schedule::Schedule;
 /// Result of an exhaustive co-optimization.
 #[derive(Debug, Clone)]
 pub struct BruteForceResult {
+    /// Best schedule found.
     pub schedule: Schedule,
+    /// Makespan of the best schedule.
     pub makespan: f64,
+    /// Cost of the best schedule.
     pub cost: f64,
+    /// Eq. 1 energy of the best schedule.
     pub energy: f64,
     /// Configuration vectors evaluated.
     pub evaluated: u64,
+    /// Total enumeration wall-clock time.
     pub wall_time: Duration,
     /// Whether the full space was enumerated within the time budget.
     pub complete: bool,

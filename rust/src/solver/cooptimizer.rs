@@ -32,6 +32,7 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Stable name used by reports and the CLI.
     pub fn name(&self) -> &'static str {
         match self {
             Mode::CoOptimize => "agora",
@@ -45,8 +46,11 @@ impl Mode {
 /// A complete optimization outcome.
 #[derive(Debug, Clone)]
 pub struct Plan {
+    /// The chosen configuration assignment + start times.
     pub schedule: Schedule,
+    /// Predicted makespan of the schedule.
     pub makespan: f64,
+    /// Predicted dollar cost of the schedule.
     pub cost: f64,
     /// Optimizer wall-clock overhead (the Fig. 10 x-axis).
     pub overhead: Duration,
@@ -57,11 +61,17 @@ pub struct Plan {
 /// Co-optimizer configuration.
 #[derive(Debug, Clone)]
 pub struct AgoraOptions {
+    /// Runtime/cost trade-off of Eq. 1.
     pub goal: Goal,
+    /// Which parts of AGORA are active (ablations).
     pub mode: Mode,
+    /// Annealing hyper-parameters.
     pub params: AnnealParams,
+    /// Hard Eq. 7 budget (infinity = unconstrained).
     pub makespan_budget: f64,
+    /// Hard Eq. 8 budget (infinity = unconstrained).
     pub cost_budget: f64,
+    /// Seed of the optimizer's RNG stream.
     pub seed: u64,
     /// Simultaneous annealing chains for Mode::CoOptimize. 1 = the
     /// historical deterministic single chain (bit-identical per seed);
@@ -86,10 +96,12 @@ impl Default for AgoraOptions {
 
 /// The user-facing co-optimizer.
 pub struct Agora {
+    /// The configured options.
     pub options: AgoraOptions,
 }
 
 impl Agora {
+    /// Co-optimizer with the given options.
     pub fn new(options: AgoraOptions) -> Self {
         Agora { options }
     }
@@ -144,6 +156,39 @@ impl Agora {
 
     /// Optimize a problem. The baseline for Eq. 1 improvements is the
     /// default-config schedule under the default (Airflow-like) order.
+    ///
+    /// ```
+    /// use agora::cluster::{Capacity, ConfigSpace, CostModel};
+    /// use agora::dag::workloads::dag1;
+    /// use agora::predictor::{bootstrap_history, default_profiling_configs};
+    /// use agora::solver::{Agora, AgoraOptions, AnnealParams};
+    /// use agora::util::Rng;
+    ///
+    /// let dags = vec![dag1()];
+    /// let mut rng = Rng::new(7);
+    /// let logs: Vec<_> = dags[0]
+    ///     .tasks
+    ///     .iter()
+    ///     .map(|t| {
+    ///         bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng)
+    ///     })
+    ///     .collect();
+    /// let p = Agora::build_problem(
+    ///     &dags,
+    ///     &[0.0],
+    ///     &logs,
+    ///     Capacity::micro(),
+    ///     ConfigSpace::standard(),
+    ///     CostModel::OnDemand,
+    /// );
+    /// let plan = Agora::new(AgoraOptions {
+    ///     params: AnnealParams::fast(),
+    ///     ..Default::default()
+    /// })
+    /// .optimize(&p);
+    /// assert!(plan.makespan > 0.0 && plan.cost > 0.0);
+    /// plan.schedule.validate(&p).unwrap();
+    /// ```
     pub fn optimize(&self, p: &Problem) -> Plan {
         let t0 = std::time::Instant::now();
         let default_cfg = Self::default_config(&p.space);

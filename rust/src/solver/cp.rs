@@ -29,7 +29,9 @@ use crate::util::Rng;
 /// Search limits: the solver stops at whichever budget is hit first.
 #[derive(Debug, Clone)]
 pub struct Limits {
+    /// Node budget of the branch-and-bound search.
     pub max_nodes: u64,
+    /// Wall-clock budget of one solve.
     pub max_time: Duration,
     /// Random multistart-SGS restarts for the initial upper bound. The
     /// annealing inner loop uses a small value (the B&B refines the bound
@@ -63,14 +65,21 @@ impl Limits {
 /// Solve statistics for overhead reporting (Fig. 10).
 #[derive(Debug, Clone, Default)]
 pub struct Stats {
+    /// Branch-and-bound nodes visited.
     pub nodes: u64,
+    /// Branches pruned by the lower bound.
     pub pruned_lb: u64,
+    /// Branches pruned by the dominance store.
     pub pruned_dominance: u64,
+    /// Wall-clock time of the solve.
     pub solve_time: Duration,
+    /// Whether the search completed (schedule proven optimal).
     pub proved_optimal: bool,
 }
 
+/// The CP-style branch-and-bound scheduler (see module docs).
 pub struct CpSolver {
+    /// Search budgets of each solve.
     pub limits: Limits,
 }
 
@@ -93,6 +102,7 @@ struct Search<'a> {
 }
 
 impl CpSolver {
+    /// Solver with the given search budgets.
     pub fn new(limits: Limits) -> Self {
         CpSolver { limits }
     }
@@ -143,7 +153,14 @@ impl CpSolver {
         // Bitset dominance only works up to 128 tasks; beyond that the
         // anytime SGS result stands (macro-scale problems).
         if p.len() <= 128 && incumbent_makespan > root_lb + 1e-6 {
+            // Seed the branch-and-bound timeline with the problem's
+            // occupancy reservations (continuous admission); place/pop
+            // pairs in the DFS are balanced, so the seed rectangles are
+            // never backtracked away.
             let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+            for &(s, d, cpu, mem) in &p.preplaced {
+                timeline.place(s, d, cpu, mem);
+            }
             let mut start = vec![0.0f64; p.len()];
             let mut indeg: Vec<usize> = (0..p.len()).map(|t| p.preds(t).len()).collect();
             search.exhausted = true;
@@ -354,6 +371,25 @@ mod tests {
         // Must still return a valid schedule even with a starved budget.
         s.validate(&p).unwrap();
         assert!(stats.nodes <= 11);
+    }
+
+    #[test]
+    fn cp_packs_around_occupancy_seed() {
+        // Full-capacity reservation over [0, 50): both the SGS incumbent
+        // and every branch-and-bound insertion must land after it.
+        let cap = Capacity::micro();
+        let p = problem_from(vec![fig1_dag()], cap)
+            .with_occupancy(vec![(0.0, 50.0, cap.vcpus, cap.memory_gb)], 0.0);
+        let assignment = vec![p.feasible[0]; p.len()];
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        s.validate(&p).unwrap();
+        for t in 0..p.len() {
+            assert!(
+                s.start[t] + 1e-9 >= 50.0,
+                "task {t} scheduled at {} inside the reservation",
+                s.start[t]
+            );
+        }
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub use anneal::{anneal, portfolio_anneal, AnnealParams, AnnealResult};
 pub use cooptimizer::{Agora, AgoraOptions, Mode, Plan};
 pub use cp::{CpSolver, Limits};
 pub use objective::{Goal, Objective};
-pub use rcpsp::Problem;
+pub use rcpsp::{Problem, Reservation};
 pub use schedule::Schedule;

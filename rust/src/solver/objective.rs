@@ -20,6 +20,7 @@ pub enum Goal {
 }
 
 impl Goal {
+    /// The w of Eq. 1 for this goal.
     pub fn weight(&self) -> f64 {
         match self {
             Goal::Cost => 0.0,
@@ -29,6 +30,7 @@ impl Goal {
         }
     }
 
+    /// Stable name used by reports and the CLI.
     pub fn name(&self) -> String {
         match self {
             Goal::Cost => "cost".into(),
@@ -38,6 +40,7 @@ impl Goal {
         }
     }
 
+    /// Parse a CLI spelling (`cost` | `balanced` | `runtime` | `w=<0..1>`).
     pub fn parse(s: &str) -> Option<Goal> {
         match s {
             "cost" => Some(Goal::Cost),
@@ -51,6 +54,7 @@ impl Goal {
 /// The Eq. 1 objective with baselines and budgets.
 #[derive(Debug, Clone)]
 pub struct Objective {
+    /// The runtime/cost trade-off being optimized.
     pub goal: Goal,
     /// Baseline makespan M (original, pre-optimization).
     pub base_makespan: f64,
@@ -63,6 +67,7 @@ pub struct Objective {
 }
 
 impl Objective {
+    /// Objective against a baseline (M, C), with no budgets.
     pub fn new(goal: Goal, base_makespan: f64, base_cost: f64) -> Self {
         Objective {
             goal,
@@ -73,6 +78,7 @@ impl Objective {
         }
     }
 
+    /// Attach hard Eq. 7-8 budgets (infinity = unconstrained).
     pub fn with_budgets(mut self, makespan_budget: f64, cost_budget: f64) -> Self {
         self.makespan_budget = makespan_budget;
         self.cost_budget = cost_budget;

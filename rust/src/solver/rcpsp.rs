@@ -2,10 +2,24 @@
 //! demands — both are functions of the per-task configuration choice,
 //! which is itself a decision variable (the key departure from classic
 //! RCPSP that enables co-optimization).
+//!
+//! A problem can additionally carry an **occupancy seed**
+//! ([`Problem::with_occupancy`]): rectangles of capacity already reserved
+//! by work admitted earlier (continuous multi-tenant admission) plus an
+//! admission floor. Every scheduler in the repo packs around the seed
+//! through the shared [`Timeline`](super::sgs::Timeline) primitive, which
+//! generalizes the replan-only pre-seeded timeline of
+//! [`SuffixSgs`](super::sgs::SuffixSgs) to cross-round, cross-DAG
+//! occupancy.
 
 use crate::cluster::{Capacity, Config, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::Grid;
+
+/// One reserved rectangle on the cluster timeline:
+/// `(start, duration, vcpus, memory_gb)` in the problem's (virtual) time
+/// base. The scheduling primitives treat these as immovable blockers.
+pub type Reservation = (f64, f64, f64, f64);
 
 /// A task flattened into the multi-DAG optimization problem.
 #[derive(Debug, Clone)]
@@ -14,6 +28,7 @@ pub struct FlatTask {
     pub dag: usize,
     /// Index within that DAG.
     pub local: usize,
+    /// Fully qualified scoped name (`"{dag}/{task}"`).
     pub name: String,
 }
 
@@ -21,6 +36,7 @@ pub struct FlatTask {
 /// AGORA "supports optimization for one DAG as well as multiple DAGs").
 #[derive(Debug, Clone)]
 pub struct Problem {
+    /// Flattened tasks of every input DAG, in concatenation order.
     pub tasks: Vec<FlatTask>,
     /// Precedence pairs (pred, succ) over global task indices — the set P.
     pub precedence: Vec<(usize, usize)>,
@@ -32,9 +48,18 @@ pub struct Problem {
     pub space: ConfigSpace,
     /// Indices into `space` that fit the capacity (precomputed).
     pub feasible: Vec<usize>,
-    /// Predicted durations d[t][c] — the malleable-runtime extension.
+    /// Predicted durations `d[t][c]` — the malleable-runtime extension.
     pub grid: Grid,
+    /// Pricing model used for Eq. 6 cost terms.
     pub cost_model: CostModel,
+    /// Capacity already reserved by previously admitted work — rectangles
+    /// every scheduler must pack around. Empty for standalone problems.
+    pub preplaced: Vec<Reservation>,
+    /// Earliest instant any task of this problem may start (the admission
+    /// instant under continuous admission; 0 for standalone problems).
+    /// [`Problem::with_occupancy`] folds it into `release`, so schedulers
+    /// that respect release times respect the floor for free.
+    pub floor: f64,
     preds: Vec<Vec<usize>>,
     succs: Vec<Vec<usize>>,
 }
@@ -60,7 +85,10 @@ impl Problem {
                 tasks.push(FlatTask {
                     dag: di,
                     local: li,
-                    name: format!("{}/{}", dag.name, t.name),
+                    // The canonical scoped name doubles as the event-log
+                    // database key the coordinator writes realized runs
+                    // back under — see `predictor::scoped_task_name`.
+                    name: crate::predictor::scoped_task_name(&dag.name, &t.name),
                 });
                 release.push(releases[di]);
             }
@@ -90,23 +118,44 @@ impl Problem {
             feasible,
             grid,
             cost_model,
+            preplaced: Vec::new(),
+            floor: 0.0,
             preds,
             succs,
         }
     }
 
+    /// Seed this problem with pre-existing reservations and an admission
+    /// floor (continuous multi-tenant admission): every task must start at
+    /// or after `floor` (folded into the per-task release times) and every
+    /// scheduler packs around the `preplaced` rectangles. With an empty
+    /// seed and `floor <= 0` this is a no-op and scheduling is
+    /// bit-identical to the unseeded problem.
+    pub fn with_occupancy(mut self, preplaced: Vec<Reservation>, floor: f64) -> Self {
+        for r in &mut self.release {
+            *r = r.max(floor);
+        }
+        self.preplaced = preplaced;
+        self.floor = floor;
+        self
+    }
+
+    /// Number of flat tasks.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Whether the problem has no tasks.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
 
+    /// Direct predecessors of a flat task.
     pub fn preds(&self, t: usize) -> &[usize] {
         &self.preds[t]
     }
 
+    /// Direct successors of a flat task.
     pub fn succs(&self, t: usize) -> &[usize] {
         &self.succs[t]
     }
@@ -123,6 +172,7 @@ impl Problem {
         (cfg.vcpus(), cfg.memory_gb())
     }
 
+    /// The configuration at index `c` of the space.
     pub fn config(&self, c: usize) -> &Config {
         &self.space.configs[c]
     }

@@ -86,9 +86,16 @@ impl Schedule {
             }
         }
         // Eq. 4: capacity at every event point. Demands are rectangular,
-        // so checking at each task start suffices.
-        for t in 0..n {
-            let at = self.start[t] + 1e-9;
+        // so checking at each start event — of the schedule's tasks AND
+        // of the problem's occupancy reservations — suffices. Reserved
+        // capacity counts against the cluster: a schedule overlapping
+        // `Problem::preplaced` is infeasible.
+        let points: Vec<f64> = (0..n)
+            .map(|t| self.start[t])
+            .chain(p.preplaced.iter().map(|&(s, _, _, _)| s))
+            .collect();
+        for &point in &points {
+            let at = point + 1e-9;
             let mut cpu = 0.0;
             let mut mem = 0.0;
             for u in 0..n {
@@ -98,17 +105,21 @@ impl Schedule {
                     mem += m;
                 }
             }
+            for &(ps, pd, pc, pm) in &p.preplaced {
+                if ps <= at && at < ps + pd {
+                    cpu += pc;
+                    mem += pm;
+                }
+            }
             if cpu > p.capacity.vcpus + 1e-6 {
                 bail!(
-                    "cpu capacity exceeded at t={:.3}: {cpu:.1} > {:.1}",
-                    self.start[t],
+                    "cpu capacity exceeded at t={point:.3}: {cpu:.1} > {:.1}",
                     p.capacity.vcpus
                 );
             }
             if mem > p.capacity.memory_gb + 1e-6 {
                 bail!(
-                    "memory capacity exceeded at t={:.3}: {mem:.1} > {:.1}",
-                    self.start[t],
+                    "memory capacity exceeded at t={point:.3}: {mem:.1} > {:.1}",
                     p.capacity.memory_gb
                 );
             }
@@ -219,6 +230,18 @@ mod tests {
             s.start[t] = 0.0;
         }
         assert!(s.validate(&p).is_err());
+    }
+
+    #[test]
+    fn occupancy_overlap_detected() {
+        // A schedule overlapping a full-capacity occupancy reservation is
+        // infeasible, even though its own demand fits the cluster alone.
+        let p = problem();
+        let s = sequential(&p);
+        s.validate(&p).unwrap();
+        let cap = p.capacity;
+        let seeded = problem().with_occupancy(vec![(0.0, 1e9, cap.vcpus, cap.memory_gb)], 0.0);
+        assert!(s.validate(&seeded).is_err());
     }
 
     #[test]

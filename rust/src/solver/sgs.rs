@@ -28,6 +28,7 @@ pub enum Rule {
     HardestToPack,
 }
 
+/// Every static rule, in the order `multistart_sgs` tries them.
 pub const ALL_RULES: &[Rule] = &[
     Rule::CriticalPath,
     Rule::LongestFirst,
@@ -84,6 +85,7 @@ pub struct Timeline {
 }
 
 impl Timeline {
+    /// Empty timeline with the given capacity.
     pub fn new(cap_cpu: f64, cap_mem: f64) -> Self {
         Timeline {
             placed: Vec::new(),
@@ -145,6 +147,7 @@ impl Timeline {
             .fold(est, f64::max)
     }
 
+    /// Reserve a (cpu, mem) rectangle over [s, s+d).
     pub fn place(&mut self, s: f64, d: f64, cpu: f64, mem: f64) {
         self.placed.push((s, s + d, cpu, mem));
     }
@@ -163,10 +166,12 @@ impl Timeline {
         self.placed.truncate(len);
     }
 
+    /// Number of placed rectangles.
     pub fn len(&self) -> usize {
         self.placed.len()
     }
 
+    /// Whether nothing is placed.
     pub fn is_empty(&self) -> bool {
         self.placed.is_empty()
     }
@@ -206,12 +211,18 @@ pub fn selection_order(p: &Problem, prio: &[f64]) -> Vec<usize> {
 }
 
 /// Serial SGS with a static priority vector. Ties break on task index so
-/// results are deterministic.
+/// results are deterministic. The timeline is seeded with the problem's
+/// occupancy reservations (`Problem::preplaced`), so a seeded problem is
+/// packed into the residual capacity; with no seed this is the classic
+/// serial SGS.
 pub fn serial_sgs(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
     let n = p.len();
     let order = selection_order(p, prio);
     let mut start = vec![0.0f64; n];
     let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+    for &(s, d, cpu, mem) in &p.preplaced {
+        timeline.place(s, d, cpu, mem);
+    }
 
     for &t in &order {
         let est = p.preds(t)
@@ -258,17 +269,27 @@ pub struct IncrementalSgs {
     start: Vec<f64>,
     /// The most recently evaluated assignment (usize::MAX = never).
     last: Vec<usize>,
+    /// Occupancy reservations of the problem, retained through every
+    /// truncate (continuous admission packs proposals into the gaps).
+    base_len: usize,
     timeline: Timeline,
 }
 
 impl IncrementalSgs {
+    /// Freeze the selection order for `initial` and seed the timeline
+    /// with the problem's occupancy reservations.
     pub fn new(p: &Problem, initial: &[usize]) -> IncrementalSgs {
         let prio = priorities(p, initial, Rule::CriticalPath);
+        let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+        for &(s, d, cpu, mem) in &p.preplaced {
+            timeline.place(s, d, cpu, mem);
+        }
         IncrementalSgs {
             order: selection_order(p, &prio),
             start: vec![0.0; p.len()],
             last: vec![usize::MAX; p.len()],
-            timeline: Timeline::new(p.capacity.vcpus, p.capacity.memory_gb),
+            base_len: p.preplaced.len(),
+            timeline,
         }
     }
 
@@ -282,7 +303,7 @@ impl IncrementalSgs {
             .iter()
             .position(|&t| assignment[t] != self.last[t])
             .unwrap_or(n);
-        self.timeline.truncate(first_changed);
+        self.timeline.truncate(self.base_len + first_changed);
         for i in first_changed..n {
             let t = self.order[i];
             let est = p
@@ -352,7 +373,11 @@ impl SuffixSgs {
     /// cone (must be closed under successors — unstarted tasks always
     /// are); `fixed_end[t]` is the realized end of every committed task;
     /// `preplaced` are (start, duration, cpu, mem) rectangles of
-    /// committed work the cone must pack around.
+    /// committed work the cone must pack around. The problem's own
+    /// occupancy reservations (`Problem::preplaced`, continuous
+    /// admission) are seeded in addition to `preplaced`, so a replan
+    /// inside a continuously admitted round keeps packing around the
+    /// other rounds' in-flight work.
     pub fn new(
         p: &Problem,
         incumbent: &[usize],
@@ -371,6 +396,9 @@ impl SuffixSgs {
             .filter(|&t| active[t])
             .collect();
         let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+        for &(s, d, cpu, mem) in &p.preplaced {
+            timeline.place(s, d, cpu, mem);
+        }
         for &(s, d, cpu, mem) in preplaced {
             timeline.place(s, d, cpu, mem);
         }
@@ -379,7 +407,7 @@ impl SuffixSgs {
             floor,
             fixed_end: fixed_end.to_vec(),
             active,
-            base_len: preplaced.len(),
+            base_len: p.preplaced.len() + preplaced.len(),
             start: vec![0.0; p.len()],
             last: vec![usize::MAX; p.len()],
             timeline,
@@ -743,6 +771,81 @@ mod tests {
             let prio = priorities(&p, &assignment, Rule::MostSuccessors);
             let s = serial_sgs(&p, &assignment, &prio);
             s.validate(&p).map_err(|e| e.to_string())
+        });
+    }
+
+    #[test]
+    fn occupancy_seed_pushes_schedule_into_residual_capacity() {
+        // A full-capacity blocker over [0, 100) plus an admission floor:
+        // every placement must land at or after the blocker clears.
+        let p = problem_from(vec![dag1()]);
+        let full = (0.0, 100.0, p.capacity.vcpus, p.capacity.memory_gb);
+        let seeded = problem_from(vec![dag1()]).with_occupancy(vec![full], 40.0);
+        let assignment = vec![p.feasible[0]; p.len()];
+        let prio = priorities(&seeded, &assignment, Rule::CriticalPath);
+        let s = serial_sgs(&seeded, &assignment, &prio);
+        for t in 0..seeded.len() {
+            assert!(
+                s.start[t] + 1e-9 >= 100.0,
+                "task {t} starts {} inside the reserved window",
+                s.start[t]
+            );
+        }
+        s.validate(&seeded).unwrap();
+        // The same plan shifted by the blocker: unseeded makespan + 100.
+        let unseeded = serial_sgs(&p, &assignment, &prio);
+        assert!((s.makespan(&seeded) - (unseeded.makespan(&p) + 100.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn occupancy_floor_alone_delays_first_start() {
+        let seeded = problem_from(vec![dag1()]).with_occupancy(Vec::new(), 50.0);
+        let assignment = vec![seeded.feasible[0]; seeded.len()];
+        let prio = priorities(&seeded, &assignment, Rule::CriticalPath);
+        let s = serial_sgs(&seeded, &assignment, &prio);
+        for t in 0..seeded.len() {
+            assert!(s.start[t] + 1e-9 >= 50.0);
+        }
+        s.validate(&seeded).unwrap();
+    }
+
+    #[test]
+    fn property_incremental_matches_full_sgs_on_seeded_problems() {
+        // The prefix-reuse contract must hold with a non-empty occupancy
+        // seed: IncrementalSgs over a seeded problem stays bit-identical
+        // to the full seeded serial SGS across perturbation sequences.
+        propcheck::check(10, |rng| {
+            let dag = arbitrary_dag(rng, 10);
+            let p = problem_from(vec![dag]);
+            let cpu = p.capacity.vcpus * rng.uniform(0.3, 0.9);
+            let mem = p.capacity.memory_gb * rng.uniform(0.3, 0.9);
+            let seed = vec![
+                (0.0, rng.uniform(10.0, 200.0), cpu, mem),
+                (rng.uniform(50.0, 300.0), rng.uniform(10.0, 200.0), cpu * 0.5, mem * 0.5),
+            ];
+            let p = p.with_occupancy(seed, rng.uniform(0.0, 100.0));
+            let initial: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let prio0 = priorities(&p, &initial, Rule::CriticalPath);
+            let mut inc = IncrementalSgs::new(&p, &initial);
+            let mut current = initial;
+            for step in 0..8 {
+                let makespan = inc.evaluate(&p, &current);
+                let full = serial_sgs(&p, &current, &prio0);
+                if (makespan - full.makespan(&p)).abs() > 1e-12 {
+                    return Err(format!(
+                        "step {step}: seeded incremental {makespan} != full {}",
+                        full.makespan(&p)
+                    ));
+                }
+                if inc.schedule(&current).start != full.start {
+                    return Err(format!("step {step}: seeded start vectors diverge"));
+                }
+                let t = rng.below(p.len());
+                current[t] = p.feasible[rng.below(p.feasible.len())];
+            }
+            Ok(())
         });
     }
 

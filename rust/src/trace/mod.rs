@@ -22,7 +22,9 @@ use crate::util::Rng;
 /// One traced job: a DAG plus its submission time.
 #[derive(Debug, Clone)]
 pub struct TracedJob {
+    /// The job's workflow DAG.
     pub dag: Dag,
+    /// Submission instant in virtual seconds from trace start.
     pub submit_time: f64,
 }
 
@@ -77,6 +79,51 @@ impl TraceParams {
             ..Default::default()
         }
     }
+
+    /// A deliberately contended slice of the cluster — the macro-bench
+    /// setting: the paper's macro gains are dominated by queueing (and
+    /// continuous admission's by round overlap), so the batch share must
+    /// be small relative to the offered load, like the production trace.
+    pub fn contended(jobs: usize) -> Self {
+        TraceParams {
+            jobs,
+            machines: 12,
+            ..Default::default()
+        }
+    }
+
+    /// Admission-stress preset for the round-barrier vs continuous
+    /// comparison: the full default slice (several default-config tasks
+    /// fit side by side, so round tails leave reclaimable gaps) offered
+    /// its load in an 8x-compressed window, so triggered rounds overlap
+    /// and the bulk-synchronous barrier's head-of-line blocking becomes
+    /// visible.
+    pub fn admission_stress(jobs: usize) -> Self {
+        TraceParams {
+            jobs,
+            window: 1800.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Mean DAG arrival rate of a generated trace in jobs per hour — the
+/// offered-load axis quoted alongside cluster utilization by the macro
+/// benchmarks. 0.0 for traces with fewer than two distinct submit times.
+pub fn arrival_rate_per_hour(jobs: &[TracedJob]) -> f64 {
+    if jobs.len() < 2 {
+        return 0.0;
+    }
+    let first = jobs
+        .iter()
+        .map(|j| j.submit_time)
+        .fold(f64::INFINITY, f64::min);
+    let last = jobs.iter().map(|j| j.submit_time).fold(0.0f64, f64::max);
+    let span = last - first;
+    if span <= 0.0 {
+        return 0.0;
+    }
+    jobs.len() as f64 / span * 3600.0
 }
 
 /// Heavy-tailed task-count draw: ~70% of DAGs have <= 5 tasks, tail up to
@@ -187,6 +234,25 @@ mod tests {
                 assert!(t.profile.alpha < 1.0 && t.profile.beta < 1.0);
             }
         }
+    }
+
+    #[test]
+    fn arrival_rate_reflects_window() {
+        let mut rng = Rng::new(5);
+        let jobs = generate(&TraceParams::tiny(), &mut rng);
+        let rate = arrival_rate_per_hour(&jobs);
+        // 12 jobs over a 1800 s window: about 24/h (submit times are
+        // uniform draws, so allow generous slack).
+        assert!(rate > 10.0 && rate < 60.0, "rate {rate}");
+        assert_eq!(arrival_rate_per_hour(&jobs[..1]), 0.0);
+        assert_eq!(arrival_rate_per_hour(&[]), 0.0);
+    }
+
+    #[test]
+    fn contended_preset_shrinks_the_batch_slice() {
+        let p = TraceParams::contended(48);
+        assert_eq!(p.jobs, 48);
+        assert!(p.batch_capacity().vcpus < TraceParams::default().batch_capacity().vcpus);
     }
 
     #[test]

@@ -7,9 +7,12 @@
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positional arguments, and flags.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First non-flag token, e.g. `optimize`.
     pub subcommand: Option<String>,
+    /// Remaining non-flag tokens (DAG names, file paths).
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     /// Flags the program declares; used to reject unknown ones.
@@ -56,10 +59,12 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env(known: &[(&'static str, &'static str)]) -> Result<Args> {
         Self::parse(std::env::args().skip(1), known)
     }
 
+    /// Render the flag reference for a declared flag set.
     pub fn usage_for(known: &[(&'static str, &'static str)]) -> String {
         let mut s = String::from("flags:\n");
         for (k, help) in known {
@@ -68,18 +73,22 @@ impl Args {
         s
     }
 
+    /// Whether a flag was passed at all.
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// Raw value of a flag, if passed.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// String flag with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Float flag with a default; parse errors name the flag.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -89,6 +98,7 @@ impl Args {
         }
     }
 
+    /// Unsigned-integer flag with a default.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -98,6 +108,7 @@ impl Args {
         }
     }
 
+    /// u64 flag with a default (seeds).
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -107,6 +118,7 @@ impl Args {
         }
     }
 
+    /// Boolean flag with a default (`--flag`, `--flag true|false`).
     pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
         match self.get(key) {
             None => Ok(default),
@@ -116,6 +128,7 @@ impl Args {
         }
     }
 
+    /// Render the flag reference of this parse's declared flags.
     pub fn usage(&self) -> String {
         Self::usage_for(&self.known)
     }

@@ -14,15 +14,22 @@ use anyhow::{anyhow, bail, Context, Result};
 /// JSON is deterministic — experiment outputs diff cleanly between runs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always carried as `f64`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (keys kept sorted for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser {
             b: text.as_bytes(),
@@ -37,6 +44,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON file, with the path in any error context.
     pub fn parse_file(path: &std::path::Path) -> Result<Json> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -45,6 +53,7 @@ impl Json {
 
     // -- constructors ------------------------------------------------------
 
+    /// Build an object from key/value pairs.
     pub fn obj(entries: Vec<(&str, Json)>) -> Json {
         Json::Obj(
             entries
@@ -54,20 +63,24 @@ impl Json {
         )
     }
 
+    /// Build an array from an iterator of values.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
 
+    /// Build a number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
     // -- typed accessors ---------------------------------------------------
 
+    /// This value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -75,6 +88,7 @@ impl Json {
         }
     }
 
+    /// This value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -83,6 +97,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// This value as a boolean.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -90,6 +105,7 @@ impl Json {
         }
     }
 
+    /// This value as a string slice.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -97,6 +113,7 @@ impl Json {
         }
     }
 
+    /// This value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -104,6 +121,7 @@ impl Json {
         }
     }
 
+    /// This value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -139,12 +157,15 @@ impl Json {
 
     // -- writer ------------------------------------------------------------
 
+    /// Serialize to compact JSON.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
         out
     }
 
+    /// Serialize to indented JSON with a trailing newline.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();
         self.write_pretty(&mut out, 0);

@@ -22,7 +22,9 @@ use super::rng::Rng;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Number of generated cases to run.
     pub cases: usize,
+    /// Base seed of the deterministic case-seed sequence.
     pub seed: u64,
 }
 

@@ -46,6 +46,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
         let t = self.s[1] << 17;

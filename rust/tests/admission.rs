@@ -1,0 +1,179 @@
+//! Golden scenario for continuous multi-tenant admission: a hand-built
+//! two-job trace with zero-noise profiles whose timelines are exactly
+//! computable in both admission modes, pinning that
+//!
+//!   * round-barrier admission reproduces the historical head-of-line
+//!     blocking (round 2 waits for round 1 to drain entirely);
+//!   * continuous admission packs round 2 into the tail gap of round 1
+//!     and reports strictly lower mean/p95 DAG completion at exactly
+//!     equal cost (same configs, same realized runtimes);
+//!   * arrivals landing mid-round never start before their submission;
+//!   * cluster utilization improves because the horizon shrinks.
+//!
+//! The cluster fits exactly two default-config (8 x m5.4xlarge) tasks
+//! side by side. Job "wide" (7 independent 600 s tasks) is admitted at
+//! t=0 by the demand trigger and executes pairwise:
+//! [0,600) x2, [600,1200) x2, [1200,1800) x2, [1800,2400) x1 — the last
+//! slot leaves half the cluster idle. Job "late" (one 200 s task)
+//! arrives at t=100 mid-round and is admitted by the 900 s interval
+//! trigger: round-barrier mode holds it until the cluster drains at
+//! t=2400 (finish 2600); continuous mode packs it into the tail gap at
+//! t=1800 (finish 2000).
+
+use agora::cluster::{Capacity, ConfigSpace};
+use agora::coordinator::{Admission, BatchRunner, DagOutcome, MacroReport, Strategy};
+use agora::dag::{Dag, Task, TaskProfile};
+use agora::trace::TracedJob;
+
+/// Zero-noise, zero-contention profile: realized runtime at the default
+/// 8 x m5.4xlarge configuration is exactly `work / 8`.
+fn exact_task(name: &str, work: f64) -> Task {
+    Task {
+        name: name.to_string(),
+        profile: TaskProfile {
+            work,
+            alpha: 0.0,
+            beta: 0.0,
+            mem_gb: 4.0,
+            spark_affinity: 0.0,
+            noise_sigma: 0.0,
+        },
+    }
+}
+
+/// Two default-config tasks (128 vCPUs / 512 GiB each) fit side by side.
+fn two_default_wide() -> Capacity {
+    Capacity::new(288.0, 1152.0)
+}
+
+fn tail_gap_trace() -> Vec<TracedJob> {
+    let wide = Dag::new(
+        "wide",
+        (0..7).map(|i| exact_task(&format!("w{i}"), 4800.0)).collect(),
+        vec![],
+    )
+    .unwrap();
+    let late = Dag::new("late", vec![exact_task("l0", 1600.0)], vec![]).unwrap();
+    vec![
+        TracedJob {
+            dag: wide,
+            submit_time: 0.0,
+        },
+        TracedJob {
+            dag: late,
+            submit_time: 100.0,
+        },
+    ]
+}
+
+fn run(admission: Admission) -> MacroReport {
+    let jobs = tail_gap_trace();
+    let mut runner = BatchRunner::new(
+        two_default_wide(),
+        ConfigSpace::standard(),
+        Strategy::Airflow,
+        42,
+    )
+    .with_admission(admission);
+    runner.run(&jobs).expect("macro run")
+}
+
+fn outcome<'a>(rep: &'a MacroReport, name: &str) -> &'a DagOutcome {
+    rep.outcomes
+        .iter()
+        .find(|o| o.name == name)
+        .expect("outcome present")
+}
+
+#[test]
+fn round_barrier_serializes_rounds_exactly() {
+    let rep = run(Admission::Rounds);
+    assert_eq!(rep.admission, "rounds");
+    assert_eq!(rep.rounds, 2, "demand trigger + interval trigger");
+    let wide = outcome(&rep, "wide");
+    let late = outcome(&rep, "late");
+    // Round 1: 7 x 600 s tasks, two wide -> finish 2400.
+    assert!((wide.finish_time - 2400.0).abs() < 1e-6, "wide {}", wide.finish_time);
+    // Round 2 waits for the full drain: 2400 + 200 = 2600.
+    assert!((late.finish_time - 2600.0).abs() < 1e-6, "late {}", late.finish_time);
+    assert!((late.completion - 2500.0).abs() < 1e-6);
+    assert!((late.first_start - 2400.0).abs() < 1e-6);
+}
+
+#[test]
+fn continuous_admission_fills_the_tail_gap() {
+    let rep = run(Admission::Continuous);
+    assert_eq!(rep.admission, "continuous");
+    assert_eq!(rep.rounds, 2);
+    let wide = outcome(&rep, "wide");
+    let late = outcome(&rep, "late");
+    // Round 1 is identical (empty ledger at admission).
+    assert!((wide.finish_time - 2400.0).abs() < 1e-6, "wide {}", wide.finish_time);
+    // Round 2 is admitted at the 900 s interval tick and packed into the
+    // half-idle tail slot [1800, 2400): launch 1800, finish 2000.
+    assert!((late.first_start - 1800.0).abs() < 1e-6, "late start {}", late.first_start);
+    assert!((late.finish_time - 2000.0).abs() < 1e-6, "late {}", late.finish_time);
+    assert!((late.completion - 1900.0).abs() < 1e-6);
+    // Mid-round arrival: no task starts before its DAG's submit time,
+    // nor before its round's admission instant.
+    assert!(late.first_start + 1e-9 >= late.submit_time);
+    assert!(late.first_start + 1e-9 >= 900.0);
+}
+
+#[test]
+fn continuous_strictly_beats_round_barrier_at_equal_cost() {
+    let rounds = run(Admission::Rounds);
+    let continuous = run(Admission::Continuous);
+
+    // Equal cost budget: same strategy, seed and configs draw the same
+    // realized runtimes, so the dollar columns are identical.
+    assert!(
+        (rounds.total_cost - continuous.total_cost).abs() < 1e-9,
+        "cost drifted: {} vs {}",
+        rounds.total_cost,
+        continuous.total_cost
+    );
+
+    // The §5.5 headline for continuous admission: strictly lower mean
+    // and p95 DAG completion, strictly higher utilization (same busy
+    // core-seconds over a shorter horizon), strictly lower queueing
+    // delay.
+    assert!(
+        continuous.mean_completion < rounds.mean_completion - 1.0,
+        "mean completion must strictly improve: {} vs {}",
+        continuous.mean_completion,
+        rounds.mean_completion
+    );
+    assert!(
+        continuous.p95_completion < rounds.p95_completion - 1.0,
+        "p95 completion must strictly improve: {} vs {}",
+        continuous.p95_completion,
+        rounds.p95_completion
+    );
+    assert!(
+        continuous.utilization > rounds.utilization + 1e-6,
+        "utilization must improve: {} vs {}",
+        continuous.utilization,
+        rounds.utilization
+    );
+    assert!(continuous.mean_queue_delay < rounds.mean_queue_delay - 1.0);
+
+    // Exact means from the hand timeline: (2400 + 2500)/2 vs
+    // (2400 + 1900)/2.
+    assert!((rounds.mean_completion - 2450.0).abs() < 1e-6);
+    assert!((continuous.mean_completion - 2150.0).abs() < 1e-6);
+}
+
+#[test]
+fn continuous_mode_never_exceeds_capacity_across_rounds() {
+    // Cross-round capacity feasibility: replay the per-DAG first-start /
+    // finish windows; at no instant may the aggregate demand of the two
+    // rounds exceed the cluster. (Coarse check at outcome granularity —
+    // the fine-grained check lives in the executor invariants; here we
+    // pin that the "late" task was not overlapped onto a full cluster.)
+    let rep = run(Admission::Continuous);
+    let late = outcome(&rep, "late");
+    // During [1200, 1800) the cluster is full (two wide tasks): the late
+    // task must not have been launched there.
+    assert!(late.first_start + 1e-9 >= 1800.0);
+}
