@@ -60,7 +60,9 @@ fn main() {
         &p,
         agora::baselines::ErnestGoal(Goal::Runtime),
     );
-    let (sep_sched, _) = CpSolver::new(Limits::default()).solve(&p, &ernest_sel);
+    let (sep_sched, _) = CpSolver::new(Limits::default())
+        .solve(&p, &ernest_sel)
+        .expect("ernest selections draw from Problem::feasible");
     let sep_makespan = sep_sched.makespan(&p);
     let sep_cost = sep_sched.cost(&p);
 

@@ -63,7 +63,9 @@ fn main() {
         );
         let c0 = p.feasible[0];
         let base = {
-            let (s, _) = agora::solver::CpSolver::new(Limits::default()).solve(&p, &vec![c0; p.len()]);
+            let (s, _) = agora::solver::CpSolver::new(Limits::default())
+                .solve(&p, &vec![c0; p.len()])
+                .expect("feasible default assignment");
             (s.makespan(&p), s.cost(&p))
         };
         let obj = Objective::new(Goal::Runtime, base.0, base.1);

@@ -35,13 +35,13 @@ fn main() {
 
     let prio = sgs::priorities(&p, &assignment, sgs::Rule::CriticalPath);
     results.push(bench::measure("serial SGS (16 tasks)", 50, 500, || {
-        let s = sgs::serial_sgs(&p, &assignment, &prio);
+        let s = sgs::serial_sgs(&p, &assignment, &prio).expect("feasible assignment");
         std::hint::black_box(s.start[0]);
     }));
 
     let solver = CpSolver::new(Limits::inner_loop());
     results.push(bench::measure("CP solve @ inner-loop limits", 10, 100, || {
-        let (s, _) = solver.solve(&p, &assignment);
+        let (s, _) = solver.solve(&p, &assignment).expect("feasible assignment");
         std::hint::black_box(s.start[0]);
     }));
 

@@ -1,0 +1,287 @@
+//! Scaling sweep of the shared capacity-timeline kernel
+//! (`solver::timeline`): 50 → 2000-task large-scale DAGs
+//! (`dag::generator::large_scale_dag`), comparing the production
+//! sweep-line kernel against the historical rectangle-list kernel
+//! (retained verbatim in `solver::timeline::reference`) on the same
+//! problems, and recording the end-to-end optimizer trajectory.
+//!
+//! Outputs:
+//!   * a table per size: serial-SGS and multistart-optimizer wall-clock
+//!     for both kernels, the speedup, and a full co-optimization round
+//!     (incremental SA) on the production kernel;
+//!   * `BENCH_timeline.json` at the repo root with the same numbers, so
+//!     the perf trajectory is diffable across PRs.
+//!
+//! Every measured pair is also cross-checked for **bit-identical**
+//! schedules — the speedup claim is only meaningful because the two
+//! kernels agree exactly.
+//!
+//! `cargo bench --bench scaling_timeline -- --smoke` runs the smallest
+//! size only (CI keeps the JSON generation path alive without paying for
+//! the full sweep). The reference kernel is skipped above
+//! `REF_MAX_TASKS` tasks — its O(n³) serial pass is the very cost this
+//! kernel removed.
+
+use std::path::Path;
+
+use agora::bench;
+use agora::cluster::{ConfigSpace, CostModel};
+use agora::dag::generator::large_scale_dag;
+use agora::predictor::OraclePredictor;
+use agora::solver::sgs::{self, Rule};
+use agora::solver::timeline::reference;
+use agora::solver::{Agora, AgoraOptions, AnnealParams, Goal, Mode, Problem, Schedule};
+use agora::trace::TraceParams;
+use agora::util::{Json, Rng};
+use agora::Predictor;
+
+const SEED: u64 = 2022;
+/// Largest size the historical kernel is timed at; beyond this its
+/// O(n³) serial pass dominates the whole bench run.
+const REF_MAX_TASKS: usize = 1000;
+/// Noisy multistart restarts per optimizer measurement (on top of the
+/// five static rules).
+const RESTARTS: usize = 2;
+
+/// A large-scale problem over the Alibaba-like batch slice of the
+/// cluster, with per-task configs cycled through the feasible set so the
+/// packing is genuinely contended.
+fn problem_of(n: usize) -> (Problem, Vec<usize>) {
+    let dag = large_scale_dag(&mut Rng::new(SEED ^ n as u64), &format!("scale{n}"), n);
+    let space = ConfigSpace::standard();
+    let profiles: Vec<_> = dag.tasks.iter().map(|t| t.profile.clone()).collect();
+    let grid = OraclePredictor { profiles }.predict(&space);
+    let p = Problem::new(
+        &[dag],
+        &[0.0],
+        TraceParams::default().batch_capacity(),
+        space,
+        grid,
+        CostModel::OnDemand,
+    );
+    let assignment: Vec<usize> = (0..p.len())
+        .map(|t| p.feasible[t % p.feasible.len()])
+        .collect();
+    (p, assignment)
+}
+
+/// The historical multistart optimizer, verbatim, over the reference
+/// kernel — same rules, same noisy-restart RNG stream as
+/// `sgs::multistart_sgs`, so the two produce bit-identical schedules.
+fn multistart_ref(
+    p: &Problem,
+    assignment: &[usize],
+    extra_random: usize,
+    rng: &mut Rng,
+) -> Schedule {
+    let mut best: Option<(f64, Schedule)> = None;
+    let mut consider = |s: Schedule, p: &Problem| {
+        let m = s.makespan(p);
+        if best.as_ref().map_or(true, |(bm, _)| m < *bm) {
+            best = Some((m, s));
+        }
+    };
+    for &rule in sgs::ALL_RULES {
+        let prio = sgs::priorities(p, assignment, rule);
+        consider(reference::serial_sgs_ref(p, assignment, &prio), p);
+    }
+    let base = sgs::priorities(p, assignment, Rule::CriticalPath);
+    let scale = base.iter().cloned().fold(0.0f64, f64::max).max(1.0);
+    for _ in 0..extra_random {
+        let noisy: Vec<f64> = base
+            .iter()
+            .map(|&b| b + rng.uniform(0.0, 0.3 * scale))
+            .collect();
+        consider(reference::serial_sgs_ref(p, assignment, &noisy), p);
+    }
+    best.expect("at least one rule ran").1
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    bench::header(
+        "Timeline scaling",
+        "sweep-line kernel vs historical rectangle list, 50-2000-task DAGs",
+    );
+    let sizes: &[usize] = if smoke {
+        &[50]
+    } else {
+        &[50, 200, 500, 1000, 2000]
+    };
+    println!(
+        "mode: {} | reference kernel timed up to {REF_MAX_TASKS} tasks",
+        if smoke { "smoke (--smoke)" } else { "full sweep" }
+    );
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut points: Vec<Json> = Vec::new();
+    let mut speedup_at_1000: Option<f64> = None;
+
+    for &n in sizes {
+        let (p, assignment) = problem_of(n);
+        let prio = sgs::priorities(&p, &assignment, Rule::CriticalPath);
+
+        // Equivalence pin before any timing: bit-identical serial SGS.
+        let new_sched =
+            sgs::serial_sgs(&p, &assignment, &prio).expect("feasible assignment");
+        if n <= REF_MAX_TASKS {
+            let ref_sched = reference::serial_sgs_ref(&p, &assignment, &prio);
+            for t in 0..p.len() {
+                assert_eq!(
+                    new_sched.start[t].to_bits(),
+                    ref_sched.start[t].to_bits(),
+                    "kernel divergence at {n} tasks, task {t}"
+                );
+            }
+            // Multistart draws the same noisy-restart stream on both
+            // sides: the winners must match bit-for-bit too.
+            let new_multi =
+                sgs::multistart_sgs(&p, &assignment, RESTARTS, &mut Rng::new(SEED))
+                    .expect("feasible assignment");
+            let ref_multi = multistart_ref(&p, &assignment, RESTARTS, &mut Rng::new(SEED));
+            assert_eq!(
+                new_multi.makespan(&p).to_bits(),
+                ref_multi.makespan(&p).to_bits(),
+                "multistart divergence at {n} tasks"
+            );
+        }
+        new_sched.validate(&p).expect("kernel produced invalid schedule");
+
+        let (warm, reps) = match n {
+            0..=200 => (2, 20),
+            201..=500 => (1, 10),
+            501..=1000 => (1, 5),
+            _ => (1, 3),
+        };
+        let sgs_new = bench::measure(&format!("serial SGS new ({n})"), warm, reps, || {
+            let s = sgs::serial_sgs(&p, &assignment, &prio).expect("feasible");
+            std::hint::black_box(s.start[0]);
+        });
+        let multi_new = bench::measure(&format!("multistart new ({n})"), 0, reps.min(5), || {
+            let mut rng = Rng::new(SEED);
+            let s = sgs::multistart_sgs(&p, &assignment, RESTARTS, &mut rng)
+                .expect("feasible");
+            std::hint::black_box(s.start[0]);
+        });
+
+        let (sgs_ref, multi_ref) = if n <= REF_MAX_TASKS {
+            let ref_reps = if n <= 200 { 3 } else { 1 };
+            let a = bench::measure(&format!("serial SGS ref ({n})"), 0, ref_reps, || {
+                let s = reference::serial_sgs_ref(&p, &assignment, &prio);
+                std::hint::black_box(s.start[0]);
+            });
+            let b = bench::measure(&format!("multistart ref ({n})"), 0, 1, || {
+                let mut rng = Rng::new(SEED);
+                let s = multistart_ref(&p, &assignment, RESTARTS, &mut rng);
+                std::hint::black_box(s.start[0]);
+            });
+            (Some(a), Some(b))
+        } else {
+            (None, None)
+        };
+
+        // End-to-end co-optimization round on the production kernel
+        // (incremental SA — the checkpoint/rollback hot path).
+        let sa = bench::measure(&format!("co-optimize SA ({n})"), 0, 1, || {
+            let plan = Agora::new(AgoraOptions {
+                goal: Goal::Balanced,
+                mode: Mode::CoOptimize,
+                params: AnnealParams {
+                    max_iters: 200,
+                    incremental: true,
+                    ..AnnealParams::fast()
+                },
+                seed: SEED,
+                ..Default::default()
+            })
+            .optimize(&p);
+            std::hint::black_box(plan.makespan);
+        });
+
+        let optimizer_speedup = multi_ref
+            .as_ref()
+            .map(|r| r.mean.as_secs_f64() / multi_new.mean.as_secs_f64().max(1e-12));
+        if n == 1000 {
+            speedup_at_1000 = optimizer_speedup;
+        }
+
+        let fmt_opt = |m: &Option<bench::Measurement>| {
+            m.as_ref()
+                .map(|m| format!("{:.2}", m.mean_ms()))
+                .unwrap_or_else(|| "-".into())
+        };
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.2}", sgs_new.mean_ms()),
+            fmt_opt(&sgs_ref),
+            format!("{:.2}", multi_new.mean_ms()),
+            fmt_opt(&multi_ref),
+            optimizer_speedup
+                .map(|s| format!("{s:.1}x"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.0}", sa.mean_ms()),
+        ]);
+
+        points.push(Json::obj(vec![
+            ("tasks", Json::num(n as f64)),
+            ("serial_sgs_ms", Json::num(sgs_new.mean_ms())),
+            (
+                "serial_sgs_ref_ms",
+                sgs_ref
+                    .as_ref()
+                    .map(|m| Json::num(m.mean_ms()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("multistart_ms", Json::num(multi_new.mean_ms())),
+            (
+                "multistart_ref_ms",
+                multi_ref
+                    .as_ref()
+                    .map(|m| Json::num(m.mean_ms()))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "optimizer_speedup",
+                optimizer_speedup.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("cooptimize_sa_ms", Json::num(sa.mean_ms())),
+        ]));
+    }
+
+    bench::table(
+        &[
+            "tasks",
+            "sgs new (ms)",
+            "sgs ref (ms)",
+            "multistart new (ms)",
+            "multistart ref (ms)",
+            "optimizer speedup",
+            "SA round (ms)",
+        ],
+        &rows,
+    );
+
+    if let Some(s) = speedup_at_1000 {
+        println!(
+            "\noptimizer speedup at the 1000-task point: {s:.1}x (acceptance target: >= 5x)"
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("scaling_timeline")),
+        ("seed", Json::num(SEED as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("restarts", Json::num(RESTARTS as f64)),
+        ("ref_max_tasks", Json::num(REF_MAX_TASKS as f64)),
+        (
+            "speedup_at_1000",
+            speedup_at_1000.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("points", Json::Arr(points)),
+    ]);
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_timeline.json");
+    match std::fs::write(&out, doc.to_pretty() + "\n") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

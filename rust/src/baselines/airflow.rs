@@ -53,7 +53,7 @@ impl Scheduler for AirflowScheduler {
             .enumerate()
             .map(|(i, &w)| w - 1e-9 * i as f64)
             .collect();
-        Ok(serial_sgs(p, &assignment, &prio))
+        serial_sgs(p, &assignment, &prio)
     }
 }
 
@@ -64,9 +64,7 @@ pub fn first_dispatched(p: &Problem, ready: &[usize]) -> usize {
     *ready
         .iter()
         .max_by(|&&a, &&b| {
-            w[a].partial_cmp(&w[b])
-                .unwrap()
-                .then(b.cmp(&a)) // FIFO: lower index wins ties
+            w[a].total_cmp(&w[b]).then(b.cmp(&a)) // FIFO: lower index wins ties
         })
         .expect("non-empty ready set")
 }

@@ -52,7 +52,7 @@ impl Scheduler for CriticalPathScheduler {
             }
         };
         let prio = priorities(p, &assignment, Rule::CriticalPath);
-        Ok(serial_sgs(p, &assignment, &prio))
+        serial_sgs(p, &assignment, &prio)
     }
 }
 

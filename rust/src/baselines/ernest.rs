@@ -52,7 +52,7 @@ pub fn ernest_selection(p: &Problem, goal: ErnestGoal) -> Vec<usize> {
                 |c: usize| w * p.duration(t, c) / min_d + (1.0 - w) * p.cost(t, c) / min_cost;
             *candidates
                 .iter()
-                .min_by(|&&a, &&b| score(a).partial_cmp(&score(b)).unwrap())
+                .min_by(|&&a, &&b| score(a).total_cmp(&score(b)))
                 .unwrap()
         })
         .collect()

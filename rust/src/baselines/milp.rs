@@ -18,6 +18,7 @@ use anyhow::Result;
 use super::ernest::{ernest_selection, ErnestGoal};
 use super::Scheduler;
 use crate::solver::sgs::{priorities, serial_sgs, Rule};
+use crate::solver::timeline::Timeline;
 use crate::solver::{Problem, Schedule};
 
 /// Ernest VM selection + time-indexed MILP scheduling ("Ernest+MILP").
@@ -186,7 +187,7 @@ impl Scheduler for MilpScheduler {
 
         // Horizon from a heuristic schedule; bucket size from it.
         let prio = priorities(p, &assignment, Rule::CriticalPath);
-        let fallback = serial_sgs(p, &assignment, &prio);
+        let fallback = serial_sgs(p, &assignment, &prio)?;
         let horizon = fallback.makespan(p) * 1.05 + 1.0;
         let bucket = horizon / self.buckets as f64;
 
@@ -213,18 +214,20 @@ impl Scheduler for MilpScheduler {
             .unwrap_or(0);
         let total_buckets: usize = dur.iter().sum::<usize>() + 1 + reserved_horizon;
 
-        // Pre-load the occupancy reservations (continuous admission),
-        // bucketized conservatively (rounded outward): any bucket-feasible
-        // solution stays feasible against the real rectangles.
+        // Pre-load the occupancy reservations (continuous admission)
+        // through the shared sweep-line kernel: each bucket is charged
+        // the maximum concurrent reservation usage over its window.
+        // Still conservative (bucketized tasks cover their whole bucket,
+        // so the max-usage instant binds), equal to the historical
+        // rounded-outward per-reservation sum whenever reservations do
+        // not share a bucket, and tighter when they do.
+        let reserved = Timeline::seeded(p.capacity.vcpus, p.capacity.memory_gb, &p.preplaced);
         let mut cpu_used = vec![0.0; total_buckets];
         let mut mem_used = vec![0.0; total_buckets];
-        for &(rs, rd, rcpu, rmem) in &p.preplaced {
-            let lo = (rs / bucket).floor().max(0.0) as usize;
-            let hi = ((((rs + rd) / bucket).ceil()).max(0.0) as usize).min(total_buckets);
-            for b in lo..hi {
-                cpu_used[b] += rcpu;
-                mem_used[b] += rmem;
-            }
+        for b in 0..total_buckets {
+            let (c, m) = reserved.max_usage_in(b as f64 * bucket, (b + 1) as f64 * bucket);
+            cpu_used[b] = c;
+            mem_used[b] = m;
         }
 
         let mut reserve_ends: Vec<usize> = p
@@ -365,7 +368,7 @@ mod tests {
         let p = problem(dag1());
         let a = ernest_selection(&p, ErnestGoal(Goal::Runtime));
         let milp = MilpScheduler::with_assignment(a.clone()).schedule(&p).unwrap();
-        let (exact, _) = CpSolver::new(Limits::default()).solve(&p, &a);
+        let (exact, _) = CpSolver::new(Limits::default()).solve(&p, &a).unwrap();
         let slack = 1.3; // quantization overhead bound
         assert!(
             milp.makespan(&p) <= exact.makespan(&p) * slack + 1e-6,

@@ -66,7 +66,7 @@ impl StratusScheduler {
                     .iter()
                     .copied()
                     .filter(|&c| p.duration(t, c) <= ceiling)
-                    .min_by(|&a, &b| p.cost(t, a).partial_cmp(&p.cost(t, b)).unwrap())
+                    .min_by(|&a, &b| p.cost(t, a).total_cmp(&p.cost(t, b)))
                     .ok_or_else(|| {
                         anyhow!("stratus: task {t} has an empty runtime bin")
                     })
@@ -98,7 +98,7 @@ impl Scheduler for StratusScheduler {
     fn schedule(&self, p: &Problem) -> Result<Schedule> {
         let assignment = self.select(p)?;
         let prio = Self::alignment_priorities(p, &assignment);
-        Ok(serial_sgs(p, &assignment, &prio))
+        serial_sgs(p, &assignment, &prio)
     }
 }
 
@@ -148,7 +148,8 @@ mod tests {
             &p,
             &cheap,
             &crate::solver::sgs::priorities(&p, &cheap, crate::solver::sgs::Rule::CriticalPath),
-        );
+        )
+        .unwrap();
         assert!(stratus.makespan(&p) <= cheap_sched.makespan(&p) + 1e-6);
         assert!(stratus.cost(&p) >= cheap_sched.cost(&p) - 1e-6);
     }

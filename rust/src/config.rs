@@ -47,6 +47,11 @@ pub struct AppConfig {
     /// (default, the historical behaviour) or continuous admission onto
     /// the occupied-cluster timeline.
     pub admission: Admission,
+    /// Number of ~1000-task large-scale DAGs
+    /// ([`crate::dag::generator::large_scale_dag`]) appended to the
+    /// `trace` workload (0 = off). Widens scenario diversity beyond the
+    /// figure-sized DAGs; expect a noticeably longer run.
+    pub trace_large: usize,
     /// Chatty output.
     pub verbose: bool,
 }
@@ -66,6 +71,7 @@ impl Default for AppConfig {
             parallelism: 1,
             replan: ReplanPolicy::off(),
             admission: Admission::Rounds,
+            trace_large: 0,
             verbose: false,
         }
     }
@@ -87,6 +93,7 @@ impl AppConfig {
         ("max-iters", "annealing iteration cap"),
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
         ("admission", "rounds | continuous (trace/serve batch admission)"),
+        ("trace-large", "append N ~1000-task large-scale DAGs to the trace workload"),
         ("replan-max", "max mid-flight suffix replans per execution (0 = off)"),
         ("replan-threshold", "completion divergence fraction that triggers a replan"),
         ("replan-iters", "annealing iterations per suffix replan"),
@@ -139,6 +146,9 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("admission") {
             c.admission = parse_admission(x.as_str()?)?;
+        }
+        if let Some(x) = v.opt("trace_large") {
+            c.trace_large = x.as_usize()?;
         }
         if let Some(x) = v.opt("replan_max") {
             c.replan.max_replans = x.as_usize()?;
@@ -205,6 +215,7 @@ impl AppConfig {
         if let Some(s) = args.get("admission") {
             self.admission = parse_admission(s)?;
         }
+        self.trace_large = args.usize_or("trace-large", self.trace_large)?;
         self.replan.max_replans = args.usize_or("replan-max", self.replan.max_replans)?;
         self.replan.threshold = args.f64_or("replan-threshold", self.replan.threshold)?;
         self.replan.iters = args.usize_or("replan-iters", self.replan.iters)?;
@@ -393,6 +404,19 @@ mod tests {
             .apply_args(&args(&["run", "--replan-outage-duration", "120"]))
             .unwrap();
         assert_eq!(c.replan.divergence.outage.unwrap().duration, 120.0);
+    }
+
+    #[test]
+    fn trace_large_parses_from_cli_and_json() {
+        assert_eq!(AppConfig::default().trace_large, 0);
+        let c = AppConfig::resolve(&args(&["trace", "--trace-large", "2"])).unwrap();
+        assert_eq!(c.trace_large, 2);
+        let v = Json::parse(r#"{"trace_large": 3}"#).unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        assert_eq!(base.trace_large, 3);
+        // CLI overrides the file value.
+        let c = base.apply_args(&args(&["trace", "--trace-large", "1"])).unwrap();
+        assert_eq!(c.trace_large, 1);
     }
 
     #[test]

@@ -101,7 +101,7 @@ pub fn improvement_cdf(base: &MacroReport, run: &MacroReport) -> Vec<f64> {
                 .map(|&b| stats::improvement(b, o.completion))
         })
         .collect();
-    improvements.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    improvements.sort_by(|a, b| a.total_cmp(b));
     improvements
 }
 

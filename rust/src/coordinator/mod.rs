@@ -62,13 +62,25 @@ impl OccupancyLedger {
     /// Drop reservations ending at or before the admission instant
     /// `now` (they cannot constrain work floored at it), then return the
     /// survivors shifted into the round-local time base (origin `now`)
-    /// for [`crate::solver::Problem::with_occupancy`].
+    /// for [`crate::solver::Problem::with_occupancy`], sorted by start.
+    /// Sorted seeding keeps the sweep-line
+    /// [`Timeline`](crate::solver::Timeline) kernel's construction in
+    /// near-append order (each change-point lands at or near the tail of
+    /// the profile instead of forcing mid-vector inserts). The change-
+    /// point *set* is order-independent; per-segment usage sums are
+    /// order-independent here because reservation demands come from
+    /// `Config::vcpus`/`memory_gb` — integer-valued doubles whose sums
+    /// are exact in any order. (Non-representable demands could differ
+    /// by an ULP across orders; nothing in the repo produces them.)
     pub(crate) fn snapshot(&mut self, now: f64) -> Vec<crate::solver::Reservation> {
         self.reservations.retain(|&(s, d, _, _)| s + d > now);
-        self.reservations
+        let mut shifted: Vec<crate::solver::Reservation> = self
+            .reservations
             .iter()
             .map(|&(s, d, cpu, mem)| (s - now, d, cpu, mem))
-            .collect()
+            .collect();
+        shifted.sort_by(|a, b| a.0.total_cmp(&b.0));
+        shifted
     }
 
     /// Absorb one executed round's realized records (round-local times,

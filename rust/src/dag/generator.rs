@@ -108,6 +108,65 @@ pub fn fig10_batch(rng: &mut Rng, count: usize) -> Vec<Dag> {
         .collect()
 }
 
+/// Large-scale workflow preset (Alibaba-trace shapes at production
+/// scale): a sequence of alternating **wide fan-out stages** (a source
+/// task spraying into 8-24 parallel map tasks that re-join at a barrier,
+/// like a shuffle boundary) and **deep chains** (5-15 sequential reduce
+/// / ETL steps), stitched end to end until the task budget is spent.
+/// Defaults to ~1000 tasks via [`large_scale_dag`]; the scaling
+/// benchmark (`benches/scaling_timeline.rs`) sweeps it from 50 to 2000
+/// tasks and `agora trace --trace-large N` appends N of them to the
+/// macro trace.
+///
+/// Acyclic by construction: every edge points from a lower to a higher
+/// task index.
+pub fn large_scale_dag(rng: &mut Rng, name: &str, tasks: usize) -> Dag {
+    let tasks = tasks.max(3);
+    let mut all: Vec<Task> = Vec::with_capacity(tasks);
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let push = |all: &mut Vec<Task>, rng: &mut Rng| {
+        let id = all.len();
+        all.push(Task {
+            name: format!("{name}-t{id}"),
+            profile: random_profile(rng),
+        });
+        id
+    };
+
+    // A single source keeps the DAG connected.
+    let mut tail = push(&mut all, rng);
+    while all.len() < tasks {
+        let remaining = tasks - all.len();
+        if rng.chance(0.5) && remaining >= 3 {
+            // Fan-out stage: tail -> k parallel tasks -> join barrier.
+            // k <= remaining - 1 always leaves budget for the join.
+            let k = rng.range(8, 24).min(remaining - 1);
+            let fan: Vec<usize> = (0..k)
+                .map(|_| {
+                    let t = push(&mut all, rng);
+                    edges.push((tail, t));
+                    t
+                })
+                .collect();
+            let join = push(&mut all, rng);
+            for &t in &fan {
+                edges.push((t, join));
+            }
+            tail = join;
+        } else {
+            // Deep chain hanging off the current tail.
+            let c = rng.range(5, 15).min(remaining);
+            for _ in 0..c {
+                let t = push(&mut all, rng);
+                edges.push((tail, t));
+                tail = t;
+            }
+        }
+    }
+
+    Dag::new(name, all, edges).expect("index-increasing edges are acyclic")
+}
+
 /// Fully random DAG for property tests: arbitrary edge density over a
 /// random topological order (always acyclic by construction).
 pub fn arbitrary_dag(rng: &mut Rng, max_tasks: usize) -> Dag {
@@ -173,6 +232,49 @@ mod tests {
             assert!(p.beta >= 0.0 && p.beta <= 1.0);
             assert!(p.spark_affinity >= -1.0 && p.spark_affinity <= 1.0);
         }
+    }
+
+    #[test]
+    fn large_scale_dag_hits_the_task_budget_and_stays_acyclic() {
+        let mut rng = Rng::new(9);
+        for &n in &[50usize, 200, 1000] {
+            let d = large_scale_dag(&mut rng, "big", n);
+            assert_eq!(d.len(), n, "budget must be spent exactly");
+            assert!(d.topo_order().is_ok(), "large-scale DAG has a cycle");
+            // Connected forward: exactly one root (the source).
+            let roots: Vec<usize> =
+                (0..d.len()).filter(|&t| d.preds(t).is_empty()).collect();
+            assert_eq!(roots, vec![0], "the source is the only root");
+        }
+    }
+
+    #[test]
+    fn large_scale_dag_mixes_fan_out_and_chains() {
+        // Over a ~1000-task instance both stage shapes must appear:
+        // some task fans out to >= 8 successors, and some chain of
+        // single-successor tasks runs >= 5 deep.
+        let d = large_scale_dag(&mut Rng::new(4), "mix", 1000);
+        let max_fan = (0..d.len()).map(|t| d.succs(t).len()).max().unwrap();
+        assert!(max_fan >= 8, "no wide fan-out stage (max fan {max_fan})");
+        let mut longest_chain = 0usize;
+        for start in 0..d.len() {
+            let mut t = start;
+            let mut depth = 0usize;
+            while d.succs(t).len() == 1 && d.preds(d.succs(t)[0]).len() == 1 {
+                t = d.succs(t)[0];
+                depth += 1;
+            }
+            longest_chain = longest_chain.max(depth);
+        }
+        assert!(longest_chain >= 5, "no deep chain (longest {longest_chain})");
+    }
+
+    #[test]
+    fn large_scale_generation_is_deterministic() {
+        let a = large_scale_dag(&mut Rng::new(7), "d", 300);
+        let b = large_scale_dag(&mut Rng::new(7), "d", 300);
+        assert_eq!(a.edges, b.edges);
+        assert_eq!(a.len(), b.len());
     }
 
     #[test]

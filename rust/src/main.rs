@@ -20,11 +20,12 @@ use anyhow::{bail, Context, Result};
 use agora::cluster::{ConfigSpace, CostModel};
 use agora::config::AppConfig;
 use agora::coordinator::{Admission, AdmissionStats, BatchRunner, MacroSummary, Strategy};
+use agora::dag::generator::large_scale_dag;
 use agora::dag::workloads;
 use agora::predictor::{bootstrap_history, default_profiling_configs, EventLog};
 use agora::runtime::{Engine, PjrtPredictor};
 use agora::solver::{Agora, AgoraOptions};
-use agora::trace::{generate, TraceParams};
+use agora::trace::{generate, TraceParams, TracedJob};
 use agora::util::{fmt_cost, fmt_duration, Args, Json, Rng};
 use agora::{Dag, LearnedPredictor, Predictor};
 
@@ -219,11 +220,24 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         ..TraceParams::default()
     };
     let mut rng = Rng::new(config.seed);
-    let jobs = generate(&params, &mut rng);
+    let mut jobs = generate(&params, &mut rng);
+    // Optional large-scale jobs (--trace-large): ~1000-task wide-fan-out
+    // + deep-chain DAGs spread over the submission window, exercising
+    // the timeline kernel at the scale benches/scaling_timeline.rs
+    // sweeps.
+    if config.trace_large > 0 {
+        for i in 0..config.trace_large {
+            let dag = large_scale_dag(&mut rng, &format!("large{i}"), 1000);
+            let submit_time = params.window * (i as f64 + 0.5) / config.trace_large as f64;
+            jobs.push(TracedJob { dag, submit_time });
+        }
+        jobs.sort_by(|a, b| a.submit_time.total_cmp(&b.submit_time));
+    }
     println!(
-        "trace: {} DAG jobs over {}, batch capacity {:.0} cores / {:.0} GiB",
+        "trace: {} DAG jobs over {} ({} large-scale), batch capacity {:.0} cores / {:.0} GiB",
         jobs.len(),
         fmt_duration(params.window),
+        config.trace_large,
         params.batch_capacity().vcpus,
         params.batch_capacity().memory_gb
     );

@@ -48,11 +48,7 @@ impl Grid {
     pub fn fastest(&self, task: usize, feasible: &[usize]) -> usize {
         *feasible
             .iter()
-            .min_by(|&&a, &&b| {
-                self.durations[task][a]
-                    .partial_cmp(&self.durations[task][b])
-                    .unwrap()
-            })
+            .min_by(|&&a, &&b| self.durations[task][a].total_cmp(&self.durations[task][b]))
             .expect("non-empty feasible set")
     }
 }

@@ -159,16 +159,16 @@ pub fn execute_with_policy(
         // --- (Re)place every not-yet-committed task under the current
         // plan: plan order (planned start, FIFO tie-break), waiting on
         // actual predecessor completion (Airflow semantics), packed with
-        // the same timeline machinery the schedulers use — but over
-        // ACTUAL durations.
-        let mut timeline =
-            crate::solver::sgs::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
-        // Occupancy reservations of previously admitted rounds (continuous
-        // admission): dispatch packs this round's tasks into the residual
-        // capacity. Empty for standalone executions.
-        for &(s, d, cpu, mem) in &p.preplaced {
-            timeline.place(s, d, cpu, mem);
-        }
+        // the same sweep-line timeline kernel the schedulers use — but
+        // over ACTUAL durations. The occupancy reservations of previously
+        // admitted rounds (continuous admission) seed the timeline, so
+        // dispatch packs this round's tasks into the residual capacity;
+        // the seed is empty for standalone executions.
+        let mut timeline = crate::solver::Timeline::seeded(
+            p.capacity.vcpus,
+            p.capacity.memory_gb,
+            &p.preplaced,
+        );
         if let Some((at, dur, cpu, mem)) = outage_rect {
             timeline.place(at, dur, cpu, mem);
         }
@@ -179,12 +179,7 @@ pub fn execute_with_policy(
             }
         }
         let mut remaining: Vec<usize> = (0..n).filter(|&t| !committed[t]).collect();
-        remaining.sort_by(|&a, &b| {
-            plan_start[a]
-                .partial_cmp(&plan_start[b])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
+        remaining.sort_by(|&a, &b| plan_start[a].total_cmp(&plan_start[b]).then(a.cmp(&b)));
         let mut placed = committed.clone();
         while !remaining.is_empty() {
             // find the first dispatchable task in plan order
@@ -199,7 +194,9 @@ pub fn execute_with_policy(
                 .map(|&q| start[q] + runtimes[q])
                 .fold(p.release[t].max(floor), f64::max);
             let (cpu, mem) = p.demand(assignment[t]);
-            let s = timeline.earliest_fit(est, runtimes[t], cpu, mem);
+            let s = timeline
+                .earliest_fit(est, runtimes[t], cpu, mem)
+                .expect("planned/replanned configurations draw from Problem::feasible");
             timeline.place(s, runtimes[t], cpu, mem);
             start[t] = s;
             placed[t] = true;
@@ -215,7 +212,7 @@ pub fn execute_with_policy(
             events.sort_by(|&a, &b| {
                 let ea = start[a] + runtimes[a];
                 let eb = start[b] + runtimes[b];
-                ea.partial_cmp(&eb).unwrap().then(a.cmp(&b))
+                ea.total_cmp(&eb).then(a.cmp(&b))
             });
             for &t in &events {
                 let end_t = start[t] + runtimes[t];
@@ -422,7 +419,9 @@ mod tests {
 
     fn plan(p: &Problem) -> Schedule {
         let c = crate::solver::cooptimizer::Agora::default_config(&p.space);
-        let (s, _) = CpSolver::new(Limits::default()).solve(p, &vec![c; p.len()]);
+        let (s, _) = CpSolver::new(Limits::default())
+            .solve(p, &vec![c; p.len()])
+            .unwrap();
         s
     }
 

@@ -266,7 +266,9 @@ impl Evaluator {
                     *last = None;
                     return (hit.makespan, hit.cost);
                 }
-                let (sched, cp_stats) = solver.solve(p, assignment);
+                let (sched, cp_stats) = solver
+                    .solve(p, assignment)
+                    .expect("SA proposals draw from Problem::feasible, whose demands fit");
                 stats.inner_nodes += cp_stats.nodes;
                 let makespan = sched.makespan(p);
                 let cost = sched.cost(p);
@@ -542,7 +544,9 @@ pub fn anneal_chain(
     // the inner loop runs with starved limits for speed (§Perf), so the
     // winning assignment deserves an exact(-ish) schedule before returning.
     let polish = CpSolver::new(Limits::default());
-    let (polished, _) = polish.solve(p, &best.assignment);
+    let (polished, _) = polish
+        .solve(p, &best.assignment)
+        .expect("the accepted incumbent was already scheduled feasibly");
     let pm = polished.makespan(p);
     let pc = polished.cost(p);
     let pe = objective.energy(pm, pc);
@@ -701,7 +705,7 @@ mod tests {
             .position(|c| c.instance == 0 && c.nodes == 4 && c.spark == 1)
             .unwrap();
         let solver = CpSolver::new(Limits::default());
-        let (s, _) = solver.solve(p, &vec![c; p.len()]);
+        let (s, _) = solver.solve(p, &vec![c; p.len()]).unwrap();
         (vec![c; p.len()], s.makespan(p), s.cost(p))
     }
 
@@ -797,7 +801,7 @@ mod tests {
         );
         let c = p.feasible[0];
         let solver = CpSolver::new(Limits::inner_loop());
-        let (s0, _) = solver.solve(&p, &vec![c; p.len()]);
+        let (s0, _) = solver.solve(&p, &vec![c; p.len()]).unwrap();
         let obj = Objective::new(Goal::Balanced, s0.makespan(&p), s0.cost(&p));
         let mut rng = Rng::new(1);
         let r = anneal(&p, &obj, &vec![c; p.len()], &AnnealParams::fast(), &mut rng);
@@ -822,7 +826,7 @@ mod tests {
         // incremental evaluation of the initial assignment (a plain
         // critical-path serial SGS), and the polish can only improve it.
         let prio = sgs::priorities(&p, &init, sgs::Rule::CriticalPath);
-        let init_sgs = sgs::serial_sgs(&p, &init, &prio);
+        let init_sgs = sgs::serial_sgs(&p, &init, &prio).unwrap();
         let e_init = obj.energy(init_sgs.makespan(&p), init_sgs.cost(&p));
         assert!(
             r.energy <= e_init + 1e-9,
@@ -884,7 +888,7 @@ mod tests {
             );
             let init = vec![p.feasible[0]; p.len()];
             let solver = CpSolver::new(Limits::inner_loop());
-            let (s0, _) = solver.solve(&p, &init);
+            let (s0, _) = solver.solve(&p, &init).unwrap();
             let obj = Objective::new(Goal::Balanced, s0.makespan(&p), s0.cost(&p));
 
             let seed = rng.next_u64();

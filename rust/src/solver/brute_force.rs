@@ -55,7 +55,9 @@ pub fn brute_force(
 
     'outer: loop {
         let assignment: Vec<usize> = counter.iter().map(|&i| choices[i]).collect();
-        let (sched, _) = solver.solve(p, &assignment);
+        let (sched, _) = solver
+            .solve(p, &assignment)
+            .expect("enumerated assignments draw from Problem::feasible");
         let makespan = sched.makespan(p);
         let cost = sched.cost(p);
         let energy = objective.energy(makespan, cost);
@@ -141,7 +143,7 @@ mod tests {
             })
             .unwrap();
         let solver = CpSolver::new(Limits::default());
-        let (s, _) = solver.solve(p, &vec![c; p.len()]);
+        let (s, _) = solver.solve(p, &vec![c; p.len()]).unwrap();
         Objective::new(goal, s.makespan(p), s.cost(p))
     }
 

@@ -191,12 +191,23 @@ impl Agora {
     /// ```
     pub fn optimize(&self, p: &Problem) -> Plan {
         let t0 = std::time::Instant::now();
+        // Baseline configuration, clamped into the problem's feasible set
+        // (non-empty by `Problem::new`): on a cluster too small for the
+        // default 8-node shape the baseline degrades to a feasible config
+        // instead of tripping the over-capacity error below.
         let default_cfg = Self::default_config(&p.space);
+        let default_cfg = if p.feasible.contains(&default_cfg) {
+            default_cfg
+        } else {
+            p.feasible[0]
+        };
         let default_assignment = vec![default_cfg; p.len()];
 
         // Baseline (M, C) of Eq. 1.
         let solver = CpSolver::new(self.options.params.inner_limits.clone());
-        let (base_sched, _) = solver.solve(p, &default_assignment);
+        let (base_sched, _) = solver
+            .solve(p, &default_assignment)
+            .expect("the default configuration must fit the cluster capacity");
         let base_makespan = base_sched.makespan(p);
         let base_cost = base_sched.cost(p);
         let objective = Objective::new(self.options.goal, base_makespan, base_cost)
@@ -233,20 +244,24 @@ impl Agora {
                 let assignment = per_task_best(p, self.options.goal);
                 let prio =
                     super::sgs::priorities(p, &assignment, super::sgs::Rule::CriticalPath);
-                let schedule = super::sgs::serial_sgs(p, &assignment, &prio);
+                let schedule = super::sgs::serial_sgs(p, &assignment, &prio)
+                    .expect("per-task-best assignments draw from Problem::feasible");
                 finish_plan(p, schedule, t0)
             }
             Mode::SchedulerOnly => {
                 // Default configs, exact schedule optimization.
-                let (schedule, _) =
-                    CpSolver::new(Limits::default()).solve(p, &default_assignment);
+                let (schedule, _) = CpSolver::new(Limits::default())
+                    .solve(p, &default_assignment)
+                    .expect("the default configuration must fit the cluster capacity");
                 finish_plan(p, schedule, t0)
             }
             Mode::Separate => {
                 // Ernest-then-schedule: independently chosen configs, then
                 // exact schedule for those configs (no feedback loop).
                 let assignment = per_task_best(p, self.options.goal);
-                let (schedule, _) = CpSolver::new(Limits::default()).solve(p, &assignment);
+                let (schedule, _) = CpSolver::new(Limits::default())
+                    .solve(p, &assignment)
+                    .expect("per-task-best assignments draw from Problem::feasible");
                 finish_plan(p, schedule, t0)
             }
         };
@@ -292,7 +307,7 @@ pub fn per_task_best(p: &Problem, goal: Goal) -> Vec<usize> {
             };
             *p.feasible
                 .iter()
-                .min_by(|&&a, &&b| score(a).partial_cmp(&score(b)).unwrap())
+                .min_by(|&&a, &&b| score(a).total_cmp(&score(b)))
                 .unwrap()
         })
         .collect()
@@ -380,7 +395,7 @@ mod tests {
         let default_cfg = Agora::default_config(&p.space);
         let default_assignment = vec![default_cfg; p.len()];
         let solver = CpSolver::new(options.params.inner_limits.clone());
-        let (base_sched, _) = solver.solve(&p, &default_assignment);
+        let (base_sched, _) = solver.solve(&p, &default_assignment).unwrap();
         let objective = Objective::new(
             options.goal,
             base_sched.makespan(&p),

@@ -21,9 +21,12 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+use anyhow::Result;
+
 use super::rcpsp::Problem;
 use super::schedule::Schedule;
-use super::sgs::{self, Timeline};
+use super::sgs;
+use super::timeline::Timeline;
 use crate::util::Rng;
 
 /// Search limits: the solver stops at whichever budget is hit first.
@@ -107,14 +110,20 @@ impl CpSolver {
         CpSolver { limits }
     }
 
-    /// Minimize makespan for a fixed configuration assignment.
-    pub fn solve(&self, p: &Problem, assignment: &[usize]) -> (Schedule, Stats) {
+    /// Minimize makespan for a fixed configuration assignment. Errors if
+    /// any task's demand alone exceeds the cluster capacity (an
+    /// assignment outside `Problem::feasible`) — surfaced by the SGS
+    /// incumbent before the branch-and-bound starts, so the search itself
+    /// never packs an over-capacity rectangle.
+    pub fn solve(&self, p: &Problem, assignment: &[usize]) -> Result<(Schedule, Stats)> {
         let t0 = Instant::now();
         assert_eq!(assignment.len(), p.len());
 
-        // Upper bound: multistart SGS (also the anytime fallback).
+        // Upper bound: multistart SGS (also the anytime fallback). Its
+        // success proves every task's demand fits the cluster alone, the
+        // precondition the DFS below relies on.
         let mut rng = Rng::new(0xCB5A7);
-        let incumbent = sgs::multistart_sgs(p, assignment, self.limits.sgs_restarts, &mut rng);
+        let incumbent = sgs::multistart_sgs(p, assignment, self.limits.sgs_restarts, &mut rng)?;
         let incumbent_makespan = incumbent.makespan(p);
 
         let durations: Vec<f64> = (0..p.len())
@@ -154,13 +163,11 @@ impl CpSolver {
         // anytime SGS result stands (macro-scale problems).
         if p.len() <= 128 && incumbent_makespan > root_lb + 1e-6 {
             // Seed the branch-and-bound timeline with the problem's
-            // occupancy reservations (continuous admission); place/pop
-            // pairs in the DFS are balanced, so the seed rectangles are
-            // never backtracked away.
-            let mut timeline = Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
-            for &(s, d, cpu, mem) in &p.preplaced {
-                timeline.place(s, d, cpu, mem);
-            }
+            // occupancy reservations (continuous admission); every DFS
+            // node checkpoints before placing and rolls back after, so
+            // the seed rectangles are never backtracked away.
+            let mut timeline =
+                Timeline::seeded(p.capacity.vcpus, p.capacity.memory_gb, &p.preplaced);
             let mut start = vec![0.0f64; p.len()];
             let mut indeg: Vec<usize> = (0..p.len()).map(|t| p.preds(t).len()).collect();
             search.exhausted = true;
@@ -174,7 +181,7 @@ impl CpSolver {
         let mut stats = search.stats;
         stats.proved_optimal = search.exhausted;
         stats.solve_time = t0.elapsed();
-        (best, stats)
+        Ok((best, stats))
     }
 }
 
@@ -222,7 +229,7 @@ impl<'a> Search<'a> {
         let mut eligible: Vec<usize> = (0..n)
             .filter(|&t| scheduled & (1u128 << t) == 0 && indeg[t] == 0)
             .collect();
-        eligible.sort_by(|&a, &b| self.bottom[b].partial_cmp(&self.bottom[a]).unwrap());
+        eligible.sort_by(|&a, &b| self.bottom[b].total_cmp(&self.bottom[a]));
 
         for t in eligible {
             let est = self
@@ -232,7 +239,9 @@ impl<'a> Search<'a> {
                 .map(|&q| start[q] + self.durations[q])
                 .fold(self.p.release[t], f64::max);
             let (cpu, mem) = self.demands[t];
-            let s = timeline.earliest_fit(est, self.durations[t], cpu, mem);
+            let s = timeline
+                .earliest_fit(est, self.durations[t], cpu, mem)
+                .expect("demands validated by the SGS incumbent at solve entry");
             let end = s + self.durations[t];
 
             // Lower bound of any completion through this insertion.
@@ -243,6 +252,7 @@ impl<'a> Search<'a> {
             }
 
             // Apply.
+            let mark = timeline.checkpoint();
             timeline.place(s, self.durations[t], cpu, mem);
             start[t] = s;
             for &v in self.p.succs(t) {
@@ -258,8 +268,9 @@ impl<'a> Search<'a> {
                 max_end.max(end),
             );
 
-            // Undo.
-            timeline.pop();
+            // Undo (bit-exact: the rollback restores the pre-placement
+            // profile bytes instead of re-subtracting floats).
+            timeline.rollback(mark);
             for &v in self.p.succs(t) {
                 indeg[v] += 1;
             }
@@ -333,7 +344,7 @@ mod tests {
         let p = problem_from(vec![fig1_dag()], Capacity::micro());
         let assignment = vec![p.feasible[0]; p.len()];
         let solver = CpSolver::new(Limits::default());
-        let (s, stats) = solver.solve(&p, &assignment);
+        let (s, stats) = solver.solve(&p, &assignment).unwrap();
         s.validate(&p).unwrap();
         assert!(stats.proved_optimal, "4-task DAG must solve exactly");
         assert!(s.optimal);
@@ -343,7 +354,7 @@ mod tests {
     fn optimal_at_least_lower_bound() {
         let p = problem_from(vec![dag1()], Capacity::micro());
         let assignment = vec![p.feasible[2]; p.len()];
-        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment).unwrap();
         assert!(s.makespan(&p) + 1e-6 >= p.lower_bound(&assignment));
     }
 
@@ -352,8 +363,8 @@ mod tests {
         let p = problem_from(vec![dag1(), dag2()], Capacity::micro());
         let assignment = vec![p.feasible[1]; p.len()];
         let mut rng = Rng::new(1);
-        let ub = sgs::multistart_sgs(&p, &assignment, 8, &mut rng);
-        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        let ub = sgs::multistart_sgs(&p, &assignment, 8, &mut rng).unwrap();
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment).unwrap();
         assert!(s.makespan(&p) <= ub.makespan(&p) + 1e-6);
         s.validate(&p).unwrap();
     }
@@ -367,7 +378,8 @@ mod tests {
             max_time: Duration::from_millis(50),
             sgs_restarts: 1,
         })
-        .solve(&p, &assignment);
+        .solve(&p, &assignment)
+        .unwrap();
         // Must still return a valid schedule even with a starved budget.
         s.validate(&p).unwrap();
         assert!(stats.nodes <= 11);
@@ -381,7 +393,7 @@ mod tests {
         let p = problem_from(vec![fig1_dag()], cap)
             .with_occupancy(vec![(0.0, 50.0, cap.vcpus, cap.memory_gb)], 0.0);
         let assignment = vec![p.feasible[0]; p.len()];
-        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment).unwrap();
         s.validate(&p).unwrap();
         for t in 0..p.len() {
             assert!(
@@ -399,7 +411,7 @@ mod tests {
         let assignment = vec![p.feasible[0]; p.len()];
         let (cpu, _) = p.demand(assignment[0]);
         assert_eq!(cpu, 16.0);
-        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+        let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment).unwrap();
         s.validate(&p).unwrap();
         let total: f64 = (0..p.len()).map(|t| p.duration(t, assignment[t])).sum();
         assert!((s.makespan(&p) - total).abs() < 1e-6);
@@ -413,11 +425,13 @@ mod tests {
             let assignment: Vec<usize> = (0..p.len())
                 .map(|_| p.feasible[rng.below(p.feasible.len())])
                 .collect();
-            let (s, _) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+            let (s, _) = CpSolver::new(Limits::default())
+                .solve(&p, &assignment)
+                .map_err(|e| e.to_string())?;
             s.validate(&p).map_err(|e| e.to_string())?;
             for &rule in sgs::ALL_RULES {
                 let prio = sgs::priorities(&p, &assignment, rule);
-                let single = sgs::serial_sgs(&p, &assignment, &prio);
+                let single = sgs::serial_sgs(&p, &assignment, &prio).map_err(|e| e.to_string())?;
                 if s.makespan(&p) > single.makespan(&p) + 1e-6 {
                     return Err(format!(
                         "CP {} worse than {:?} {}",
@@ -439,7 +453,9 @@ mod tests {
             let assignment: Vec<usize> = (0..p.len())
                 .map(|_| p.feasible[rng.below(p.feasible.len())])
                 .collect();
-            let (s, stats) = CpSolver::new(Limits::default()).solve(&p, &assignment);
+            let (s, stats) = CpSolver::new(Limits::default())
+                .solve(&p, &assignment)
+                .map_err(|e| e.to_string())?;
             if stats.proved_optimal && !s.optimal {
                 return Err("stats/schedule optimal flags disagree".into());
             }

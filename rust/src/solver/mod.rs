@@ -1,5 +1,6 @@
 //! The AGORA optimization engine (§4): extended-RCPSP problem model,
-//! CP-style exact/anytime schedule solver, simulated-annealing outer loop
+//! the shared sweep-line capacity-timeline kernel, CP-style
+//! exact/anytime schedule solver, simulated-annealing outer loop
 //! (Algorithm 1), brute-force reference, and the co-optimizer facade.
 
 pub mod anneal;
@@ -10,6 +11,7 @@ pub mod objective;
 pub mod rcpsp;
 pub mod schedule;
 pub mod sgs;
+pub mod timeline;
 
 pub use anneal::{anneal, portfolio_anneal, AnnealParams, AnnealResult};
 pub use cooptimizer::{Agora, AgoraOptions, Mode, Plan};
@@ -17,3 +19,4 @@ pub use cp::{CpSolver, Limits};
 pub use objective::{Goal, Objective};
 pub use rcpsp::{Problem, Reservation};
 pub use schedule::Schedule;
+pub use timeline::{Mark, Timeline};

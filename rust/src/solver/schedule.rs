@@ -5,6 +5,7 @@
 use anyhow::{bail, Result};
 
 use super::rcpsp::Problem;
+use super::timeline::Timeline;
 
 /// A complete solution: per-task configuration choice and start time.
 #[derive(Debug, Clone)]
@@ -46,7 +47,12 @@ impl Schedule {
 
     /// Check every constraint of the §4.2 formulation:
     ///   Eq. 3 precedence, Eq. 4 capacity at every instant, release times,
-    ///   and assignment validity. O(n^2) sweep over start/end events.
+    ///   and assignment validity. Eq. 4 runs on the shared sweep-line
+    ///   [`Timeline`] kernel: build the capacity profile of the
+    ///   schedule's rectangles plus the occupancy reservations, then scan
+    ///   its constant-usage segments — O(n log n) typical (worst-case
+    ///   O(n²) from sorted-vector insert memmoves) instead of the
+    ///   historical O(n²) per-event feasibility rescan.
     pub fn validate(&self, p: &Problem) -> Result<()> {
         let n = p.len();
         if self.assignment.len() != n || self.start.len() != n {
@@ -85,41 +91,25 @@ impl Schedule {
                 );
             }
         }
-        // Eq. 4: capacity at every event point. Demands are rectangular,
-        // so checking at each start event — of the schedule's tasks AND
-        // of the problem's occupancy reservations — suffices. Reserved
-        // capacity counts against the cluster: a schedule overlapping
-        // `Problem::preplaced` is infeasible.
-        let points: Vec<f64> = (0..n)
-            .map(|t| self.start[t])
-            .chain(p.preplaced.iter().map(|&(s, _, _, _)| s))
-            .collect();
-        for &point in &points {
-            let at = point + 1e-9;
-            let mut cpu = 0.0;
-            let mut mem = 0.0;
-            for u in 0..n {
-                if self.start[u] <= at && at < self.end(p, u) {
-                    let (c, m) = p.demand(self.assignment[u]);
-                    cpu += c;
-                    mem += m;
-                }
-            }
-            for &(ps, pd, pc, pm) in &p.preplaced {
-                if ps <= at && at < ps + pd {
-                    cpu += pc;
-                    mem += pm;
-                }
-            }
+        // Eq. 4: capacity at every instant, via the shared sweep-line
+        // kernel. Reserved capacity counts against the cluster: a
+        // schedule overlapping `Problem::preplaced` is infeasible.
+        let mut profile =
+            Timeline::seeded(p.capacity.vcpus, p.capacity.memory_gb, &p.preplaced);
+        for t in 0..n {
+            let (c, m) = p.demand(self.assignment[t]);
+            profile.place(self.start[t], p.duration(t, self.assignment[t]), c, m);
+        }
+        for (at, _, cpu, mem) in profile.segments() {
             if cpu > p.capacity.vcpus + 1e-6 {
                 bail!(
-                    "cpu capacity exceeded at t={point:.3}: {cpu:.1} > {:.1}",
+                    "cpu capacity exceeded at t={at:.3}: {cpu:.1} > {:.1}",
                     p.capacity.vcpus
                 );
             }
             if mem > p.capacity.memory_gb + 1e-6 {
                 bail!(
-                    "memory capacity exceeded at t={point:.3}: {mem:.1} > {:.1}",
+                    "memory capacity exceeded at t={at:.3}: {mem:.1} > {:.1}",
                     p.capacity.memory_gb
                 );
             }
@@ -130,7 +120,7 @@ impl Schedule {
     /// Gantt-style text rendering for reports and examples.
     pub fn render(&self, p: &Problem) -> String {
         let mut rows: Vec<usize> = (0..p.len()).collect();
-        rows.sort_by(|&a, &b| self.start[a].partial_cmp(&self.start[b]).unwrap());
+        rows.sort_by(|&a, &b| self.start[a].total_cmp(&self.start[b]));
         let makespan = self.makespan(p).max(1e-9);
         let width = 60usize;
         let mut out = String::new();
@@ -221,9 +211,7 @@ mod tests {
         let biggest = *p
             .feasible
             .iter()
-            .max_by(|&&a, &&b| {
-                p.demand(a).0.partial_cmp(&p.demand(b).0).unwrap()
-            })
+            .max_by(|&&a, &&b| p.demand(a).0.total_cmp(&p.demand(b).0))
             .unwrap();
         for t in 0..p.len() {
             s.assignment[t] = biggest;

@@ -23,7 +23,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -37,7 +37,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Empirical CDF evaluated at the given points: fraction of xs <= point.
 pub fn cdf_at(xs: &[f64], points: &[f64]) -> Vec<f64> {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     points
         .iter()
         .map(|&p| {

@@ -496,12 +496,11 @@ fn historical_execute(
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&a, &b| {
         schedule.start[a]
-            .partial_cmp(&schedule.start[b])
-            .unwrap()
+            .total_cmp(&schedule.start[b])
             .then(a.cmp(&b))
     });
     let mut timeline =
-        agora::solver::sgs::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+        agora::solver::Timeline::new(p.capacity.vcpus, p.capacity.memory_gb);
     let mut start = vec![f64::NAN; n];
     let mut placed = vec![false; n];
     let mut remaining = order;
@@ -517,7 +516,9 @@ fn historical_execute(
             .map(|&q| start[q] + runtimes[q])
             .fold(p.release[t], f64::max);
         let (cpu, mem) = p.demand(schedule.assignment[t]);
-        let s = timeline.earliest_fit(est, runtimes[t], cpu, mem);
+        let s = timeline
+            .earliest_fit(est, runtimes[t], cpu, mem)
+            .expect("planned configurations fit the cluster");
         timeline.place(s, runtimes[t], cpu, mem);
         start[t] = s;
         placed[t] = true;
