@@ -1,0 +1,139 @@
+//! Fig. 12 (extension) — the heterogeneous instance market: on-demand
+//! m5-only plans vs mixed-market plans (m5/c5/r5 x on-demand/spot) on
+//! the trace workloads, with the spot interruption process realized by
+//! the executor.
+//!
+//! Reproduction target (paper §2 + §5): the market's extra degrees of
+//! freedom are where the large cost headroom lives — the cost goal
+//! shifts work onto discounted (spot/c5/r5) capacity, the runtime goal
+//! onto faster compute-optimized cores, and realized spot costs include
+//! the preemption re-runs the planner's closed form prices in
+//! expectation.
+//!
+//! `cargo bench --bench fig12_market -- --smoke` runs the cheap
+//! deterministic slice (per-task-best + exact schedule, one goal) — the
+//! CI pin that keeps the market pipeline end-to-end alive.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use agora::bench;
+use agora::cluster::ConfigSpace;
+use agora::coordinator::{BatchRunner, MacroReport, Strategy};
+use agora::solver::{Goal, Mode};
+use agora::trace::{generate, TraceParams};
+use agora::util::{fmt_cost, fmt_duration, Rng};
+use agora::CostModel;
+use agora::sim::{DivergenceSpec, ReplanPolicy};
+
+/// Expected spot interruptions per node-hour in the market columns.
+const SPOT_RATE: f64 = 1.0;
+
+fn run_market(
+    jobs: &[agora::trace::TracedJob],
+    params: &TraceParams,
+    strategy: Strategy,
+    market: bool,
+) -> MacroReport {
+    let (space, model) = if market {
+        (
+            ConfigSpace::market(),
+            CostModel::Market {
+                interrupt_rate: SPOT_RATE,
+            },
+        )
+    } else {
+        (ConfigSpace::standard(), CostModel::OnDemand)
+    };
+    let replan = ReplanPolicy {
+        divergence: DivergenceSpec {
+            spot_rate: SPOT_RATE,
+            seed: common::SEED ^ 0x51,
+            ..Default::default()
+        },
+        ..ReplanPolicy::off()
+    };
+    let mut runner = BatchRunner::new(params.batch_capacity(), space, strategy, common::SEED)
+        .with_cost_model(model)
+        .with_replan(replan);
+    runner.run(jobs).expect("macro run")
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    bench::header(
+        "Figure 12 (extension)",
+        "instance market: on-demand m5-only vs mixed m5/c5/r5 + spot plans",
+    );
+    println!(
+        "mode: {}  (spot rate {SPOT_RATE}/node-hour; realized preemptions re-run lost work)\n",
+        if smoke { "smoke (--smoke)" } else { "full sweep" }
+    );
+
+    let params = TraceParams::tiny();
+    let jobs = generate(&params, &mut Rng::new(common::SEED));
+
+    // Smoke: the deterministic per-task-best slice only; full: the SA
+    // co-optimizer per goal.
+    let goals: &[Goal] = if smoke {
+        &[Goal::Cost]
+    } else {
+        &[Goal::Cost, Goal::Runtime]
+    };
+
+    let mut rows = Vec::new();
+    for &goal in goals {
+        let strategy = if smoke {
+            Strategy::AgoraMode(goal, Mode::Separate)
+        } else {
+            Strategy::Agora(goal)
+        };
+        let od = run_market(&jobs, &params, strategy.clone(), false);
+        let mkt = run_market(&jobs, &params, strategy.clone(), true);
+        for (label, rep) in [("m5 on-demand", &od), ("mixed market", &mkt)] {
+            rows.push(vec![
+                format!("{} / {}", goal.name(), label),
+                fmt_cost(rep.total_cost),
+                fmt_duration(rep.total_completion),
+                format!("{}", rep.preemptions),
+                format!("{}", rep.rounds),
+            ]);
+        }
+
+        // The headline direction: under the cost goal the market must
+        // be cheaper — its on-demand-only plan is still in the search
+        // space, and spot/c5/r5 rows undercut it per unit of work.
+        if goal == Goal::Cost {
+            let ratio = mkt.total_cost / od.total_cost;
+            println!(
+                "cost goal: market total cost is {:.0}% of m5-on-demand-only{}",
+                ratio * 100.0,
+                if ratio < 1.0 {
+                    " — the market headroom is real"
+                } else {
+                    " (degraded at this seed: search missed the market rows)"
+                }
+            );
+            assert!(
+                ratio < 1.05,
+                "mixed-market cost-goal plan should never be materially \
+                 costlier than the m5-only plan (ratio {ratio:.3})"
+            );
+        }
+        if goal == Goal::Cost && mkt.preemptions == 0 {
+            println!("note: no spot preemptions realized at this seed/rate");
+        }
+    }
+    bench::table(
+        &["goal / space", "total cost", "total completion", "preempts", "rounds"],
+        &rows,
+    );
+
+    if !smoke {
+        println!(
+            "\nreading: the cost column is realized (preemption re-runs included); \
+             the planner prices them via the capped-Poisson closed form — \
+             rust/tests/market.rs pins the two against each other."
+        );
+    }
+}

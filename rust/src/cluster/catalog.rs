@@ -1,70 +1,339 @@
-//! AWS instance catalog — paper Table 1 (prices valid 2022-01-27).
+//! AWS instance catalog — paper Table 1 (prices valid 2022-01-27), plus
+//! the heterogeneous **market extension**: compute-optimized (c5) and
+//! memory-optimized (r5) families and spot-market variants of each, the
+//! paper's §2 "heterogeneous cloud" axis the m5-only seed never explored.
+//!
+//! Index contract: [`FULL_CATALOG`] begins with the four [`M5_CATALOG`]
+//! rows **in the same order**, so `Config { instance: 0..4, .. }` means
+//! the same machine in both the historical m5-only space and the market
+//! space — every pinned test and seeded search over the m5 space is
+//! bit-identical to the pre-market code.
+
+/// Instance family — the heterogeneity axis of the market extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// General purpose (4 GiB/vCPU): the paper's Table 1 baseline.
+    M5,
+    /// Compute optimized (2 GiB/vCPU, faster cores, cheaper per vCPU).
+    C5,
+    /// Memory optimized (8 GiB/vCPU, slightly slower cores, pricier).
+    R5,
+}
+
+impl Family {
+    /// Number of families in the catalog (sizes the per-family
+    /// multiplier array of the learned predictor).
+    pub const COUNT: usize = 3;
+
+    /// Dense index in `0..Family::COUNT` (m5 first — the baseline).
+    pub fn index(self) -> usize {
+        match self {
+            Family::M5 => 0,
+            Family::C5 => 1,
+            Family::R5 => 2,
+        }
+    }
+
+    /// Stable lowercase name (`m5` | `c5` | `r5`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::M5 => "m5",
+            Family::C5 => "c5",
+            Family::R5 => "r5",
+        }
+    }
+}
+
+/// Purchasing option of a catalog row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Purchase {
+    /// Pay the listed price, keep the capacity until released.
+    OnDemand,
+    /// Deep market discount; capacity can be preempted at any time
+    /// (realized as `DivergenceSpec` spot interruptions by the executor,
+    /// priced as expected re-run overhead by `CostModel`).
+    Spot,
+}
+
+impl Purchase {
+    /// Stable lowercase name (`on-demand` | `spot`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Purchase::OnDemand => "on-demand",
+            Purchase::Spot => "spot",
+        }
+    }
+}
 
 /// One purchasable VM instance type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InstanceType {
-    /// AWS instance-type name, e.g. `m5.4xlarge`.
+    /// AWS instance-type name, e.g. `m5.4xlarge`; spot-market rows carry
+    /// a `:spot` suffix (`m5.4xlarge:spot`).
     pub name: &'static str,
     /// vCPUs per node.
     pub vcpus: u32,
     /// Memory per node in GiB.
     pub memory_gb: u32,
-    /// On-demand price in $ per hour.
+    /// Price in $ per hour (the spot-market price for spot rows).
     pub hourly_cost: f64,
     /// Relative per-vCPU throughput vs the m5 baseline (1.0 for the m5
-    /// family; extension point for other families / spot degradation).
+    /// family; c5 cores are faster, r5 cores slightly slower).
     pub speed_factor: f64,
+    /// Instance family of this row.
+    pub family: Family,
+    /// Purchasing option of this row.
+    pub purchase: Purchase,
 }
 
 impl InstanceType {
-    /// $ per vCPU-hour — constant within the m5 family, which is exactly
-    /// why the co-optimization is about *granularity* (fewer, larger nodes
-    /// trade contention against packing flexibility), not raw unit price.
+    /// $ per vCPU-hour — constant within one (family, purchase) group,
+    /// which is exactly why intra-family co-optimization is about
+    /// *granularity*; across families and purchase options the unit
+    /// price itself becomes a decision variable.
     pub fn cost_per_vcpu_hour(&self) -> f64 {
         self.hourly_cost / self.vcpus as f64
     }
 
-    /// GiB of memory per vCPU (4.0 across the m5 family).
+    /// GiB of memory per vCPU (4.0 m5, 2.0 c5, 8.0 r5).
     pub fn memory_per_vcpu(&self) -> f64 {
         self.memory_gb as f64 / self.vcpus as f64
     }
+
+    /// Whether this row buys preemptible spot capacity.
+    pub fn is_spot(&self) -> bool {
+        self.purchase == Purchase::Spot
+    }
 }
 
-/// Table 1 of the paper.
-pub const M5_CATALOG: &[InstanceType] = &[
-    InstanceType {
-        name: "m5.4xlarge",
-        vcpus: 16,
-        memory_gb: 64,
-        hourly_cost: 0.768,
-        speed_factor: 1.0,
-    },
-    InstanceType {
-        name: "m5.8xlarge",
-        vcpus: 32,
-        memory_gb: 128,
-        hourly_cost: 1.536,
-        speed_factor: 1.0,
-    },
-    InstanceType {
-        name: "m5.12xlarge",
-        vcpus: 48,
-        memory_gb: 192,
-        hourly_cost: 2.304,
-        speed_factor: 1.0,
-    },
-    InstanceType {
-        name: "m5.16xlarge",
-        vcpus: 64,
-        memory_gb: 256,
-        hourly_cost: 3.072,
-        speed_factor: 1.0,
-    },
+// Row constants compose into both catalogs without duplicating values.
+const M5_4XL: InstanceType = InstanceType {
+    name: "m5.4xlarge",
+    vcpus: 16,
+    memory_gb: 64,
+    hourly_cost: 0.768,
+    speed_factor: 1.0,
+    family: Family::M5,
+    purchase: Purchase::OnDemand,
+};
+const M5_8XL: InstanceType = InstanceType {
+    name: "m5.8xlarge",
+    vcpus: 32,
+    memory_gb: 128,
+    hourly_cost: 1.536,
+    speed_factor: 1.0,
+    family: Family::M5,
+    purchase: Purchase::OnDemand,
+};
+const M5_12XL: InstanceType = InstanceType {
+    name: "m5.12xlarge",
+    vcpus: 48,
+    memory_gb: 192,
+    hourly_cost: 2.304,
+    speed_factor: 1.0,
+    family: Family::M5,
+    purchase: Purchase::OnDemand,
+};
+const M5_16XL: InstanceType = InstanceType {
+    name: "m5.16xlarge",
+    vcpus: 64,
+    memory_gb: 256,
+    hourly_cost: 3.072,
+    speed_factor: 1.0,
+    family: Family::M5,
+    purchase: Purchase::OnDemand,
+};
+
+const C5_4XL: InstanceType = InstanceType {
+    name: "c5.4xlarge",
+    vcpus: 16,
+    memory_gb: 32,
+    hourly_cost: 0.680,
+    speed_factor: 1.18,
+    family: Family::C5,
+    purchase: Purchase::OnDemand,
+};
+const C5_9XL: InstanceType = InstanceType {
+    name: "c5.9xlarge",
+    vcpus: 36,
+    memory_gb: 72,
+    hourly_cost: 1.530,
+    speed_factor: 1.18,
+    family: Family::C5,
+    purchase: Purchase::OnDemand,
+};
+const C5_12XL: InstanceType = InstanceType {
+    name: "c5.12xlarge",
+    vcpus: 48,
+    memory_gb: 96,
+    hourly_cost: 2.040,
+    speed_factor: 1.18,
+    family: Family::C5,
+    purchase: Purchase::OnDemand,
+};
+const C5_18XL: InstanceType = InstanceType {
+    name: "c5.18xlarge",
+    vcpus: 72,
+    memory_gb: 144,
+    hourly_cost: 3.060,
+    speed_factor: 1.18,
+    family: Family::C5,
+    purchase: Purchase::OnDemand,
+};
+
+const R5_4XL: InstanceType = InstanceType {
+    name: "r5.4xlarge",
+    vcpus: 16,
+    memory_gb: 128,
+    hourly_cost: 1.008,
+    speed_factor: 0.95,
+    family: Family::R5,
+    purchase: Purchase::OnDemand,
+};
+const R5_8XL: InstanceType = InstanceType {
+    name: "r5.8xlarge",
+    vcpus: 32,
+    memory_gb: 256,
+    hourly_cost: 2.016,
+    speed_factor: 0.95,
+    family: Family::R5,
+    purchase: Purchase::OnDemand,
+};
+const R5_12XL: InstanceType = InstanceType {
+    name: "r5.12xlarge",
+    vcpus: 48,
+    memory_gb: 384,
+    hourly_cost: 3.024,
+    speed_factor: 0.95,
+    family: Family::R5,
+    purchase: Purchase::OnDemand,
+};
+const R5_16XL: InstanceType = InstanceType {
+    name: "r5.16xlarge",
+    vcpus: 64,
+    memory_gb: 512,
+    hourly_cost: 4.032,
+    speed_factor: 0.95,
+    family: Family::R5,
+    purchase: Purchase::OnDemand,
+};
+
+// Spot rows: small and large size of each family. Discounts follow
+// 2022-era market depth — m5 65% off, c5 60% off (popular, hot market),
+// r5 75% off (cold market). Same silicon, so speed factors match the
+// on-demand rows; the price is what you trade for preemption risk.
+const M5_4XL_SPOT: InstanceType = InstanceType {
+    name: "m5.4xlarge:spot",
+    vcpus: 16,
+    memory_gb: 64,
+    hourly_cost: 0.2688,
+    speed_factor: 1.0,
+    family: Family::M5,
+    purchase: Purchase::Spot,
+};
+const M5_16XL_SPOT: InstanceType = InstanceType {
+    name: "m5.16xlarge:spot",
+    vcpus: 64,
+    memory_gb: 256,
+    hourly_cost: 1.0752,
+    speed_factor: 1.0,
+    family: Family::M5,
+    purchase: Purchase::Spot,
+};
+const C5_4XL_SPOT: InstanceType = InstanceType {
+    name: "c5.4xlarge:spot",
+    vcpus: 16,
+    memory_gb: 32,
+    hourly_cost: 0.272,
+    speed_factor: 1.18,
+    family: Family::C5,
+    purchase: Purchase::Spot,
+};
+const C5_18XL_SPOT: InstanceType = InstanceType {
+    name: "c5.18xlarge:spot",
+    vcpus: 72,
+    memory_gb: 144,
+    hourly_cost: 1.224,
+    speed_factor: 1.18,
+    family: Family::C5,
+    purchase: Purchase::Spot,
+};
+const R5_4XL_SPOT: InstanceType = InstanceType {
+    name: "r5.4xlarge:spot",
+    vcpus: 16,
+    memory_gb: 128,
+    hourly_cost: 0.252,
+    speed_factor: 0.95,
+    family: Family::R5,
+    purchase: Purchase::Spot,
+};
+const R5_16XL_SPOT: InstanceType = InstanceType {
+    name: "r5.16xlarge:spot",
+    vcpus: 64,
+    memory_gb: 512,
+    hourly_cost: 1.008,
+    speed_factor: 0.95,
+    family: Family::R5,
+    purchase: Purchase::Spot,
+};
+
+/// Table 1 of the paper: the m5 family, the historical (and default)
+/// search space.
+pub const M5_CATALOG: &[InstanceType] = &[M5_4XL, M5_8XL, M5_12XL, M5_16XL];
+
+/// The full heterogeneous instance market: m5 (rows 0-3, identical to
+/// [`M5_CATALOG`]), c5, r5, then the spot variants. `Config.instance`
+/// always indexes this catalog.
+pub const FULL_CATALOG: &[InstanceType] = &[
+    M5_4XL,
+    M5_8XL,
+    M5_12XL,
+    M5_16XL,
+    C5_4XL,
+    C5_9XL,
+    C5_12XL,
+    C5_18XL,
+    R5_4XL,
+    R5_8XL,
+    R5_12XL,
+    R5_16XL,
+    M5_4XL_SPOT,
+    M5_16XL_SPOT,
+    C5_4XL_SPOT,
+    C5_18XL_SPOT,
+    R5_4XL_SPOT,
+    R5_16XL_SPOT,
 ];
 
-/// Look up an instance type by name.
+/// Look up an instance type by name (full market, spot rows included).
 pub fn by_name(name: &str) -> Option<&'static InstanceType> {
-    M5_CATALOG.iter().find(|it| it.name == name)
+    FULL_CATALOG.iter().find(|it| it.name == name)
+}
+
+/// Catalog index of an instance type by name.
+pub fn index_by_name(name: &str) -> Option<usize> {
+    FULL_CATALOG.iter().position(|it| it.name == name)
+}
+
+/// The counterpart row with the other purchasing option (same family and
+/// shape): `m5.4xlarge` <-> `m5.4xlarge:spot`. `None` when no
+/// counterpart is listed (only the smallest and largest size of each
+/// family trade on the spot market).
+///
+/// Implemented as a fixed index table (this sits on the SA proposal
+/// path); `catalog::tests::purchase_toggle_table_matches_names` pins the
+/// table against the name-derived relation.
+pub fn purchase_toggle(instance: usize) -> Option<usize> {
+    const PAIRS: &[(usize, usize)] = &[(0, 12), (3, 13), (4, 14), (7, 15), (8, 16), (11, 17)];
+    PAIRS.iter().find_map(|&(od, spot)| {
+        if od == instance {
+            Some(spot)
+        } else if spot == instance {
+            Some(od)
+        } else {
+            None
+        }
+    })
 }
 
 /// Render Table 1 (used as the header of every bench report).
@@ -77,6 +346,27 @@ pub fn table1() -> String {
         s.push_str(&format!(
             "{:<14} {:>5}  {:>6}  {:>9.3}\n",
             it.name, it.vcpus, it.memory_gb, it.hourly_cost
+        ));
+    }
+    s
+}
+
+/// Render the full heterogeneous market (family, purchase, speed).
+pub fn market_table() -> String {
+    let mut s = String::from(
+        "Instance market (m5/c5/r5 x on-demand/spot)\n\
+         Instance           Fam  Purchase   vCPUs  Memory  Cost ($/h)  Speed\n",
+    );
+    for it in FULL_CATALOG {
+        s.push_str(&format!(
+            "{:<18} {:<4} {:<9} {:>6}  {:>6}  {:>10.4}  {:>5.2}\n",
+            it.name,
+            it.family.name(),
+            it.purchase.name(),
+            it.vcpus,
+            it.memory_gb,
+            it.hourly_cost,
+            it.speed_factor
         ));
     }
     s
@@ -117,6 +407,94 @@ mod tests {
         let t = table1();
         for it in M5_CATALOG {
             assert!(t.contains(it.name));
+        }
+    }
+
+    #[test]
+    fn full_catalog_prefix_is_the_m5_catalog() {
+        // The index contract every Config literal in the repo relies on.
+        assert!(FULL_CATALOG.len() > M5_CATALOG.len());
+        for (i, it) in M5_CATALOG.iter().enumerate() {
+            assert_eq!(&FULL_CATALOG[i], it, "row {i} drifted");
+        }
+    }
+
+    #[test]
+    fn families_have_uniform_unit_price_per_purchase() {
+        use std::collections::HashMap;
+        let mut groups: HashMap<(usize, bool), Vec<f64>> = HashMap::new();
+        for it in FULL_CATALOG {
+            groups
+                .entry((it.family.index(), it.is_spot()))
+                .or_default()
+                .push(it.cost_per_vcpu_hour());
+        }
+        for (key, prices) in groups {
+            for p in &prices {
+                assert!((p - prices[0]).abs() < 1e-9, "group {key:?} not uniform");
+            }
+        }
+    }
+
+    #[test]
+    fn spot_rows_are_discounted_same_shape() {
+        let mut spot_rows = 0;
+        for (i, it) in FULL_CATALOG.iter().enumerate() {
+            if !it.is_spot() {
+                continue;
+            }
+            spot_rows += 1;
+            let od_idx = purchase_toggle(i).expect("every spot row has an on-demand twin");
+            let od = &FULL_CATALOG[od_idx];
+            assert!(!od.is_spot());
+            assert_eq!(od.vcpus, it.vcpus, "{}", it.name);
+            assert_eq!(od.memory_gb, it.memory_gb, "{}", it.name);
+            assert_eq!(od.family, it.family, "{}", it.name);
+            assert_eq!(od.speed_factor, it.speed_factor, "{}", it.name);
+            assert!(it.hourly_cost < od.hourly_cost, "{} not discounted", it.name);
+            // Toggle round-trips.
+            assert_eq!(purchase_toggle(od_idx), Some(i));
+        }
+        assert_eq!(spot_rows, 6);
+    }
+
+    #[test]
+    fn family_memory_ratios() {
+        for it in FULL_CATALOG {
+            let want = match it.family {
+                Family::M5 => 4.0,
+                Family::C5 => 2.0,
+                Family::R5 => 8.0,
+            };
+            assert!((it.memory_per_vcpu() - want).abs() < 1e-9, "{}", it.name);
+        }
+    }
+
+    #[test]
+    fn toggle_is_none_for_mid_sizes() {
+        let m58 = index_by_name("m5.8xlarge").unwrap();
+        assert_eq!(purchase_toggle(m58), None);
+        assert_eq!(purchase_toggle(9999), None);
+    }
+
+    #[test]
+    fn purchase_toggle_table_matches_names() {
+        // The index table is the fast path; the `:spot` name suffix is
+        // the ground truth it must agree with, row by row.
+        for (i, it) in FULL_CATALOG.iter().enumerate() {
+            let by_names = match it.purchase {
+                Purchase::OnDemand => index_by_name(&format!("{}:spot", it.name)),
+                Purchase::Spot => it.name.strip_suffix(":spot").and_then(index_by_name),
+            };
+            assert_eq!(purchase_toggle(i), by_names, "row {i} ({})", it.name);
+        }
+    }
+
+    #[test]
+    fn market_table_renders_all_rows() {
+        let t = market_table();
+        for it in FULL_CATALOG {
+            assert!(t.contains(it.name), "{} missing", it.name);
         }
     }
 }

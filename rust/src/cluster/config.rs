@@ -1,7 +1,7 @@
 //! Candidate resource configurations — the decision variables of the
 //! co-optimization (instance type x node count x Spark parameters).
 
-use super::catalog::{InstanceType, M5_CATALOG};
+use super::catalog::{Family, InstanceType, FULL_CATALOG, M5_CATALOG};
 
 /// Spark-level parameters. The paper found these "directly decide the
 /// resource usage per task (e.g. executor memory) and have a big impact on
@@ -63,9 +63,21 @@ pub struct Config {
 }
 
 impl Config {
-    /// Catalog row of this configuration's instance type.
+    /// Catalog row of this configuration's instance type. `instance`
+    /// indexes [`FULL_CATALOG`]; the first four rows are the m5 family,
+    /// so m5-only spaces are index-compatible with the historical code.
     pub fn instance_type(&self) -> &'static InstanceType {
-        &M5_CATALOG[self.instance]
+        &FULL_CATALOG[self.instance]
+    }
+
+    /// Instance family of this configuration.
+    pub fn family(&self) -> Family {
+        self.instance_type().family
+    }
+
+    /// Whether this configuration runs on preemptible spot capacity.
+    pub fn is_spot(&self) -> bool {
+        self.instance_type().is_spot()
     }
 
     /// Spark preset of this configuration.
@@ -114,17 +126,33 @@ pub struct ConfigSpace {
 }
 
 impl ConfigSpace {
-    /// Full space: every instance type x node ladder x Spark preset.
+    /// The historical (and default) space: the m5 family x node ladder x
+    /// Spark preset — the paper's Table 1 study.
     pub fn standard() -> Self {
         Self::with_ladder(NODE_LADDER)
+    }
+
+    /// The heterogeneous market space: every [`FULL_CATALOG`] row
+    /// (m5/c5/r5, on-demand and spot) x node ladder x Spark preset —
+    /// the co-optimizer explores family x size x purchase option
+    /// jointly. Strict superset of [`ConfigSpace::standard`].
+    pub fn market() -> Self {
+        Self::enumerate(FULL_CATALOG.len(), NODE_LADDER)
     }
 
     /// Restricted space used by brute-force experiments (Fig. 3/4): a
     /// smaller node ladder keeps exhaustive search tractable, exactly as
     /// the paper's motivational study restricts itself to Table 1.
     pub fn with_ladder(ladder: &[u32]) -> Self {
+        Self::enumerate(M5_CATALOG.len(), ladder)
+    }
+
+    /// Catalog-prefix x ladder x preset enumeration shared by the m5 and
+    /// market spaces (instance-major order — the tie-break order every
+    /// deterministic argmin in the repo relies on).
+    fn enumerate(instances: usize, ladder: &[u32]) -> Self {
         let mut configs = Vec::new();
-        for instance in 0..M5_CATALOG.len() {
+        for instance in 0..instances {
             for &nodes in ladder {
                 for spark in 0..SPARK_PRESETS.len() {
                     configs.push(Config {
@@ -157,6 +185,24 @@ impl ConfigSpace {
     /// Number of candidate configurations.
     pub fn len(&self) -> usize {
         self.configs.len()
+    }
+
+    /// One past the largest catalog index present in this space — the
+    /// instance-step bound of the SA neighbourhood. Derived from the
+    /// space (not the catalog) so m5-only spaces keep the historical
+    /// proposal distribution bit-for-bit.
+    pub fn instance_count(&self) -> usize {
+        self.configs
+            .iter()
+            .map(|c| c.instance + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Whether any candidate runs on spot capacity (arms the SA
+    /// purchase-toggle move and the spot sections of reports).
+    pub fn has_spot(&self) -> bool {
+        self.configs.iter().any(|c| c.is_spot())
     }
 
     /// Whether the space is empty.
@@ -231,6 +277,38 @@ mod tests {
         let cs = ConfigSpace::ernest_slice();
         assert!(cs.configs.iter().all(|c| c.spark == 1));
         assert_eq!(cs.len(), 4 * NODE_LADDER.len());
+    }
+
+    #[test]
+    fn market_space_supersets_standard() {
+        let std_space = ConfigSpace::standard();
+        let market = ConfigSpace::market();
+        assert_eq!(market.len(), FULL_CATALOG.len() * NODE_LADDER.len() * 3);
+        for c in &std_space.configs {
+            assert!(market.configs.contains(c), "{} missing from market", c.label());
+        }
+        assert!(market.has_spot());
+        assert!(!std_space.has_spot());
+        assert_eq!(std_space.instance_count(), M5_CATALOG.len());
+        assert_eq!(market.instance_count(), FULL_CATALOG.len());
+    }
+
+    #[test]
+    fn spot_and_family_helpers() {
+        let spot = Config {
+            instance: crate::cluster::catalog::index_by_name("c5.4xlarge:spot").unwrap(),
+            nodes: 2,
+            spark: 1,
+        };
+        assert!(spot.is_spot());
+        assert_eq!(spot.family(), Family::C5);
+        let od = Config {
+            instance: 0,
+            nodes: 2,
+            spark: 1,
+        };
+        assert!(!od.is_spot());
+        assert_eq!(od.family(), Family::M5);
     }
 
     #[test]

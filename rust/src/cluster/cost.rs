@@ -1,8 +1,64 @@
 //! Cost model — Eq. 6 of the paper, with the spot-pricing extension the
 //! paper sketches ("AGORA can be easily modified to include these details
 //! by defining the C_m variable more accurately").
+//!
+//! ## Spot interruption closed form
+//!
+//! Spot capacity is preempted by a Poisson process of `interrupt_rate`
+//! arrivals per node-hour; each preemption loses the in-flight work
+//! (uniformly distributed over the run, so half a run in expectation),
+//! and after **two** preemptions the coordinator falls back to stable
+//! capacity, capping the loss. With `N ~ Poisson(lambda)` arrivals over
+//! the task (`lambda = rate x nodes x secs / 3600`) the expected re-run
+//! overhead multiplier is
+//!
+//! ```text
+//! overhead(lambda) = 1 + 0.5 * E[min(N, 2)]
+//!                  = 1 + 0.5 * (2 - e^-lambda * (2 + lambda))
+//! ```
+//!
+//! The historical closed form used `min(E[N], 2)` instead of
+//! `E[min(N, 2)]` — an over-estimate near and past the cap (Jensen): at
+//! `lambda = 3` it charges 2.0 interruptions where the realized process
+//! only averages 1.75. The Monte-Carlo differential test in
+//! `rust/tests/market.rs` pins this form against the executor's realized
+//! spot costs; the executor's [`DivergenceSpec`](crate::sim::DivergenceSpec)
+//! realizes exactly this process.
 
 use super::config::Config;
+
+/// The canonical preemption cap the market prices: after this many spot
+/// preemptions the platform falls back to stable capacity, bounding the
+/// lost work. The cost model's closed form is always evaluated at this
+/// cap; [`DivergenceSpec::spot_max`](crate::sim::DivergenceSpec) defaults
+/// to it, and setting that executor-side knob to a different value
+/// deliberately stresses planner-model error (realized costs then
+/// diverge from the priced expectation — by design, not by accident).
+pub const SPOT_PREEMPTION_CAP: u32 = 2;
+
+/// `E[min(N, 2)]` for `N ~ Poisson(lambda)`: the expected number of
+/// *charged* spot preemptions under the [`SPOT_PREEMPTION_CAP`]
+/// fallback. `2 - e^-lambda (2 + lambda)`; ~`lambda` for small `lambda`,
+/// saturating at 2.
+pub fn expected_capped_interruptions(lambda: f64) -> f64 {
+    if lambda <= 0.0 {
+        return 0.0;
+    }
+    2.0 - (-lambda).exp() * (2.0 + lambda)
+}
+
+/// Expected spot re-run overhead multiplier on runtime (and therefore
+/// cost): `1 + 0.5 * E[min(N, 2)]`, in `[1, 2]`.
+pub fn expected_spot_overhead(lambda: f64) -> f64 {
+    1.0 + 0.5 * expected_capped_interruptions(lambda)
+}
+
+/// Poisson intensity of spot preemptions for a configuration held for
+/// `secs` seconds: `rate x nodes x secs / 3600` (any node of the gang
+/// being reclaimed preempts the task).
+pub fn spot_lambda(config: &Config, secs: f64, rate_per_node_hour: f64) -> f64 {
+    rate_per_node_hour * config.nodes as f64 * secs / 3600.0
+}
 
 /// Pricing policy for a task occupying a configuration for a duration.
 #[derive(Debug, Clone)]
@@ -10,21 +66,39 @@ pub enum CostModel {
     /// On-demand: cost = nodes x hourly price x hours (Eq. 6 with the
     /// paper's simplification that storage etc. is configuration-invariant).
     OnDemand,
-    /// Spot: on-demand price scaled by a market discount, plus an expected
-    /// interruption overhead that grows with task duration (interrupted
-    /// work is re-run). `discount` in (0, 1], `interrupt_rate` is the
-    /// expected number of interruptions per hour.
+    /// Global spot ablation: *every* configuration priced at the
+    /// on-demand price scaled by a market discount, plus the expected
+    /// interruption overhead (see the module docs). `discount` in
+    /// (0, 1], `interrupt_rate` in expected interruptions per node-hour.
     Spot {
+        /// Spot price as a fraction of the on-demand price.
         discount: f64,
+        /// Expected interruptions per node-hour.
         interrupt_rate: f64,
     },
     /// Per-second billing with a minimum billable duration (e.g. EMR-style
     /// 60 s minimum) — exposes scheduling decisions to billing granularity.
-    PerSecond { min_billable_secs: f64 },
+    PerSecond {
+        /// Minimum billable seconds per task.
+        min_billable_secs: f64,
+    },
+    /// The heterogeneous market: each configuration is priced at its own
+    /// catalog row (spot rows carry the market discount already).
+    /// Durations handed to [`CostModel::cost`] are expected to include
+    /// the spot interruption overhead — [`Problem::new`](crate::solver::Problem)
+    /// inflates the prediction grid of spot configurations by
+    /// [`expected_spot_overhead`] under this model, so Eq. 1 sees both
+    /// the price advantage and the preemption risk of spot capacity.
+    Market {
+        /// Expected spot interruptions per node-hour (0 = reliable spot).
+        interrupt_rate: f64,
+    },
 }
 
 impl CostModel {
-    /// Dollar cost of holding `config` for `secs` seconds.
+    /// Dollar cost of *planning to hold* `config` for `secs` seconds —
+    /// the Eq. 6 term the optimizer minimizes, expected interruption
+    /// overhead included.
     pub fn cost(&self, config: &Config, secs: f64) -> f64 {
         let hourly = config.hourly_cost();
         match self {
@@ -33,16 +107,31 @@ impl CostModel {
                 discount,
                 interrupt_rate,
             } => {
-                // Expected re-run overhead: each interruption wastes on
-                // average half of the work done since the last checkpoint
-                // (modeled as half the task so far, capped at 1 re-run).
-                let expected_interrupts = interrupt_rate * secs / 3600.0;
-                let overhead = 1.0 + 0.5 * expected_interrupts.min(2.0);
+                let overhead =
+                    expected_spot_overhead(spot_lambda(config, secs, *interrupt_rate));
                 hourly * discount * (secs * overhead) / 3600.0
             }
             CostModel::PerSecond { min_billable_secs } => {
                 hourly * secs.max(*min_billable_secs) / 3600.0
             }
+            // Spot rows are already discounted in the catalog, and the
+            // planner's durations already carry the expected overhead.
+            CostModel::Market { .. } => hourly * secs / 3600.0,
+        }
+    }
+
+    /// Dollar cost of having *actually occupied* `config` for `secs`
+    /// realized seconds. Unlike [`CostModel::cost`] no expected
+    /// interruption overhead is added: realized durations already
+    /// include any re-run work, so the executor pays for exactly the
+    /// capacity it held. Identical to `cost` for every model except
+    /// `Spot`, whose expectation term would double-charge re-runs.
+    pub fn realized_cost(&self, config: &Config, secs: f64) -> f64 {
+        match self {
+            CostModel::Spot { discount, .. } => {
+                config.hourly_cost() * discount * secs / 3600.0
+            }
+            _ => self.cost(config, secs),
         }
     }
 
@@ -118,5 +207,82 @@ mod tests {
         let m = CostModel::OnDemand;
         let total = m.total(vec![(cfg(1), 3600.0), (cfg(2), 1800.0)]);
         assert!((total - (0.768 + 0.768)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capped_interruption_expectation_shape() {
+        // E[min(N,2)] for Poisson: 0 at 0, ~lambda for small lambda,
+        // strictly increasing, saturating below the cap of 2.
+        assert_eq!(expected_capped_interruptions(0.0), 0.0);
+        assert_eq!(expected_capped_interruptions(-1.0), 0.0);
+        let small = expected_capped_interruptions(0.01);
+        assert!((small - 0.01).abs() < 1e-3, "small-lambda limit: {small}");
+        let mut prev = 0.0;
+        for i in 1..200 {
+            let v = expected_capped_interruptions(i as f64 * 0.1);
+            assert!(v > prev, "not increasing at {i}");
+            assert!(v < 2.0);
+            prev = v;
+        }
+        // Deep past the cap: essentially 2 charged interruptions.
+        assert!((expected_capped_interruptions(50.0) - 2.0).abs() < 1e-9);
+        // Exact value at lambda = 3 (the Jensen gap the fix closes:
+        // the old min(E[N], 2) form would charge 2.0 here).
+        let at3 = expected_capped_interruptions(3.0);
+        assert!((at3 - (2.0 - (-3.0f64).exp() * 5.0)).abs() < 1e-12);
+        assert!(at3 < 1.76 && at3 > 1.74, "E[min(N,2)] at 3: {at3}");
+    }
+
+    #[test]
+    fn spot_overhead_bounded_in_one_to_two() {
+        for l in [0.0, 0.1, 1.0, 3.0, 10.0, 1e6] {
+            let o = expected_spot_overhead(l);
+            assert!((1.0..=2.0 + 1e-12).contains(&o), "overhead({l}) = {o}");
+        }
+    }
+
+    #[test]
+    fn market_prices_each_row_at_catalog_price() {
+        let m = CostModel::Market { interrupt_rate: 1.0 };
+        // On-demand m5 row: plain Eq. 6.
+        assert!((m.cost(&cfg(2), 3600.0) - 2.0 * 0.768).abs() < 1e-9);
+        // Spot row: the (discounted) catalog price, no extra overhead —
+        // planner durations already carry it.
+        let spot_idx = crate::cluster::catalog::index_by_name("m5.4xlarge:spot").unwrap();
+        let spot_cfg = Config {
+            instance: spot_idx,
+            nodes: 2,
+            spark: 1,
+        };
+        assert!((m.cost(&spot_cfg, 3600.0) - 2.0 * 0.2688).abs() < 1e-9);
+    }
+
+    #[test]
+    fn realized_cost_drops_the_spot_expectation_term() {
+        let m = CostModel::Spot {
+            discount: 0.3,
+            interrupt_rate: 2.0,
+        };
+        let c = cfg(1);
+        // Planner cost charges the expected overhead...
+        assert!(m.cost(&c, 3600.0) > m.realized_cost(&c, 3600.0));
+        // ...realized cost is exactly price x discount x occupancy.
+        assert!((m.realized_cost(&c, 3600.0) - 0.768 * 0.3).abs() < 1e-9);
+        // All other models: realized == planned for the same duration.
+        for model in [
+            CostModel::OnDemand,
+            CostModel::PerSecond { min_billable_secs: 60.0 },
+            CostModel::Market { interrupt_rate: 2.0 },
+        ] {
+            assert_eq!(model.cost(&c, 1234.5), model.realized_cost(&c, 1234.5));
+        }
+    }
+
+    #[test]
+    fn spot_lambda_scales_with_nodes_and_time() {
+        let l1 = spot_lambda(&cfg(1), 3600.0, 1.0);
+        assert!((l1 - 1.0).abs() < 1e-12);
+        assert!((spot_lambda(&cfg(4), 3600.0, 1.0) - 4.0).abs() < 1e-12);
+        assert!((spot_lambda(&cfg(1), 1800.0, 2.0) - 1.0).abs() < 1e-12);
     }
 }

@@ -5,9 +5,9 @@ pub mod catalog;
 pub mod config;
 pub mod cost;
 
-pub use catalog::{InstanceType, M5_CATALOG};
+pub use catalog::{Family, InstanceType, Purchase, FULL_CATALOG, M5_CATALOG};
 pub use config::{Config, ConfigSpace, SparkParams, SPARK_PRESETS};
-pub use cost::CostModel;
+pub use cost::{expected_spot_overhead, spot_lambda, CostModel};
 
 /// Cluster-wide capacity limits — the `R_m` of Eq. 4. Two resources are
 /// tracked (vCPUs, memory GiB), matching the paper's formulation where a

@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Result};
 
-use crate::cluster::Capacity;
+use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::coordinator::Admission;
 use crate::sim::{CapacityOutage, ReplanPolicy};
 use crate::solver::anneal::AnnealParams;
@@ -52,6 +52,10 @@ pub struct AppConfig {
     /// `trace` workload (0 = off). Widens scenario diversity beyond the
     /// figure-sized DAGs; expect a noticeably longer run.
     pub trace_large: usize,
+    /// Search the heterogeneous instance market
+    /// ([`ConfigSpace::market`]: m5/c5/r5 x on-demand/spot) instead of
+    /// the historical m5-only space, priced by [`CostModel::Market`].
+    pub market: bool,
     /// Chatty output.
     pub verbose: bool,
 }
@@ -72,6 +76,7 @@ impl Default for AppConfig {
             replan: ReplanPolicy::off(),
             admission: Admission::Rounds,
             trace_large: 0,
+            market: false,
             verbose: false,
         }
     }
@@ -94,6 +99,9 @@ impl AppConfig {
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
         ("admission", "rounds | continuous (trace/serve batch admission)"),
         ("trace-large", "append N ~1000-task large-scale DAGs to the trace workload"),
+        ("market", "search the heterogeneous instance market (m5/c5/r5 + spot)"),
+        ("spot-rate", "expected spot interruptions per node-hour (0 = reliable spot)"),
+        ("spot-max", "realized preemptions per task before fallback (planner always prices 2)"),
         ("replan-max", "max mid-flight suffix replans per execution (0 = off)"),
         ("replan-threshold", "completion divergence fraction that triggers a replan"),
         ("replan-iters", "annealing iterations per suffix replan"),
@@ -149,6 +157,15 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("trace_large") {
             c.trace_large = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("market") {
+            c.market = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("spot_rate") {
+            c.replan.divergence.spot_rate = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("spot_max") {
+            c.replan.divergence.spot_max = x.as_usize()? as u32;
         }
         if let Some(x) = v.opt("replan_max") {
             c.replan.max_replans = x.as_usize()?;
@@ -216,6 +233,11 @@ impl AppConfig {
             self.admission = parse_admission(s)?;
         }
         self.trace_large = args.usize_or("trace-large", self.trace_large)?;
+        self.market = args.bool_or("market", self.market)?;
+        self.replan.divergence.spot_rate =
+            args.f64_or("spot-rate", self.replan.divergence.spot_rate)?;
+        self.replan.divergence.spot_max =
+            args.usize_or("spot-max", self.replan.divergence.spot_max as usize)? as u32;
         self.replan.max_replans = args.usize_or("replan-max", self.replan.max_replans)?;
         self.replan.threshold = args.f64_or("replan-threshold", self.replan.threshold)?;
         self.replan.iters = args.usize_or("replan-iters", self.replan.iters)?;
@@ -258,6 +280,31 @@ impl AppConfig {
             None => AppConfig::default(),
         };
         base.apply_args(args)
+    }
+
+    /// The candidate configuration space this run searches: the
+    /// heterogeneous market under `--market`, else the historical
+    /// m5-only space.
+    pub fn space(&self) -> ConfigSpace {
+        if self.market {
+            ConfigSpace::market()
+        } else {
+            ConfigSpace::standard()
+        }
+    }
+
+    /// The pricing model this run plans and accounts with:
+    /// [`CostModel::Market`] (per-row catalog prices, spot rows carrying
+    /// the `--spot-rate` interruption expectation) under `--market`,
+    /// else plain on-demand.
+    pub fn cost_model(&self) -> CostModel {
+        if self.market {
+            CostModel::Market {
+                interrupt_rate: self.replan.divergence.spot_rate,
+            }
+        } else {
+            CostModel::OnDemand
+        }
     }
 }
 
@@ -434,6 +481,44 @@ mod tests {
         let c = base.apply_args(&args(&["trace", "--admission", "rounds"])).unwrap();
         assert_eq!(c.admission, Admission::Rounds);
         assert!(AppConfig::resolve(&args(&["trace", "--admission", "overlap"])).is_err());
+    }
+
+    #[test]
+    fn market_and_spot_flags_parse_from_cli_and_json() {
+        // Defaults: m5-only space, on-demand pricing, reliable spot.
+        let c = AppConfig::default();
+        assert!(!c.market);
+        assert_eq!(c.replan.divergence.spot_rate, 0.0);
+        assert_eq!(c.replan.divergence.spot_max, 2);
+        assert!(!c.space().has_spot());
+        assert!(matches!(c.cost_model(), CostModel::OnDemand));
+
+        let c = AppConfig::resolve(&args(&[
+            "optimize",
+            "--market",
+            "--spot-rate",
+            "1.5",
+            "--spot-max",
+            "3",
+        ]))
+        .unwrap();
+        assert!(c.market);
+        assert_eq!(c.replan.divergence.spot_rate, 1.5);
+        assert_eq!(c.replan.divergence.spot_max, 3);
+        assert!(c.space().has_spot());
+        match c.cost_model() {
+            CostModel::Market { interrupt_rate } => assert_eq!(interrupt_rate, 1.5),
+            other => panic!("expected Market cost model, got {other:?}"),
+        }
+
+        // JSON path + CLI override.
+        let v = Json::parse(r#"{"market": true, "spot_rate": 0.5}"#).unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        assert!(base.market);
+        assert_eq!(base.replan.divergence.spot_rate, 0.5);
+        let c = base.apply_args(&args(&["trace", "--spot-rate", "2.0"])).unwrap();
+        assert_eq!(c.replan.divergence.spot_rate, 2.0);
+        assert!(c.market);
     }
 
     #[test]

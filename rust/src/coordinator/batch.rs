@@ -29,9 +29,11 @@ use super::{Admission, OccupancyLedger, TriggerPolicy};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::{
-    bootstrap_history, default_profiling_configs, scoped_task_name, EventLog, LearnedPredictor,
+    bootstrap_history, profiling_configs_for, scoped_task_name, EventLog, LearnedPredictor,
     Predictor,
 };
+#[cfg(test)]
+use crate::predictor::default_profiling_configs;
 use crate::sim::{self, ReplanPolicy};
 use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Reservation, Schedule};
 use crate::trace::TracedJob;
@@ -107,6 +109,9 @@ pub struct MacroReport {
     /// Mid-flight replans fired across all rounds (0 when the policy is
     /// off).
     pub replans: usize,
+    /// Spot preemptions realized across all rounds (0 without spot
+    /// capacity or with the interruption process off).
+    pub preemptions: usize,
 }
 
 /// Virtual-time batch runner.
@@ -173,26 +178,28 @@ impl BatchRunner {
         self
     }
 
+    /// Builder-style pricing knob (e.g. [`CostModel::Market`] for
+    /// heterogeneous-market runs; on-demand by default).
+    pub fn with_cost_model(mut self, cost_model: CostModel) -> Self {
+        self.cost_model = cost_model;
+        self
+    }
+
     /// History for a task: the database entry if present, else a
-    /// bootstrap profiling run (the paper's "triggered test run"). Keys
+    /// bootstrap profiling run (the paper's "triggered test run") —
+    /// family-anchored when the runner's space spans the market. Keys
     /// and the logs' own names both use the canonical scoped task name,
     /// the same key realized runs are written back under — the adaptive
     /// loop only closes because the two match.
     fn history(&mut self, dag: &Dag, rng: &mut Rng) -> Vec<EventLog> {
+        let profiling = profiling_configs_for(&self.space);
         dag.tasks
             .iter()
             .map(|t| {
                 let key = scoped_task_name(&dag.name, &t.name);
                 self.log_db
                     .entry(key.clone())
-                    .or_insert_with(|| {
-                        bootstrap_history(
-                            &key,
-                            &t.profile,
-                            &default_profiling_configs(),
-                            rng,
-                        )
-                    })
+                    .or_insert_with(|| bootstrap_history(&key, &t.profile, &profiling, rng))
                     .clone()
             })
             .collect()
@@ -263,7 +270,7 @@ impl BatchRunner {
                     .filter(|r| p.tasks[r.task].dag == d)
                     .map(|r| {
                         self.cost_model
-                            .cost(&p.space.configs[r.config], r.runtime)
+                            .realized_cost(&p.space.configs[r.config], r.runtime)
                     })
                     .sum(),
             });
@@ -330,12 +337,14 @@ impl BatchRunner {
     }
 
     /// Aggregate per-DAG outcomes into the macro report.
+    #[allow(clippy::too_many_arguments)]
     fn summarize(
         &self,
         outcomes: Vec<DagOutcome>,
         rounds: usize,
         overhead: Duration,
         replans: usize,
+        preemptions: usize,
         busy_core_seconds: f64,
     ) -> MacroReport {
         let total_cost = outcomes.iter().map(|o| o.cost).sum();
@@ -364,6 +373,7 @@ impl BatchRunner {
             rounds,
             optimizer_overhead: overhead,
             replans,
+            preemptions,
         }
     }
 
@@ -405,6 +415,7 @@ impl BatchRunner {
         let mut rounds = 0usize;
         let mut overhead = Duration::ZERO;
         let mut replans = 0usize;
+        let mut preempts = 0usize;
         let mut busy = 0.0f64;
 
         // Virtual clock: advance to each trigger firing.
@@ -458,6 +469,7 @@ impl BatchRunner {
                     &self.replan.for_round(rounds as u64 - 1),
                 );
                 replans += report.replans.len();
+                preempts += preemption_count(&report);
                 cluster_free = round_start + report.makespan;
                 busy += busy_core_seconds(&p, &report);
 
@@ -479,7 +491,7 @@ impl BatchRunner {
             }
         }
 
-        Ok(self.summarize(outcomes, rounds, overhead, replans, busy))
+        Ok(self.summarize(outcomes, rounds, overhead, replans, preempts, busy))
     }
 
     /// Continuous multi-tenant admission: each round is planned and
@@ -495,6 +507,7 @@ impl BatchRunner {
         let mut rounds = 0usize;
         let mut overhead = Duration::ZERO;
         let mut replans = 0usize;
+        let mut preempts = 0usize;
         let mut busy = 0.0f64;
 
         let mut queue: Vec<&TracedJob> = Vec::new();
@@ -555,6 +568,7 @@ impl BatchRunner {
                     &self.replan.for_round(rounds as u64 - 1),
                 );
                 replans += report.replans.len();
+                preempts += preemption_count(&report);
                 busy += busy_core_seconds(&p, &report);
 
                 // Every realized record becomes a reservation later
@@ -580,8 +594,18 @@ impl BatchRunner {
             }
         }
 
-        Ok(self.summarize(outcomes, rounds, overhead, replans, busy))
+        Ok(self.summarize(outcomes, rounds, overhead, replans, preempts, busy))
     }
+}
+
+/// Spot preemptions realized by one execution report — shared by both
+/// admission loops so their accounting cannot drift.
+fn preemption_count(report: &sim::ExecutionReport) -> usize {
+    report
+        .records
+        .iter()
+        .map(|r| r.preemptions as usize)
+        .sum()
 }
 
 /// Busy core-seconds realized by one execution report.

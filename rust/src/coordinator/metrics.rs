@@ -136,6 +136,7 @@ mod tests {
             rounds: 1,
             optimizer_overhead: Duration::ZERO,
             replans: 0,
+            preemptions: 0,
         }
     }
 

@@ -27,7 +27,7 @@ use super::{Admission, OccupancyLedger, TriggerPolicy};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::{
-    bootstrap_history, default_profiling_configs, scoped_task_name, EventLog, LearnedPredictor,
+    bootstrap_history, profiling_configs_for, scoped_task_name, EventLog, LearnedPredictor,
     Predictor,
 };
 use crate::sim::{self, ReplanPolicy};
@@ -81,6 +81,13 @@ pub struct ServiceConfig {
     /// Round-barrier (each round simulated on an empty cluster) or
     /// continuous admission onto the shared occupied timeline.
     pub admission: Admission,
+    /// Candidate configuration space per round (the historical m5-only
+    /// [`ConfigSpace::standard`] by default; [`ConfigSpace::market`] for
+    /// heterogeneous-market service runs).
+    pub space: ConfigSpace,
+    /// Pricing model for planning and realized accounting (on-demand by
+    /// default; [`CostModel::Market`] arms spot-aware pricing).
+    pub cost_model: CostModel,
 }
 
 impl Default for ServiceConfig {
@@ -94,6 +101,8 @@ impl Default for ServiceConfig {
             parallelism: 1,
             replan: ReplanPolicy::off(),
             admission: Admission::Rounds,
+            space: ConfigSpace::standard(),
+            cost_model: CostModel::OnDemand,
         }
     }
 }
@@ -183,8 +192,8 @@ impl Drop for Service {
 
 fn run_loop(config: ServiceConfig, rx: Receiver<Msg>) -> usize {
     let mut rng = Rng::new(config.seed);
-    let space = ConfigSpace::standard();
-    let cost_model = CostModel::OnDemand;
+    let space = config.space.clone();
+    let cost_model = config.cost_model.clone();
     let mut log_db: HashMap<String, EventLog> = HashMap::new();
     let mut queue: Vec<Submission> = Vec::new();
     let mut round = 0usize;
@@ -273,11 +282,12 @@ fn serve_round(
     // canonical scoped task name — the same key realized runs are
     // written back under.
     let mut logs: Vec<EventLog> = Vec::new();
+    let profiling = profiling_configs_for(space);
     for d in &dags {
         for t in &d.tasks {
             let key = scoped_task_name(&d.name, &t.name);
             let entry = log_db.entry(key.clone()).or_insert_with(|| {
-                bootstrap_history(&key, &t.profile, &default_profiling_configs(), rng)
+                bootstrap_history(&key, &t.profile, &profiling, rng)
             });
             logs.push(entry.clone());
         }
@@ -331,7 +341,7 @@ fn serve_round(
             .records
             .iter()
             .filter(|r| p.tasks[r.task].dag == d)
-            .map(|r| cost_model.cost(&p.space.configs[r.config], r.runtime))
+            .map(|r| cost_model.realized_cost(&p.space.configs[r.config], r.runtime))
             .sum();
         let _ = sub.reply.send(SubmitResult {
             tenant: sub.tenant.clone(),

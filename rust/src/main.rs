@@ -17,7 +17,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use agora::cluster::{ConfigSpace, CostModel};
+use agora::cluster::ConfigSpace;
 use agora::config::AppConfig;
 use agora::coordinator::{Admission, AdmissionStats, BatchRunner, MacroSummary, Strategy};
 use agora::dag::generator::large_scale_dag;
@@ -39,6 +39,12 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env(AppConfig::FLAGS)?;
     let config = AppConfig::resolve(&args)?;
+    if !config.market && config.replan.divergence.spot_rate > 0.0 {
+        eprintln!(
+            "warning: --spot-rate has no effect without --market \
+             (the m5-only space sells no spot capacity)"
+        );
+    }
     match args.subcommand.as_deref() {
         Some("optimize") => cmd_optimize(&args, &config, false),
         Some("execute") => cmd_optimize(&args, &config, true),
@@ -83,19 +89,23 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
     };
     let dags: Vec<Dag> = names.iter().map(|n| load_dag(n)).collect::<Result<_>>()?;
     let releases = vec![0.0; dags.len()];
-    let space = ConfigSpace::standard();
+    // --market swaps in the heterogeneous instance space + market
+    // pricing (spot rows priced with the --spot-rate expectation).
+    let space = config.space();
+    let cost_model = config.cost_model();
     let mut rng = Rng::new(config.seed);
 
     // Histories: one bootstrap profiling set per task (the paper's
-    // "triggered test run" when no prior log exists).
+    // "triggered test run" when no prior log exists); market runs add
+    // one anchor run per alternate family so cross-family extrapolation
+    // is grounded.
+    let profiling = agora::predictor::profiling_configs_for(&space);
     let logs: Vec<EventLog> = dags
         .iter()
         .flat_map(|d| {
             d.tasks
                 .iter()
-                .map(|t| {
-                    bootstrap_history(&t.name, &t.profile, &default_profiling_configs(), &mut rng)
-                })
+                .map(|t| bootstrap_history(&t.name, &t.profile, &profiling, &mut rng))
                 .collect::<Vec<_>>()
         })
         .collect();
@@ -116,7 +126,7 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
         grid,
         config.capacity,
         space,
-        CostModel::OnDemand,
+        cost_model.clone(),
     );
     let agora = Agora::new(AgoraOptions {
         goal: config.goal,
@@ -151,7 +161,7 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
             &p,
             &dags,
             &plan.schedule,
-            &CostModel::OnDemand,
+            &cost_model,
             &mut rng,
             &config.replan,
         );
@@ -161,6 +171,10 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
             fmt_cost(report.cost),
             report.prediction_mape * 100.0
         );
+        let preempted: u32 = report.records.iter().map(|r| r.preemptions).sum();
+        if preempted > 0 {
+            println!("spot preemptions: {preempted} (lost in-flight work re-run)");
+        }
         for r in &report.replans {
             println!(
                 "replan {}: trigger {} at {} (divergence {:.0}%)  cone {} task(s), {} reassigned  projected {} -> {}",
@@ -188,6 +202,8 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
         parallelism: config.parallelism,
         replan: config.replan.clone(),
         admission: config.admission,
+        space: config.space(),
+        cost_model: config.cost_model(),
         ..Default::default()
     });
     let handle = service.handle();
@@ -244,19 +260,21 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
 
     let mut base_runner = BatchRunner::new(
         params.batch_capacity(),
-        ConfigSpace::standard(),
+        config.space(),
         Strategy::Airflow,
         config.seed,
     )
+    .with_cost_model(config.cost_model())
     .with_replan(config.replan.clone())
     .with_admission(config.admission);
     let base = base_runner.run(&jobs)?;
     let mut agora_runner = BatchRunner::new(
         params.batch_capacity(),
-        ConfigSpace::standard(),
+        config.space(),
         Strategy::Agora(config.goal),
         config.seed,
     )
+    .with_cost_model(config.cost_model())
     .with_parallelism(config.parallelism)
     .with_replan(config.replan.clone())
     .with_admission(config.admission);
@@ -289,6 +307,12 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
         println!(
             "mid-flight replans: airflow {}  agora {}",
             base.replans, run.replans
+        );
+    }
+    if base.preemptions + run.preemptions > 0 {
+        println!(
+            "spot preemptions: airflow {}  agora {}",
+            base.preemptions, run.preemptions
         );
     }
 
@@ -333,6 +357,16 @@ fn cmd_catalog() -> Result<()> {
         "\nconfig space: {} candidates ({} instance types x {} node counts x {} Spark presets)",
         space.len(),
         agora::cluster::catalog::M5_CATALOG.len(),
+        agora::cluster::config::NODE_LADDER.len(),
+        agora::cluster::config::SPARK_PRESETS.len()
+    );
+    println!();
+    print!("{}", agora::cluster::catalog::market_table());
+    let market = ConfigSpace::market();
+    println!(
+        "\nmarket space (--market): {} candidates ({} catalog rows x {} node counts x {} Spark presets)",
+        market.len(),
+        agora::cluster::catalog::FULL_CATALOG.len(),
         agora::cluster::config::NODE_LADDER.len(),
         agora::cluster::config::SPARK_PRESETS.len()
     );

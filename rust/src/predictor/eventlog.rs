@@ -107,8 +107,10 @@ impl EventLog {
             };
             // Range-check the config against the catalog: a config that
             // parses but indexes out of range would panic at first use.
+            // Indexed against the full market catalog (m5 rows first, so
+            // historical logs keep their meaning).
             let instance = index_field("instance")?;
-            if instance >= crate::cluster::M5_CATALOG.len() {
+            if instance >= crate::cluster::FULL_CATALOG.len() {
                 bail!("instance index {instance} out of range in {}", ctx());
             }
             let nodes = index_field("nodes")?;
@@ -221,6 +223,39 @@ pub fn default_profiling_configs() -> Vec<Config> {
         Config { instance: 0, nodes: 4, spark: 0 },
         Config { instance: 0, nodes: 4, spark: 2 },
     ]
+}
+
+/// Market profiling configs: the [`default_profiling_configs`] set plus
+/// one balanced anchor run on each alternate family (c5, r5), so the
+/// per-family multipliers of the [`LearnedPredictor`] are identified
+/// before the optimizer is allowed to extrapolate across families.
+/// Kept separate from the default set so m5-only experiments keep their
+/// historical seeded RNG streams bit-for-bit.
+///
+/// [`LearnedPredictor`]: crate::predictor::LearnedPredictor
+pub fn market_profiling_configs() -> Vec<Config> {
+    let mut configs = default_profiling_configs();
+    let c5 = crate::cluster::catalog::index_by_name("c5.4xlarge")
+        .expect("c5.4xlarge is in the market catalog");
+    let r5 = crate::cluster::catalog::index_by_name("r5.4xlarge")
+        .expect("r5.4xlarge is in the market catalog");
+    configs.push(Config { instance: c5, nodes: 4, spark: 1 });
+    configs.push(Config { instance: r5, nodes: 4, spark: 1 });
+    configs
+}
+
+/// The profiling bootstrap appropriate for a candidate space: the
+/// m5-only Ernest set for m5-only spaces (bit-identical to the
+/// historical coordinator), [`market_profiling_configs`] when the space
+/// spans alternate families — so every front-end (CLI, `BatchRunner`,
+/// `Service`) grounds cross-family extrapolation before optimizing over
+/// it.
+pub fn profiling_configs_for(space: &crate::cluster::ConfigSpace) -> Vec<Config> {
+    if space.instance_count() > crate::cluster::M5_CATALOG.len() {
+        market_profiling_configs()
+    } else {
+        default_profiling_configs()
+    }
 }
 
 #[cfg(test)]

@@ -13,13 +13,14 @@ pub mod basis;
 pub mod eventlog;
 pub mod nnls;
 
-use crate::cluster::{Config, ConfigSpace};
+use crate::cluster::{Config, ConfigSpace, Family};
 use crate::dag::profile::usl_penalty;
 use crate::dag::TaskProfile;
 
 pub use basis::{config_basis, ernest_basis, K};
 pub use eventlog::{
-    bootstrap_history, default_profiling_configs, scoped_task_name, simulate_run, EventLog,
+    bootstrap_history, default_profiling_configs, market_profiling_configs,
+    profiling_configs_for, scoped_task_name, simulate_run, EventLog,
 };
 
 /// Floor for predicted runtimes (mirrors python ref.EPS).
@@ -54,33 +55,52 @@ impl Grid {
 }
 
 /// Fitted per-task model parameters — exactly the tensors the L1 kernel
-/// consumes (theta row, USL row), plus per-Spark-preset multipliers.
+/// consumes (theta row, USL row), plus per-Spark-preset and per-family
+/// multipliers.
 ///
-/// The preset effect is multiplicative in runtime; because the kernel is
-/// linear in (theta, gamma) jointly, a preset multiplier folds exactly
-/// into a scaled (theta, gamma) row — the PJRT path expands each task
-/// into one row per preset and the kernel contract stays unchanged.
+/// The preset and family effects are multiplicative in runtime; because
+/// the kernel is linear in (theta, gamma) jointly, such multipliers fold
+/// exactly into a scaled (theta, gamma) row or an output scale — the
+/// PJRT path expands each task into one row per preset, post-scales the
+/// kernel output per config, and the kernel contract stays unchanged.
 #[derive(Debug, Clone)]
 pub struct FittedTask {
-    /// Ernest NNLS coefficients over the config basis.
+    /// Ernest NNLS coefficients over the config basis. The fit targets
+    /// are **speed-normalized** (`runtime x speed_factor`), so theta
+    /// models family-neutral work-time; the family speed divides back
+    /// out at prediction time ([`model_runtime`]).
     pub theta: [f64; K],
     /// (gamma, alpha, beta, mix) — see python/compile/kernels/ref.py.
     pub usl: [f64; 4],
     /// Runtime multiplier per Spark preset (index = preset id),
     /// relative to the balanced preset the Ernest fit is trained on.
     pub preset_mult: [f64; 3],
+    /// Residual runtime multiplier per instance family
+    /// (index = [`Family::index`]), relative to the speed-scaled model:
+    /// captures effects the speed factor alone misses (e.g. r5's extra
+    /// memory relieving spill for memory-bound tasks). 1.0 when the
+    /// history holds no runs of that family — bit-identical to the
+    /// family-blind model on m5-only histories.
+    pub family_mult: [f64; Family::COUNT],
 }
 
 /// Evaluate the canonical predictor model for one (task, config) pair.
-/// MUST match `predict_grid_ref` in python/compile/kernels/ref.py (the
-/// preset multiplier is equivalent to scaling theta and gamma, which is
-/// exactly how the PJRT path feeds it to the kernel).
+/// The basis contraction MUST match `predict_grid_ref` in
+/// python/compile/kernels/ref.py; the preset, family and speed scalings
+/// are output multipliers (equivalent to scaling theta and gamma), which
+/// is exactly how the PJRT path applies them around the kernel.
 pub fn model_runtime(fit: &FittedTask, cfg: &Config) -> f64 {
     let phi = config_basis(cfg);
     let ernest = basis::dot(&fit.theta, &phi);
     let [gamma, alpha, beta, mix] = fit.usl;
     let pen = usl_penalty(cfg.n_eff(), alpha, beta);
-    let mult = fit.preset_mult[cfg.spark.min(2)];
+    let it = cfg.instance_type();
+    // The model predicts speed-normalized work-time; a faster family
+    // divides it back out — mirroring how the simulated ground truth
+    // applies `speed_factor` (dag/profile.rs). For m5 every multiplier
+    // here is exactly 1.0 and the historical predictions are unchanged.
+    let mult = fit.preset_mult[cfg.spark.min(2)] * fit.family_mult[it.family.index()]
+        / it.speed_factor.max(1e-6);
     ((mix * ernest + (1.0 - mix) * gamma * pen) * mult).max(EPS)
 }
 
@@ -135,13 +155,18 @@ const PRIOR_BETA: f64 = 0.005;
 impl LearnedPredictor {
     /// Fit one task from its event log.
     ///
-    /// Two-stage fit: (1) NNLS Ernest coefficients over the balanced-
-    /// preset samples (scaling with nodes/instances), (2) multiplicative
-    /// preset factors from the preset-varied samples — the runtime ratio
-    /// observed at matched (instance, nodes). Preset effects are
-    /// multiplicative in the ground truth (executor-shape efficiency),
-    /// so a ratio estimate converges far faster than forcing the
-    /// additive basis to absorb them.
+    /// Three-stage fit: (1) NNLS Ernest coefficients over the balanced-
+    /// preset samples (scaling with nodes/instances), on **speed-
+    /// normalized** targets (`runtime x speed_factor`) so one curve
+    /// covers every family; (2) multiplicative preset factors from the
+    /// preset-varied samples — the runtime ratio observed at matched
+    /// (instance, nodes); (3) residual per-family multipliers from any
+    /// c5/r5 samples (memory relief, cache effects — whatever the speed
+    /// factor alone misses). Preset and family effects are multiplicative
+    /// in the ground truth, so ratio estimates converge far faster than
+    /// forcing the additive basis to absorb them. On m5-only histories
+    /// every new multiplier is exactly 1.0 and the fit is bit-identical
+    /// to the family-blind predictor.
     pub fn fit_task(log: &EventLog) -> FittedTask {
         assert!(!log.is_empty(), "predictor requires >= 1 prior run");
         // Stage 1: Ernest NNLS over balanced-preset samples (fall back
@@ -154,15 +179,19 @@ impl LearnedPredictor {
             balanced
         };
         let x: Vec<[f64; K]> = train.iter().map(|r| config_basis(&r.config)).collect();
-        let y: Vec<f64> = train.iter().map(|r| r.runtime).collect();
+        let y: Vec<f64> = train
+            .iter()
+            .map(|r| r.runtime * r.config.instance_type().speed_factor)
+            .collect();
         let theta = nnls::fit_one(&x, &y, nnls::DEFAULT_ITERS);
 
         // USL part: gamma chosen so the prior-shaped curve passes through
-        // the most recent observation; alpha/beta from priors (they become
-        // identifiable only through the Ernest term as history grows).
+        // the most recent observation (speed-normalized like the Ernest
+        // targets); alpha/beta from priors (they become identifiable only
+        // through the Ernest term as history grows).
         let last = train.last().unwrap();
         let pen = usl_penalty(last.config.n_eff(), PRIOR_ALPHA, PRIOR_BETA);
-        let gamma = last.runtime / pen.max(1e-9);
+        let gamma = last.runtime * last.config.instance_type().speed_factor / pen.max(1e-9);
 
         // Trust the Ernest fit more as history grows: mix = S / (S + 2).
         let s = train.len() as f64;
@@ -170,10 +199,11 @@ impl LearnedPredictor {
 
         // Stage 2: preset multipliers — geometric mean of observed /
         // predicted-balanced ratios at each sampled preset.
-        let base_fit = FittedTask {
+        let mut fit = FittedTask {
             theta,
             usl: [gamma, PRIOR_ALPHA, PRIOR_BETA, mix],
             preset_mult: [1.0; 3],
+            family_mult: [1.0; Family::COUNT],
         };
         let mut preset_mult = [1.0f64; 3];
         for preset in [0usize, 2] {
@@ -184,7 +214,7 @@ impl LearnedPredictor {
                 .map(|r| {
                     let mut balanced_cfg = r.config;
                     balanced_cfg.spark = 1;
-                    r.runtime / model_runtime(&base_fit, &balanced_cfg).max(1e-9)
+                    r.runtime / model_runtime(&fit, &balanced_cfg).max(1e-9)
                 })
                 .collect();
             if !ratios.is_empty() {
@@ -192,11 +222,25 @@ impl LearnedPredictor {
                 preset_mult[preset] = g.clamp(0.25, 4.0);
             }
         }
+        fit.preset_mult = preset_mult;
 
-        FittedTask {
-            preset_mult,
-            ..base_fit
+        // Stage 3: residual family multipliers (m5 is the anchor at 1.0)
+        // — geometric mean of observed / speed-scaled-model ratios over
+        // that family's samples.
+        for family in [Family::C5, Family::R5] {
+            let ratios: Vec<f64> = log
+                .runs
+                .iter()
+                .filter(|r| r.config.family() == family)
+                .map(|r| r.runtime / model_runtime(&fit, &r.config).max(1e-9))
+                .collect();
+            if !ratios.is_empty() {
+                let g = (ratios.iter().map(|x| x.ln()).sum::<f64>() / ratios.len() as f64).exp();
+                fit.family_mult[family.index()] = g.clamp(0.25, 4.0);
+            }
         }
+
+        fit
     }
 
     /// Fit one model per event log, in order.
@@ -370,6 +414,7 @@ mod tests {
             theta: [0.0; K],
             usl: [0.0, 0.0, 0.0, 1.0],
             preset_mult: [1.0; 3],
+            family_mult: [1.0; Family::COUNT],
         };
         let cfg = Config {
             instance: 0,
@@ -377,5 +422,81 @@ mod tests {
             spark: 1,
         };
         assert_eq!(model_runtime(&fit, &cfg), EPS);
+    }
+
+    #[test]
+    fn m5_only_history_fits_neutral_family_multipliers() {
+        // The family extension must be invisible on historical m5-only
+        // logs: every family multiplier stays exactly 1.0.
+        let mut rng = Rng::new(21);
+        let log = bootstrap_history(
+            "t",
+            &JobKind::SentimentAnalysis.profile(),
+            &training_configs(),
+            &mut rng,
+        );
+        let fit = LearnedPredictor::fit_task(&log);
+        assert_eq!(fit.family_mult, [1.0; Family::COUNT]);
+    }
+
+    #[test]
+    fn speed_factor_scales_predictions_down_on_faster_families() {
+        // Pure algebra (no fitting): with the speed-sensitive basis
+        // features zeroed, a c5 prediction is exactly the m5 prediction
+        // divided by the c5 speed factor.
+        let mut theta = [0.0; K];
+        theta[0] = 100.0;
+        theta[1] = 50.0;
+        let fit = FittedTask {
+            theta,
+            usl: [0.0, 0.0, 0.0, 1.0],
+            preset_mult: [1.0; 3],
+            family_mult: [1.0; Family::COUNT],
+        };
+        let m5 = Config { instance: 0, nodes: 2, spark: 1 };
+        let c5_idx = crate::cluster::catalog::index_by_name("c5.4xlarge").unwrap();
+        let c5 = Config { instance: c5_idx, nodes: 2, spark: 1 };
+        // Neutralize the speed/memory basis features so the contraction
+        // is family-invariant and only the output scaling differs.
+        let pred_m5 = model_runtime(&fit, &m5);
+        let pred_c5 = model_runtime(&fit, &c5);
+        let speed = c5.instance_type().speed_factor;
+        assert!(
+            (pred_c5 - pred_m5 / speed).abs() < 1e-9,
+            "c5 {pred_c5} should be m5 {pred_m5} / {speed}"
+        );
+    }
+
+    #[test]
+    fn family_samples_anchor_family_predictions_to_ground_truth() {
+        // A noise-free history with one balanced run per alternate
+        // family: the stage-3 ratio correction makes the prediction at
+        // each sampled family config exactly the observed ground truth.
+        let profile = TaskProfile {
+            noise_sigma: 0.0,
+            ..TaskProfile::example()
+        };
+        let mut configs = training_configs();
+        let c5_idx = crate::cluster::catalog::index_by_name("c5.4xlarge").unwrap();
+        let r5_idx = crate::cluster::catalog::index_by_name("r5.4xlarge").unwrap();
+        let c5 = Config { instance: c5_idx, nodes: 4, spark: 1 };
+        let r5 = Config { instance: r5_idx, nodes: 4, spark: 1 };
+        configs.push(c5);
+        configs.push(r5);
+        let mut rng = Rng::new(5);
+        let log = bootstrap_history("t", &profile, &configs, &mut rng);
+        let fit = LearnedPredictor::fit_task(&log);
+        for cfg in [c5, r5] {
+            let truth = profile.runtime(&cfg);
+            let pred = model_runtime(&fit, &cfg);
+            assert!(
+                (pred - truth).abs() / truth < 1e-6,
+                "sampled family config should be ratio-anchored: pred {pred} truth {truth}"
+            );
+        }
+        // The learned multipliers moved off the neutral anchor.
+        assert!(fit.family_mult[Family::C5.index()] != 1.0);
+        assert!(fit.family_mult[Family::R5.index()] != 1.0);
+        assert_eq!(fit.family_mult[Family::M5.index()], 1.0);
     }
 }

@@ -11,6 +11,13 @@
 //! read from the row matching config c's preset. The kernel contract is
 //! untouched. Tasks are processed in chunks when the expansion exceeds
 //! the artifact variant's static row count.
+//!
+//! Family/speed scaling: the host model predicts speed-normalized
+//! work-time and scales by `family_mult / speed_factor` per config
+//! (`predictor::model_runtime`). Both are per-config *output* scalings,
+//! so the PJRT path applies them to the kernel result after execution —
+//! again without touching the kernel contract — and speed-normalizes the
+//! on-device fit targets exactly like the host fit does.
 
 use anyhow::Result;
 
@@ -94,11 +101,17 @@ impl<'e> PjrtPredictor<'e> {
                 ],
             )?;
             let flat = &outputs[0];
-            for t in 0..chunk.len() {
+            for (t, fit) in chunk.iter().enumerate() {
                 let row_of = |c: usize| t * PRESETS + space.configs[c].spark.min(PRESETS - 1);
                 durations.push(
                     (0..c_real)
-                        .map(|c| flat[row_of(c) * c_pad + c] as f64)
+                        .map(|c| {
+                            let it = space.configs[c].instance_type();
+                            let scale = fit.family_mult[it.family.index()]
+                                / it.speed_factor.max(1e-6);
+                            (flat[row_of(c) * c_pad + c] as f64 * scale)
+                                .max(crate::predictor::EPS)
+                        })
                         .collect(),
                 );
             }
@@ -140,7 +153,9 @@ impl<'e> PjrtPredictor<'e> {
                     for (k, &b) in basis.iter().enumerate() {
                         x[(t * s_pad + s_i) * K + k] = b as f32;
                     }
-                    y[t * s_pad + s_i] = run.runtime as f32;
+                    // Speed-normalized targets, matching the host fit.
+                    y[t * s_pad + s_i] =
+                        (run.runtime * run.config.instance_type().speed_factor) as f32;
                     s_i += 1;
                 }
                 if s_i == 0 {
@@ -150,7 +165,8 @@ impl<'e> PjrtPredictor<'e> {
                         for (k, &b) in basis.iter().enumerate() {
                             x[(t * s_pad + s_i) * K + k] = b as f32;
                         }
-                        y[t * s_pad + s_i] = run.runtime as f32;
+                        y[t * s_pad + s_i] =
+                            (run.runtime * run.config.instance_type().speed_factor) as f32;
                         s_i += 1;
                     }
                 }
@@ -182,6 +198,7 @@ impl<'e> PjrtPredictor<'e> {
                     theta,
                     usl: host.usl,
                     preset_mult: host.preset_mult,
+                    family_mult: host.family_mult,
                 });
             }
         }

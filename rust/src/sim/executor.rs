@@ -35,6 +35,9 @@ pub struct TaskRecord {
     pub predicted: f64,
     /// Failed attempts absorbed before the successful run.
     pub retries: u32,
+    /// Spot preemptions absorbed (lost in-flight work re-run); 0 on
+    /// reliable capacity.
+    pub preemptions: u32,
 }
 
 impl TaskRecord {
@@ -125,6 +128,32 @@ pub fn execute_with_policy(
                 s.1 *= divergence[t].modifier;
             }
         }
+    }
+
+    // Spot preemptions: a seeded per-task arrival process on every task
+    // occupying spot capacity (a spot catalog row, or any row under the
+    // global CostModel::Spot ablation). Lost in-flight work is re-run,
+    // inflating the realized runtime; the draws use per-task derived
+    // streams, so the main rng and the straggler/failure stream are
+    // untouched and an off spec leaves every runtime bit-identical.
+    let global_spot = matches!(cost_model, CostModel::Spot { .. });
+    let mut preemptions = vec![0u32; n];
+    let mut spot_mult = vec![1.0f64; n];
+    for t in 0..n {
+        let cfg = &p.space.configs[assignment[t]];
+        let on_spot = global_spot || cfg.is_spot();
+        let (mult, hits) =
+            policy
+                .divergence
+                .draw_spot(t, on_spot, cfg.nodes as f64, runtimes[t]);
+        if mult != 1.0 {
+            runtimes[t] *= mult;
+            for s in stages_of[t].iter_mut() {
+                s.1 *= mult;
+            }
+        }
+        spot_mult[t] = mult;
+        preemptions[t] = hits;
     }
 
     // Capacity-outage blocker rectangle, if any.
@@ -297,6 +326,25 @@ pub fn execute_with_policy(
                             }
                         }
                         stages_of[u] = stages;
+                        // The new machine shape changes the task's spot
+                        // exposure: re-draw its preemption realization
+                        // (the per-task stream keeps this deterministic
+                        // and leaves every other task untouched).
+                        let on_spot = global_spot || cfg.is_spot();
+                        let (mult, hits) = policy.divergence.draw_spot(
+                            u,
+                            on_spot,
+                            cfg.nodes as f64,
+                            runtimes[u],
+                        );
+                        if mult != 1.0 {
+                            runtimes[u] *= mult;
+                            for s in stages_of[u].iter_mut() {
+                                s.1 *= mult;
+                            }
+                        }
+                        spot_mult[u] = mult;
+                        preemptions[u] = hits;
                     }
                     plan_start[u] = suffix.start[u];
                     expected_end[u] = suffix.start[u] + p.duration(u, assignment[u]);
@@ -329,22 +377,44 @@ pub fn execute_with_policy(
             runtime: runtimes[t],
             predicted: p.duration(t, assignment[t]),
             retries: divergence[t].retries,
+            preemptions: preemptions[t],
         })
         .collect();
 
-    // Event logs carry the configuration each task actually ran under.
+    // Event logs carry the configuration each task actually ran under
+    // and its PRODUCTIVE runtime: spot-preemption re-run inflation is
+    // divided back out before feedback, because the planner prices that
+    // risk separately (Problem::new re-inflates predicted spot rows by
+    // the expected overhead) — feeding inflated observations to the
+    // predictor would double-count it round over round. Straggler/retry
+    // inflation stays in, as before: those are genuine observed runs.
     let new_logs: Vec<EventLog> = (0..n)
         .map(|t| {
             let mut log = EventLog::new(&p.tasks[t].name);
-            log.record(p.space.configs[assignment[t]], runtimes[t], stages_of[t].clone());
+            let (rt, stages) = if spot_mult[t] != 1.0 {
+                let m = spot_mult[t];
+                (
+                    runtimes[t] / m,
+                    stages_of[t]
+                        .iter()
+                        .map(|(name, secs)| (name.clone(), secs / m))
+                        .collect(),
+                )
+            } else {
+                (runtimes[t], stages_of[t].clone())
+            };
+            log.record(p.space.configs[assignment[t]], rt, stages);
             log
         })
         .collect();
 
     let makespan = records.iter().map(|r| r.end()).fold(0.0, f64::max);
+    // Realized accounting: pay for the capacity actually held (re-runs
+    // are already inside the realized runtimes — the planner-side
+    // expectation term of CostModel::Spot must not double-charge them).
     let cost = records
         .iter()
-        .map(|r| cost_model.cost(&p.space.configs[r.config], r.runtime))
+        .map(|r| cost_model.realized_cost(&p.space.configs[r.config], r.runtime))
         .sum();
     let dag_completion = (0..dags.len())
         .map(|d| {
@@ -605,6 +675,82 @@ mod tests {
     }
 
     #[test]
+    fn pinned_spot_preemption_inflates_by_exactly_half_a_run() {
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let base = execute(&p, &dags, &s, &CostModel::OnDemand, &mut Rng::new(21));
+        let policy = ReplanPolicy {
+            divergence: DivergenceSpec {
+                spot_tasks: vec![2],
+                ..Default::default()
+            },
+            ..ReplanPolicy::off()
+        };
+        let hit = execute_with_policy(
+            &p,
+            &dags,
+            &s,
+            &CostModel::OnDemand,
+            &mut Rng::new(21),
+            &policy,
+        );
+        assert_eq!(hit.records[2].preemptions, 1);
+        assert!(
+            (hit.records[2].runtime - 1.5 * base.records[2].runtime).abs() < 1e-9,
+            "preempted runtime {} vs base {}",
+            hit.records[2].runtime,
+            base.records[2].runtime
+        );
+        assert!(hit
+            .records
+            .iter()
+            .all(|r| r.task == 2 || r.preemptions == 0));
+        // Predictor feedback carries the PRODUCTIVE runtime (re-run
+        // inflation excluded — the cost model prices it separately), so
+        // the adaptive loop cannot double-count spot risk.
+        assert!(
+            (hit.new_logs[2].runs[0].runtime - base.records[2].runtime).abs() < 1e-9,
+            "fed-back runtime {} should be the productive {}",
+            hit.new_logs[2].runs[0].runtime,
+            base.records[2].runtime
+        );
+    }
+
+    #[test]
+    fn global_spot_model_realizes_preemptions_and_charges_occupancy() {
+        // Under the global Spot ablation every node is spot: the seeded
+        // interruption process fires, and the realized cost is exactly
+        // discount x price x realized occupancy (re-runs included, no
+        // double-charged expectation term).
+        let (p, dags) = setup();
+        let s = plan(&p);
+        let model = CostModel::Spot {
+            discount: 0.3,
+            interrupt_rate: 2.0,
+        };
+        let policy = ReplanPolicy {
+            divergence: DivergenceSpec {
+                spot_rate: 2.0,
+                seed: 23,
+                ..Default::default()
+            },
+            ..ReplanPolicy::off()
+        };
+        let rep = execute_with_policy(&p, &dags, &s, &model, &mut Rng::new(22), &policy);
+        let manual: f64 = rep
+            .records
+            .iter()
+            .map(|r| p.space.configs[r.config].hourly_cost() * 0.3 * r.runtime / 3600.0)
+            .sum();
+        assert!((rep.cost - manual).abs() < 1e-9);
+        // At rate 2/node-hour on 8-node configs, the batch sees
+        // preemptions with overwhelming probability (seeded, so stable).
+        let total: u32 = rep.records.iter().map(|r| r.preemptions).sum();
+        assert!(total >= 1, "expected at least one preemption, got {total}");
+        assert!(rep.records.iter().all(|r| r.preemptions <= 2));
+    }
+
+    #[test]
     fn execution_packs_around_admission_reservations() {
         // A full-capacity reservation over [0, 100) (another round's
         // in-flight work under continuous admission): no task of this
@@ -637,6 +783,7 @@ mod tests {
                 runtime: 0.0,
                 predicted: 0.0,
                 retries: 0,
+                preemptions: 0,
             },
             TaskRecord {
                 task: 1,
@@ -645,6 +792,7 @@ mod tests {
                 runtime: 10.0,
                 predicted: f64::NAN,
                 retries: 0,
+                preemptions: 0,
             },
             TaskRecord {
                 task: 2,
@@ -653,6 +801,7 @@ mod tests {
                 runtime: 1e-12,
                 predicted: f64::INFINITY,
                 retries: 0,
+                preemptions: 0,
             },
         ];
         let mape = mean_absolute_prediction_error(&records);

@@ -57,6 +57,25 @@ pub struct DivergenceSpec {
     pub fail_tasks: Vec<usize>,
     /// Optional capacity-loss window.
     pub outage: Option<CapacityOutage>,
+    /// Spot-market interruption intensity: expected preemptions per
+    /// **spot node-hour** (0 = spot capacity never reclaimed). Realized
+    /// as a seeded Poisson arrival process per spot task — each
+    /// preemption loses the in-flight work (a uniform fraction of the
+    /// run) which is re-run, matching the closed-form expectation of
+    /// [`CostModel::Spot`](crate::cluster::CostModel) /
+    /// [`expected_spot_overhead`](crate::cluster::expected_spot_overhead).
+    pub spot_rate: f64,
+    /// Cap on charged preemptions per task (the coordinator falls back
+    /// to stable capacity afterwards). Defaults to the canonical
+    /// [`SPOT_PREEMPTION_CAP`](crate::cluster::cost::SPOT_PREEMPTION_CAP)
+    /// the cost model's closed form always prices; the differential test
+    /// in tests/market.rs pins the two against each other. A different
+    /// value here is an executor-side stress knob: realized costs then
+    /// deliberately diverge from the priced expectation.
+    pub spot_max: u32,
+    /// Flat task indices preempted exactly once unconditionally, losing
+    /// exactly half the run (the expected loss) — pinned scenarios.
+    pub spot_tasks: Vec<usize>,
     /// Seed of the divergence stream.
     pub seed: u64,
 }
@@ -70,6 +89,9 @@ impl Default for DivergenceSpec {
             fail_prob: 0.0,
             fail_tasks: Vec::new(),
             outage: None,
+            spot_rate: 0.0,
+            spot_max: crate::cluster::cost::SPOT_PREEMPTION_CAP,
+            spot_tasks: Vec::new(),
             seed: 0xD117,
         }
     }
@@ -94,6 +116,63 @@ impl DivergenceSpec {
             && self.fail_prob <= 0.0
             && self.fail_tasks.is_empty()
             && self.outage.is_none()
+            && self.spot_rate <= 0.0
+            && self.spot_tasks.is_empty()
+    }
+
+    /// Realize the spot-preemption process for one task: returns the
+    /// runtime multiplier (1 + re-run work, one uniform fraction of the
+    /// run per preemption) and the number of charged preemptions
+    /// (capped at [`spot_max`](DivergenceSpec::spot_max)).
+    ///
+    /// `on_spot` says whether the task actually occupies spot capacity
+    /// (a spot catalog row, or any row under the global
+    /// `CostModel::Spot` ablation); `nodes` scales the arrival
+    /// intensity (any reclaimed node of the gang preempts the task);
+    /// `runtime` is the productive runtime exposed to the market.
+    ///
+    /// Draws come from a per-`(seed, task)` derived stream — independent
+    /// of the main execution stream and of draw *order*, so a mid-flight
+    /// replan that re-draws a reassigned task perturbs nothing else and
+    /// seeded executions stay bit-reproducible.
+    pub fn draw_spot(
+        &self,
+        task: usize,
+        on_spot: bool,
+        nodes: f64,
+        runtime: f64,
+    ) -> (f64, u32) {
+        // `spot_max == 0` disables realized preemptions entirely (pins
+        // included): `preemptions <= spot_max` holds unconditionally.
+        let cap = self.spot_max;
+        if cap == 0 {
+            return (1.0, 0);
+        }
+        let mut multiplier = 1.0f64;
+        let mut preemptions = 0u32;
+        if self.spot_tasks.contains(&task) {
+            // Pinned preemption: lose exactly the expected half-run.
+            multiplier += 0.5;
+            preemptions = 1;
+        }
+        if on_spot && self.spot_rate > 0.0 && runtime > 0.0 && preemptions < cap {
+            let lambda = self.spot_rate * nodes * runtime / 3600.0;
+            let mut rng = Rng::new(spot_stream_seed(self.seed, task));
+            // Poisson arrivals via unit-exponential inter-arrival sums;
+            // stop at the cap (only min(N, cap) is ever charged).
+            let mut acc = 0.0f64;
+            while preemptions < cap {
+                acc += rng.exponential(1.0);
+                if acc > lambda {
+                    break;
+                }
+                // Work since the last checkpoint is lost and re-run: a
+                // uniform fraction of the run, half in expectation.
+                multiplier += rng.f64();
+                preemptions += 1;
+            }
+        }
+        (multiplier, preemptions)
     }
 
     /// Per-task runtime modifiers, drawn in flat task order from the
@@ -225,6 +304,13 @@ pub struct SuffixPlan {
 /// `solver::anneal::chain_seed`).
 fn round_seed(seed: u64, round: usize) -> u64 {
     seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(round as u64))
+}
+
+/// Per-(seed, task) stream for the spot-preemption process: salted so it
+/// never collides with the straggler/failure stream seeded directly from
+/// `DivergenceSpec::seed`.
+fn spot_stream_seed(seed: u64, task: usize) -> u64 {
+    round_seed(seed ^ 0x5B07_AB1E_0000_0001, task.wrapping_add(1))
 }
 
 /// Evaluate one cone assignment: (projected makespan, cone cost), memoized
@@ -405,5 +491,93 @@ mod tests {
             assert_eq!(d.retries, 0);
             assert!(!d.straggled);
         }
+    }
+
+    #[test]
+    fn spot_rate_arms_the_spec() {
+        let spec = DivergenceSpec {
+            spot_rate: 1.0,
+            ..Default::default()
+        };
+        assert!(!spec.is_off());
+        let pinned = DivergenceSpec {
+            spot_tasks: vec![3],
+            ..Default::default()
+        };
+        assert!(!pinned.is_off());
+    }
+
+    #[test]
+    fn spot_draw_is_deterministic_and_order_independent() {
+        let spec = DivergenceSpec {
+            spot_rate: 3.0,
+            seed: 99,
+            ..Default::default()
+        };
+        // Same (seed, task) -> same draw, regardless of any other draws
+        // in between (per-task derived streams).
+        let a = spec.draw_spot(5, true, 2.0, 1800.0);
+        let _ = spec.draw_spot(7, true, 1.0, 3600.0);
+        let b = spec.draw_spot(5, true, 2.0, 1800.0);
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1, b.1);
+    }
+
+    #[test]
+    fn spot_draw_respects_cap_and_bounds() {
+        let spec = DivergenceSpec {
+            spot_rate: 1e6, // essentially certain preemption pressure
+            seed: 7,
+            ..Default::default()
+        };
+        for task in 0..64 {
+            let (mult, n) = spec.draw_spot(task, true, 4.0, 3600.0);
+            assert!(n <= spec.spot_max, "task {task}: {n} preemptions");
+            assert!(mult >= 1.0);
+            // At most spot_max whole re-runs of lost work.
+            assert!(mult <= 1.0 + spec.spot_max as f64);
+        }
+        // Saturating pressure: the cap itself is essentially always hit.
+        let hits = (0..64)
+            .filter(|&t| spec.draw_spot(t, true, 4.0, 3600.0).1 == spec.spot_max)
+            .count();
+        assert!(hits >= 60, "only {hits}/64 tasks hit the cap at rate 1e6");
+    }
+
+    #[test]
+    fn spot_draw_is_inert_off_spot_or_at_zero_rate() {
+        let spec = DivergenceSpec {
+            spot_rate: 5.0,
+            ..Default::default()
+        };
+        // Not on spot capacity: nothing happens even at a high rate.
+        assert_eq!(spec.draw_spot(0, false, 4.0, 3600.0), (1.0, 0));
+        let off = DivergenceSpec::default();
+        assert_eq!(off.draw_spot(0, true, 4.0, 3600.0), (1.0, 0));
+    }
+
+    #[test]
+    fn spot_max_zero_disables_realized_preemptions_entirely() {
+        // The preemptions <= spot_max invariant must hold at 0 too —
+        // for the rate process AND for pinned tasks.
+        let spec = DivergenceSpec {
+            spot_rate: 100.0,
+            spot_max: 0,
+            spot_tasks: vec![0],
+            ..Default::default()
+        };
+        for task in 0..4 {
+            assert_eq!(spec.draw_spot(task, true, 8.0, 3600.0), (1.0, 0));
+        }
+    }
+
+    #[test]
+    fn pinned_spot_task_loses_exactly_half_a_run() {
+        let spec = DivergenceSpec {
+            spot_tasks: vec![2],
+            ..Default::default()
+        };
+        assert_eq!(spec.draw_spot(2, false, 1.0, 100.0), (1.5, 1));
+        assert_eq!(spec.draw_spot(1, false, 1.0, 100.0), (1.0, 0));
     }
 }

@@ -119,8 +119,15 @@ impl AnnealParams {
 
 /// Propose a neighbour of a config assignment: half the time a uniform
 /// re-draw of one task's config, half the time a single-dimension tweak
-/// (node-ladder step / instance step / Spark preset) — the classic SA
+/// (node-ladder step / instance step / Spark preset / — on spot-bearing
+/// market spaces — purchase-option toggle) — the classic SA
 /// neighbourhood that makes small cost/runtime trades discoverable.
+///
+/// The tweak dimensions and the instance-step bound derive from the
+/// problem's *space*, not the global catalog: on the historical m5-only
+/// space the proposal distribution (and thus every seeded walk) is
+/// bit-identical to the pre-market implementation; the purchase-toggle
+/// dimension only exists when the space actually sells spot capacity.
 pub fn propose(
     p: &Problem,
     current: &[usize],
@@ -128,6 +135,8 @@ pub fn propose(
     rng: &mut Rng,
 ) -> Vec<usize> {
     let mut proposal = current.to_vec();
+    let instance_count = p.instance_count();
+    let tweak_dims = if p.space_has_spot() { 4 } else { 3 };
     for _ in 0..moves {
         let t = rng.below(p.len());
         let cur = p.space.configs[proposal[t]];
@@ -136,11 +145,12 @@ pub fn propose(
         } else {
             // Tweak one dimension; fall back to uniform if the tweaked
             // config is not in the feasible set.
+            let ladder = crate::cluster::config::NODE_LADDER;
+            let presets = crate::cluster::config::SPARK_PRESETS.len();
             let mut cfg = cur;
-            match rng.below(3) {
+            match rng.below(tweak_dims) {
                 0 => {
                     // node ladder step
-                    let ladder = crate::cluster::config::NODE_LADDER;
                     let pos = ladder.iter().position(|&n| n == cfg.nodes).unwrap_or(0);
                     let next = if rng.chance(0.5) {
                         pos.saturating_sub(1)
@@ -150,19 +160,39 @@ pub fn propose(
                     cfg.nodes = ladder[next];
                 }
                 1 => {
-                    let count = crate::cluster::catalog::M5_CATALOG.len();
                     cfg.instance = if rng.chance(0.5) {
                         cfg.instance.saturating_sub(1)
                     } else {
-                        (cfg.instance + 1).min(count - 1)
+                        (cfg.instance + 1).min(instance_count - 1)
                     };
                 }
+                2 => {
+                    cfg.spark = rng.below(presets);
+                }
                 _ => {
-                    cfg.spark = rng.below(crate::cluster::config::SPARK_PRESETS.len());
+                    // Purchase-option toggle: same family and shape, the
+                    // other market (no-op for sizes without a spot twin).
+                    if let Some(alt) = crate::cluster::catalog::purchase_toggle(cfg.instance)
+                    {
+                        cfg.instance = alt;
+                    }
                 }
             }
-            match p.space.configs.iter().position(|c| *c == cfg) {
-                Some(idx) if p.feasible.contains(&idx) => idx,
+            // Index of the tweaked config: O(1) closed form for the
+            // dense instance-major layout of `ConfigSpace::enumerate`
+            // (standard and market spaces), verified by an equality
+            // check so sparse custom spaces fall back to the scan.
+            let dense = ladder
+                .iter()
+                .position(|&n| n == cfg.nodes)
+                .map(|lp| (cfg.instance * ladder.len() + lp) * presets + cfg.spark)
+                .filter(|&i| p.space.configs.get(i) == Some(&cfg));
+            let found =
+                dense.or_else(|| p.space.configs.iter().position(|c| *c == cfg));
+            match found {
+                // `feasible` is ascending by construction (a filtered
+                // index range), so membership is a binary search.
+                Some(idx) if p.feasible.binary_search(&idx).is_ok() => idx,
                 _ => p.feasible[rng.below(p.feasible.len())],
             }
         };
@@ -917,6 +947,49 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn propose_explores_the_market_including_purchase_toggles() {
+        use crate::cluster::Config;
+        let dags = vec![dag1()];
+        let space = ConfigSpace::market();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::Market { interrupt_rate: 1.0 },
+        );
+        // Start every task on a spot config; the toggle move must reach
+        // its on-demand twin, and every proposal must stay feasible.
+        let spot_idx = crate::cluster::catalog::index_by_name("c5.4xlarge:spot").unwrap();
+        let od_idx = crate::cluster::catalog::index_by_name("c5.4xlarge").unwrap();
+        let start_cfg = Config { instance: spot_idx, nodes: 2, spark: 1 };
+        let twin_cfg = Config { instance: od_idx, nodes: 2, spark: 1 };
+        let start = p
+            .space
+            .configs
+            .iter()
+            .position(|c| *c == start_cfg)
+            .unwrap();
+        let twin = p.space.configs.iter().position(|c| *c == twin_cfg).unwrap();
+        assert!(p.feasible.contains(&start) && p.feasible.contains(&twin));
+
+        let current = vec![start; p.len()];
+        let mut rng = Rng::new(77);
+        let mut saw_twin = false;
+        for _ in 0..500 {
+            let proposal = propose(&p, &current, 1, &mut rng);
+            for &c in &proposal {
+                assert!(p.feasible.contains(&c), "infeasible proposal {c}");
+            }
+            saw_twin |= proposal.contains(&twin);
+        }
+        assert!(saw_twin, "purchase toggle never reached the on-demand twin");
     }
 
     #[test]

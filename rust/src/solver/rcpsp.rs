@@ -62,11 +62,24 @@ pub struct Problem {
     pub floor: f64,
     preds: Vec<Vec<usize>>,
     succs: Vec<Vec<usize>>,
+    /// Cached `space.instance_count()` — the SA proposer reads it on
+    /// every move and must not rescan the space each time.
+    space_instances: usize,
+    /// Cached `space.has_spot()` (same hot path).
+    space_has_spot: bool,
 }
 
 impl Problem {
     /// Assemble a problem from DAGs + a prediction grid whose task rows
     /// follow the DAG-concatenation order.
+    ///
+    /// Under [`CostModel::Market`] the grid rows of **spot**
+    /// configurations are inflated by the expected interruption overhead
+    /// ([`crate::cluster::expected_spot_overhead`]), so both sides of
+    /// the Eq. 1 trade-off see preemption risk: the runtime goal avoids
+    /// spot capacity, the cost goal pays the (inflated-duration x
+    /// discounted-price) product. Every other cost model leaves the grid
+    /// untouched — bit-identical to the pre-market problem.
     pub fn new(
         dags: &[Dag],
         releases: &[f64],
@@ -99,6 +112,24 @@ impl Problem {
         }
         assert_eq!(grid.tasks(), tasks.len(), "grid rows must match task count");
 
+        // Market pricing: fold the expected spot-preemption re-run work
+        // into the predicted durations of spot configurations.
+        let mut grid = grid;
+        if let CostModel::Market { interrupt_rate } = &cost_model {
+            if *interrupt_rate > 0.0 {
+                for row in grid.durations.iter_mut() {
+                    for (c, d) in row.iter_mut().enumerate() {
+                        let cfg = &space.configs[c];
+                        if cfg.is_spot() {
+                            *d *= crate::cluster::expected_spot_overhead(
+                                crate::cluster::spot_lambda(cfg, *d, *interrupt_rate),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
         let n = tasks.len();
         let mut preds = vec![Vec::new(); n];
         let mut succs = vec![Vec::new(); n];
@@ -108,6 +139,8 @@ impl Problem {
         }
         let feasible = space.feasible(&capacity);
         assert!(!feasible.is_empty(), "no feasible configuration fits the cluster");
+        let space_instances = space.instance_count();
+        let space_has_spot = space.has_spot();
 
         Problem {
             tasks,
@@ -122,6 +155,8 @@ impl Problem {
             floor: 0.0,
             preds,
             succs,
+            space_instances,
+            space_has_spot,
         }
     }
 
@@ -158,6 +193,18 @@ impl Problem {
     /// Direct successors of a flat task.
     pub fn succs(&self, t: usize) -> &[usize] {
         &self.succs[t]
+    }
+
+    /// One past the largest catalog index in this problem's space —
+    /// cached at construction for the SA proposal hot path.
+    pub fn instance_count(&self) -> usize {
+        self.space_instances
+    }
+
+    /// Whether this problem's space sells spot capacity (cached at
+    /// construction; arms the SA purchase-toggle move).
+    pub fn space_has_spot(&self) -> bool {
+        self.space_has_spot
     }
 
     /// Predicted duration of task `t` under config index `c` — d_ijc.
@@ -321,6 +368,45 @@ mod tests {
         let assignment = vec![p.feasible[0]; p.len()];
         assert!(p.energy_lb(&assignment) > 0.0);
         assert!(p.lower_bound(&assignment) >= p.energy_lb(&assignment));
+    }
+
+    #[test]
+    fn market_cost_model_inflates_spot_rows_only() {
+        let dags = vec![dag1()];
+        let space = ConfigSpace::market();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor {
+            profiles: profiles.clone(),
+        }
+        .predict(&space);
+        let raw = grid.clone();
+        let rate = 1.5;
+        let p = Problem::new(
+            &dags,
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::Market {
+                interrupt_rate: rate,
+            },
+        );
+        for t in 0..p.len() {
+            for (c, cfg) in p.space.configs.iter().enumerate() {
+                let d0 = raw.get(t, c);
+                let d = p.duration(t, c);
+                if cfg.is_spot() {
+                    let want = d0
+                        * crate::cluster::expected_spot_overhead(
+                            crate::cluster::spot_lambda(cfg, d0, rate),
+                        );
+                    assert!((d - want).abs() < 1e-9, "task {t} config {c}");
+                    assert!(d > d0, "spot duration must be inflated");
+                } else {
+                    assert_eq!(d, d0, "on-demand durations untouched");
+                }
+            }
+        }
     }
 
     #[test]

@@ -633,6 +633,83 @@ mod tests {
         tl.rollback(3);
     }
 
+    #[test]
+    fn zero_duration_fit_matches_reference_semantics() {
+        // A zero-length window occupies nothing, but both kernels treat
+        // it as a point probe: inside a saturated segment it defers to
+        // the segment end, in free space it returns est. Pinned here so
+        // the edge cannot drift silently between the two kernels.
+        let mut tl = Timeline::new(10.0, 100.0);
+        let mut rf = RefTimeline::new(10.0, 100.0);
+        tl.place(5.0, 10.0, 8.0, 10.0);
+        rf.place(5.0, 10.0, 8.0, 10.0);
+        for (est, cpu) in [(0.0, 4.0), (7.0, 4.0), (7.0, 1.0), (20.0, 9.0)] {
+            let got = tl.earliest_fit(est, 0.0, cpu, 1.0);
+            let want = rf.earliest_fit(est, 0.0, cpu, 1.0);
+            assert_eq!(
+                got.map(f64::to_bits),
+                Some(want.to_bits()),
+                "zero-duration fit at est {est} cpu {cpu}: {got:?} vs ref {want}"
+            );
+        }
+        // In particular: a point probe in free space is est itself...
+        assert_eq!(tl.earliest_fit(0.0, 0.0, 4.0, 1.0), Some(0.0));
+        // ...and inside the saturated window it defers to the boundary.
+        assert_eq!(tl.earliest_fit(7.0, 0.0, 4.0, 1.0), Some(15.0));
+    }
+
+    #[test]
+    fn demand_exactly_at_residual_capacity_fits_at_est() {
+        // Eq. 4 is an inclusive bound (<= R_m within the 1e-6 slack):
+        // a demand that tops usage to exactly capacity must start at
+        // est, one that exceeds the residual by more than the slack
+        // must wait for the release.
+        let mut tl = Timeline::new(16.0, 64.0);
+        tl.place(0.0, 10.0, 10.0, 40.0);
+        // Exactly the residual (16 - 10 cpu, 64 - 40 mem).
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 6.0, 24.0), Some(0.0));
+        // Within the historical 1e-6 capacity slack: still fits.
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 6.0 + 5e-7, 24.0), Some(0.0));
+        // Past the slack on either resource: deferred to the release.
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 6.0 + 2e-6, 24.0), Some(10.0));
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 6.0, 24.0 + 2e-6), Some(10.0));
+        // Demand exactly at full cluster capacity on an empty stretch.
+        assert_eq!(tl.earliest_fit(10.0, 5.0, 16.0, 64.0), Some(10.0));
+    }
+
+    #[test]
+    fn earliest_fit_none_is_stable_across_checkpoint_rollback() {
+        // `None` means the demand alone exceeds the cluster — no
+        // place/checkpoint/rollback interleaving may change that verdict,
+        // and in-capacity answers must come back bit-identical after a
+        // rollback round-trip.
+        let mut tl = Timeline::new(8.0, 32.0);
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 8.5, 1.0), None);
+        let before = tl.earliest_fit(0.0, 5.0, 4.0, 16.0);
+
+        let m0 = tl.checkpoint();
+        tl.place(0.0, 20.0, 8.0, 32.0);
+        let m1 = tl.checkpoint();
+        tl.place(20.0, 20.0, 8.0, 32.0);
+        // Over-capacity demand: still None with the cluster fully packed.
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 8.5, 1.0), None);
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 1.0, 32.5), None);
+        // In-capacity demand: deferred past the packed prefix.
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 4.0, 16.0), Some(40.0));
+
+        tl.rollback(m1);
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 8.5, 1.0), None);
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 4.0, 16.0), Some(20.0));
+        tl.rollback(m0);
+        assert_eq!(tl.earliest_fit(0.0, 5.0, 8.5, 1.0), None);
+        let after = tl.earliest_fit(0.0, 5.0, 4.0, 16.0);
+        assert_eq!(
+            before.map(f64::to_bits),
+            after.map(f64::to_bits),
+            "rollback round-trip changed an in-capacity answer"
+        );
+    }
+
     /// Drive the production and reference kernels through an identical
     /// random op sequence, cross-checking occupancy (against a
     /// brute-force per-event-point recomputation) and every

@@ -1,0 +1,357 @@
+//! Heterogeneous-market / spot-preemption test suite.
+//!
+//! The headline here is the **differential cost-model test**: the
+//! executor's realized spot interruption process, Monte-Carlo'd over
+//! many seeds, must converge to the closed-form expectation the planner
+//! prices with (`CostModel::Spot` / `CostModel::Market` +
+//! `expected_spot_overhead`). That closed form was fixed in this PR —
+//! the historical `min(E[N], 2)` overhead over-charges near the
+//! 2-interruption cap (Jensen); the tests below both pin the corrected
+//! form against the realized process *and* assert the old form is
+//! measurably wrong at the cap, so the fix cannot silently regress.
+
+use agora::cluster::{
+    catalog, expected_spot_overhead, Capacity, Config, ConfigSpace, CostModel,
+};
+use agora::dag::{Dag, Task, TaskProfile};
+use agora::predictor::OraclePredictor;
+use agora::sim::{execute_with_policy, DivergenceSpec, ReplanPolicy};
+use agora::solver::{Problem, Schedule};
+use agora::util::Rng;
+use agora::Predictor;
+
+/// One deterministic task (no run noise, no contention): nominal runtime
+/// on a 1-node 16-vCPU instance is exactly `work` seconds.
+fn one_task_dag(work: f64) -> Dag {
+    Dag::new(
+        "spot",
+        vec![Task {
+            name: "t".into(),
+            profile: TaskProfile {
+                work,
+                alpha: 0.0,
+                beta: 0.0,
+                mem_gb: 4.0,
+                spark_affinity: 0.0,
+                noise_sigma: 0.0,
+            },
+        }],
+        vec![],
+    )
+    .unwrap()
+}
+
+fn one_task_problem(work: f64, space: ConfigSpace, model: CostModel) -> (Problem, Vec<Dag>) {
+    let dags = vec![one_task_dag(work)];
+    let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+    let grid = OraclePredictor { profiles }.predict(&space);
+    let p = Problem::new(&dags, &[0.0], Capacity::new(64.0, 256.0), space, grid, model);
+    (p, dags)
+}
+
+fn manual_single(p: &Problem, config: usize) -> Schedule {
+    let s = Schedule {
+        assignment: vec![config],
+        start: vec![0.0],
+        optimal: false,
+    };
+    s.validate(p).expect("single-task plan");
+    s
+}
+
+/// Mean realized cost of executing the single-task plan under the spot
+/// process with `runs` independent divergence seeds.
+fn monte_carlo_mean_cost(
+    p: &Problem,
+    dags: &[Dag],
+    plan: &Schedule,
+    model: &CostModel,
+    spot_rate: f64,
+    runs: u64,
+) -> f64 {
+    let mut total = 0.0;
+    for seed in 0..runs {
+        let policy = ReplanPolicy {
+            divergence: DivergenceSpec {
+                spot_rate,
+                seed: 0x1000 + seed,
+                ..Default::default()
+            },
+            ..ReplanPolicy::off()
+        };
+        let report =
+            execute_with_policy(p, dags, plan, model, &mut Rng::new(7), &policy);
+        total += report.cost;
+    }
+    total / runs as f64
+}
+
+// ---------------------------------------------------------------------------
+// Differential test, global-Spot flavour: everything is spot capacity.
+
+#[test]
+fn realized_spot_cost_converges_to_the_fixed_closed_form() {
+    // One hour of work at 3 interruptions/node-hour: lambda = 3, deep
+    // enough past the cap that E[min(N, 2)] = 1.751 differs measurably
+    // from the historical min(E[N], 2) = 2.
+    let work = 3600.0;
+    let rate = 3.0;
+    let model = CostModel::Spot {
+        discount: 0.3,
+        interrupt_rate: rate,
+    };
+    let (p, dags) = one_task_problem(work, ConfigSpace::standard(), model.clone());
+    // 1 x m5.4xlarge, balanced preset: nominal runtime = work exactly.
+    let cfg_idx = p
+        .space
+        .configs
+        .iter()
+        .position(|c| c.instance == 0 && c.nodes == 1 && c.spark == 1)
+        .unwrap();
+    let plan = manual_single(&p, cfg_idx);
+    let cfg = p.space.configs[cfg_idx];
+
+    let runs = 2500;
+    let mean = monte_carlo_mean_cost(&p, &dags, &plan, &model, rate, runs);
+
+    // The planner's closed form for the same (config, nominal duration).
+    let closed = model.cost(&cfg, work);
+    let rel = (mean - closed).abs() / closed;
+    assert!(
+        rel < 0.025,
+        "realized mean {mean} vs closed form {closed} (rel {rel:.4})"
+    );
+
+    // ...and the historical uncapped-expectation form is measurably
+    // wrong here: it would charge a full 2-interruption overhead.
+    let old_form = cfg.hourly_cost() * 0.3 * (work * 2.0) / 3600.0;
+    let rel_old = (mean - old_form).abs() / old_form;
+    assert!(
+        rel_old > 0.03,
+        "realized mean {mean} indistinguishable from the broken closed form {old_form}"
+    );
+}
+
+#[test]
+fn realized_spot_cost_matches_closed_form_below_the_cap() {
+    // Small lambda (0.25): the cap is irrelevant and the fixed form is
+    // within noise of the historical one — this pins the small-rate
+    // regime the original model was built for.
+    let work = 1800.0;
+    let rate = 0.5; // lambda = 0.5 * 1800 / 3600 = 0.25
+    let model = CostModel::Spot {
+        discount: 0.4,
+        interrupt_rate: rate,
+    };
+    let (p, dags) = one_task_problem(work, ConfigSpace::standard(), model.clone());
+    let cfg_idx = p
+        .space
+        .configs
+        .iter()
+        .position(|c| c.instance == 0 && c.nodes == 1 && c.spark == 1)
+        .unwrap();
+    let plan = manual_single(&p, cfg_idx);
+    let cfg = p.space.configs[cfg_idx];
+
+    let mean = monte_carlo_mean_cost(&p, &dags, &plan, &model, rate, 2500);
+    let closed = model.cost(&cfg, work);
+    let rel = (mean - closed).abs() / closed;
+    assert!(
+        rel < 0.02,
+        "realized mean {mean} vs closed form {closed} (rel {rel:.4})"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Differential test, market flavour: the planner's inflated spot grid IS
+// the realized expectation (grid inflation + catalog price coherence).
+
+#[test]
+fn realized_market_cost_converges_to_the_planners_spot_expectation() {
+    let work = 3600.0;
+    let rate = 1.5; // lambda = 1.5 on the 1-node spot row
+    let model = CostModel::Market {
+        interrupt_rate: rate,
+    };
+    let (p, dags) = one_task_problem(work, ConfigSpace::market(), model.clone());
+    let spot_instance = catalog::index_by_name("m5.4xlarge:spot").unwrap();
+    let cfg_idx = p
+        .space
+        .configs
+        .iter()
+        .position(|c| c.instance == spot_instance && c.nodes == 1 && c.spark == 1)
+        .unwrap();
+    let plan = manual_single(&p, cfg_idx);
+    let cfg = p.space.configs[cfg_idx];
+
+    let mean = monte_carlo_mean_cost(&p, &dags, &plan, &model, rate, 2500);
+
+    // p.cost already prices the inflated grid duration at the catalog
+    // spot price — planner expectation == realized mean.
+    let planned = p.cost(0, cfg_idx);
+    let rel = (mean - planned).abs() / planned;
+    assert!(
+        rel < 0.03,
+        "realized mean {mean} vs planned spot cost {planned} (rel {rel:.4})"
+    );
+    // Sanity on the inflation itself: duration carries the overhead...
+    let overhead = expected_spot_overhead(agora::cluster::spot_lambda(&cfg, work, rate));
+    assert!((p.duration(0, cfg_idx) - work * overhead).abs() < 1e-9);
+    // ...and the planned cost is exactly price x inflated duration.
+    assert!(
+        (planned - cfg.hourly_cost() * work * overhead / 3600.0).abs() < 1e-12,
+        "planned {planned}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Market-structure pins.
+
+#[test]
+fn on_demand_only_plans_never_see_preemptions() {
+    // Spot divergence armed, but the plan holds an on-demand row under
+    // Market pricing: the interruption process must not fire.
+    let (p, dags) = one_task_problem(
+        1800.0,
+        ConfigSpace::market(),
+        CostModel::Market { interrupt_rate: 2.0 },
+    );
+    let od_idx = p
+        .space
+        .configs
+        .iter()
+        .position(|c| c.instance == 0 && c.nodes == 1 && c.spark == 1)
+        .unwrap();
+    let plan = manual_single(&p, od_idx);
+    let policy = ReplanPolicy {
+        divergence: DivergenceSpec {
+            spot_rate: 2.0,
+            seed: 4242,
+            ..Default::default()
+        },
+        ..ReplanPolicy::off()
+    };
+    let model = CostModel::Market { interrupt_rate: 2.0 };
+    let report = execute_with_policy(&p, &dags, &plan, &model, &mut Rng::new(1), &policy);
+    assert_eq!(report.records[0].preemptions, 0);
+    assert!((report.records[0].runtime - 1800.0).abs() < 1e-9);
+    // On-demand m5 price, plain occupancy.
+    assert!((report.cost - 0.768 * 1800.0 / 3600.0).abs() < 1e-9);
+}
+
+#[test]
+fn spot_rows_undercut_their_on_demand_twins_at_any_rate() {
+    // The market's core structure: the expected re-run overhead is
+    // capped at 2x (the preemption fallback), and every catalog spot
+    // discount is >= 60% off, so discount x overhead < 1 for EVERY
+    // rate — spot is always priced below its on-demand twin, and the
+    // optimizer's spot-vs-on-demand choice is about runtime risk
+    // (inflated durations), never about spot becoming nominally
+    // pricier. Pinned at a moderate and a saturating rate.
+    let (p, _) = one_task_problem(
+        3600.0,
+        ConfigSpace::market(),
+        CostModel::Market { interrupt_rate: 0.5 },
+    );
+    for (od_name, spot_name) in [
+        ("m5.4xlarge", "m5.4xlarge:spot"),
+        ("c5.4xlarge", "c5.4xlarge:spot"),
+        ("r5.4xlarge", "r5.4xlarge:spot"),
+    ] {
+        let od_i = catalog::index_by_name(od_name).unwrap();
+        let spot_i = catalog::index_by_name(spot_name).unwrap();
+        let find = |instance: usize| {
+            p.space
+                .configs
+                .iter()
+                .position(|c| c.instance == instance && c.nodes == 1 && c.spark == 1)
+                .unwrap()
+        };
+        let od_cost = p.cost(0, find(od_i));
+        let spot_cost = p.cost(0, find(spot_i));
+        assert!(
+            spot_cost < od_cost,
+            "{spot_name} ({spot_cost}) should undercut {od_name} ({od_cost}) at rate 0.5"
+        );
+    }
+    // r5's 75% discount survives even a saturating interruption rate.
+    let (p_hot, _) = one_task_problem(
+        3600.0,
+        ConfigSpace::market(),
+        CostModel::Market { interrupt_rate: 100.0 },
+    );
+    let od = catalog::index_by_name("r5.4xlarge").unwrap();
+    let spot = catalog::index_by_name("r5.4xlarge:spot").unwrap();
+    let find = |instance: usize| {
+        p_hot
+            .space
+            .configs
+            .iter()
+            .position(|c| c.instance == instance && c.nodes == 1 && c.spark == 1)
+            .unwrap()
+    };
+    assert!(p_hot.cost(0, find(spot)) < p_hot.cost(0, find(od)));
+}
+
+#[test]
+fn preemption_process_is_per_node_scaled() {
+    // Bigger gangs are exposed to more reclaim events: with the same
+    // rate and nominal runtime, the 4-node spot config must average
+    // more preemptions than the 1-node one over many seeds.
+    let spec_for = |seed| DivergenceSpec {
+        spot_rate: 1.0,
+        seed,
+        ..Default::default()
+    };
+    let mean_hits = |nodes: f64| -> f64 {
+        let mut total = 0u32;
+        for seed in 0..400u64 {
+            let (_, hits) = spec_for(seed).draw_spot(0, true, nodes, 1800.0);
+            total += hits;
+        }
+        total as f64 / 400.0
+    };
+    let small = mean_hits(1.0);
+    let large = mean_hits(4.0);
+    // lambda 0.5 vs 2.0: E[min(N,2)] = 0.39 vs 1.46 — far apart.
+    assert!(
+        large > small + 0.5,
+        "4-node gang ({large}) should see many more preemptions than 1-node ({small})"
+    );
+}
+
+#[test]
+fn market_space_and_catalog_are_coherent() {
+    let market = ConfigSpace::market();
+    // Every catalog row appears on the full ladder with all presets.
+    assert_eq!(
+        market.len(),
+        agora::cluster::FULL_CATALOG.len()
+            * agora::cluster::config::NODE_LADDER.len()
+            * agora::cluster::SPARK_PRESETS.len()
+    );
+    // The m5 prefix preserves historical indices: the standard space is
+    // exactly the instance < 4 slice of the market space's catalog.
+    let standard = ConfigSpace::standard();
+    for c in &standard.configs {
+        assert!(c.instance < 4);
+        assert!(market.configs.contains(c));
+    }
+    // Spot rows all have a purchase toggle back to on-demand, and vice
+    // versa for the listed sizes.
+    for (i, row) in agora::cluster::FULL_CATALOG.iter().enumerate() {
+        if row.is_spot() {
+            let od = catalog::purchase_toggle(i).expect("spot rows have od twins");
+            assert!(!agora::cluster::FULL_CATALOG[od].is_spot());
+        }
+    }
+    // A Config's convenience accessors agree with its catalog row.
+    let spot = Config {
+        instance: catalog::index_by_name("r5.16xlarge:spot").unwrap(),
+        nodes: 1,
+        spark: 0,
+    };
+    assert!(spot.is_spot());
+    assert_eq!(spot.vcpus(), 64.0);
+    assert_eq!(spot.memory_gb(), 512.0);
+}

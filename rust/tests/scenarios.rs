@@ -17,8 +17,23 @@
 //!                                  probabilistic divergence + replans
 //!   7. policy-off equivalence    — the event-driven executor reproduces
 //!                                  the historical executor bit-for-bit
+//!
+//! Heterogeneous-market scenarios (instance families + spot capacity):
+//!
+//!   8. family flip               — the co-optimizer picks on-demand/c5
+//!                                  under the runtime goal and spot
+//!                                  (c5 for cpu-bound, r5 for
+//!                                  memory-bound) under the cost goal;
+//!                                  exact makespan/cost pins
+//!   9. spot preemption replan    — a pinned preemption on a spot node
+//!                                  triggers replanning; the cone task
+//!                                  flips family; exact pins incl.
+//!                                  realized spot cost
+//!  10. seeded spot market batch  — bitwise determinism of a seeded
+//!                                  preemption process with replanning
+//!                                  armed on the market space
 
-use agora::cluster::{Capacity, ConfigSpace, CostModel};
+use agora::cluster::{catalog, Capacity, Config, ConfigSpace, CostModel, Family};
 use agora::dag::generator::arbitrary_dag;
 use agora::dag::{Dag, Task, TaskProfile};
 use agora::predictor::OraclePredictor;
@@ -26,7 +41,7 @@ use agora::sim::{
     execute, execute_with_policy, CapacityOutage, DivergenceSpec, ExecutionReport,
     ReplanPolicy,
 };
-use agora::solver::{Agora, AgoraOptions, Mode, Problem, Schedule};
+use agora::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Schedule};
 use agora::util::Rng;
 use agora::Predictor;
 
@@ -95,6 +110,7 @@ fn assert_reports_bit_identical(a: &ExecutionReport, b: &ExecutionReport) {
         assert!(x.runtime == y.runtime, "runtime {} != {}", x.runtime, y.runtime);
         assert!(x.predicted == y.predicted);
         assert_eq!(x.retries, y.retries);
+        assert_eq!(x.preemptions, y.preemptions);
     }
     assert!(a.makespan == b.makespan);
     assert!(a.cost == b.cost);
@@ -570,4 +586,296 @@ fn scenario_off_policy_reproduces_historical_executor_bitwise() {
             assert_eq!(r.config, plan.schedule.assignment[r.task]);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// 8. Heterogeneous market: the co-optimizer flips instance families (and
+//    the purchase option) between the runtime and cost goals. Exact pins:
+//    Mode::Separate is the deterministic per-task-best + exact-schedule
+//    slice of the co-optimizer, so the chosen market rows are analytic.
+
+/// Market problem: full m5/c5/r5 + spot space, oracle grid, market
+/// pricing with the given interruption rate.
+fn market_problem(dags: &[Dag], capacity: Capacity, interrupt_rate: f64) -> Problem {
+    let space = ConfigSpace::market();
+    let profiles: Vec<_> = dags
+        .iter()
+        .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+        .collect();
+    let grid = OraclePredictor { profiles }.predict(&space);
+    let releases = vec![0.0; dags.len()];
+    Problem::new(
+        dags,
+        &releases,
+        capacity,
+        space,
+        grid,
+        CostModel::Market { interrupt_rate },
+    )
+}
+
+/// Index of a named catalog row x nodes x balanced preset in a space.
+fn market_config(space: &ConfigSpace, name: &str, nodes: u32) -> usize {
+    let instance = catalog::index_by_name(name).expect("catalog row");
+    space
+        .configs
+        .iter()
+        .position(|c| {
+            *c == Config {
+                instance,
+                nodes,
+                spark: 1,
+            }
+        })
+        .expect("market space carries every catalog row on the full ladder")
+}
+
+#[test]
+fn scenario_market_families_flip_between_goals() {
+    // Two independent tasks with mild contention (alpha > 0 so the
+    // node-count trade-off has a strict optimum): one cpu-bound (tiny
+    // working set), one memory-bound (200 GiB working set).
+    let mk = |name: &str, mem_gb: f64| Task {
+        name: name.to_string(),
+        profile: TaskProfile {
+            work: 600.0,
+            alpha: 0.05,
+            beta: 0.0,
+            mem_gb,
+            spark_affinity: 0.0,
+            noise_sigma: 0.0,
+        },
+    };
+    let dag = Dag::new("market", vec![mk("cpu", 4.0), mk("mem", 200.0)], vec![]).unwrap();
+    let dags = vec![dag];
+    let p = market_problem(&dags, Capacity::micro(), 0.0);
+
+    let optimize = |goal: Goal| {
+        Agora::new(AgoraOptions {
+            goal,
+            mode: Mode::Separate,
+            ..Default::default()
+        })
+        .optimize(&p)
+    };
+
+    // Runtime goal: both tasks take the fastest feasible parallelism —
+    // 16 x c5.4xlarge ON-DEMAND (c5's faster cores beat m5/r5; the spot
+    // twin ties on runtime and loses the deterministic first-minimum
+    // tie-break to the on-demand row).
+    let rt = optimize(Goal::Runtime);
+    let c5_od_16 = market_config(&p.space, "c5.4xlarge", 16);
+    assert_eq!(rt.schedule.assignment, vec![c5_od_16; 2]);
+    for &c in &rt.schedule.assignment {
+        let cfg = p.space.configs[c];
+        assert_eq!(cfg.family(), Family::C5);
+        assert!(!cfg.is_spot());
+    }
+    // Exact pins: each task runs 600 * pen(16) / 1.18 seconds and the
+    // two 256-vCPU tasks serialize on the 256-vCPU cluster.
+    let d_rt = dags[0].tasks[0].profile.runtime(&p.space.configs[c5_od_16]);
+    assert!((rt.makespan - (d_rt + d_rt)).abs() < 1e-9, "rt makespan {}", rt.makespan);
+    let hourly_rt = p.space.configs[c5_od_16].hourly_cost();
+    let want_rt_cost = 2.0 * (hourly_rt * d_rt / 3600.0);
+    assert!((rt.cost - want_rt_cost).abs() < 1e-9, "rt cost {}", rt.cost);
+
+    // Cost goal: the cpu-bound task buys the cheapest speed-adjusted
+    // vCPUs on the market — c5 SPOT at minimum parallelism — while the
+    // memory-bound task flips family to r5 SPOT (2 nodes: enough memory
+    // to avoid the spill penalty at the lowest price).
+    let cost = optimize(Goal::Cost);
+    let c5_spot_1 = market_config(&p.space, "c5.4xlarge:spot", 1);
+    let r5_spot_2 = market_config(&p.space, "r5.4xlarge:spot", 2);
+    assert_eq!(cost.schedule.assignment[0], c5_spot_1, "cpu task");
+    assert_eq!(cost.schedule.assignment[1], r5_spot_2, "mem task");
+    assert_eq!(p.space.configs[c5_spot_1].family(), Family::C5);
+    assert_eq!(p.space.configs[r5_spot_2].family(), Family::R5);
+    assert!(p.space.configs[c5_spot_1].is_spot());
+    assert!(p.space.configs[r5_spot_2].is_spot());
+
+    // Exact pins: both fit side by side (48 vCPUs), so the makespan is
+    // the cpu task's duration; the cost is the catalog spot prices.
+    let d_cpu = dags[0].tasks[0].profile.runtime(&p.space.configs[c5_spot_1]);
+    let d_mem = dags[0].tasks[1].profile.runtime(&p.space.configs[r5_spot_2]);
+    assert!(d_cpu > d_mem, "cpu {d_cpu} vs mem {d_mem}");
+    assert!((cost.makespan - d_cpu).abs() < 1e-9, "cost makespan {}", cost.makespan);
+    let want_cost = p.space.configs[c5_spot_1].hourly_cost() * d_cpu / 3600.0
+        + p.space.configs[r5_spot_2].hourly_cost() * d_mem / 3600.0;
+    assert!((cost.cost - want_cost).abs() < 1e-9, "cost {}", cost.cost);
+
+    // The headline orientation: different families per goal, and the
+    // market trade-off is real (cost goal much cheaper, runtime goal
+    // much faster).
+    assert_ne!(rt.schedule.assignment, cost.schedule.assignment);
+    assert!(cost.cost < rt.cost * 0.5);
+    assert!(rt.makespan < cost.makespan * 0.5);
+
+    // Bitwise determinism of the market plans.
+    let rt2 = optimize(Goal::Runtime);
+    let cost2 = optimize(Goal::Cost);
+    assert_eq!(rt.schedule.assignment, rt2.schedule.assignment);
+    assert_eq!(rt.schedule.start, rt2.schedule.start);
+    assert_eq!(cost.schedule.assignment, cost2.schedule.assignment);
+    assert_eq!(cost.schedule.start, cost2.schedule.start);
+}
+
+// ---------------------------------------------------------------------------
+// 9. Spot preemption triggers replanning: a pinned preemption on a spot
+//    node blows the plan past the threshold; the replan flips the cone
+//    task to a faster family and the realized market cost is exactly
+//    the catalog prices times realized occupancy.
+
+#[test]
+fn scenario_spot_preemption_triggers_replan_with_exact_pins() {
+    // a -> c; b and d independent. Everything planned on 1 x
+    // m5.4xlarge:spot; the two-wide cluster fits two such nodes.
+    let dag = Dag::new(
+        "spot-replan",
+        vec![
+            exact_task("a", 10.0),
+            exact_task("b", 10.0),
+            exact_task("c", 10.0),
+            exact_task("d", 2.0),
+        ],
+        vec![(0, 2)],
+    )
+    .unwrap();
+    let dags = vec![dag];
+    let p = market_problem(&dags, two_wide(), 0.0);
+    let m5_spot_1 = market_config(&p.space, "m5.4xlarge:spot", 1);
+    let plan = manual_plan(&p, m5_spot_1, &[0.0, 0.0, 10.0, 10.0]);
+
+    // Task a is preempted once (pinned): loses exactly half the run.
+    let divergence = DivergenceSpec {
+        spot_tasks: vec![0],
+        ..Default::default()
+    };
+    let stale_policy = ReplanPolicy {
+        divergence: divergence.clone(),
+        ..ReplanPolicy::off()
+    };
+    let replan_policy = ReplanPolicy {
+        threshold: 0.2,
+        max_replans: 1,
+        iters: 80,
+        divergence,
+        ..Default::default()
+    };
+    let model = CostModel::Market { interrupt_rate: 0.0 };
+
+    let stale = execute_with_policy(&p, &dags, &plan, &model, &mut Rng::new(90), &stale_policy);
+    let run = |seed| {
+        execute_with_policy(&p, &dags, &plan, &model, &mut Rng::new(seed), &replan_policy)
+    };
+    let adapted = run(90);
+    assert_reports_bit_identical(&adapted, &run(90));
+
+    // Stale world: a 0-15 (10 x 1.5), b 0-10, d 10-12 backfilled,
+    // c 15-25 on the stale 1-node spot config.
+    assert_eq!(stale.records[0].preemptions, 1);
+    assert!((stale.records[0].runtime - 15.0).abs() < 1e-9);
+    assert!((stale.makespan - 25.0).abs() < 1e-9, "stale {}", stale.makespan);
+    assert!(stale.replans.is_empty());
+    let spot_hourly = p.space.configs[m5_spot_1].hourly_cost();
+    let stale_cost = spot_hourly * (15.0 + 10.0 + 10.0 + 2.0) / 3600.0;
+    assert!((stale.cost - stale_cost).abs() < 1e-9, "stale cost {}", stale.cost);
+
+    // Adapted: a's divergent completion at t=15 fires ((15-10)/20 =
+    // 0.25 > 0.2); the cone {c} flips to 2 x c5.4xlarge on-demand (the
+    // fastest feasible config on the now-empty cluster) and runs
+    // 15 -> 15 + 5/1.18.
+    assert_eq!(adapted.replans.len(), 1);
+    let e = &adapted.replans[0];
+    assert_eq!(e.trigger_task, 0);
+    assert!((e.at - 15.0).abs() < 1e-9);
+    assert!((e.divergence - 0.25).abs() < 1e-9);
+    assert_eq!(e.replanned, 1);
+    assert_eq!(e.reassigned, 1);
+    assert!((e.stale_makespan - 25.0).abs() < 1e-9);
+
+    let c5_od_2 = market_config(&p.space, "c5.4xlarge", 2);
+    assert_eq!(adapted.records[2].config, c5_od_2);
+    let d_c = 5.0 / 1.18; // 10 s of work at n_eff 2, c5 speed
+    assert!((adapted.records[2].start - 15.0).abs() < 1e-9);
+    assert!((adapted.records[2].runtime - d_c).abs() < 1e-9);
+    assert!((adapted.makespan - (15.0 + d_c)).abs() < 1e-9, "adapted {}", adapted.makespan);
+    assert!((e.planned_makespan - (15.0 + d_c)).abs() < 1e-9);
+    assert!(
+        adapted.makespan < stale.makespan - 5.0,
+        "replanning must strictly improve: {} vs {}",
+        adapted.makespan,
+        stale.makespan
+    );
+    // The preempted record itself is immutable history.
+    assert_eq!(adapted.records[0].preemptions, 1);
+    assert!((adapted.records[0].runtime - 15.0).abs() < 1e-9);
+    // Realized market cost: spot occupancy (a, b, d) at the spot price,
+    // the reassigned c at the on-demand c5 price.
+    let c5_hourly = p.space.configs[c5_od_2].hourly_cost();
+    let want_cost =
+        spot_hourly * (15.0 + 10.0 + 2.0) / 3600.0 + c5_hourly * d_c / 3600.0;
+    assert!((adapted.cost - want_cost).abs() < 1e-9, "adapted cost {}", adapted.cost);
+}
+
+// ---------------------------------------------------------------------------
+// 10. Seeded spot market batch: bitwise determinism of the seeded
+//     preemption process with replanning armed on the market space.
+
+#[test]
+fn scenario_seeded_spot_market_batch_is_bitwise_deterministic() {
+    let dags = vec![
+        arbitrary_dag(&mut Rng::new(801), 10),
+        arbitrary_dag(&mut Rng::new(802), 8),
+    ];
+    let p = market_problem(&dags, Capacity::micro(), 1.0);
+    // Cost-goal per-task-best + exact schedule: a deterministic,
+    // spot-heavy market plan (planned once; execution must be
+    // load-independent, which is what this scenario pins).
+    let plan = Agora::new(AgoraOptions {
+        goal: Goal::Cost,
+        mode: Mode::Separate,
+        ..Default::default()
+    })
+    .optimize(&p);
+    let spot_tasks = plan
+        .schedule
+        .assignment
+        .iter()
+        .filter(|&&c| p.space.configs[c].is_spot())
+        .count();
+    assert!(
+        spot_tasks > 0,
+        "a cost-goal market plan should buy spot capacity"
+    );
+
+    let policy = ReplanPolicy {
+        threshold: 0.15,
+        max_replans: 2,
+        iters: 60,
+        seed: 806,
+        divergence: DivergenceSpec {
+            spot_rate: 2.0,
+            spot_tasks: vec![0], // at least one guaranteed preemption
+            seed: 807,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let model = CostModel::Market { interrupt_rate: 1.0 };
+    let run = |seed| {
+        execute_with_policy(&p, &dags, &plan.schedule, &model, &mut Rng::new(seed), &policy)
+    };
+    let a = run(808);
+    assert_reports_bit_identical(&a, &run(808));
+
+    assert!(a.records[0].preemptions >= 1, "pinned preemption realized");
+    for r in &a.records {
+        assert!(r.preemptions <= policy.divergence.spot_max);
+        assert!(r.runtime > 0.0 && r.runtime.is_finite());
+        assert!(p.space.configs[r.config].vcpus() <= p.capacity.vcpus + 1e-9);
+    }
+    assert!(a.replans.len() <= policy.max_replans);
+    let longest = a.records.iter().map(|r| r.runtime).fold(0.0, f64::max);
+    assert!(a.makespan >= longest - 1e-6);
+    assert!(a.cost > 0.0 && a.cost.is_finite());
 }
