@@ -33,8 +33,9 @@ fn main() -> anyhow::Result<()> {
         let handle = service.handle();
         joins.push(std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(delay_ms));
-            let rx = handle.submit(tenant, dag);
-            rx.recv_timeout(Duration::from_secs(180))
+            let ticket = handle.submit(tenant, dag).expect("admitted");
+            ticket
+                .recv_timeout(Duration::from_secs(180))
                 .expect("coordinator answers")
         }));
     }
@@ -57,8 +58,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let rounds = service.shutdown();
-    println!("\ncoordinator served {} optimization round(s)", rounds);
+    println!("\n{}", service.status().render());
+    let rounds = service.shutdown()?;
+    println!("coordinator served {} optimization round(s)", rounds);
 
     // Tenants batched into the same round were co-optimized as ONE
     // multi-DAG problem — the multi-tenant benefit of §4.1.

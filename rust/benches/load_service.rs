@@ -1,0 +1,216 @@
+//! Seeded load generator for the actor-style control plane
+//! (`coordinator::service`): hundreds of tenants submit a workload mix
+//! (`dag::workloads` plus small `dag::generator::large_scale_dag`
+//! bursts) with Poisson inter-arrival times from concurrent generator
+//! threads, against a bounded-queue, multi-worker service under
+//! continuous admission.
+//!
+//! Reported: submissions, served replies, dropped replies (must be 0 —
+//! every admitted ticket is answered), backpressure rejections
+//! (resubmitted until admitted), rounds, wall-clock throughput and the
+//! service's own status digests (queue delay percentiles, utilization,
+//! optimizer overhead). The same numbers land in `BENCH_service.json`
+//! at the repo root so the control-plane trajectory is diffable across
+//! PRs.
+//!
+//! The arrival process and the workload mix are seeded, but wall-clock
+//! interleaving makes batch composition host-dependent — this bench
+//! measures the control plane's throughput and liveness, not bit-level
+//! round contents (that pin lives in `tests/control_plane.rs`).
+//!
+//! `cargo bench --bench load_service -- --smoke` runs the small
+//! configuration (120 tenants) and asserts nonzero throughput with zero
+//! dropped replies — the CI liveness gate.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use agora::bench;
+use agora::coordinator::service::{Service, ServiceConfig};
+use agora::coordinator::{Admission, SubmitError};
+use agora::dag::generator::large_scale_dag;
+use agora::dag::workloads::{dag1, dag2, fig1_dag};
+use agora::util::{Json, Rng};
+use agora::Dag;
+
+const SEED: u64 = 2022;
+/// Tasks per synthetic large-scale burst DAG (kept small so a round's
+/// co-optimization stays in the fast-params envelope).
+const BURST_TASKS: usize = 16;
+
+/// The workload mix: the three paper workloads plus an occasional
+/// generator burst, drawn from the generator thread's seeded stream.
+fn synth_dag(rng: &mut Rng, tenant: usize, s: usize) -> Dag {
+    match rng.uniform(0.0, 4.0) as usize {
+        0 => dag1(),
+        1 => dag2(),
+        2 => fig1_dag(),
+        _ => large_scale_dag(
+            &mut Rng::new(SEED ^ (tenant as u64 * 7919 + s as u64)),
+            &format!("burst{tenant}x{s}"),
+            BURST_TASKS,
+        ),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    bench::header(
+        "Service load",
+        "Poisson multi-tenant load against the actor-style control plane",
+    );
+    let (tenants, per_tenant, gens) = if smoke { (120, 1, 6) } else { (300, 2, 8) };
+    let submissions = tenants * per_tenant;
+    println!(
+        "mode: {} | {tenants} tenants x {per_tenant} submission(s) from {gens} generator threads",
+        if smoke { "smoke (--smoke)" } else { "full" }
+    );
+
+    let config = ServiceConfig {
+        batch_window: Duration::from_millis(25),
+        max_queue: 8,
+        max_batch: 16,
+        workers: 2,
+        queue_bound: 4,
+        admission: Admission::Continuous,
+        seed: SEED,
+        ..Default::default()
+    };
+    let (workers, queue_bound, max_batch) = (config.workers, config.queue_bound, config.max_batch);
+    let service = Service::start(config);
+    let handle = service.handle();
+
+    let rejected = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for g in 0..gens {
+        let handle = service.handle();
+        let rejected = rejected.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(SEED ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(g as u64 + 1));
+            let mut tickets = Vec::new();
+            for t in (g..tenants).step_by(gens) {
+                let tenant = format!("tenant{t:04}");
+                for s in 0..per_tenant {
+                    let dag = synth_dag(&mut rng, t, s);
+                    // Poisson arrivals: exponential inter-arrival gaps,
+                    // clamped so one long draw cannot stall the run.
+                    let gap_ms = rng.exponential(2.0).min(20.0);
+                    std::thread::sleep(Duration::from_secs_f64(gap_ms / 1e3));
+                    loop {
+                        match handle.submit(&tenant, dag.clone()) {
+                            Ok(ticket) => {
+                                tickets.push(ticket);
+                                break;
+                            }
+                            Err(SubmitError::QueueFull { .. }) => {
+                                // Explicit backpressure: back off briefly
+                                // and resubmit — nothing is dropped.
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(SubmitError::ShuttingDown) => {
+                                panic!("service shut down mid-load");
+                            }
+                        }
+                    }
+                }
+            }
+            let mut served = 0usize;
+            let mut dropped = 0usize;
+            for ticket in tickets {
+                match ticket.recv_timeout(Duration::from_secs(600)) {
+                    Ok(r) => {
+                        assert!(r.completion > 0.0 && r.cost > 0.0);
+                        served += 1;
+                    }
+                    Err(_) => dropped += 1,
+                }
+            }
+            (served, dropped)
+        }));
+    }
+
+    let mut served = 0usize;
+    let mut dropped = 0usize;
+    for j in joins {
+        let (s, d) = j.join().expect("generator thread");
+        served += s;
+        dropped += d;
+    }
+    let elapsed = t0.elapsed();
+    let rejected = rejected.load(Ordering::Relaxed);
+    let status = handle.status();
+    let rounds = service.shutdown().expect("clean shutdown");
+    let throughput = served as f64 / elapsed.as_secs_f64().max(1e-9);
+
+    bench::table(
+        &[
+            "submissions",
+            "served",
+            "dropped",
+            "backpressure",
+            "rounds",
+            "elapsed (s)",
+            "dags/s",
+        ],
+        &[vec![
+            submissions.to_string(),
+            served.to_string(),
+            dropped.to_string(),
+            rejected.to_string(),
+            rounds.to_string(),
+            format!("{:.2}", elapsed.as_secs_f64()),
+            format!("{throughput:.1}"),
+        ]],
+    );
+    println!(
+        "queue delay p50 {:.3}s p95 {:.3}s | mean completion {:.1}s | utilization {:.2} | optimizer {:.2}s",
+        status.p50_queue_delay,
+        status.p95_queue_delay,
+        status.stats.mean_completion,
+        status.stats.utilization,
+        status.optimizer_overhead.as_secs_f64()
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("load_service")),
+        ("seed", Json::num(SEED as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("tenants", Json::num(tenants as f64)),
+        ("submissions", Json::num(submissions as f64)),
+        ("served", Json::num(served as f64)),
+        ("dropped", Json::num(dropped as f64)),
+        ("backpressure_rejections", Json::num(rejected as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("rounds_retried", Json::num(status.rounds_retried as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("queue_bound", Json::num(queue_bound as f64)),
+        ("max_batch", Json::num(max_batch as f64)),
+        ("elapsed_s", Json::num(elapsed.as_secs_f64())),
+        ("throughput_dags_per_s", Json::num(throughput)),
+        ("p50_queue_delay_s", Json::num(status.p50_queue_delay)),
+        ("p95_queue_delay_s", Json::num(status.p95_queue_delay)),
+        ("mean_completion_s", Json::num(status.stats.mean_completion)),
+        ("utilization", Json::num(status.stats.utilization)),
+        (
+            "optimizer_overhead_s",
+            Json::num(status.optimizer_overhead.as_secs_f64()),
+        ),
+    ]);
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_service.json");
+    match std::fs::write(&out, doc.to_pretty() + "\n") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+
+    // Liveness gate (CI runs the smoke mode): every admitted ticket was
+    // answered and the control plane made forward progress.
+    assert_eq!(dropped, 0, "control plane dropped {dropped} replies");
+    assert_eq!(served, submissions, "served {served} of {submissions}");
+    assert!(rounds >= 1, "no rounds committed");
+    assert!(throughput > 0.0, "zero throughput");
+    println!("load OK: {served} served, 0 dropped, {rounds} rounds");
+}

@@ -56,6 +56,14 @@ pub struct AppConfig {
     /// ([`ConfigSpace::market`]: m5/c5/r5 x on-demand/spot) instead of
     /// the historical m5-only space, priced by [`CostModel::Market`].
     pub market: bool,
+    /// Optimization worker threads for `serve` (1 = the deterministic
+    /// legacy serial stream).
+    pub workers: usize,
+    /// Per-tenant ingress queue bound for `serve` (0 = unbounded; a full
+    /// queue rejects submissions with explicit backpressure).
+    pub queue_bound: usize,
+    /// Status-ticker period for `serve` in milliseconds (0 = off).
+    pub status_interval_ms: u64,
     /// Chatty output.
     pub verbose: bool,
 }
@@ -77,6 +85,9 @@ impl Default for AppConfig {
             admission: Admission::Rounds,
             trace_large: 0,
             market: false,
+            workers: 1,
+            queue_bound: 0,
+            status_interval_ms: 0,
             verbose: false,
         }
     }
@@ -98,6 +109,9 @@ impl AppConfig {
         ("max-iters", "annealing iteration cap"),
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
         ("admission", "rounds | continuous (trace/serve batch admission)"),
+        ("workers", "serve: optimization worker threads (1 = deterministic legacy stream)"),
+        ("queue-bound", "serve: per-tenant ingress queue bound (0 = unbounded)"),
+        ("status-interval", "serve: status ticker period in ms (0 = off)"),
         ("trace-large", "append N ~1000-task large-scale DAGs to the trace workload"),
         ("market", "search the heterogeneous instance market (m5/c5/r5 + spot)"),
         ("spot-rate", "expected spot interruptions per node-hour (0 = reliable spot)"),
@@ -160,6 +174,15 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("market") {
             c.market = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("workers") {
+            c.workers = x.as_usize()?.max(1);
+        }
+        if let Some(x) = v.opt("queue_bound") {
+            c.queue_bound = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("status_interval_ms") {
+            c.status_interval_ms = x.as_f64()? as u64;
         }
         if let Some(x) = v.opt("spot_rate") {
             c.replan.divergence.spot_rate = x.as_f64()?;
@@ -234,6 +257,9 @@ impl AppConfig {
         }
         self.trace_large = args.usize_or("trace-large", self.trace_large)?;
         self.market = args.bool_or("market", self.market)?;
+        self.workers = args.usize_or("workers", self.workers)?.max(1);
+        self.queue_bound = args.usize_or("queue-bound", self.queue_bound)?;
+        self.status_interval_ms = args.u64_or("status-interval", self.status_interval_ms)?;
         self.replan.divergence.spot_rate =
             args.f64_or("spot-rate", self.replan.divergence.spot_rate)?;
         self.replan.divergence.spot_max =
@@ -519,6 +545,45 @@ mod tests {
         let c = base.apply_args(&args(&["trace", "--spot-rate", "2.0"])).unwrap();
         assert_eq!(c.replan.divergence.spot_rate, 2.0);
         assert!(c.market);
+    }
+
+    #[test]
+    fn serve_control_plane_flags_parse_from_cli_and_json() {
+        // Defaults: one worker, unbounded queues, ticker off.
+        let c = AppConfig::default();
+        assert_eq!(c.workers, 1);
+        assert_eq!(c.queue_bound, 0);
+        assert_eq!(c.status_interval_ms, 0);
+
+        let c = AppConfig::resolve(&args(&[
+            "serve",
+            "--workers",
+            "4",
+            "--queue-bound",
+            "16",
+            "--status-interval",
+            "500",
+        ]))
+        .unwrap();
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.queue_bound, 16);
+        assert_eq!(c.status_interval_ms, 500);
+        // 0 workers clamps to the deterministic single worker.
+        let c = AppConfig::resolve(&args(&["serve", "--workers", "0"])).unwrap();
+        assert_eq!(c.workers, 1);
+
+        // JSON path + CLI override.
+        let v = Json::parse(
+            r#"{"workers": 2, "queue_bound": 8, "status_interval_ms": 250}"#,
+        )
+        .unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        assert_eq!(base.workers, 2);
+        assert_eq!(base.queue_bound, 8);
+        assert_eq!(base.status_interval_ms, 250);
+        let c = base.apply_args(&args(&["serve", "--queue-bound", "4"])).unwrap();
+        assert_eq!(c.queue_bound, 4);
+        assert_eq!(c.workers, 2);
     }
 
     #[test]

@@ -23,19 +23,17 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use super::round::{busy_core_seconds, preemption_count, RoundEngine};
 use super::{Admission, OccupancyLedger, TriggerPolicy};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
-use crate::predictor::{
-    bootstrap_history, profiling_configs_for, scoped_task_name, EventLog, LearnedPredictor,
-    Predictor,
-};
 #[cfg(test)]
 use crate::predictor::default_profiling_configs;
+use crate::predictor::EventLog;
 use crate::sim::{self, ReplanPolicy};
-use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Reservation, Schedule};
+use crate::solver::{Agora, Goal, Mode, Problem};
 use crate::trace::TracedJob;
 use crate::util::{stats, Rng};
 
@@ -185,53 +183,11 @@ impl BatchRunner {
         self
     }
 
-    /// History for a task: the database entry if present, else a
-    /// bootstrap profiling run (the paper's "triggered test run") —
-    /// family-anchored when the runner's space spans the market. Keys
-    /// and the logs' own names both use the canonical scoped task name,
-    /// the same key realized runs are written back under — the adaptive
-    /// loop only closes because the two match.
-    fn history(&mut self, dag: &Dag, rng: &mut Rng) -> Vec<EventLog> {
-        let profiling = profiling_configs_for(&self.space);
-        dag.tasks
-            .iter()
-            .map(|t| {
-                let key = scoped_task_name(&dag.name, &t.name);
-                self.log_db
-                    .entry(key.clone())
-                    .or_insert_with(|| bootstrap_history(&key, &t.profile, &profiling, rng))
-                    .clone()
-            })
-            .collect()
-    }
-
     /// Core demand of one queued task at the default configuration (the
     /// unit the trigger policy measures queue pressure in).
     fn default_cores(&self) -> f64 {
         let c = Agora::default_config(&self.space);
         self.space.configs[c].vcpus()
-    }
-
-    /// Assemble one round's problem in round-local time (releases 0):
-    /// fetch/bootstrap each DAG's history, fit the predictor, predict
-    /// the grid. Shared by both admission modes so their RNG draw
-    /// sequences stay aligned per seed.
-    fn build_round_problem(&mut self, dags: &[Dag], rng: &mut Rng) -> Problem {
-        let releases = vec![0.0f64; dags.len()];
-        let logs: Vec<EventLog> = dags
-            .iter()
-            .flat_map(|d| self.history(d, rng))
-            .collect();
-        let predictor = LearnedPredictor::fit(&logs);
-        let grid = predictor.predict(&self.space);
-        Problem::new(
-            dags,
-            &releases,
-            self.capacity,
-            self.space.clone(),
-            grid,
-            self.cost_model.clone(),
-        )
     }
 
     /// Record per-DAG outcomes of one executed round. `origin` is the
@@ -264,75 +220,8 @@ impl BatchRunner {
                 },
                 finish_time: finish,
                 completion: finish - job.submit_time,
-                cost: report
-                    .records
-                    .iter()
-                    .filter(|r| p.tasks[r.task].dag == d)
-                    .map(|r| {
-                        self.cost_model
-                            .realized_cost(&p.space.configs[r.config], r.runtime)
-                    })
-                    .sum(),
+                cost: RoundEngine::dag_cost(&self.cost_model, p, report, d),
             });
-        }
-    }
-
-    /// Plan one round's batch with the configured strategy. Portfolio and
-    /// seed handling are identical across admission modes (same RNG draw
-    /// sequence), so the two runners stay comparable per seed.
-    fn plan_round(
-        &self,
-        p: &Problem,
-        round: usize,
-        rng: &mut Rng,
-        overhead: &mut Duration,
-    ) -> Result<Schedule> {
-        Ok(match &self.strategy {
-            Strategy::Airflow => {
-                use crate::baselines::{AirflowScheduler, Scheduler};
-                AirflowScheduler::default()
-                    .schedule(p)
-                    .with_context(|| format!("scheduling round {round}"))?
-            }
-            Strategy::Agora(goal) => {
-                let agora = Agora::new(AgoraOptions {
-                    goal: *goal,
-                    mode: Mode::CoOptimize,
-                    params: crate::solver::AnnealParams::fast(),
-                    seed: rng.next_u64(),
-                    parallelism: self.parallelism,
-                    ..Default::default()
-                });
-                let plan = agora.optimize(p);
-                *overhead += plan.overhead;
-                plan.schedule
-            }
-            Strategy::AgoraMode(goal, mode) => {
-                let agora = Agora::new(AgoraOptions {
-                    goal: *goal,
-                    mode: *mode,
-                    params: crate::solver::AnnealParams::fast(),
-                    seed: rng.next_u64(),
-                    parallelism: self.parallelism,
-                    ..Default::default()
-                });
-                let plan = agora.optimize(p);
-                *overhead += plan.overhead;
-                plan.schedule
-            }
-        })
-    }
-
-    /// Feed realized runs back into the event-log database under the
-    /// canonical scoped key (the §4.1 adaptive loop).
-    fn feed_back(&mut self, p: &Problem, report: &sim::ExecutionReport) {
-        for (t, log) in report.new_logs.iter().enumerate() {
-            let key = p.tasks[t].name.clone();
-            let entry = self
-                .log_db
-                .entry(key)
-                .or_insert_with(|| EventLog::new(&p.tasks[t].name));
-            entry.runs.extend(log.runs.iter().cloned());
         }
     }
 
@@ -452,30 +341,31 @@ impl BatchRunner {
                 let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
                 let round_start = clock.max(cluster_free);
 
-                // Build the problem (round-local time) and plan.
+                // The shared per-round pipeline (build → plan → execute
+                // → feed back), same stages as the threaded service.
                 let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
-                let p = self.build_round_problem(&dags, &mut rng);
-                let schedule = self.plan_round(&p, rounds, &mut rng, &mut overhead)?;
-
-                // Execute on the simulated cluster (closed-loop when the
-                // replan policy is armed; per-round seed derivation keeps
-                // injected divergence decorrelated across rounds).
-                let report = sim::execute_with_policy(
-                    &p,
+                let engine = RoundEngine {
+                    capacity: self.capacity,
+                    space: &self.space,
+                    cost_model: &self.cost_model,
+                    replan: &self.replan,
+                };
+                let out = engine.run_round(
+                    &self.strategy,
+                    self.parallelism,
                     &dags,
-                    &schedule,
-                    &self.cost_model,
+                    rounds,
+                    None,
+                    &mut self.log_db,
                     &mut rng,
-                    &self.replan.for_round(rounds as u64 - 1),
-                );
-                replans += report.replans.len();
-                preempts += preemption_count(&report);
-                cluster_free = round_start + report.makespan;
-                busy += busy_core_seconds(&p, &report);
+                    &mut overhead,
+                )?;
+                replans += out.report.replans.len();
+                preempts += preemption_count(&out.report);
+                cluster_free = round_start + out.report.makespan;
+                busy += busy_core_seconds(&out.problem, &out.report);
 
-                // Record outcomes + feed logs back.
-                self.record_outcomes(&mut outcomes, &p, &batch, &report, round_start);
-                self.feed_back(&p, &report);
+                self.record_outcomes(&mut outcomes, &out.problem, &batch, &out.report, round_start);
             }
 
             match next_clock(
@@ -542,43 +432,43 @@ impl BatchRunner {
                 last_round = clock;
                 let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
 
-                // Snapshot the occupied-cluster timeline and build the
-                // problem in round-local time (origin = the admission
-                // instant): the ledger prunes to the in-flight suffix
-                // and shifts by -clock; releases/floor are 0, so no task
-                // of this batch can start in the past and every
+                // Snapshot the occupied-cluster timeline and run the
+                // shared pipeline in round-local time (origin = the
+                // admission instant): the ledger prunes to the in-flight
+                // suffix and shifts by -clock; releases/floor are 0, so
+                // no task of this batch can start in the past and every
                 // scheduler packs into the gaps. Timeline packing is
                 // translation-invariant; the local origin keeps the
                 // optimizer's percentage energies scale-free regardless
                 // of how deep into the trace the round fires.
-                let shifted: Vec<Reservation> = ledger.snapshot(clock);
+                let shifted = ledger.snapshot(clock);
                 let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
-                let p = self
-                    .build_round_problem(&dags, &mut rng)
-                    .with_occupancy(shifted, 0.0);
-
-                let schedule = self.plan_round(&p, rounds, &mut rng, &mut overhead)?;
-
-                let report = sim::execute_with_policy(
-                    &p,
+                let engine = RoundEngine {
+                    capacity: self.capacity,
+                    space: &self.space,
+                    cost_model: &self.cost_model,
+                    replan: &self.replan,
+                };
+                let out = engine.run_round(
+                    &self.strategy,
+                    self.parallelism,
                     &dags,
-                    &schedule,
-                    &self.cost_model,
+                    rounds,
+                    Some(shifted),
+                    &mut self.log_db,
                     &mut rng,
-                    &self.replan.for_round(rounds as u64 - 1),
-                );
-                replans += report.replans.len();
-                preempts += preemption_count(&report);
-                busy += busy_core_seconds(&p, &report);
+                    &mut overhead,
+                )?;
+                replans += out.report.replans.len();
+                preempts += preemption_count(&out.report);
+                busy += busy_core_seconds(&out.problem, &out.report);
 
                 // Every realized record becomes a reservation later
                 // rounds must pack around (ledger is absolute time).
-                ledger.absorb(&p, &report, clock);
+                ledger.absorb(&out.problem, &out.report, clock);
 
-                // Outcomes at true finish times (absolute virtual time)
-                // + feed logs back.
-                self.record_outcomes(&mut outcomes, &p, &batch, &report, clock);
-                self.feed_back(&p, &report);
+                // Outcomes at true finish times (absolute virtual time).
+                self.record_outcomes(&mut outcomes, &out.problem, &batch, &out.report, clock);
             }
 
             match next_clock(
@@ -596,25 +486,6 @@ impl BatchRunner {
 
         Ok(self.summarize(outcomes, rounds, overhead, replans, preempts, busy))
     }
-}
-
-/// Spot preemptions realized by one execution report — shared by both
-/// admission loops so their accounting cannot drift.
-fn preemption_count(report: &sim::ExecutionReport) -> usize {
-    report
-        .records
-        .iter()
-        .map(|r| r.preemptions as usize)
-        .sum()
-}
-
-/// Busy core-seconds realized by one execution report.
-fn busy_core_seconds(p: &Problem, report: &sim::ExecutionReport) -> f64 {
-    report
-        .records
-        .iter()
-        .map(|r| p.space.configs[r.config].vcpus() * r.runtime)
-        .sum()
 }
 
 /// Advance the virtual clock to the next interesting instant — the next

@@ -1,0 +1,391 @@
+//! The control actor: the single coordinator thread that owns every
+//! piece of mutable service state (RNG stream, event-log database,
+//! occupancy ledger, round sequencing) and drives the worker pool.
+//!
+//! # Protocol
+//!
+//! Each loop iteration, in order:
+//!
+//! 1. **Commit** every contiguous finished round starting at
+//!    `next_commit`: execute the planned schedule on the simulated
+//!    cluster, absorb occupancy (continuous admission), feed logs back,
+//!    answer every submission of the round. Rounds always commit in
+//!    round order, even when a later round's optimization finishes
+//!    first — out-of-order results park in `planned` until their turn.
+//! 2. **Redispatch** retries whose backoff expired (same round number,
+//!    same optimizer seed).
+//! 3. **Dispatch** new rounds while a worker slot is free and the
+//!    trigger (window elapsed / demand / shutdown drain) fires: take a
+//!    batch from ingress, build the round's [`Problem`], draw its
+//!    optimizer seed, hand the pure planning step to the pool.
+//! 4. **Exit** once shutdown was requested and no work remains.
+//! 5. **Sleep** on the mailbox for submissions/completions/shutdown.
+//!
+//! # Determinism
+//!
+//! The coordinator RNG is consumed only on this thread and only at two
+//! points, in round order: the bootstrap-history draws inside
+//! `build_problem` + one `next_u64` seed at dispatch, and the
+//! simulator's draws at commit. With one worker, dispatch of round
+//! *N + 1* cannot start before round *N* commits (the single slot frees
+//! only when the result arrives, and commits are processed before
+//! dispatches in the iteration), so the draw order is exactly the
+//! legacy serial `bootstrap(N) → seed(N) → execute(N) → bootstrap(N+1)
+//! → …` — which is why the single-worker, unbounded-queue service is
+//! bit-identical to the pre-refactor loop. With more workers the
+//! commit order (and thus the reply order) is still deterministic, but
+//! execute draws interleave differently with later rounds' bootstraps,
+//! so realized numbers may differ from the serial stream — the
+//! documented price of parallel planning.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::ingress::Pending;
+use super::pool::{Job, WorkerPool};
+use super::reload::ConfigSnapshot;
+use super::retry::RoundError;
+use super::round::{busy_core_seconds, RoundEngine};
+use super::service::{Shared, SubmitResult};
+use super::{Admission, OccupancyLedger, TriggerPolicy};
+use crate::dag::Dag;
+use crate::predictor::EventLog;
+use crate::solver::{Mode, Problem, Schedule};
+use crate::util::Rng;
+
+/// A dispatched, uncommitted round.
+struct Inflight {
+    /// The submissions of the round (replies outstanding).
+    batch: Vec<Pending>,
+    /// The round's DAGs (batch order).
+    dags: Vec<Dag>,
+    /// Configuration generation pinned at dispatch.
+    snapshot: Arc<ConfigSnapshot>,
+    /// Virtual admission instant on the shared timeline.
+    vnow: f64,
+    /// Optimizer seed drawn at dispatch; reused verbatim by retries.
+    seed: u64,
+    /// Failed attempts so far.
+    failures: usize,
+    /// Wall-clock dispatch instant (queue-delay accounting).
+    dispatched_at: Instant,
+    /// The problem handed back by a failed attempt, kept for redispatch.
+    retry_problem: Option<Problem>,
+}
+
+/// A finished optimization waiting for its in-order commit slot.
+struct Planned {
+    problem: Problem,
+    schedule: Schedule,
+}
+
+/// Run the control actor until shutdown; returns rounds served.
+pub(crate) fn run(shared: Arc<Shared>) -> usize {
+    let boot = shared.config.load();
+    let mut rng = Rng::new(boot.config.seed);
+    drop(boot);
+    let pool = WorkerPool::spawn(shared.workers, shared.clone());
+
+    let mut log_db: HashMap<String, EventLog> = HashMap::new();
+    let mut ledger = OccupancyLedger::default();
+    let mut inflight: BTreeMap<usize, Inflight> = BTreeMap::new();
+    let mut planned: BTreeMap<usize, Planned> = BTreeMap::new();
+    let mut failed: BTreeMap<usize, RoundError> = BTreeMap::new();
+    let mut delayed: Vec<(Instant, usize)> = Vec::new();
+    let mut pool_busy = 0usize;
+    let mut dispatched = 0usize;
+    let mut next_commit = 1usize;
+    let mut served = 0usize;
+    // Absolute virtual-time horizon for utilization accounting: rounds
+    // stack back-to-back under the barrier, overlap under continuous
+    // admission.
+    let mut horizon = 0.0f64;
+    let mut window_start = Instant::now();
+    let mut shutting_down = false;
+
+    loop {
+        let snap = shared.config.load();
+        let cfg = &snap.config;
+
+        // 1. Commit finished rounds, strictly in round order.
+        loop {
+            let round = next_commit;
+            if let Some(pl) = planned.remove(&round) {
+                let inf = match inflight.remove(&round) {
+                    Some(inf) => inf,
+                    None => {
+                        next_commit += 1;
+                        continue;
+                    }
+                };
+                let pinned = &inf.snapshot.config;
+                let engine = RoundEngine {
+                    capacity: pinned.capacity,
+                    space: &pinned.space,
+                    cost_model: &pinned.cost_model,
+                    replan: &pinned.replan,
+                };
+                let report = engine.execute(&pl.problem, &inf.dags, &pl.schedule, round, &mut rng);
+                if pinned.admission == Admission::Continuous {
+                    ledger.absorb(&pl.problem, &report, inf.vnow);
+                }
+                RoundEngine::feed_back(&mut log_db, &pl.problem, &report);
+                horizon = match pinned.admission {
+                    Admission::Rounds => horizon + report.makespan,
+                    Admission::Continuous => horizon.max(inf.vnow + report.makespan),
+                };
+                let busy = busy_core_seconds(&pl.problem, &report);
+
+                let n = inf.batch.len();
+                let mut tenants = Vec::with_capacity(n);
+                let mut completions = Vec::with_capacity(n);
+                let mut delays = Vec::with_capacity(n);
+                let mut round_cost = 0.0f64;
+                for (d, pending) in inf.batch.iter().enumerate() {
+                    let cost = RoundEngine::dag_cost(&pinned.cost_model, &pl.problem, &report, d);
+                    round_cost += cost;
+                    tenants.push(pending.tenant.clone());
+                    completions.push(report.dag_completion[d]);
+                    delays.push(
+                        inf.dispatched_at
+                            .saturating_duration_since(pending.enqueued)
+                            .as_secs_f64(),
+                    );
+                    let _ = pending.reply.send(Ok(SubmitResult {
+                        tenant: pending.tenant.clone(),
+                        dag_name: pending.dag.name.clone(),
+                        completion: report.dag_completion[d],
+                        cost,
+                        round,
+                    }));
+                }
+                shared.status.round_committed(
+                    &tenants,
+                    &completions,
+                    &delays,
+                    round_cost,
+                    busy,
+                    horizon,
+                );
+                served += 1;
+                next_commit += 1;
+            } else if let Some(err) = failed.remove(&round) {
+                if let Some(inf) = inflight.remove(&round) {
+                    for pending in &inf.batch {
+                        let _ = pending.reply.send(Err(err.clone()));
+                    }
+                }
+                next_commit += 1;
+            } else {
+                break;
+            }
+        }
+        shared.status.set_in_flight(inflight.len());
+
+        // 2. Redispatch retries whose backoff expired.
+        let now = Instant::now();
+        let mut i = 0;
+        while i < delayed.len() {
+            if pool_busy >= shared.workers {
+                break;
+            }
+            if delayed[i].0 > now {
+                i += 1;
+                continue;
+            }
+            let (_, round) = delayed.swap_remove(i);
+            let job = inflight.get_mut(&round).and_then(|inf| {
+                inf.retry_problem.take().map(|problem| {
+                    let c = &inf.snapshot.config;
+                    Job {
+                        round,
+                        attempt: inf.failures + 1,
+                        problem,
+                        options: RoundEngine::agora_options(
+                            c.goal,
+                            Mode::CoOptimize,
+                            inf.seed,
+                            c.parallelism.max(1),
+                        ),
+                        fault: c.fault.clone(),
+                    }
+                })
+            });
+            if let Some(job) = job {
+                let attempts = job.attempt - 1;
+                match pool.dispatch(job) {
+                    Ok(()) => pool_busy += 1,
+                    Err(message) => {
+                        failed.insert(
+                            round,
+                            RoundError {
+                                round,
+                                attempts,
+                                message,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+
+        // 3. Dispatch new rounds while the trigger fires and a worker
+        // slot is free.
+        while pool_busy < shared.workers {
+            let queued = shared.ingress.queued();
+            if queued == 0 {
+                break;
+            }
+            let window_elapsed = window_start.elapsed() >= cfg.batch_window;
+            if !(shutting_down || window_elapsed || queued >= cfg.max_queue) {
+                break;
+            }
+            let cap = if cfg.max_batch == 0 {
+                usize::MAX
+            } else {
+                cfg.max_batch
+            };
+            let batch = shared.ingress.take_batch(cap);
+            if batch.is_empty() {
+                break;
+            }
+            dispatched += 1;
+            let round = dispatched;
+            // Virtual admission instant: consecutive rounds sit one
+            // trigger interval (the paper's 15 minutes, which a
+            // batch_window stands for) apart — round-indexed, so slow
+            // optimizes cannot silently drain the ledger.
+            let vnow = match cfg.admission {
+                Admission::Rounds => 0.0,
+                Admission::Continuous => (round as f64 - 1.0) * TriggerPolicy::default().interval,
+            };
+            let dags: Vec<Dag> = batch.iter().map(|p| p.dag.clone()).collect();
+            let engine = RoundEngine {
+                capacity: cfg.capacity,
+                space: &cfg.space,
+                cost_model: &cfg.cost_model,
+                replan: &cfg.replan,
+            };
+            let mut problem = engine.build_problem(&dags, &mut log_db, &mut rng);
+            if cfg.admission == Admission::Continuous {
+                problem = problem.with_occupancy(ledger.snapshot(vnow), 0.0);
+            }
+            let seed = rng.next_u64();
+            let job = Job {
+                round,
+                attempt: 1,
+                problem,
+                options: RoundEngine::agora_options(
+                    cfg.goal,
+                    Mode::CoOptimize,
+                    seed,
+                    cfg.parallelism.max(1),
+                ),
+                fault: cfg.fault.clone(),
+            };
+            inflight.insert(
+                round,
+                Inflight {
+                    batch,
+                    dags,
+                    snapshot: snap.clone(),
+                    vnow,
+                    seed,
+                    failures: 0,
+                    dispatched_at: Instant::now(),
+                    retry_problem: None,
+                },
+            );
+            match pool.dispatch(job) {
+                Ok(()) => pool_busy += 1,
+                Err(message) => {
+                    failed.insert(
+                        round,
+                        RoundError {
+                            round,
+                            attempts: 0,
+                            message,
+                        },
+                    );
+                }
+            }
+            window_start = Instant::now();
+        }
+        shared.status.set_in_flight(inflight.len());
+        // An elapsed window with nothing queued just re-arms (the legacy
+        // idle reset): the window measures batching delay, not idleness.
+        if shared.ingress.queued() == 0 && window_start.elapsed() >= cfg.batch_window {
+            window_start = Instant::now();
+        }
+
+        // 4. Exit once draining is complete. Failed dispatches parked in
+        // `failed` still count as work until their in-order reply.
+        if shutting_down
+            && inflight.is_empty()
+            && failed.is_empty()
+            && shared.ingress.queued() == 0
+        {
+            break;
+        }
+
+        // 5. Sleep until the next event, but never past the batching
+        // window (work queued + free slot) or a retry deadline.
+        let mut timeout = Duration::from_millis(100);
+        if pool_busy < shared.workers && shared.ingress.queued() > 0 {
+            let remaining = cfg
+                .batch_window
+                .saturating_sub(window_start.elapsed())
+                .max(Duration::from_millis(1));
+            timeout = timeout.min(remaining);
+        }
+        let now = Instant::now();
+        for (due, _) in &delayed {
+            let wait = due
+                .saturating_duration_since(now)
+                .max(Duration::from_millis(1));
+            timeout = timeout.min(wait);
+        }
+        let view = shared.ingress.wait(timeout);
+        shutting_down = shutting_down || view.shutting_down;
+        for done in view.done {
+            pool_busy = pool_busy.saturating_sub(1);
+            match done.outcome {
+                Ok((schedule, overhead)) => {
+                    shared.status.add_overhead(overhead);
+                    planned.insert(
+                        done.round,
+                        Planned {
+                            problem: done.problem,
+                            schedule,
+                        },
+                    );
+                }
+                Err(message) => {
+                    if let Some(inf) = inflight.get_mut(&done.round) {
+                        inf.failures += 1;
+                        inf.retry_problem = Some(done.problem);
+                        let retry = &inf.snapshot.config.retry;
+                        if retry.exhausted(inf.failures) {
+                            shared.status.round_failed();
+                            failed.insert(
+                                done.round,
+                                RoundError {
+                                    round: done.round,
+                                    attempts: inf.failures,
+                                    message,
+                                },
+                            );
+                        } else {
+                            shared.status.round_retried();
+                            delayed.push((Instant::now() + retry.backoff(inf.failures), done.round));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    shared.status.set_in_flight(0);
+    served
+}

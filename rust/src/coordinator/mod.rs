@@ -7,12 +7,22 @@
 //! are greater than three times the available cores in the cluster."
 
 pub mod batch;
+pub(crate) mod control;
+pub mod ingress;
 pub mod metrics;
+pub(crate) mod pool;
+pub(crate) mod reload;
+pub mod retry;
+pub(crate) mod round;
 pub mod service;
+pub mod status;
 
 pub use batch::{BatchRunner, DagOutcome, MacroReport, Strategy};
+pub use ingress::{Priority, SubmitError, Ticket};
 pub use metrics::{improvement_cdf, AdmissionStats, MacroSummary};
-pub use service::{Service, ServiceHandle, SubmitResult};
+pub use retry::{FaultSpec, RetryPolicy, RoundError};
+pub use service::{Service, ServiceConfig, ServiceHandle, SubmitResult};
+pub use status::{ServiceStatus, TenantStatus};
 
 /// How the coordinator admits triggered batches onto the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

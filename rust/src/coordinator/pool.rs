@@ -1,0 +1,247 @@
+//! Bounded worker pool running portfolio co-optimization off the
+//! coordinator thread.
+//!
+//! Workers pull [`Job`]s from a shared queue and run **only** the pure
+//! planning step (`Agora::optimize` with a pre-drawn seed); everything
+//! stateful — history bootstraps, the occupancy ledger, execution, log
+//! feedback, replies — stays serialized on the control thread, which
+//! commits results strictly in round order. That split is what lets the
+//! pool scale without perturbing the service's deterministic RNG stream
+//! (see [`super::control`] for the determinism argument).
+//!
+//! A worker wraps the optimizer in `catch_unwind`: a panicking attempt
+//! becomes an `Err` [`Done`] carrying the panic message, feeding the
+//! retry ladder instead of deadlocking the round.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::retry::FaultSpec;
+use super::service::Shared;
+use crate::solver::{Agora, AgoraOptions, Problem, Schedule};
+
+/// One optimization attempt handed to the pool.
+pub(crate) struct Job {
+    /// Round number (1-based, commit order).
+    pub(crate) round: usize,
+    /// Attempt number (1-based; grows with retries).
+    pub(crate) attempt: usize,
+    /// The round's problem, built by the control thread.
+    pub(crate) problem: Problem,
+    /// Fully-resolved optimizer options (seed pre-drawn by control).
+    pub(crate) options: AgoraOptions,
+    /// Fault injection for retry tests (off in production configs).
+    pub(crate) fault: FaultSpec,
+}
+
+/// One finished attempt, posted back through the ingress mailbox.
+pub(crate) struct Done {
+    /// Round number of the attempt.
+    pub(crate) round: usize,
+    /// The problem handed back (so retries and commit need no rebuild).
+    pub(crate) problem: Problem,
+    /// Planned schedule + optimizer wall-clock, or the failure message.
+    pub(crate) outcome: Result<(Schedule, Duration), String>,
+}
+
+/// Best-effort text of a panic payload (shared with
+/// [`Service::shutdown`](super::service::Service::shutdown)'s
+/// panic-propagation path).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "optimizer panicked".to_string()
+    }
+}
+
+/// Fixed-size worker pool; dropped (or disconnected) senders terminate
+/// the workers.
+pub(crate) struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (>= 1) threads pulling from one shared job queue
+    /// and posting [`Done`]s to `shared`'s ingress mailbox.
+    pub(crate) fn spawn(workers: usize, shared: Arc<Shared>) -> WorkerPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("agora-worker-{i}"))
+                    .spawn(move || worker_loop(&rx, &shared))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Hand one attempt to the pool; `Err` if every worker is gone.
+    pub(crate) fn dispatch(&self, job: Job) -> Result<(), String> {
+        match &self.tx {
+            Some(tx) => tx
+                .send(job)
+                .map_err(|_| "worker pool has shut down".to_string()),
+            None => Err("worker pool has shut down".to_string()),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Disconnect the queue so workers drain and exit, then reap them.
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>, shared: &Arc<Shared>) {
+    loop {
+        // Hold the queue lock only for the receive itself, so idle
+        // workers queue up fairly behind it while one optimizes.
+        let job = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        let Job {
+            round,
+            attempt,
+            problem,
+            options,
+            fault,
+        } = match job {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        let outcome = if attempt <= fault.optimize_failures {
+            Err(format!("injected optimizer fault (attempt {attempt})"))
+        } else {
+            catch_unwind(AssertUnwindSafe(|| {
+                let plan = Agora::new(options).optimize(&problem);
+                (plan.schedule, plan.overhead)
+            }))
+            .map_err(panic_message)
+        };
+        shared.ingress.push_done(Done {
+            round,
+            problem,
+            outcome,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::coordinator::round::RoundEngine;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::sim::ReplanPolicy;
+    use crate::solver::{Goal, Mode};
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn fixture() -> (Arc<Shared>, Problem) {
+        let shared = Arc::new(Shared::new(ServiceConfig::default()));
+        let space = ConfigSpace::standard();
+        let cost_model = CostModel::OnDemand;
+        let replan = ReplanPolicy::off();
+        let engine = RoundEngine {
+            capacity: Capacity::micro(),
+            space: &space,
+            cost_model: &cost_model,
+            replan: &replan,
+        };
+        let dags = vec![crate::dag::workloads::dag1()];
+        let mut db = HashMap::new();
+        let mut rng = Rng::new(9);
+        let p = engine.build_problem(&dags, &mut db, &mut rng);
+        (shared, p)
+    }
+
+    fn wait_done(shared: &Arc<Shared>) -> Done {
+        for _ in 0..600 {
+            let mut view = shared.ingress.wait(Duration::from_millis(100));
+            if let Some(d) = view.done.pop() {
+                return d;
+            }
+        }
+        panic!("worker never reported");
+    }
+
+    #[test]
+    fn pool_plans_a_round_and_reports_back() {
+        let (shared, p) = fixture();
+        let pool = WorkerPool::spawn(2, shared.clone());
+        pool.dispatch(Job {
+            round: 1,
+            attempt: 1,
+            problem: p,
+            options: RoundEngine::agora_options(Goal::Balanced, Mode::CoOptimize, 42, 1),
+            fault: FaultSpec::default(),
+        })
+        .expect("dispatch");
+        let done = wait_done(&shared);
+        assert_eq!(done.round, 1);
+        let (schedule, overhead) = done.outcome.expect("planned");
+        assert!(!schedule.assignment.is_empty());
+        assert!(overhead > Duration::ZERO);
+    }
+
+    #[test]
+    fn injected_faults_surface_as_errors_not_hangs() {
+        let (shared, p) = fixture();
+        let pool = WorkerPool::spawn(1, shared.clone());
+        pool.dispatch(Job {
+            round: 3,
+            attempt: 1,
+            problem: p.clone(),
+            options: RoundEngine::agora_options(Goal::Balanced, Mode::CoOptimize, 42, 1),
+            fault: FaultSpec {
+                optimize_failures: 1,
+            },
+        })
+        .expect("dispatch");
+        let done = wait_done(&shared);
+        assert_eq!(done.round, 3);
+        let msg = done.outcome.expect_err("fault injected");
+        assert!(msg.contains("injected optimizer fault"));
+        // The returned problem survives for the retry redispatch.
+        assert_eq!(done.problem.tasks.len(), p.tasks.len());
+        // The same round past its fault budget succeeds.
+        pool.dispatch(Job {
+            round: 3,
+            attempt: 2,
+            problem: done.problem,
+            options: RoundEngine::agora_options(Goal::Balanced, Mode::CoOptimize, 42, 1),
+            fault: FaultSpec {
+                optimize_failures: 1,
+            },
+        })
+        .expect("dispatch");
+        let done = wait_done(&shared);
+        assert!(done.outcome.is_ok());
+    }
+
+    #[test]
+    fn dropping_the_pool_reaps_workers() {
+        let (shared, _) = fixture();
+        let pool = WorkerPool::spawn(3, shared);
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,120 @@
+//! Live configuration reload for the control plane.
+//!
+//! [`ConfigCell`] holds the service's current [`ServiceConfig`] behind a
+//! versioned `Arc` snapshot. [`ServiceHandle::reload`] swaps in a new
+//! snapshot atomically *between* rounds: the control thread re-loads the
+//! cell before dispatching each round, and every in-flight round keeps
+//! the `Arc` it captured at dispatch, so it finishes on the exact
+//! configuration (goal, capacity, space, pricing, replan/retry policy)
+//! it started with.
+//!
+//! Boot-only fields of a swapped-in config are ignored by the running
+//! service and documented as such on [`ServiceConfig`]: `workers` (pool
+//! size is fixed at spawn), `queue_bound` (ingress bound is fixed at
+//! spawn) and `seed` (the coordinator RNG stream is seeded once).
+//!
+//! [`ServiceConfig`]: super::service::ServiceConfig
+//! [`ServiceHandle::reload`]: super::service::ServiceHandle::reload
+
+use std::sync::{Arc, Mutex};
+
+use super::service::ServiceConfig;
+
+/// One immutable configuration generation.
+#[derive(Debug)]
+pub(crate) struct ConfigSnapshot {
+    /// Monotonic generation counter; 1 at boot, +1 per reload.
+    pub(crate) version: u64,
+    /// The configuration of this generation.
+    pub(crate) config: ServiceConfig,
+}
+
+/// Versioned atomic `ServiceConfig` holder shared by the handle (writer)
+/// and the control thread (reader).
+#[derive(Debug)]
+pub(crate) struct ConfigCell {
+    current: Mutex<Arc<ConfigSnapshot>>,
+}
+
+impl ConfigCell {
+    /// A cell holding the boot configuration as version 1.
+    pub(crate) fn new(config: ServiceConfig) -> ConfigCell {
+        ConfigCell {
+            current: Mutex::new(Arc::new(ConfigSnapshot { version: 1, config })),
+        }
+    }
+
+    /// The current snapshot (cheap: one lock + `Arc` clone).
+    pub(crate) fn load(&self) -> Arc<ConfigSnapshot> {
+        self.current
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Swap in a new configuration; returns the new version. Readers
+    /// holding the previous snapshot are unaffected.
+    pub(crate) fn swap(&self, config: ServiceConfig) -> u64 {
+        let mut cur = self.current.lock().unwrap_or_else(|e| e.into_inner());
+        let version = cur.version + 1;
+        *cur = Arc::new(ConfigSnapshot { version, config });
+        version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::Goal;
+
+    #[test]
+    fn versions_are_monotonic_and_snapshots_immutable() {
+        let cell = ConfigCell::new(ServiceConfig::default());
+        let boot = cell.load();
+        assert_eq!(boot.version, 1);
+
+        let v2 = cell.swap(ServiceConfig {
+            goal: Goal::Cost,
+            ..Default::default()
+        });
+        assert_eq!(v2, 2);
+        // The old snapshot is untouched; the new one is visible.
+        assert_eq!(boot.version, 1);
+        assert_eq!(boot.config.goal, Goal::Balanced);
+        let now = cell.load();
+        assert_eq!(now.version, 2);
+        assert_eq!(now.config.goal, Goal::Cost);
+
+        assert_eq!(cell.swap(ServiceConfig::default()), 3);
+    }
+
+    #[test]
+    fn concurrent_readers_see_a_consistent_generation() {
+        let cell = std::sync::Arc::new(ConfigCell::new(ServiceConfig::default()));
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let cell = cell.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..200 {
+                        let snap = cell.load();
+                        // goal and version always travel together
+                        if snap.version == 1 {
+                            assert_eq!(snap.config.goal, Goal::Balanced);
+                        } else {
+                            assert_eq!(snap.config.goal, Goal::Runtime);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..50 {
+            cell.swap(ServiceConfig {
+                goal: Goal::Runtime,
+                ..Default::default()
+            });
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Bounded-retry policy for optimization rounds.
+//!
+//! A round whose co-optimization attempt errors (or panics inside the
+//! worker pool) is not dropped: the control plane re-queues it with
+//! bounded exponential backoff, keeping its round number and optimizer
+//! seed, until [`RetryPolicy::max_attempts`] is exhausted — at which
+//! point every submission of the round is answered with a
+//! [`RoundError`] instead of silently losing its reply.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Bounded exponential backoff for failed optimization rounds.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts per round, including the first (>= 1; a value of 1
+    /// disables retries).
+    pub max_attempts: usize,
+    /// Backoff before the first retry.
+    pub base: Duration,
+    /// Multiplicative backoff growth per additional failure (>= 1).
+    pub factor: f64,
+    /// Upper bound on a single backoff wait.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_millis(50),
+            factor: 2.0,
+            cap: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to wait after the `failures`-th consecutive failure
+    /// (1-based): `base * factor^(failures-1)`, capped at [`cap`].
+    ///
+    /// [`cap`]: RetryPolicy::cap
+    pub fn backoff(&self, failures: usize) -> Duration {
+        if failures == 0 {
+            return Duration::ZERO;
+        }
+        let exp = (failures - 1).min(30) as i32;
+        let secs = self.base.as_secs_f64() * self.factor.max(1.0).powi(exp);
+        Duration::from_secs_f64(secs.min(self.cap.as_secs_f64()).max(0.0))
+    }
+
+    /// Has the round burned through its attempt budget?
+    pub fn exhausted(&self, failures: usize) -> bool {
+        failures >= self.max_attempts.max(1)
+    }
+}
+
+/// Deterministic fault injection for control-plane tests: the first
+/// `optimize_failures` attempts of *every* round fail inside the worker
+/// pool before the optimizer runs, exercising the retry ladder without
+/// touching optimizer internals. Off (0) by default.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Number of leading attempts per round that fail artificially.
+    pub optimize_failures: usize,
+}
+
+/// Terminal failure of an optimization round after retries were
+/// exhausted; delivered to every submission the round contained.
+#[derive(Debug, Clone)]
+pub struct RoundError {
+    /// The round that failed.
+    pub round: usize,
+    /// Attempts consumed before giving up.
+    pub attempts: usize,
+    /// The last attempt's error (or panic) message.
+    pub message: String,
+}
+
+impl fmt::Display for RoundError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "round {} failed after {} attempt(s): {}",
+            self.round, self.attempts, self.message
+        )
+    }
+}
+
+impl std::error::Error for RoundError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_geometrically_and_caps() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base: Duration::from_millis(100),
+            factor: 2.0,
+            cap: Duration::from_millis(500),
+        };
+        assert_eq!(p.backoff(1), Duration::from_millis(100));
+        assert_eq!(p.backoff(2), Duration::from_millis(200));
+        assert_eq!(p.backoff(3), Duration::from_millis(400));
+        // capped from here on
+        assert_eq!(p.backoff(4), Duration::from_millis(500));
+        assert_eq!(p.backoff(20), Duration::from_millis(500));
+    }
+
+    #[test]
+    fn zero_failures_waits_nothing() {
+        assert_eq!(RetryPolicy::default().backoff(0), Duration::ZERO);
+    }
+
+    #[test]
+    fn huge_failure_counts_do_not_overflow() {
+        let p = RetryPolicy::default();
+        assert!(p.backoff(usize::MAX) <= p.cap);
+    }
+
+    #[test]
+    fn exhaustion_respects_max_attempts() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            ..Default::default()
+        };
+        assert!(!p.exhausted(1));
+        assert!(!p.exhausted(2));
+        assert!(p.exhausted(3));
+        assert!(p.exhausted(4));
+        // max_attempts 0 degrades to "one attempt, no retries"
+        let p = RetryPolicy {
+            max_attempts: 0,
+            ..Default::default()
+        };
+        assert!(p.exhausted(1));
+    }
+
+    #[test]
+    fn round_error_renders_context() {
+        let e = RoundError {
+            round: 7,
+            attempts: 3,
+            message: "optimizer panicked".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("round 7"));
+        assert!(s.contains("3 attempt(s)"));
+        assert!(s.contains("optimizer panicked"));
+    }
+
+    #[test]
+    fn fault_spec_defaults_off() {
+        assert_eq!(FaultSpec::default().optimize_failures, 0);
+    }
+}

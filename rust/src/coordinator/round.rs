@@ -1,0 +1,375 @@
+//! The shared per-round optimization pipeline: bootstrap histories →
+//! fit predictor → build [`Problem`] → plan → execute → feed logs back.
+//!
+//! Both coordinator front-ends run rounds through [`RoundEngine`] — the
+//! virtual-time [`BatchRunner`](super::BatchRunner) calls
+//! [`RoundEngine::run_round`] synchronously, while the threaded service
+//! control plane ([`super::control`]) runs the same stages split across
+//! its dispatch/worker/commit protocol — so the two cannot drift
+//! semantically (the service counterpart of the PR 3
+//! `build_round_problem`/`record_outcomes` unification).
+//!
+//! RNG discipline: [`RoundEngine::build_problem`] consumes bootstrap
+//! draws in DAG/task order, then the Agora plan path consumes exactly
+//! one `next_u64` for the optimizer seed, then execution consumes the
+//! simulator's draws. Keeping the draw order identical to the legacy
+//! inline pipelines is what pins seeded results bit-for-bit.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::batch::Strategy;
+use crate::cluster::{Capacity, ConfigSpace, CostModel};
+use crate::dag::Dag;
+use crate::predictor::{
+    bootstrap_history, profiling_configs_for, scoped_task_name, EventLog, LearnedPredictor,
+    Predictor,
+};
+use crate::sim::{self, ReplanPolicy};
+use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Reservation, Schedule};
+use crate::util::Rng;
+
+/// One executed round: the problem it was planned against and the
+/// realized execution report.
+pub(crate) struct RoundOutcome {
+    /// The round's problem (task table, config space, occupancy).
+    pub(crate) problem: Problem,
+    /// The simulator's realized report.
+    pub(crate) report: sim::ExecutionReport,
+}
+
+/// The per-round pipeline, borrowing the coordinator's round-invariant
+/// configuration.
+pub(crate) struct RoundEngine<'a> {
+    /// Simulated cluster capacity.
+    pub(crate) capacity: Capacity,
+    /// Candidate configuration space.
+    pub(crate) space: &'a ConfigSpace,
+    /// Pricing model for planning and realized accounting.
+    pub(crate) cost_model: &'a CostModel,
+    /// Mid-flight re-planning policy applied to execution.
+    pub(crate) replan: &'a ReplanPolicy,
+}
+
+impl RoundEngine<'_> {
+    /// Assemble one round's problem in round-local time (releases 0):
+    /// fetch/bootstrap each DAG's task history from `log_db` (keyed by
+    /// the canonical scoped task name — the same key realized runs are
+    /// written back under), fit the predictor, predict the grid.
+    pub(crate) fn build_problem(
+        &self,
+        dags: &[Dag],
+        log_db: &mut HashMap<String, EventLog>,
+        rng: &mut Rng,
+    ) -> Problem {
+        let releases = vec![0.0f64; dags.len()];
+        let profiling = profiling_configs_for(self.space);
+        let mut logs: Vec<EventLog> = Vec::new();
+        for d in dags {
+            for t in &d.tasks {
+                let key = scoped_task_name(&d.name, &t.name);
+                let entry = log_db
+                    .entry(key.clone())
+                    .or_insert_with(|| bootstrap_history(&key, &t.profile, &profiling, rng));
+                logs.push(entry.clone());
+            }
+        }
+        let predictor = LearnedPredictor::fit(&logs);
+        let grid = predictor.predict(self.space);
+        Problem::new(
+            dags,
+            &releases,
+            self.capacity,
+            self.space.clone(),
+            grid,
+            self.cost_model.clone(),
+        )
+    }
+
+    /// The service's co-optimizer options for one round attempt. Pulled
+    /// out so dispatch (control thread) and retry redispatch construct
+    /// byte-identical options from a stored seed.
+    pub(crate) fn agora_options(
+        goal: Goal,
+        mode: Mode,
+        seed: u64,
+        parallelism: usize,
+    ) -> AgoraOptions {
+        AgoraOptions {
+            goal,
+            mode,
+            params: crate::solver::AnnealParams::fast(),
+            seed,
+            parallelism,
+            ..Default::default()
+        }
+    }
+
+    /// Run the co-optimizer with a pre-drawn seed, accumulating its
+    /// wall-clock overhead.
+    pub(crate) fn optimize(
+        p: &Problem,
+        goal: Goal,
+        mode: Mode,
+        seed: u64,
+        parallelism: usize,
+        overhead: &mut Duration,
+    ) -> Schedule {
+        let agora = Agora::new(Self::agora_options(goal, mode, seed, parallelism));
+        let plan = agora.optimize(p);
+        *overhead += plan.overhead;
+        plan.schedule
+    }
+
+    /// Plan one round's batch with a [`Strategy`]. The Airflow baseline
+    /// draws no RNG; the Agora arms draw exactly one seed — identical
+    /// across admission modes so runs stay comparable per seed.
+    pub(crate) fn plan(
+        &self,
+        strategy: &Strategy,
+        parallelism: usize,
+        p: &Problem,
+        round: usize,
+        rng: &mut Rng,
+        overhead: &mut Duration,
+    ) -> Result<Schedule> {
+        Ok(match strategy {
+            Strategy::Airflow => {
+                use crate::baselines::{AirflowScheduler, Scheduler};
+                AirflowScheduler::default()
+                    .schedule(p)
+                    .with_context(|| format!("scheduling round {round}"))?
+            }
+            Strategy::Agora(goal) => {
+                let seed = rng.next_u64();
+                Self::optimize(p, *goal, Mode::CoOptimize, seed, parallelism, overhead)
+            }
+            Strategy::AgoraMode(goal, mode) => {
+                let seed = rng.next_u64();
+                Self::optimize(p, *goal, *mode, seed, parallelism, overhead)
+            }
+        })
+    }
+
+    /// Execute one planned round on the simulated cluster (closed-loop
+    /// when the replan policy is armed; per-round seed derivation keeps
+    /// injected divergence decorrelated across rounds).
+    pub(crate) fn execute(
+        &self,
+        p: &Problem,
+        dags: &[Dag],
+        schedule: &Schedule,
+        round: usize,
+        rng: &mut Rng,
+    ) -> sim::ExecutionReport {
+        sim::execute_with_policy(
+            p,
+            dags,
+            schedule,
+            self.cost_model,
+            rng,
+            &self.replan.for_round(round as u64 - 1),
+        )
+    }
+
+    /// Feed realized runs back into the event-log database under the
+    /// canonical scoped key (the §4.1 adaptive loop).
+    pub(crate) fn feed_back(
+        log_db: &mut HashMap<String, EventLog>,
+        p: &Problem,
+        report: &sim::ExecutionReport,
+    ) {
+        for (t, log) in report.new_logs.iter().enumerate() {
+            let key = p.tasks[t].name.clone();
+            let entry = log_db
+                .entry(key)
+                .or_insert_with(|| EventLog::new(&p.tasks[t].name));
+            entry.runs.extend(log.runs.iter().cloned());
+        }
+    }
+
+    /// Realized dollar cost of one DAG (by batch index) in a report.
+    pub(crate) fn dag_cost(
+        cost_model: &CostModel,
+        p: &Problem,
+        report: &sim::ExecutionReport,
+        d: usize,
+    ) -> f64 {
+        report
+            .records
+            .iter()
+            .filter(|r| p.tasks[r.task].dag == d)
+            .map(|r| cost_model.realized_cost(&p.space.configs[r.config], r.runtime))
+            .sum()
+    }
+
+    /// The whole synchronous pipeline for one round: build the problem
+    /// (seeding `occupancy` under continuous admission), plan with the
+    /// strategy, execute, feed logs back.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_round(
+        &self,
+        strategy: &Strategy,
+        parallelism: usize,
+        dags: &[Dag],
+        round: usize,
+        occupancy: Option<Vec<Reservation>>,
+        log_db: &mut HashMap<String, EventLog>,
+        rng: &mut Rng,
+        overhead: &mut Duration,
+    ) -> Result<RoundOutcome> {
+        let mut p = self.build_problem(dags, log_db, rng);
+        if let Some(reservations) = occupancy {
+            p = p.with_occupancy(reservations, 0.0);
+        }
+        let schedule = self.plan(strategy, parallelism, &p, round, rng, overhead)?;
+        let report = self.execute(&p, dags, &schedule, round, rng);
+        Self::feed_back(log_db, &p, &report);
+        Ok(RoundOutcome { problem: p, report })
+    }
+}
+
+/// Spot preemptions realized by one execution report — shared by every
+/// coordinator loop so their accounting cannot drift.
+pub(crate) fn preemption_count(report: &sim::ExecutionReport) -> usize {
+    report.records.iter().map(|r| r.preemptions as usize).sum()
+}
+
+/// Busy core-seconds realized by one execution report.
+pub(crate) fn busy_core_seconds(p: &Problem, report: &sim::ExecutionReport) -> f64 {
+    report
+        .records
+        .iter()
+        .map(|r| p.space.configs[r.config].vcpus() * r.runtime)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::workloads::dag1;
+
+    fn engine_fixture() -> (Capacity, ConfigSpace, CostModel, ReplanPolicy) {
+        (
+            Capacity::micro(),
+            ConfigSpace::standard(),
+            CostModel::OnDemand,
+            ReplanPolicy::off(),
+        )
+    }
+
+    #[test]
+    fn run_round_matches_the_inline_pipeline_bit_for_bit() {
+        // The engine against a hand-inlined legacy pipeline, same seed:
+        // identical realized completions and costs.
+        let (capacity, space, cost_model, replan) = engine_fixture();
+        let dags = vec![dag1()];
+
+        // Engine path.
+        let engine = RoundEngine {
+            capacity,
+            space: &space,
+            cost_model: &cost_model,
+            replan: &replan,
+        };
+        let mut db_a = HashMap::new();
+        let mut rng_a = Rng::new(77);
+        let mut overhead = Duration::ZERO;
+        let out = engine
+            .run_round(
+                &Strategy::Agora(Goal::Balanced),
+                1,
+                &dags,
+                1,
+                None,
+                &mut db_a,
+                &mut rng_a,
+                &mut overhead,
+            )
+            .expect("round");
+
+        // Inline legacy path (the pre-refactor serve_round stages).
+        let mut db_b: HashMap<String, EventLog> = HashMap::new();
+        let mut rng_b = Rng::new(77);
+        let profiling = profiling_configs_for(&space);
+        let mut logs = Vec::new();
+        for d in &dags {
+            for t in &d.tasks {
+                let key = scoped_task_name(&d.name, &t.name);
+                let entry = db_b
+                    .entry(key.clone())
+                    .or_insert_with(|| bootstrap_history(&key, &t.profile, &profiling, &mut rng_b));
+                logs.push(entry.clone());
+            }
+        }
+        let grid = LearnedPredictor::fit(&logs).predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[0.0],
+            capacity,
+            space.clone(),
+            grid,
+            cost_model.clone(),
+        );
+        let plan = Agora::new(AgoraOptions {
+            goal: Goal::Balanced,
+            mode: Mode::CoOptimize,
+            params: crate::solver::AnnealParams::fast(),
+            seed: rng_b.next_u64(),
+            parallelism: 1,
+            ..Default::default()
+        })
+        .optimize(&p);
+        let report = sim::execute_with_policy(
+            &p,
+            &dags,
+            &plan.schedule,
+            &cost_model,
+            &mut rng_b,
+            &replan.for_round(0),
+        );
+
+        assert_eq!(
+            out.report.dag_completion[0].to_bits(),
+            report.dag_completion[0].to_bits()
+        );
+        assert_eq!(
+            RoundEngine::dag_cost(&cost_model, &out.problem, &out.report, 0).to_bits(),
+            RoundEngine::dag_cost(&cost_model, &p, &report, 0).to_bits()
+        );
+        assert!(overhead > Duration::ZERO);
+    }
+
+    #[test]
+    fn feed_back_appends_under_the_scoped_key() {
+        let (capacity, space, cost_model, replan) = engine_fixture();
+        let engine = RoundEngine {
+            capacity,
+            space: &space,
+            cost_model: &cost_model,
+            replan: &replan,
+        };
+        let dags = vec![dag1()];
+        let mut db = HashMap::new();
+        let mut rng = Rng::new(3);
+        let mut overhead = Duration::ZERO;
+        engine
+            .run_round(
+                &Strategy::Airflow,
+                1,
+                &dags,
+                1,
+                None,
+                &mut db,
+                &mut rng,
+                &mut overhead,
+            )
+            .expect("round");
+        // every task has bootstrap + one realized run under its scoped key
+        assert_eq!(db.len(), dags[0].tasks.len());
+        assert!(db.keys().all(|k| k.starts_with("DAG1/")));
+        assert!(db.values().all(|l| l.len() >= 2));
+    }
+}

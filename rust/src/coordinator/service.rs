@@ -1,38 +1,49 @@
-//! Threaded multi-tenant service front-end (std::thread + mpsc; the
-//! offline vendor set has no tokio — the event loop is a plain
-//! channel-driven reactor, which for this workload is equivalent).
+//! Threaded multi-tenant service front-end (std::thread + channels; the
+//! offline vendor set has no tokio — the control plane is a plain
+//! actor-style reactor, which for this workload is equivalent).
 //!
-//! Tenants submit DAGs through a [`ServiceHandle`]; the coordinator
-//! thread batches submissions per the trigger policy (scaled to real
-//! milliseconds for interactivity), co-optimizes each batch, executes it
-//! on the simulated cluster, and answers every submission with its
-//! realized completion time and cost.
+//! Tenants submit DAGs through a [`ServiceHandle`] and get back a
+//! [`Ticket`] (or explicit backpressure, [`SubmitError`]); the control
+//! actor ([`super::control`]) batches submissions per the trigger
+//! policy, hands the pure co-optimization of each round to a bounded
+//! worker pool ([`super::pool`]), commits results strictly in round
+//! order, retries failed rounds with bounded backoff
+//! ([`super::retry`]), and answers every ticket with the realized
+//! completion time and cost. Live state is observable through
+//! [`ServiceHandle::status`] ([`super::status`]) and the configuration
+//! can be swapped between rounds ([`ServiceHandle::reload`],
+//! [`super::reload`]).
 //!
-//! Under [`Admission::Continuous`] the service keeps an occupancy ledger
-//! of the simulated reservations of earlier rounds on a shared virtual
-//! timeline: consecutive rounds sit one trigger interval (the paper's
-//! 15 minutes, which a `batch_window` stands for) apart, so each new
-//! round is admitted into the residual capacity left by the previous
-//! rounds' in-flight work — the same semantics as the continuous
-//! [`BatchRunner`](super::BatchRunner). The virtual clock is indexed by
-//! round number (not scaled wall-clock time), so admission behaviour is
-//! independent of optimizer latency and host load.
+//! Under [`Admission::Continuous`] the service keeps an occupancy
+//! ledger of the simulated reservations of earlier rounds on a shared
+//! virtual timeline: consecutive rounds sit one trigger interval (the
+//! paper's 15 minutes, which a `batch_window` stands for) apart, so
+//! each new round is admitted into the residual capacity left by the
+//! previous rounds' in-flight work — the same semantics as the
+//! continuous [`BatchRunner`](super::BatchRunner). The virtual clock is
+//! indexed by round number (not scaled wall-clock time), so admission
+//! behaviour is independent of optimizer latency and host load.
+//!
+//! With the default knobs (one worker, unbounded queues) the service
+//! reproduces the pre-refactor single-threaded loop bit-for-bit — see
+//! the determinism argument in [`super::control`] and the pin tests in
+//! `tests/control_plane.rs`.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::{Admission, OccupancyLedger, TriggerPolicy};
+use anyhow::anyhow;
+
+use super::ingress::{Mailbox, Priority, SubmitError, Ticket};
+use super::reload::ConfigCell;
+use super::retry::{FaultSpec, RetryPolicy};
+use super::status::{ServiceStatus, StatusBoard};
+use super::{control, Admission};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
-use crate::predictor::{
-    bootstrap_history, profiling_configs_for, scoped_task_name, EventLog, LearnedPredictor,
-    Predictor,
-};
-use crate::sim::{self, ReplanPolicy};
-use crate::solver::{Agora, AgoraOptions, Goal, Mode, Problem};
-use crate::util::Rng;
+use crate::sim::ReplanPolicy;
+use crate::solver::Goal;
 
 /// Outcome returned to a tenant for one submitted DAG.
 #[derive(Debug, Clone)]
@@ -49,18 +60,16 @@ pub struct SubmitResult {
     pub round: usize,
 }
 
-struct Submission {
-    tenant: String,
-    dag: Dag,
-    reply: Sender<SubmitResult>,
-}
-
-enum Msg {
-    Submit(Submission),
-    Shutdown,
-}
-
 /// Service configuration.
+///
+/// Boot-only fields — fixed when [`Service::start`] spawns the control
+/// plane and ignored by [`ServiceHandle::reload`]: [`workers`],
+/// [`queue_bound`], [`seed`]. Everything else takes effect from the
+/// next dispatched round after a reload.
+///
+/// [`workers`]: ServiceConfig::workers
+/// [`queue_bound`]: ServiceConfig::queue_bound
+/// [`seed`]: ServiceConfig::seed
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Simulated cluster capacity shared by every round.
@@ -71,7 +80,7 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     /// Demand trigger: optimize immediately once this many DAGs queue up.
     pub max_queue: usize,
-    /// Seed of the service's RNG stream.
+    /// Seed of the service's RNG stream (boot-only).
     pub seed: u64,
     /// Portfolio chains per co-optimization round (1 = single chain).
     pub parallelism: usize,
@@ -88,6 +97,19 @@ pub struct ServiceConfig {
     /// Pricing model for planning and realized accounting (on-demand by
     /// default; [`CostModel::Market`] arms spot-aware pricing).
     pub cost_model: CostModel,
+    /// Optimization worker threads (boot-only; 1 preserves the legacy
+    /// serial RNG stream bit-for-bit).
+    pub workers: usize,
+    /// Per-tenant ingress queue bound; 0 = unbounded (boot-only). A full
+    /// queue rejects with [`SubmitError::QueueFull`].
+    pub queue_bound: usize,
+    /// Largest batch one round may take; 0 = unbounded. Capped batches
+    /// select by priority tier, then round-robin across tenants.
+    pub max_batch: usize,
+    /// Bounded-backoff retry ladder for failed round attempts.
+    pub retry: RetryPolicy,
+    /// Deterministic fault injection for retry tests (off by default).
+    pub fault: FaultSpec,
 }
 
 impl Default for ServiceConfig {
@@ -103,6 +125,34 @@ impl Default for ServiceConfig {
             admission: Admission::Rounds,
             space: ConfigSpace::standard(),
             cost_model: CostModel::OnDemand,
+            workers: 1,
+            queue_bound: 0,
+            max_batch: 0,
+            retry: RetryPolicy::default(),
+            fault: FaultSpec::default(),
+        }
+    }
+}
+
+/// State shared by the handle, the control thread and the worker pool.
+pub(crate) struct Shared {
+    /// Per-tenant submission queues + the control thread's mailbox.
+    pub(crate) ingress: Mailbox,
+    /// Live counters behind [`ServiceStatus`].
+    pub(crate) status: StatusBoard,
+    /// Versioned configuration cell ([`ServiceHandle::reload`]).
+    pub(crate) config: ConfigCell,
+    /// Worker-pool size, fixed at boot.
+    pub(crate) workers: usize,
+}
+
+impl Shared {
+    pub(crate) fn new(config: ServiceConfig) -> Shared {
+        Shared {
+            ingress: Mailbox::new(config.queue_bound),
+            status: StatusBoard::default(),
+            workers: config.workers.max(1),
+            config: ConfigCell::new(config),
         }
     }
 }
@@ -110,33 +160,72 @@ impl Default for ServiceConfig {
 /// Handle cloned out to tenants.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: Sender<Msg>,
+    shared: Arc<Shared>,
 }
 
 impl ServiceHandle {
-    /// Submit a DAG; returns a receiver that yields the outcome after the
-    /// round containing this DAG executes.
-    pub fn submit(&self, tenant: &str, dag: Dag) -> Receiver<SubmitResult> {
-        let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Msg::Submit(Submission {
-                tenant: tenant.to_string(),
-                dag,
-                reply: reply_tx,
-            }))
-            .expect("service thread alive");
-        reply_rx
+    /// Submit a DAG at [`Priority::Normal`]; returns a [`Ticket`] whose
+    /// `recv`/`recv_timeout` yields the outcome after the round
+    /// containing this DAG commits. Never panics: a full tenant queue or
+    /// a shut-down service is an explicit [`SubmitError`].
+    pub fn submit(&self, tenant: &str, dag: Dag) -> Result<Ticket, SubmitError> {
+        self.submit_with_priority(tenant, dag, Priority::Normal)
+    }
+
+    /// [`submit`](ServiceHandle::submit) with an explicit batch-selection
+    /// priority (orders across tenants when rounds are capped via
+    /// [`ServiceConfig::max_batch`]; within a tenant, FIFO).
+    pub fn submit_with_priority(
+        &self,
+        tenant: &str,
+        dag: Dag,
+        priority: Priority,
+    ) -> Result<Ticket, SubmitError> {
+        match self.shared.ingress.submit(tenant, dag, priority) {
+            Ok(ticket) => {
+                self.shared.status.record_accepted(tenant);
+                Ok(ticket)
+            }
+            Err(e) => {
+                if matches!(e, SubmitError::QueueFull { .. }) {
+                    self.shared.status.record_rejected(tenant);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// A consistent snapshot of queue depths, counters and latency
+    /// digests (see [`ServiceStatus`]).
+    pub fn status(&self) -> ServiceStatus {
+        let snap = self.shared.config.load();
+        self.shared.status.snapshot(
+            snap.config.admission.name(),
+            snap.config.capacity.vcpus,
+            &self.shared.ingress.depths(),
+            snap.version,
+            self.shared.workers,
+            self.shared.ingress.queued(),
+        )
+    }
+
+    /// Swap the live configuration between rounds; returns the new
+    /// config version. In-flight rounds finish on the configuration they
+    /// were dispatched with; boot-only fields (`workers`, `queue_bound`,
+    /// `seed`) are ignored (see [`ServiceConfig`]).
+    pub fn reload(&self, config: ServiceConfig) -> u64 {
+        self.shared.config.swap(config)
     }
 }
 
-/// The running service: coordinator thread + handle factory.
+/// The running service: control thread + handle factory.
 pub struct Service {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<usize>>,
+    shared: Arc<Shared>,
+    coordinator: Option<JoinHandle<usize>>,
 }
 
 impl Service {
-    /// Spawn the coordinator thread and start serving rounds.
+    /// Spawn the control plane and start serving rounds.
     ///
     /// ```
     /// use std::time::Duration;
@@ -147,212 +236,61 @@ impl Service {
     ///     batch_window: Duration::from_millis(30),
     ///     ..Default::default()
     /// });
-    /// let result = service
-    ///     .handle()
-    ///     .submit("alice", dag1())
-    ///     .recv_timeout(Duration::from_secs(120))
-    ///     .unwrap();
+    /// let ticket = service.handle().submit("alice", dag1()).unwrap();
+    /// let result = ticket.recv_timeout(Duration::from_secs(120)).unwrap();
     /// assert!(result.completion > 0.0 && result.cost > 0.0);
-    /// assert!(service.shutdown() >= 1);
+    /// assert!(service.shutdown().unwrap() >= 1);
     /// ```
     pub fn start(config: ServiceConfig) -> Service {
-        let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::spawn(move || run_loop(config, rx));
+        let shared = Arc::new(Shared::new(config));
+        let thread_shared = shared.clone();
+        let coordinator = std::thread::Builder::new()
+            .name("agora-control".to_string())
+            .spawn(move || control::run(thread_shared))
+            .expect("spawn control thread");
         Service {
-            tx,
-            worker: Some(worker),
+            shared,
+            coordinator: Some(coordinator),
         }
     }
 
     /// A new submission handle (cloneable, thread-safe).
     pub fn handle(&self) -> ServiceHandle {
         ServiceHandle {
-            tx: self.tx.clone(),
+            shared: self.shared.clone(),
         }
     }
 
-    /// Graceful shutdown; returns the number of rounds served.
-    pub fn shutdown(mut self) -> usize {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.worker
-            .take()
-            .map(|w| w.join().unwrap_or(0))
-            .unwrap_or(0)
+    /// [`ServiceHandle::status`] without cloning a handle.
+    pub fn status(&self) -> ServiceStatus {
+        self.handle().status()
+    }
+
+    /// Graceful shutdown: stop admitting, drain every queued and
+    /// in-flight round (all tickets are answered), then join the control
+    /// thread. Returns the number of rounds served, or an error carrying
+    /// the panic message if the coordinator panicked instead of silently
+    /// reporting 0 rounds.
+    pub fn shutdown(mut self) -> anyhow::Result<usize> {
+        self.shared.ingress.begin_shutdown();
+        match self.coordinator.take() {
+            Some(w) => w.join().map_err(|payload| {
+                anyhow!(
+                    "service coordinator panicked: {}",
+                    super::pool::panic_message(payload)
+                )
+            }),
+            None => Ok(0),
+        }
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
+        self.shared.ingress.begin_shutdown();
+        if let Some(w) = self.coordinator.take() {
             let _ = w.join();
         }
-    }
-}
-
-fn run_loop(config: ServiceConfig, rx: Receiver<Msg>) -> usize {
-    let mut rng = Rng::new(config.seed);
-    let space = config.space.clone();
-    let cost_model = config.cost_model.clone();
-    let mut log_db: HashMap<String, EventLog> = HashMap::new();
-    let mut queue: Vec<Submission> = Vec::new();
-    let mut round = 0usize;
-    let mut window_start = Instant::now();
-    // Continuous admission: in-flight reservations of earlier rounds on
-    // the shared virtual timeline (see module docs).
-    let mut ledger = OccupancyLedger::default();
-
-    loop {
-        let timeout = config
-            .batch_window
-            .saturating_sub(window_start.elapsed())
-            .max(Duration::from_millis(1));
-        let msg = rx.recv_timeout(timeout);
-
-        match msg {
-            Ok(Msg::Submit(s)) => queue.push(s),
-            Ok(Msg::Shutdown) => {
-                if !queue.is_empty() {
-                    round += 1;
-                    serve_round(
-                        &config,
-                        &space,
-                        &cost_model,
-                        &mut log_db,
-                        &mut queue,
-                        round,
-                        &mut ledger,
-                        &mut rng,
-                    );
-                }
-                return round;
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return round,
-        }
-
-        let window_elapsed = window_start.elapsed() >= config.batch_window;
-        if !queue.is_empty() && (window_elapsed || queue.len() >= config.max_queue) {
-            round += 1;
-            serve_round(
-                &config,
-                &space,
-                &cost_model,
-                &mut log_db,
-                &mut queue,
-                round,
-                &mut ledger,
-                &mut rng,
-            );
-            window_start = Instant::now();
-        } else if window_elapsed {
-            window_start = Instant::now();
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn serve_round(
-    config: &ServiceConfig,
-    space: &ConfigSpace,
-    cost_model: &CostModel,
-    log_db: &mut HashMap<String, EventLog>,
-    queue: &mut Vec<Submission>,
-    round: usize,
-    ledger: &mut OccupancyLedger,
-    rng: &mut Rng,
-) {
-    // Virtual admission instant of this round: consecutive rounds sit
-    // one trigger interval (the paper's 15 minutes, shared with the
-    // macro runner's TriggerPolicy) apart on the shared timeline.
-    // Round-indexed rather than scaled wall-clock time, so a slow
-    // optimize cannot silently drain the ledger between rounds.
-    let vnow = match config.admission {
-        Admission::Rounds => 0.0,
-        Admission::Continuous => (round as f64 - 1.0) * TriggerPolicy::default().interval,
-    };
-    let batch: Vec<Submission> = queue.drain(..).collect();
-    let dags: Vec<Dag> = batch.iter().map(|s| s.dag.clone()).collect();
-    // Every round simulates in round-local time (t = 0 at admission);
-    // continuous rounds additionally pack into the residual capacity of
-    // the occupied timeline, with the ledger shifted to the local origin.
-    let releases = vec![0.0; dags.len()];
-
-    // Histories from the DB (or bootstrap profiling runs), keyed by the
-    // canonical scoped task name — the same key realized runs are
-    // written back under.
-    let mut logs: Vec<EventLog> = Vec::new();
-    let profiling = profiling_configs_for(space);
-    for d in &dags {
-        for t in &d.tasks {
-            let key = scoped_task_name(&d.name, &t.name);
-            let entry = log_db.entry(key.clone()).or_insert_with(|| {
-                bootstrap_history(&key, &t.profile, &profiling, rng)
-            });
-            logs.push(entry.clone());
-        }
-    }
-
-    let predictor = LearnedPredictor::fit(&logs);
-    let grid = predictor.predict(space);
-    let mut p = Problem::new(
-        &dags,
-        &releases,
-        config.capacity,
-        space.clone(),
-        grid,
-        cost_model.clone(),
-    );
-    if config.admission == Admission::Continuous {
-        p = p.with_occupancy(ledger.snapshot(vnow), 0.0);
-    }
-
-    let agora = Agora::new(AgoraOptions {
-        goal: config.goal,
-        mode: Mode::CoOptimize,
-        params: crate::solver::AnnealParams::fast(),
-        seed: rng.next_u64(),
-        parallelism: config.parallelism.max(1),
-        ..Default::default()
-    });
-    let plan = agora.optimize(&p);
-    let report = sim::execute_with_policy(
-        &p,
-        &dags,
-        &plan.schedule,
-        cost_model,
-        rng,
-        &config.replan.for_round(round as u64 - 1),
-    );
-    if config.admission == Admission::Continuous {
-        ledger.absorb(&p, &report, vnow);
-    }
-
-    // Feed logs back (adaptive loop) and answer tenants.
-    for (t, log) in report.new_logs.iter().enumerate() {
-        let key = p.tasks[t].name.clone();
-        let entry = log_db
-            .entry(key)
-            .or_insert_with(|| EventLog::new(&p.tasks[t].name));
-        entry.runs.extend(log.runs.iter().cloned());
-    }
-    for (d, sub) in batch.iter().enumerate() {
-        let cost: f64 = report
-            .records
-            .iter()
-            .filter(|r| p.tasks[r.task].dag == d)
-            .map(|r| cost_model.realized_cost(&p.space.configs[r.config], r.runtime))
-            .sum();
-        let _ = sub.reply.send(SubmitResult {
-            tenant: sub.tenant.clone(),
-            dag_name: sub.dag.name.clone(),
-            // Round-local completion ("time from batch start") in both
-            // modes; under continuous admission it already includes any
-            // wait for residual capacity.
-            completion: report.dag_completion[d],
-            cost,
-            round,
-        });
     }
 }
 
@@ -369,9 +307,9 @@ mod tests {
         });
         let handle = service.handle();
 
-        let rx1 = handle.submit("alice", dag1());
-        let rx2 = handle.submit("bob", dag2());
-        let rx3 = handle.submit("carol", fig1_dag());
+        let rx1 = handle.submit("alice", dag1()).unwrap();
+        let rx2 = handle.submit("bob", dag2()).unwrap();
+        let rx3 = handle.submit("carol", fig1_dag()).unwrap();
 
         let r1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
@@ -381,7 +319,7 @@ mod tests {
         assert!(r1.completion > 0.0 && r2.completion > 0.0 && r3.completion > 0.0);
         assert!(r1.cost > 0.0);
 
-        let rounds = service.shutdown();
+        let rounds = service.shutdown().unwrap();
         assert!(rounds >= 1);
     }
 
@@ -393,13 +331,13 @@ mod tests {
             ..Default::default()
         });
         let handle = service.handle();
-        let rx1 = handle.submit("a", dag1());
-        let rx2 = handle.submit("b", dag2());
+        let rx1 = handle.submit("a", dag1()).unwrap();
+        let rx2 = handle.submit("b", dag2()).unwrap();
         // Must be answered by the demand trigger, well within the window.
         let r1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(r1.round, r2.round);
-        service.shutdown();
+        service.shutdown().unwrap();
     }
 
     #[test]
@@ -410,10 +348,10 @@ mod tests {
             ..Default::default()
         });
         let handle = service.handle();
-        let rx = handle.submit("dora", dag1());
+        let rx = handle.submit("dora", dag1()).unwrap();
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
         assert!(r.completion > 0.0 && r.cost > 0.0);
-        service.shutdown();
+        service.shutdown().unwrap();
     }
 
     #[test]
@@ -436,10 +374,10 @@ mod tests {
             ..Default::default()
         });
         let handle = service.handle();
-        let rx = handle.submit("erin", dag2());
+        let rx = handle.submit("erin", dag2()).unwrap();
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
         assert!(r.completion > 0.0 && r.cost > 0.0);
-        service.shutdown();
+        service.shutdown().unwrap();
     }
 
     #[test]
@@ -453,15 +391,15 @@ mod tests {
             ..Default::default()
         });
         let handle = service.handle();
-        let rx1 = handle.submit("a", dag1());
-        let rx2 = handle.submit("b", dag2());
-        let rx3 = handle.submit("c", fig1_dag());
+        let rx1 = handle.submit("a", dag1()).unwrap();
+        let rx2 = handle.submit("b", dag2()).unwrap();
+        let rx3 = handle.submit("c", fig1_dag()).unwrap();
         let r1 = rx1.recv_timeout(Duration::from_secs(60)).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(60)).unwrap();
         let r3 = rx3.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(r1.round, r2.round);
         assert_eq!(r2.round, r3.round);
-        service.shutdown();
+        service.shutdown().unwrap();
     }
 
     #[test]
@@ -472,17 +410,17 @@ mod tests {
             ..Default::default()
         });
         let handle = service.handle();
-        let rx1 = handle.submit("alice", dag1());
+        let rx1 = handle.submit("alice", dag1()).unwrap();
         let r1 = rx1.recv_timeout(Duration::from_secs(120)).unwrap();
         assert!(r1.completion > 0.0 && r1.cost > 0.0);
         // A later round is admitted onto the occupied timeline; its
         // relative completion must still be positive and finite.
-        let rx2 = handle.submit("bob", dag2());
+        let rx2 = handle.submit("bob", dag2()).unwrap();
         let r2 = rx2.recv_timeout(Duration::from_secs(120)).unwrap();
         assert!(r2.completion > 0.0 && r2.completion.is_finite());
         assert!(r2.cost > 0.0);
         assert!(r2.round >= r1.round);
-        service.shutdown();
+        service.shutdown().unwrap();
     }
 
     #[test]
@@ -493,10 +431,66 @@ mod tests {
             ..Default::default()
         });
         let handle = service.handle();
-        let rx = handle.submit("late", fig1_dag());
-        let rounds = service.shutdown();
+        let rx = handle.submit("late", fig1_dag()).unwrap();
+        let rounds = service.shutdown().unwrap();
         let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(r.dag_name, "fig1");
         assert!(rounds >= 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        let service = Service::start(ServiceConfig::default());
+        let handle = service.handle();
+        service.shutdown().unwrap();
+        // The coordinator is gone; the handle must keep working and
+        // answer with an explicit error.
+        match handle.submit("tardy", dag1()) {
+            Err(SubmitError::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn status_surfaces_served_rounds_and_tenants() {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        });
+        let handle = service.handle();
+        let rx = handle.submit("alice", dag1()).unwrap();
+        rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        let status = handle.status();
+        assert_eq!(status.config_version, 1);
+        assert_eq!(status.workers, 1);
+        assert!(status.rounds_served >= 1);
+        assert_eq!(status.accepted, 1);
+        assert_eq!(status.dags_served, 1);
+        assert!(status.stats.mean_completion > 0.0);
+        assert!(status.stats.total_cost > 0.0);
+        let alice = status.tenants.iter().find(|t| t.tenant == "alice");
+        assert!(alice.map(|t| t.served == 1).unwrap_or(false));
+        assert!(status.render().contains("rounds served"));
+        service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn reload_swaps_config_between_rounds() {
+        let service = Service::start(ServiceConfig {
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        });
+        let handle = service.handle();
+        let v = handle.reload(ServiceConfig {
+            goal: Goal::Cost,
+            batch_window: Duration::from_millis(30),
+            ..Default::default()
+        });
+        assert_eq!(v, 2);
+        let rx = handle.submit("alice", dag1()).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(r.completion > 0.0 && r.cost > 0.0);
+        assert_eq!(handle.status().config_version, 2);
+        service.shutdown().unwrap();
     }
 }

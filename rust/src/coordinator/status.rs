@@ -1,0 +1,379 @@
+//! Observable control-plane state: counters, latency digests and the
+//! queryable [`ServiceStatus`] snapshot.
+//!
+//! Every commit, rejection and retry updates the shared [`StatusBoard`];
+//! [`ServiceHandle::status`] and the `agora serve --status-interval`
+//! ticker render the same snapshot, so the programmatic and the human
+//! surface cannot drift.
+//!
+//! Two time bases coexist deliberately: *completion* statistics are in
+//! simulated seconds (the virtual cluster timeline tenants are billed
+//! on, reusing [`AdmissionStats`]), while *queue delay* is real
+//! wall-clock time from admission to round dispatch — the quantity
+//! backpressure and pool sizing actually control.
+//!
+//! [`ServiceHandle::status`]: super::service::ServiceHandle::status
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::metrics::AdmissionStats;
+use crate::util::stats;
+
+/// Live queue/served counters of one tenant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStatus {
+    /// Tenant name.
+    pub tenant: String,
+    /// Submissions currently waiting in the tenant's ingress queue.
+    pub queued: usize,
+    /// Submissions admitted since boot.
+    pub accepted: usize,
+    /// Submissions answered with a served round since boot.
+    pub served: usize,
+    /// Submissions rejected with backpressure
+    /// ([`SubmitError::QueueFull`](super::SubmitError::QueueFull)) since
+    /// boot.
+    pub rejected: usize,
+}
+
+/// One consistent snapshot of the control plane, returned by
+/// [`ServiceHandle::status`](super::service::ServiceHandle::status).
+#[derive(Debug, Clone)]
+pub struct ServiceStatus {
+    /// Configuration generation currently live (1 at boot, +1 per
+    /// [`reload`](super::service::ServiceHandle::reload)).
+    pub config_version: u64,
+    /// Worker-pool size (fixed at boot).
+    pub workers: usize,
+    /// Rounds currently dispatched to the pool and not yet committed.
+    pub in_flight: usize,
+    /// Submissions queued across all tenants.
+    pub queued: usize,
+    /// Rounds committed since boot.
+    pub rounds_served: usize,
+    /// Round attempts re-queued by the retry ladder since boot.
+    pub rounds_retried: usize,
+    /// Rounds that exhausted their retries since boot.
+    pub rounds_failed: usize,
+    /// DAGs answered with a served outcome since boot.
+    pub dags_served: usize,
+    /// Submissions admitted since boot.
+    pub accepted: usize,
+    /// Submissions rejected with backpressure since boot.
+    pub rejected: usize,
+    /// Mean/p95 completion, mean queue delay, utilization and cost in
+    /// the macro-report shape (completion/utilization in simulated time).
+    pub stats: AdmissionStats,
+    /// Median simulated completion (seconds).
+    pub p50_completion: f64,
+    /// Median wall-clock queue delay (seconds, admission → dispatch).
+    pub p50_queue_delay: f64,
+    /// 95th-percentile wall-clock queue delay (seconds).
+    pub p95_queue_delay: f64,
+    /// Total optimizer wall-clock overhead across committed rounds.
+    pub optimizer_overhead: Duration,
+    /// Per-tenant counters, tenants in name order.
+    pub tenants: Vec<TenantStatus>,
+}
+
+impl ServiceStatus {
+    /// Render the snapshot as a compact multi-line status block (the
+    /// `agora serve --status-interval` ticker format).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "[status] config v{} | workers {} | in-flight {} | queued {}",
+            self.config_version, self.workers, self.in_flight, self.queued
+        );
+        let _ = writeln!(
+            out,
+            "[status] rounds served {} retried {} failed {} | dags served {} | accepted {} rejected {}",
+            self.rounds_served,
+            self.rounds_retried,
+            self.rounds_failed,
+            self.dags_served,
+            self.accepted,
+            self.rejected
+        );
+        let _ = writeln!(
+            out,
+            "[status] completion p50 {:.1}s p95 {:.1}s | queue delay p50 {:.3}s p95 {:.3}s | util {:.2} | cost ${:.2} | opt {:.2}s",
+            self.p50_completion,
+            self.stats.p95_completion,
+            self.p50_queue_delay,
+            self.p95_queue_delay,
+            self.stats.utilization,
+            self.stats.total_cost,
+            self.optimizer_overhead.as_secs_f64()
+        );
+        for t in &self.tenants {
+            let _ = writeln!(
+                out,
+                "[status]   {}: queued {} accepted {} served {} rejected {}",
+                t.tenant, t.queued, t.accepted, t.served, t.rejected
+            );
+        }
+        out
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+struct TenantCounters {
+    accepted: usize,
+    served: usize,
+    rejected: usize,
+}
+
+#[derive(Debug, Default)]
+struct Board {
+    completions: Vec<f64>,
+    delays: Vec<f64>,
+    total_cost: f64,
+    busy_core_seconds: f64,
+    horizon: f64,
+    rounds_served: usize,
+    rounds_retried: usize,
+    rounds_failed: usize,
+    in_flight: usize,
+    accepted: usize,
+    rejected: usize,
+    optimizer_overhead: Duration,
+    tenants: BTreeMap<String, TenantCounters>,
+}
+
+/// Shared mutable counters behind [`ServiceStatus`]; written by the
+/// handle (admission) and the control thread (commits), read by anyone.
+#[derive(Debug, Default)]
+pub(crate) struct StatusBoard {
+    inner: Mutex<Board>,
+}
+
+impl StatusBoard {
+    fn lock(&self) -> std::sync::MutexGuard<'_, Board> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One submission admitted.
+    pub(crate) fn record_accepted(&self, tenant: &str) {
+        let mut b = self.lock();
+        b.accepted += 1;
+        b.tenants.entry(tenant.to_string()).or_default().accepted += 1;
+    }
+
+    /// One submission rejected with backpressure.
+    pub(crate) fn record_rejected(&self, tenant: &str) {
+        let mut b = self.lock();
+        b.rejected += 1;
+        b.tenants.entry(tenant.to_string()).or_default().rejected += 1;
+    }
+
+    /// Rounds currently dispatched and uncommitted.
+    pub(crate) fn set_in_flight(&self, n: usize) {
+        self.lock().in_flight = n;
+    }
+
+    /// One failed attempt re-queued by the retry ladder.
+    pub(crate) fn round_retried(&self) {
+        self.lock().rounds_retried += 1;
+    }
+
+    /// One round gave up after exhausting its retries.
+    pub(crate) fn round_failed(&self) {
+        self.lock().rounds_failed += 1;
+    }
+
+    /// Optimizer wall-clock spent by one attempt.
+    pub(crate) fn add_overhead(&self, overhead: Duration) {
+        self.lock().optimizer_overhead += overhead;
+    }
+
+    /// One round committed: per-DAG simulated completions, wall-clock
+    /// queue delays, realized cost, busy core-seconds and the new
+    /// absolute virtual-time horizon.
+    pub(crate) fn round_committed(
+        &self,
+        tenants: &[String],
+        completions: &[f64],
+        delays: &[f64],
+        cost: f64,
+        busy_core_seconds: f64,
+        horizon: f64,
+    ) {
+        let mut b = self.lock();
+        b.rounds_served += 1;
+        b.completions.extend_from_slice(completions);
+        b.delays.extend_from_slice(delays);
+        b.total_cost += cost;
+        b.busy_core_seconds += busy_core_seconds;
+        b.horizon = b.horizon.max(horizon);
+        for t in tenants {
+            b.tenants.entry(t.clone()).or_default().served += 1;
+        }
+    }
+
+    /// Assemble a consistent snapshot. `depths` carries the live
+    /// per-tenant queue depths from the ingress mailbox.
+    pub(crate) fn snapshot(
+        &self,
+        admission: &str,
+        capacity_vcpus: f64,
+        depths: &[(String, usize)],
+        config_version: u64,
+        workers: usize,
+        queued: usize,
+    ) -> ServiceStatus {
+        let b = self.lock();
+        let utilization = if b.horizon > 0.0 && capacity_vcpus > 0.0 {
+            b.busy_core_seconds / (capacity_vcpus * b.horizon)
+        } else {
+            0.0
+        };
+        let stats = AdmissionStats {
+            admission: admission.to_string(),
+            mean_completion: stats::mean(&b.completions),
+            p95_completion: stats::percentile(&b.completions, 95.0),
+            mean_queue_delay: stats::mean(&b.delays),
+            utilization,
+            total_cost: b.total_cost,
+        };
+        let mut names: Vec<String> = b.tenants.keys().cloned().collect();
+        for (t, _) in depths {
+            if !b.tenants.contains_key(t) {
+                names.push(t.clone());
+            }
+        }
+        names.sort();
+        names.dedup();
+        let tenants = names
+            .into_iter()
+            .map(|name| {
+                let c = b.tenants.get(&name).cloned().unwrap_or_default();
+                let queued = depths
+                    .iter()
+                    .find(|(t, _)| *t == name)
+                    .map(|(_, q)| *q)
+                    .unwrap_or(0);
+                TenantStatus {
+                    tenant: name,
+                    queued,
+                    accepted: c.accepted,
+                    served: c.served,
+                    rejected: c.rejected,
+                }
+            })
+            .collect();
+        ServiceStatus {
+            config_version,
+            workers,
+            in_flight: b.in_flight,
+            queued,
+            rounds_served: b.rounds_served,
+            rounds_retried: b.rounds_retried,
+            rounds_failed: b.rounds_failed,
+            dags_served: b.completions.len(),
+            accepted: b.accepted,
+            rejected: b.rejected,
+            stats,
+            p50_completion: stats::percentile(&b.completions, 50.0),
+            p50_queue_delay: stats::percentile(&b.delays, 50.0),
+            p95_queue_delay: stats::percentile(&b.delays, 95.0),
+            optimizer_overhead: b.optimizer_overhead,
+            tenants,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_into_a_snapshot() {
+        let board = StatusBoard::default();
+        board.record_accepted("a");
+        board.record_accepted("a");
+        board.record_accepted("b");
+        board.record_rejected("b");
+        board.round_retried();
+        board.add_overhead(Duration::from_millis(250));
+        board.round_committed(
+            &["a".into(), "a".into()],
+            &[100.0, 300.0],
+            &[0.1, 0.2],
+            5.0,
+            400.0,
+            300.0,
+        );
+        board.round_committed(&["b".into()], &[200.0], &[0.4], 2.5, 200.0, 500.0);
+        board.set_in_flight(1);
+
+        let s = board.snapshot(
+            "rounds",
+            16.0,
+            &[("b".to_string(), 3)],
+            2,
+            4,
+            3,
+        );
+        assert_eq!(s.config_version, 2);
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.in_flight, 1);
+        assert_eq!(s.queued, 3);
+        assert_eq!(s.rounds_served, 2);
+        assert_eq!(s.rounds_retried, 1);
+        assert_eq!(s.rounds_failed, 0);
+        assert_eq!(s.dags_served, 3);
+        assert_eq!(s.accepted, 3);
+        assert_eq!(s.rejected, 1);
+        assert!((s.stats.mean_completion - 200.0).abs() < 1e-9);
+        assert!((s.stats.total_cost - 7.5).abs() < 1e-9);
+        // busy 600 core-s over 16 cores * horizon 500s
+        assert!((s.stats.utilization - 600.0 / (16.0 * 500.0)).abs() < 1e-9);
+        assert_eq!(s.optimizer_overhead, Duration::from_millis(250));
+        assert!(s.p50_completion >= 100.0 && s.p50_completion <= 300.0);
+        assert!(s.p95_queue_delay >= s.p50_queue_delay);
+
+        assert_eq!(s.tenants.len(), 2);
+        let a = &s.tenants[0];
+        assert_eq!((a.tenant.as_str(), a.accepted, a.served, a.rejected, a.queued),
+                   ("a", 2, 2, 0, 0));
+        let b = &s.tenants[1];
+        assert_eq!((b.tenant.as_str(), b.accepted, b.served, b.rejected, b.queued),
+                   ("b", 1, 1, 1, 3));
+    }
+
+    #[test]
+    fn queue_only_tenants_appear_in_the_snapshot() {
+        let board = StatusBoard::default();
+        let s = board.snapshot("rounds", 16.0, &[("ghost".to_string(), 2)], 1, 1, 2);
+        assert_eq!(s.tenants.len(), 1);
+        assert_eq!(s.tenants[0].tenant, "ghost");
+        assert_eq!(s.tenants[0].queued, 2);
+        assert_eq!(s.tenants[0].accepted, 0);
+    }
+
+    #[test]
+    fn empty_board_snapshot_is_finite() {
+        let board = StatusBoard::default();
+        let s = board.snapshot("continuous", 16.0, &[], 1, 2, 0);
+        assert_eq!(s.rounds_served, 0);
+        assert_eq!(s.stats.utilization, 0.0);
+        assert!(s.stats.mean_completion == 0.0 || s.stats.mean_completion.is_finite());
+        let text = s.render();
+        assert!(text.contains("config v1"));
+        assert!(text.contains("workers 2"));
+    }
+
+    #[test]
+    fn render_lists_tenants() {
+        let board = StatusBoard::default();
+        board.record_accepted("alice");
+        let s = board.snapshot("rounds", 16.0, &[("alice".to_string(), 1)], 1, 1, 1);
+        let text = s.render();
+        assert!(text.contains("alice: queued 1 accepted 1"));
+    }
+}

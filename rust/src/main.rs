@@ -194,6 +194,9 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
 
 fn cmd_serve(config: &AppConfig) -> Result<()> {
     use agora::coordinator::service::{Service, ServiceConfig};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
     println!("starting multi-tenant service (demo: three tenants submit DAGs)...");
     let service = Service::start(ServiceConfig {
         capacity: config.capacity,
@@ -204,16 +207,38 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
         admission: config.admission,
         space: config.space(),
         cost_model: config.cost_model(),
+        workers: config.workers,
+        queue_bound: config.queue_bound,
         ..Default::default()
     });
     let handle = service.handle();
-    let rxs = vec![
-        ("alice", handle.submit("alice", workloads::dag1())),
-        ("bob", handle.submit("bob", workloads::dag2())),
-        ("carol", handle.submit("carol", workloads::fig1_dag())),
+
+    // --status-interval <ms>: a ticker thread printing live control-plane
+    // snapshots (queue depths, in-flight rounds, latency digests) while
+    // the demo submissions drain.
+    let stop = Arc::new(AtomicBool::new(false));
+    let ticker = if config.status_interval_ms > 0 {
+        let h = handle.clone();
+        let stop = stop.clone();
+        let period = std::time::Duration::from_millis(config.status_interval_ms);
+        Some(std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(period);
+                println!("{}", h.status().render());
+            }
+        }))
+    } else {
+        None
+    };
+
+    let tickets = vec![
+        handle.submit("alice", workloads::dag1())?,
+        handle.submit("bob", workloads::dag2())?,
+        handle.submit("carol", workloads::fig1_dag())?,
     ];
-    for (tenant, rx) in rxs {
-        let r = rx
+    for ticket in tickets {
+        let tenant = ticket.tenant().to_string();
+        let r = ticket
             .recv_timeout(std::time::Duration::from_secs(120))
             .with_context(|| format!("waiting for {tenant}"))?;
         println!(
@@ -225,7 +250,13 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
             fmt_cost(r.cost)
         );
     }
-    let rounds = service.shutdown();
+
+    stop.store(true, Ordering::Relaxed);
+    if let Some(t) = ticker {
+        let _ = t.join();
+    }
+    println!("{}", handle.status().render());
+    let rounds = service.shutdown()?;
     println!("service stopped after {rounds} round(s)");
     Ok(())
 }

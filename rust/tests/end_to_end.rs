@@ -218,7 +218,7 @@ fn service_round_trip_under_concurrent_submissions() {
                 1 => dag2(),
                 _ => fig1_dag(),
             };
-            handle.submit(&format!("tenant{i}"), dag)
+            handle.submit(&format!("tenant{i}"), dag).expect("admitted")
         })
         .collect();
     for rx in rxs {
@@ -226,7 +226,7 @@ fn service_round_trip_under_concurrent_submissions() {
         assert!(r.completion > 0.0);
         assert!(r.cost > 0.0);
     }
-    assert!(service.shutdown() >= 1);
+    assert!(service.shutdown().expect("clean shutdown") >= 1);
 }
 
 #[test]
