@@ -1,26 +1,38 @@
 //! Scaling sweep of the shared capacity-timeline kernel
-//! (`solver::timeline`): 50 → 2000-task large-scale DAGs
-//! (`dag::generator::large_scale_dag`), comparing the production
-//! sweep-line kernel against the historical rectangle-list kernel
-//! (retained verbatim in `solver::timeline::reference`) on the same
-//! problems, and recording the end-to-end optimizer trajectory.
+//! (`solver::timeline`): 50 → 100_000-task large-scale DAGs
+//! (`dag::generator::large_scale_dag`), comparing three generations of
+//! the kernel on the same problems:
+//!
+//!   * the production block-indexed profile (`Timeline`);
+//!   * the PR 4 flat sorted-`Vec` sweep-line, retained verbatim as an
+//!     executable reference (`timeline::flat`) — O(log n + k) queries
+//!     but O(n) memmove per placement;
+//!   * the historical rectangle list (`timeline::reference`) — O(n²)
+//!     queries, timed only up to `REF_MAX_TASKS`.
 //!
 //! Outputs:
 //!   * a table per size: serial-SGS and multistart-optimizer wall-clock
-//!     for both kernels, the speedup, and a full co-optimization round
+//!     for the kernels, the speedups, and a full co-optimization round
 //!     (incremental SA) on the production kernel;
-//!   * `BENCH_timeline.json` at the repo root with the same numbers, so
-//!     the perf trajectory is diffable across PRs.
+//!   * `BENCH_timeline.json` at the repo root with the same numbers plus
+//!     the fitted scaling exponent, so the perf trajectory is diffable
+//!     across PRs.
 //!
-//! Every measured pair is also cross-checked for **bit-identical**
-//! schedules — the speedup claim is only meaningful because the two
-//! kernels agree exactly.
+//! Every measured size is cross-checked for **bit-identical** schedules
+//! against the flat kernel (and additionally against the rectangle list
+//! up to `REF_MAX_TASKS`) — the speedup claims are only meaningful
+//! because the kernels agree exactly. Skipped measurements are logged
+//! explicitly; a silent cap would read as full coverage.
 //!
-//! `cargo bench --bench scaling_timeline -- --smoke` runs the smallest
-//! size only (CI keeps the JSON generation path alive without paying for
-//! the full sweep). The reference kernel is skipped above
-//! `REF_MAX_TASKS` tasks — its O(n³) serial pass is the very cost this
-//! kernel removed.
+//! CI gates (asserted here, in `--smoke` mode and in the full sweep):
+//!   * the fitted scaling exponent of the indexed serial-SGS pass over
+//!     the sizes >= 2000 stays below `MAX_SGS_EXPONENT` — an accidental
+//!     O(n²) regression in `place` fails the bench, not just slows it;
+//!   * at every timed size >= 10_000 the indexed kernel beats the flat
+//!     kernel on serial-SGS wall clock.
+//!
+//! `cargo bench --bench scaling_timeline -- --smoke` runs the reduced
+//! size list [50, 2000, 10_000] (the CI mode).
 
 use std::path::Path;
 
@@ -29,16 +41,34 @@ use agora::cluster::{ConfigSpace, CostModel};
 use agora::dag::generator::large_scale_dag;
 use agora::predictor::OraclePredictor;
 use agora::solver::sgs::{self, Rule};
-use agora::solver::timeline::reference;
+use agora::solver::timeline::{flat, reference};
 use agora::solver::{Agora, AgoraOptions, AnnealParams, Goal, Mode, Problem, Schedule};
 use agora::trace::TraceParams;
 use agora::util::{Json, Rng};
 use agora::Predictor;
 
 const SEED: u64 = 2022;
-/// Largest size the historical kernel is timed at; beyond this its
-/// O(n³) serial pass dominates the whole bench run.
+/// Largest size the historical rectangle-list kernel is timed at; beyond
+/// this its O(n³) serial pass dominates the whole bench run. The
+/// bit-identical cross-check stays alive above it via the flat kernel.
 const REF_MAX_TASKS: usize = 1000;
+/// Largest size the flat kernel's multistart (7 full passes) is timed
+/// at; its O(n) memmove per placement makes the 30k+ points minutes-long
+/// for no extra information — the serial pass is still timed (and
+/// equivalence-checked) at every size.
+const MULTI_FLAT_MAX_TASKS: usize = 10_000;
+/// Largest size the end-to-end SA round is measured at in the full
+/// sweep (the SA trajectory is an optimizer benchmark, not a kernel
+/// one; `fig10_scaling` owns the optimizer story).
+const SA_MAX_TASKS: usize = 30_000;
+/// Fitted-exponent ceiling for the indexed serial-SGS pass over the
+/// sizes >= `FIT_MIN_TASKS`. Healthy block-indexed passes fit ~1.1-1.4
+/// (n log n with growing segment counts); an O(n²) `place` regression
+/// fits ~2.0.
+const MAX_SGS_EXPONENT: f64 = 1.8;
+/// Smallest size included in the exponent fit — below this, constant
+/// overheads (problem setup, priority computation) pollute the slope.
+const FIT_MIN_TASKS: usize = 2000;
 /// Noisy multistart restarts per optimizer measurement (on top of the
 /// five static rules).
 const RESTARTS: usize = 2;
@@ -65,14 +95,15 @@ fn problem_of(n: usize) -> (Problem, Vec<usize>) {
     (p, assignment)
 }
 
-/// The historical multistart optimizer, verbatim, over the reference
-/// kernel — same rules, same noisy-restart RNG stream as
-/// `sgs::multistart_sgs`, so the two produce bit-identical schedules.
-fn multistart_ref(
+/// The multistart optimizer over a pluggable serial-SGS pass — same
+/// rules, same noisy-restart RNG stream as `sgs::multistart_sgs`, so
+/// every kernel produces bit-identical winners.
+fn multistart_with(
     p: &Problem,
     assignment: &[usize],
     extra_random: usize,
     rng: &mut Rng,
+    sgs_pass: impl Fn(&Problem, &[usize], &[f64]) -> Schedule,
 ) -> Schedule {
     let mut best: Option<(f64, Schedule)> = None;
     let mut consider = |s: Schedule, p: &Problem| {
@@ -83,7 +114,7 @@ fn multistart_ref(
     };
     for &rule in sgs::ALL_RULES {
         let prio = sgs::priorities(p, assignment, rule);
-        consider(reference::serial_sgs_ref(p, assignment, &prio), p);
+        consider(sgs_pass(p, assignment, &prio), p);
     }
     let base = sgs::priorities(p, assignment, Rule::CriticalPath);
     let scale = base.iter().cloned().fold(0.0f64, f64::max).max(1.0);
@@ -92,87 +123,152 @@ fn multistart_ref(
             .iter()
             .map(|&b| b + rng.uniform(0.0, 0.3 * scale))
             .collect();
-        consider(reference::serial_sgs_ref(p, assignment, &noisy), p);
+        consider(sgs_pass(p, assignment, &noisy), p);
     }
     best.expect("at least one rule ran").1
+}
+
+fn assert_bit_identical(a: &Schedule, b: &Schedule, n: usize, what: &str) {
+    assert_eq!(a.start.len(), b.start.len());
+    for t in 0..a.start.len() {
+        assert_eq!(
+            a.start[t].to_bits(),
+            b.start[t].to_bits(),
+            "{what} divergence at {n} tasks, task {t}: {} vs {}",
+            a.start[t],
+            b.start[t]
+        );
+    }
 }
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     bench::header(
         "Timeline scaling",
-        "sweep-line kernel vs historical rectangle list, 50-2000-task DAGs",
+        "block-indexed kernel vs flat sweep-line vs rectangle list, 50-100k-task DAGs",
     );
     let sizes: &[usize] = if smoke {
-        &[50]
+        &[50, 2000, 10_000]
     } else {
-        &[50, 200, 500, 1000, 2000]
+        &[50, 200, 1000, 2000, 10_000, 30_000, 100_000]
     };
     println!(
-        "mode: {} | reference kernel timed up to {REF_MAX_TASKS} tasks",
+        "mode: {} | rectangle-list reference timed up to {REF_MAX_TASKS} tasks",
         if smoke { "smoke (--smoke)" } else { "full sweep" }
     );
 
     let mut rows: Vec<Vec<String>> = Vec::new();
     let mut points: Vec<Json> = Vec::new();
     let mut speedup_at_1000: Option<f64> = None;
+    let mut fit_points: Vec<(f64, f64)> = Vec::new();
 
     for &n in sizes {
         let (p, assignment) = problem_of(n);
         let prio = sgs::priorities(&p, &assignment, Rule::CriticalPath);
 
-        // Equivalence pin before any timing: bit-identical serial SGS.
+        // Equivalence pins before any timing. The flat kernel is the
+        // always-on executable reference: bit-identical serial SGS at
+        // EVERY measured size; the rectangle list corroborates up to
+        // REF_MAX_TASKS.
         let new_sched =
             sgs::serial_sgs(&p, &assignment, &prio).expect("feasible assignment");
+        let flat_sched = flat::serial_sgs_flat(&p, &assignment, &prio);
+        assert_bit_identical(&new_sched, &flat_sched, n, "indexed/flat serial-SGS");
         if n <= REF_MAX_TASKS {
             let ref_sched = reference::serial_sgs_ref(&p, &assignment, &prio);
-            for t in 0..p.len() {
-                assert_eq!(
-                    new_sched.start[t].to_bits(),
-                    ref_sched.start[t].to_bits(),
-                    "kernel divergence at {n} tasks, task {t}"
-                );
-            }
-            // Multistart draws the same noisy-restart stream on both
-            // sides: the winners must match bit-for-bit too.
-            let new_multi =
-                sgs::multistart_sgs(&p, &assignment, RESTARTS, &mut Rng::new(SEED))
-                    .expect("feasible assignment");
-            let ref_multi = multistart_ref(&p, &assignment, RESTARTS, &mut Rng::new(SEED));
-            assert_eq!(
-                new_multi.makespan(&p).to_bits(),
-                ref_multi.makespan(&p).to_bits(),
-                "multistart divergence at {n} tasks"
+            assert_bit_identical(&new_sched, &ref_sched, n, "indexed/rect serial-SGS");
+        } else {
+            println!(
+                "skip: rectangle-list reference not run at {n} tasks \
+                 (> REF_MAX_TASKS = {REF_MAX_TASKS}); equivalence carried by the \
+                 flat-Vec kernel at this size"
             );
         }
         new_sched.validate(&p).expect("kernel produced invalid schedule");
 
+        // Multistart winners must match bit-for-bit too (same RNG
+        // stream on every kernel).
+        if n <= MULTI_FLAT_MAX_TASKS {
+            let new_multi =
+                sgs::multistart_sgs(&p, &assignment, RESTARTS, &mut Rng::new(SEED))
+                    .expect("feasible assignment");
+            let flat_multi = multistart_with(
+                &p,
+                &assignment,
+                RESTARTS,
+                &mut Rng::new(SEED),
+                flat::serial_sgs_flat,
+            );
+            assert_bit_identical(&new_multi, &flat_multi, n, "indexed/flat multistart");
+            if n <= REF_MAX_TASKS {
+                let ref_multi = multistart_with(
+                    &p,
+                    &assignment,
+                    RESTARTS,
+                    &mut Rng::new(SEED),
+                    reference::serial_sgs_ref,
+                );
+                assert_eq!(
+                    new_multi.makespan(&p).to_bits(),
+                    ref_multi.makespan(&p).to_bits(),
+                    "multistart divergence at {n} tasks"
+                );
+            }
+        } else {
+            println!(
+                "skip: multistart equivalence/timing for the flat kernel not run at \
+                 {n} tasks (> MULTI_FLAT_MAX_TASKS = {MULTI_FLAT_MAX_TASKS}); \
+                 serial-SGS equivalence above covers the kernel contract"
+            );
+        }
+
         let (warm, reps) = match n {
             0..=200 => (2, 20),
-            201..=500 => (1, 10),
-            501..=1000 => (1, 5),
-            _ => (1, 3),
+            201..=1000 => (1, 10),
+            1001..=2000 => (1, 5),
+            2001..=10_000 => (1, 3),
+            _ => (0, 2),
         };
-        let sgs_new = bench::measure(&format!("serial SGS new ({n})"), warm, reps, || {
+        let sgs_new = bench::measure(&format!("serial SGS indexed ({n})"), warm, reps, || {
             let s = sgs::serial_sgs(&p, &assignment, &prio).expect("feasible");
             std::hint::black_box(s.start[0]);
         });
-        let multi_new = bench::measure(&format!("multistart new ({n})"), 0, reps.min(5), || {
+        let flat_reps = if n <= 2000 { 3 } else { 1 };
+        let sgs_flat = bench::measure(&format!("serial SGS flat ({n})"), 0, flat_reps, || {
+            let s = flat::serial_sgs_flat(&p, &assignment, &prio);
+            std::hint::black_box(s.start[0]);
+        });
+        let multi_new = bench::measure(&format!("multistart indexed ({n})"), 0, reps.min(5), || {
             let mut rng = Rng::new(SEED);
             let s = sgs::multistart_sgs(&p, &assignment, RESTARTS, &mut rng)
                 .expect("feasible");
             std::hint::black_box(s.start[0]);
         });
+        let multi_flat = if n <= MULTI_FLAT_MAX_TASKS {
+            Some(bench::measure(&format!("multistart flat ({n})"), 0, 1, || {
+                let mut rng = Rng::new(SEED);
+                let s = multistart_with(&p, &assignment, RESTARTS, &mut rng, flat::serial_sgs_flat);
+                std::hint::black_box(s.start[0]);
+            }))
+        } else {
+            None
+        };
 
         let (sgs_ref, multi_ref) = if n <= REF_MAX_TASKS {
             let ref_reps = if n <= 200 { 3 } else { 1 };
-            let a = bench::measure(&format!("serial SGS ref ({n})"), 0, ref_reps, || {
+            let a = bench::measure(&format!("serial SGS rect ({n})"), 0, ref_reps, || {
                 let s = reference::serial_sgs_ref(&p, &assignment, &prio);
                 std::hint::black_box(s.start[0]);
             });
-            let b = bench::measure(&format!("multistart ref ({n})"), 0, 1, || {
+            let b = bench::measure(&format!("multistart rect ({n})"), 0, 1, || {
                 let mut rng = Rng::new(SEED);
-                let s = multistart_ref(&p, &assignment, RESTARTS, &mut rng);
+                let s = multistart_with(
+                    &p,
+                    &assignment,
+                    RESTARTS,
+                    &mut rng,
+                    reference::serial_sgs_ref,
+                );
                 std::hint::black_box(s.start[0]);
             });
             (Some(a), Some(b))
@@ -181,28 +277,53 @@ fn main() {
         };
 
         // End-to-end co-optimization round on the production kernel
-        // (incremental SA — the checkpoint/rollback hot path).
-        let sa = bench::measure(&format!("co-optimize SA ({n})"), 0, 1, || {
-            let plan = Agora::new(AgoraOptions {
-                goal: Goal::Balanced,
-                mode: Mode::CoOptimize,
-                params: AnnealParams {
-                    max_iters: 200,
-                    incremental: true,
-                    ..AnnealParams::fast()
-                },
-                seed: SEED,
-                ..Default::default()
-            })
-            .optimize(&p);
-            std::hint::black_box(plan.makespan);
-        });
+        // (incremental SA — the checkpoint/rollback hot path). In smoke
+        // mode only the sizes the CI budget affords.
+        let sa_cap = if smoke { 2000 } else { SA_MAX_TASKS };
+        let sa = if n <= sa_cap {
+            Some(bench::measure(&format!("co-optimize SA ({n})"), 0, 1, || {
+                let plan = Agora::new(AgoraOptions {
+                    goal: Goal::Balanced,
+                    mode: Mode::CoOptimize,
+                    params: AnnealParams {
+                        max_iters: 200,
+                        incremental: true,
+                        ..AnnealParams::fast()
+                    },
+                    seed: SEED,
+                    ..Default::default()
+                })
+                .optimize(&p);
+                std::hint::black_box(plan.makespan);
+            }))
+        } else {
+            println!(
+                "skip: co-optimize SA round not run at {n} tasks (> {sa_cap} in this mode)"
+            );
+            None
+        };
 
         let optimizer_speedup = multi_ref
             .as_ref()
             .map(|r| r.mean.as_secs_f64() / multi_new.mean.as_secs_f64().max(1e-12));
         if n == 1000 {
             speedup_at_1000 = optimizer_speedup;
+        }
+        let sgs_speedup_vs_flat = sgs_flat.min.as_secs_f64() / sgs_new.min.as_secs_f64().max(1e-12);
+        if n >= FIT_MIN_TASKS {
+            fit_points.push((n as f64, sgs_new.min_ms()));
+        }
+
+        // CI gate: at production scale the indexed kernel must beat the
+        // flat kernel on the serial-SGS wall clock.
+        if n >= 10_000 {
+            assert!(
+                sgs_new.min < sgs_flat.min,
+                "indexed kernel ({:.2} ms) not faster than the flat kernel \
+                 ({:.2} ms) at {n} tasks",
+                sgs_new.min_ms(),
+                sgs_flat.min_ms(),
+            );
         }
 
         let fmt_opt = |m: &Option<bench::Measurement>| {
@@ -213,18 +334,26 @@ fn main() {
         rows.push(vec![
             n.to_string(),
             format!("{:.2}", sgs_new.mean_ms()),
+            format!("{:.2}", sgs_flat.mean_ms()),
             fmt_opt(&sgs_ref),
+            format!("{sgs_speedup_vs_flat:.1}x"),
             format!("{:.2}", multi_new.mean_ms()),
+            fmt_opt(&multi_flat),
             fmt_opt(&multi_ref),
             optimizer_speedup
                 .map(|s| format!("{s:.1}x"))
                 .unwrap_or_else(|| "-".into()),
-            format!("{:.0}", sa.mean_ms()),
+            sa.as_ref()
+                .map(|m| format!("{:.0}", m.mean_ms()))
+                .unwrap_or_else(|| "-".into()),
         ]);
 
         points.push(Json::obj(vec![
             ("tasks", Json::num(n as f64)),
             ("serial_sgs_ms", Json::num(sgs_new.mean_ms())),
+            ("serial_sgs_min_ms", Json::num(sgs_new.min_ms())),
+            ("serial_sgs_flat_ms", Json::num(sgs_flat.mean_ms())),
+            ("serial_sgs_flat_min_ms", Json::num(sgs_flat.min_ms())),
             (
                 "serial_sgs_ref_ms",
                 sgs_ref
@@ -232,7 +361,15 @@ fn main() {
                     .map(|m| Json::num(m.mean_ms()))
                     .unwrap_or(Json::Null),
             ),
+            ("sgs_speedup_vs_flat", Json::num(sgs_speedup_vs_flat)),
             ("multistart_ms", Json::num(multi_new.mean_ms())),
+            (
+                "multistart_flat_ms",
+                multi_flat
+                    .as_ref()
+                    .map(|m| Json::num(m.mean_ms()))
+                    .unwrap_or(Json::Null),
+            ),
             (
                 "multistart_ref_ms",
                 multi_ref
@@ -244,18 +381,24 @@ fn main() {
                 "optimizer_speedup",
                 optimizer_speedup.map(Json::num).unwrap_or(Json::Null),
             ),
-            ("cooptimize_sa_ms", Json::num(sa.mean_ms())),
+            (
+                "cooptimize_sa_ms",
+                sa.as_ref().map(|m| Json::num(m.mean_ms())).unwrap_or(Json::Null),
+            ),
         ]));
     }
 
     bench::table(
         &[
             "tasks",
-            "sgs new (ms)",
-            "sgs ref (ms)",
-            "multistart new (ms)",
-            "multistart ref (ms)",
-            "optimizer speedup",
+            "sgs idx (ms)",
+            "sgs flat (ms)",
+            "sgs rect (ms)",
+            "idx/flat",
+            "multi idx (ms)",
+            "multi flat (ms)",
+            "multi rect (ms)",
+            "speedup vs rect",
             "SA round (ms)",
         ],
         &rows,
@@ -267,8 +410,30 @@ fn main() {
         );
     }
 
+    // CI gate: the fitted scaling exponent of the indexed serial-SGS
+    // pass. An O(n²)-regressed `place` fits ~2.0; healthy block-indexed
+    // passes fit ~1.1-1.4.
+    let exponent = bench::fit_log_log_slope(&fit_points);
+    match exponent {
+        Some(e) => {
+            println!(
+                "fitted serial-SGS scaling exponent over sizes >= {FIT_MIN_TASKS}: \
+                 n^{e:.2} (ceiling n^{MAX_SGS_EXPONENT})"
+            );
+            assert!(
+                e <= MAX_SGS_EXPONENT,
+                "serial-SGS pass scales as n^{e:.2} > n^{MAX_SGS_EXPONENT}: \
+                 the placement path has regressed toward O(n²)"
+            );
+        }
+        None => println!(
+            "skip: scaling-exponent fit needs >= 2 sizes at or above {FIT_MIN_TASKS} tasks"
+        ),
+    }
+
     let doc = Json::obj(vec![
         ("bench", Json::str("scaling_timeline")),
+        ("provenance", Json::str("measured")),
         ("seed", Json::num(SEED as f64)),
         ("smoke", Json::Bool(smoke)),
         ("restarts", Json::num(RESTARTS as f64)),
@@ -276,6 +441,10 @@ fn main() {
         (
             "speedup_at_1000",
             speedup_at_1000.map(Json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "sgs_scaling_exponent",
+            exponent.map(Json::num).unwrap_or(Json::Null),
         ),
         ("points", Json::Arr(points)),
     ]);

@@ -215,8 +215,9 @@ impl Scheduler for MilpScheduler {
         let total_buckets: usize = dur.iter().sum::<usize>() + 1 + reserved_horizon;
 
         // Pre-load the occupancy reservations (continuous admission)
-        // through the shared sweep-line kernel: each bucket is charged
-        // the maximum concurrent reservation usage over its window.
+        // through the shared block-indexed kernel: each bucket is charged
+        // the maximum concurrent reservation usage over its window (an
+        // aggregate query on the block maxima, not a segment rescan).
         // Still conservative (bucketized tasks cover their whole bucket,
         // so the max-usage instant binds), equal to the historical
         // rounded-outward per-reservation sum whenever reservations do

@@ -24,6 +24,12 @@ impl Measurement {
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
     }
+
+    /// Fastest repetition in milliseconds — the estimator scaling fits
+    /// use (min is far less noise-sensitive than mean under CI load).
+    pub fn min_ms(&self) -> f64 {
+        self.min.as_secs_f64() * 1e3
+    }
 }
 
 /// Measure a closure: `warmup` unmeasured runs, then `reps` measured.
@@ -94,6 +100,33 @@ pub fn series(title: &str, x_label: &str, y_labels: &[&str], points: &[(f64, Vec
     table(&cols, &rows);
 }
 
+/// Least-squares slope of `ln y` against `ln x` — the fitted scaling
+/// exponent of a measured size sweep (y ~ x^slope). The scaling bench
+/// asserts this in `--smoke` mode so an accidental O(n²) regression in a
+/// kernel hot path fails CI rather than silently shipping. Points with a
+/// non-positive coordinate are dropped; returns `None` with fewer than
+/// two usable points or a degenerate (constant-x) sweep.
+pub fn fit_log_log_slope(points: &[(f64, f64)]) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .map(|&(x, y)| (x.ln(), y.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return None;
+    }
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let denom = sxx - sx * sx / n;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    Some((sxy - sx * sy / n) / denom)
+}
+
 /// Wall-clock speedup of `new` relative to `base`, formatted "3.2x".
 pub fn speedup(base: Duration, new: Duration) -> String {
     let b = base.as_secs_f64();
@@ -128,6 +161,24 @@ mod tests {
         assert_eq!(calls, 7);
         assert_eq!(m.reps, 5);
         assert!(m.min <= m.mean && m.mean <= m.max);
+    }
+
+    #[test]
+    fn log_log_fit_recovers_the_exponent() {
+        // Exact power law y = 3 x^2 -> slope exactly 2 (up to fp error).
+        let pts: Vec<(f64, f64)> = [50.0, 200.0, 1000.0, 10_000.0]
+            .iter()
+            .map(|&x| (x, 3.0 * x * x))
+            .collect();
+        let slope = fit_log_log_slope(&pts).unwrap();
+        assert!((slope - 2.0).abs() < 1e-9, "slope {slope}");
+        // Linear sweep fits slope 1.
+        let lin: Vec<(f64, f64)> = pts.iter().map(|&(x, _)| (x, 0.5 * x)).collect();
+        assert!((fit_log_log_slope(&lin).unwrap() - 1.0).abs() < 1e-9);
+        // Degenerate inputs refuse to fit instead of returning garbage.
+        assert!(fit_log_log_slope(&[(100.0, 1.0)]).is_none());
+        assert!(fit_log_log_slope(&[(100.0, 1.0), (100.0, 2.0)]).is_none());
+        assert!(fit_log_log_slope(&[(-1.0, 1.0), (0.0, 2.0)]).is_none());
     }
 
     #[test]

@@ -14,8 +14,9 @@
 //! * **continuous** — at each trigger the coordinator prunes its
 //!   occupancy ledger to the still-in-flight reservations, seeds the new
 //!   round's [`Problem`] with them ([`Problem::with_occupancy`] — every
-//!   scheduling primitive packs around them through the shared sweep-line
-//!   [`crate::solver::Timeline`] kernel), and plans + executes the batch
+//!   scheduling primitive packs around them through the shared
+//!   block-indexed [`crate::solver::Timeline`] kernel), and plans +
+//!   executes the batch
 //!   *into the gaps* of the occupied-cluster timeline. Outcomes are
 //!   accounted at true finish times in absolute virtual time, so rounds
 //!   overlap instead of queueing.

@@ -73,10 +73,11 @@ impl OccupancyLedger {
     /// `now` (they cannot constrain work floored at it), then return the
     /// survivors shifted into the round-local time base (origin `now`)
     /// for [`crate::solver::Problem::with_occupancy`], sorted by start.
-    /// Sorted seeding keeps the sweep-line
+    /// Sorted seeding keeps the block-indexed
     /// [`Timeline`](crate::solver::Timeline) kernel's construction in
     /// near-append order (each change-point lands at or near the tail of
-    /// the profile instead of forcing mid-vector inserts). The change-
+    /// the last block, touching one block instead of forcing mid-profile
+    /// inserts and splits). The change-
     /// point *set* is order-independent; per-segment usage sums are
     /// order-independent here because reservation demands come from
     /// `Config::vcpus`/`memory_gb` — integer-valued doubles whose sums

@@ -114,9 +114,11 @@ pub fn fig10_batch(rng: &mut Rng, count: usize) -> Vec<Dag> {
 /// like a shuffle boundary) and **deep chains** (5-15 sequential reduce
 /// / ETL steps), stitched end to end until the task budget is spent.
 /// Defaults to ~1000 tasks via [`large_scale_dag`]; the scaling
-/// benchmark (`benches/scaling_timeline.rs`) sweeps it from 50 to 2000
-/// tasks and `agora trace --trace-large N` appends N of them to the
-/// macro trace.
+/// benchmark (`benches/scaling_timeline.rs`) sweeps it from 50 up to
+/// 100_000 tasks (production-trace scale — generation is O(n) and the
+/// edge list stays ~1.9 edges/task, so even the 100k instance builds in
+/// milliseconds) and `agora trace --trace-large N` appends N of them to
+/// the macro trace.
 ///
 /// Acyclic by construction: every edge points from a lower to a higher
 /// task index.
@@ -267,6 +269,24 @@ mod tests {
             longest_chain = longest_chain.max(depth);
         }
         assert!(longest_chain >= 5, "no deep chain (longest {longest_chain})");
+    }
+
+    #[test]
+    fn large_scale_dag_scales_to_ten_thousand_tasks() {
+        // The 10k-100k bench sizes lean on generation staying O(n): the
+        // structure invariants (exact budget, acyclic, single source,
+        // bounded fan-in from the stage construction) must hold at the
+        // first bench size beyond the historical 2000-task ceiling.
+        let d = large_scale_dag(&mut Rng::new(0xA11B), "huge", 10_000);
+        assert_eq!(d.len(), 10_000);
+        assert!(d.topo_order().is_ok());
+        let roots: Vec<usize> = (0..d.len()).filter(|&t| d.preds(t).is_empty()).collect();
+        assert_eq!(roots, vec![0], "the source is the only root");
+        // Stage construction: fan-in is bounded by the widest join (24).
+        let max_fan_in = (0..d.len()).map(|t| d.preds(t).len()).max().unwrap();
+        assert!(max_fan_in <= 24, "join wider than the stage cap: {max_fan_in}");
+        // Sparse by construction: ~1.9 edges per task keeps 100k viable.
+        assert!(d.edges.len() < 3 * d.len(), "edge list no longer sparse");
     }
 
     #[test]

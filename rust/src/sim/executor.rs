@@ -188,7 +188,7 @@ pub fn execute_with_policy(
         // --- (Re)place every not-yet-committed task under the current
         // plan: plan order (planned start, FIFO tie-break), waiting on
         // actual predecessor completion (Airflow semantics), packed with
-        // the same sweep-line timeline kernel the schedulers use — but
+        // the same block-indexed timeline kernel the schedulers use — but
         // over ACTUAL durations. The occupancy reservations of previously
         // admitted rounds (continuous admission) seed the timeline, so
         // dispatch packs this round's tasks into the residual capacity;

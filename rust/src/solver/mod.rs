@@ -1,5 +1,5 @@
 //! The AGORA optimization engine (§4): extended-RCPSP problem model,
-//! the shared sweep-line capacity-timeline kernel, CP-style
+//! the shared block-indexed capacity-timeline kernel, CP-style
 //! exact/anytime schedule solver, simulated-annealing outer loop
 //! (Algorithm 1), brute-force reference, and the co-optimizer facade.
 

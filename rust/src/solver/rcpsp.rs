@@ -7,7 +7,8 @@
 //! ([`Problem::with_occupancy`]): rectangles of capacity already reserved
 //! by work admitted earlier (continuous multi-tenant admission) plus an
 //! admission floor. Every scheduler in the repo packs around the seed
-//! through the shared sweep-line [`Timeline`](super::timeline::Timeline)
+//! through the shared block-indexed
+//! [`Timeline`](super::timeline::Timeline)
 //! kernel, which generalizes the replan-only pre-seeded timeline of
 //! [`SuffixSgs`](super::sgs::SuffixSgs) to cross-round, cross-DAG
 //! occupancy.

@@ -47,12 +47,12 @@ impl Schedule {
 
     /// Check every constraint of the §4.2 formulation:
     ///   Eq. 3 precedence, Eq. 4 capacity at every instant, release times,
-    ///   and assignment validity. Eq. 4 runs on the shared sweep-line
+    ///   and assignment validity. Eq. 4 runs on the shared block-indexed
     ///   [`Timeline`] kernel: build the capacity profile of the
     ///   schedule's rectangles plus the occupancy reservations, then scan
-    ///   its constant-usage segments — O(n log n) typical (worst-case
-    ///   O(n²) from sorted-vector insert memmoves) instead of the
-    ///   historical O(n²) per-event feasibility rescan.
+    ///   its constant-usage segments — O(n log n + Σk) (block splits
+    ///   replaced the flat kernel's worst-case O(n²) insert memmoves)
+    ///   instead of the historical O(n²) per-event feasibility rescan.
     pub fn validate(&self, p: &Problem) -> Result<()> {
         let n = p.len();
         if self.assignment.len() != n || self.start.len() != n {
@@ -91,7 +91,7 @@ impl Schedule {
                 );
             }
         }
-        // Eq. 4: capacity at every instant, via the shared sweep-line
+        // Eq. 4: capacity at every instant, via the shared block-indexed
         // kernel. Reserved capacity counts against the cluster: a
         // schedule overlapping `Problem::preplaced` is infeasible.
         let mut profile =

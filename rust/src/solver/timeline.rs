@@ -1,69 +1,88 @@
-//! The shared capacity-timeline kernel: an event-sweep **capacity
+//! The shared capacity-timeline kernel: a block-indexed **capacity
 //! profile** over (vcpus, memory) usage that every scheduling primitive
 //! in the repo packs against.
 //!
 //! Every plan the optimizer evaluates — thousands of annealing probes per
 //! round, each CP branch-and-bound node, every executor dispatch, every
 //! `Schedule::validate` — bottoms out in [`Timeline::earliest_fit`] /
-//! [`Timeline::place`]. The historical kernel kept a flat rectangle list
-//! and rescanned *all* placements at every event point: O(n²) per
-//! feasibility query and O(n³) per serial-SGS pass. This module replaces
-//! it with a sorted step function of change-points:
+//! [`Timeline::place`]. Three generations of the kernel coexist here:
 //!
-//! | operation      | rectangle list (old)   | capacity profile (new)      |
-//! |----------------|------------------------|-----------------------------|
-//! | `earliest_fit` | O(n²) (n candidates × O(n) scans) | O(log n + k) one sweep over the k segments crossed |
-//! | `place`        | O(1) push (cost deferred to queries) | O(log n) locate + O(k) segment update, plus an O(n) contiguous memmove per newly inserted change-point |
-//! | backtrack      | O(1) `pop`/`truncate`  | O(k) exact [`Timeline::rollback`] to a [`Mark`] |
-//! | full validate  | O(n²)                  | O(n log n) typical build + O(n) segment scan |
+//! * [`reference`] — the original flat rectangle list that rescanned all
+//!   placements at every event point: O(n²) per feasibility query, O(n³)
+//!   per serial-SGS pass. Retained verbatim as the executable
+//!   specification.
+//! * [`flat`] — the PR 4 sweep-line profile: one sorted `Vec` of
+//!   change-points with absolute per-segment usage. O(log n + k) queries,
+//!   but `place` pays an O(n) contiguous memmove per newly inserted
+//!   change-point, so a full n-placement SGS pass is O(n²). Retained as
+//!   a second executable reference that scales far enough (10⁴–10⁵
+//!   tasks) to cross-check the production kernel at every bench size.
+//! * [`Timeline`] (this type) — the production kernel: the same profile
+//!   **block-decomposed** into bounded runs of change-points, each block
+//!   carrying `(max_cpu, max_mem)` range aggregates over its segments.
 //!
-//! (`k` = number of constant-usage segments a placement window crosses —
-//! small in practice. The sorted vector trades a worst-case O(n)
-//! memmove per insert — so O(n²) for a full n-placement pass — for
-//! cache-friendly queries; that memmove is a contiguous `memcpy`-class
-//! operation, orders of magnitude cheaper per element than the old
-//! kernel's per-query rescans, and the `scaling_timeline` bench measures
-//! the end-to-end effect rather than relying on the asymptotics.)
+//! | operation      | rectangle list | flat profile | indexed profile |
+//! |----------------|----------------|--------------|-----------------|
+//! | `place`        | O(1) push      | O(k) update + O(n) memmove | O(log n + k) locate + update; O(√-ish block) insert, amortized splits |
+//! | `earliest_fit` | O(n²)          | O(log n + k) | O(log n + B + k′): clear blocks skip in O(1) via aggregates |
+//! | `max_usage_in` | O(n²)          | O(log n + k) | O(log n + B + boundary blocks) aggregate query |
+//! | backtrack      | O(1) pop       | O(k) exact [`Timeline::rollback`] | O(k + touched blocks) exact [`Timeline::rollback`] |
+//! | full validate  | O(n²)          | O(n log n) build + O(n) scan | O(n log n) build + O(n) scan |
+//!
+//! (`k` = segments a placement window crosses; `B` = number of blocks,
+//! ≈ n / [`BLOCK_CAP`]; `k′` = segments inside *dirty* blocks only — a
+//! block whose aggregate leaves room for the demand is skipped whole,
+//! which is what keeps a 10⁵-task serial-SGS pass out of the O(n²)
+//! regime the flat kernel hits through its per-insert memmove.)
 //!
 //! ## Checkpoint / rollback
 //!
-//! The ad-hoc `pop()`-per-DFS-node and `truncate(len)` prefix-reuse
-//! protocols of the historical kernel are replaced by explicit epoch
-//! marks: [`Timeline::checkpoint`] returns a [`Mark`], and
-//! [`Timeline::rollback`] restores the timeline to that mark **exactly**
+//! Explicit epoch marks carry over from the flat kernel **bit-exactly**:
+//! [`Timeline::checkpoint`] returns a [`Mark`], and
+//! [`Timeline::rollback`] restores the timeline to that mark exactly
 //! (bit-for-bit, via an undo journal of overwritten segment values — not
 //! by re-subtracting floats, which would accumulate rounding drift over
-//! the millions of place/undo cycles an annealing run performs).
-//! Rollback is LIFO: marks must be released in reverse order of creation,
-//! which is the natural discipline of both the CP solver's DFS and the
-//! incremental evaluators' shared-prefix reuse.
+//! the millions of place/undo cycles an annealing run performs). Journal
+//! entries are keyed by the placement's *time window* rather than by
+//! physical indices: blocks split and shift, but the LIFO discipline
+//! guarantees the point set at undo time is identical to the point set
+//! right after the corresponding place, so a time-keyed walk restores
+//! exactly the segments that were raised. Rollback is LIFO: marks must
+//! be released in reverse order of creation, which is the natural
+//! discipline of both the CP solver's DFS and the incremental
+//! evaluators' shared-prefix reuse.
 //!
-//! ## Infeasible demands
+//! ## Infeasible demands and non-finite windows
 //!
 //! [`Timeline::earliest_fit`] returns `None` when the demand can never
-//! run on this cluster (it exceeds total capacity on its own). The
-//! historical kernel silently returned a start anyway — an over-capacity
-//! rectangle that corrupted every later query. Callers surface `None`
-//! through their `anyhow::Result` paths (see `sgs::serial_sgs`).
+//! run on this cluster (it exceeds total capacity on its own) **and**
+//! when any of `est`/`d`/`cpu`/`mem` is non-finite. The latter is a
+//! bugfix: NaN windows made every sweep comparison false, so the flat
+//! kernel fell through to `Some(est)` — handing the caller a NaN start
+//! that `place` then silently journaled as a no-op rectangle, i.e. a
+//! corrupted schedule with no error. [`Timeline::max_usage_in`] is
+//! likewise explicitly `(0, 0)` on non-finite bounds. Callers surface
+//! `None` through their `anyhow::Result` paths (see `sgs::serial_sgs`).
 //!
 //! ## Equivalence contract
 //!
-//! The kernel produces **bit-identical schedules** to the historical
-//! one: `earliest_fit` returns either `est` or the exact stored end of a
-//! placed rectangle, and feasibility uses the same `1e-6` capacity
-//! tolerance. One caveat bounds the claim: the historical kernel probed
-//! usage at `point + 1e-9` (a rectangle overlapping a window by less
-//! than 1e-9 was ignored), while this kernel uses exact half-open
-//! segments. The two can therefore disagree only when two *distinct*
-//! change-points lie within 1e-9 of each other — coincident times in
-//! this codebase are computed by identical float expressions and are
-//! bitwise equal, and all durations are O(seconds), so the regime does
-//! not arise; it would take adversarial sub-nanosecond rectangles to
-//! split them. The historical kernel is retained verbatim in
-//! [`reference`] as the executable specification; property tests (here
-//! and in `sgs`) and the `scaling_timeline` bench run the two side by
-//! side on random seeded/occupied problems to keep the equivalence
-//! honest empirically.
+//! The kernel produces **bit-identical schedules** to both retained
+//! kernels: `earliest_fit` returns either `est` or the exact stored end
+//! of a placed rectangle, and feasibility uses the same `1e-6` capacity
+//! tolerance. Block aggregates never change an answer: a block is
+//! skipped only when `max + demand` fits capacity, which (addition is
+//! monotone in IEEE) implies no segment inside could have moved the
+//! candidate start, and `max_usage_in`'s block shortcut contributes the
+//! exact per-block maximum the segment-wise sweep would have folded in.
+//! One caveat bounds the claim against [`reference`]: the rectangle list
+//! probed usage at `point + 1e-9`, while the profile kernels use exact
+//! half-open segments; the two can disagree only when two *distinct*
+//! change-points lie within 1e-9 of each other, which this codebase's
+//! identical-float-expression times never produce. Property tests (here
+//! and in `sgs`/`invariants`) and the `scaling_timeline` bench run the
+//! three kernels side by side on random seeded/occupied problems to keep
+//! the equivalence honest empirically — the bench asserts bit-identical
+//! schedules at every measured size up to 10⁵ tasks.
 
 use super::rcpsp::Reservation;
 
@@ -71,44 +90,91 @@ use super::rcpsp::Reservation;
 /// overshoot capacity by at most this before a window is infeasible.
 const CAP_EPS: f64 = 1e-6;
 
+/// Split threshold for profile blocks: a block that grows past this many
+/// change-points splits in two. 512 keeps a block's three parallel
+/// arrays ≈ 12 KiB (cache-resident for the segment walks) while holding
+/// the per-insert memmove to a bounded ~4 KiB `memcpy`.
+const BLOCK_CAP: usize = 512;
+
 /// An epoch mark returned by [`Timeline::checkpoint`]: the number of
 /// placements journaled so far. [`Timeline::rollback`] restores the
 /// timeline to the state it had when the mark was taken.
 pub type Mark = usize;
 
-/// One journaled placement: which segment range it raised, which
-/// change-points it inserted, and where its overwritten usage values
-/// start on the save stack. Undo replays these exactly (LIFO).
+/// One journaled placement, keyed by its time window: which
+/// change-points it inserted and where its overwritten usage values
+/// start on the save stack. Undo replays these exactly (LIFO) — by the
+/// LIFO contract the change-point *set* at undo time equals the set
+/// right after the place, so locating by time is exact even though
+/// physical block indices have shifted across splits.
 #[derive(Debug, Clone, Copy)]
 struct JournalEntry {
-    /// First segment index whose usage this placement raised.
-    lo: usize,
-    /// One past the last raised segment index.
-    hi: usize,
-    /// Whether the placement inserted the change-point at `lo`.
+    /// Window start (a change-point of the profile while this entry is
+    /// live, unless `noop`).
+    s: f64,
+    /// Window end (likewise a live change-point unless `noop`).
+    e: f64,
+    /// Whether the placement inserted the change-point at `s`.
     ins_lo: bool,
-    /// Whether the placement inserted the change-point at `hi`.
+    /// Whether the placement inserted the change-point at `e`.
     ins_hi: bool,
     /// Offset into [`Timeline::saved`] of this placement's overwritten
     /// `(cpu, mem)` values (one pair per raised segment).
     saved_off: usize,
+    /// Non-positive or NaN window: nothing was touched.
+    noop: bool,
 }
 
-/// Resource timeline of placed rectangular tasks, stored as a capacity
-/// profile: sorted change-points with the absolute (cpu, mem) usage of
-/// the constant segment starting at each point. See the module docs for
-/// the representation, complexity, and rollback contract.
+/// One bounded run of consecutive change-points with the absolute
+/// (cpu, mem) usage of the constant segment starting at each, plus the
+/// range aggregate over those segments. Blocks partition the profile in
+/// time order; every block is non-empty.
+#[derive(Debug, Clone)]
+struct Block {
+    /// Sorted distinct change-points of this block.
+    points: Vec<f64>,
+    /// Usage on the segment starting at `points[i]` (extending to the
+    /// next point, possibly in the next block; the global final segment
+    /// extends to infinity and always carries zero usage).
+    seg_cpu: Vec<f64>,
+    seg_mem: Vec<f64>,
+    /// `max(seg_cpu)` over the block (floored at 0.0, like every usage
+    /// fold in the kernel): the aggregate that lets `earliest_fit` and
+    /// `max_usage_in` treat the whole block as one unit.
+    max_cpu: f64,
+    /// `max(seg_mem)` over the block, same convention.
+    max_mem: f64,
+}
+
+impl Block {
+    fn recompute_max(&mut self) {
+        let mut mc = 0.0f64;
+        let mut mm = 0.0f64;
+        for (&c, &m) in self.seg_cpu.iter().zip(self.seg_mem.iter()) {
+            mc = mc.max(c);
+            mm = mm.max(m);
+        }
+        self.max_cpu = mc;
+        self.max_mem = mm;
+    }
+
+    fn last_point(&self) -> f64 {
+        *self.points.last().expect("blocks are never empty")
+    }
+}
+
+/// Resource timeline of placed rectangular tasks, stored as a
+/// block-indexed capacity profile: sorted change-points with the
+/// absolute (cpu, mem) usage of the constant segment starting at each,
+/// decomposed into bounded blocks carrying `(max_cpu, max_mem)` range
+/// aggregates. See the module docs for the representation, complexity,
+/// and rollback contract.
 #[derive(Debug, Clone)]
 pub struct Timeline {
     cap_cpu: f64,
     cap_mem: f64,
-    /// Sorted distinct change-points (placement starts and ends).
-    points: Vec<f64>,
-    /// Usage on `[points[i], points[i+1])`; the final segment extends to
-    /// infinity and always carries zero usage (its start is the latest
-    /// placement end).
-    seg_cpu: Vec<f64>,
-    seg_mem: Vec<f64>,
+    /// Time-ordered profile blocks (all non-empty).
+    blocks: Vec<Block>,
     /// Undo journal, one entry per `place` call (including no-ops).
     journal: Vec<JournalEntry>,
     /// Stack of overwritten segment usage values, LIFO with `journal`.
@@ -121,9 +187,7 @@ impl Timeline {
         Timeline {
             cap_cpu,
             cap_mem,
-            points: Vec::new(),
-            seg_cpu: Vec::new(),
-            seg_mem: Vec::new(),
+            blocks: Vec::new(),
             journal: Vec::new(),
             saved: Vec::new(),
         }
@@ -152,22 +216,129 @@ impl Timeline {
         self.cap_mem
     }
 
-    /// Index of change-point `t`, inserting it (with the usage of the
-    /// segment it splits) when absent. Returns `(index, inserted)`.
-    fn ensure_point(&mut self, t: f64) -> (usize, bool) {
-        match self.points.binary_search_by(|p| p.total_cmp(&t)) {
-            Ok(i) => (i, false),
-            Err(i) => {
-                let (c, m) = if i == 0 {
-                    (0.0, 0.0)
+    /// Number of blocks the profile currently spans (bench/test
+    /// introspection; ≈ change-points / [`BLOCK_CAP`]).
+    pub fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Segment containing `t`: the block index and in-block index of the
+    /// last change-point at or before `t` (total order, like every
+    /// profile lookup). `None` when `t` precedes every point.
+    fn locate_seg(&self, t: f64) -> Option<(usize, usize)> {
+        let nb = self
+            .blocks
+            .partition_point(|b| b.points[0].total_cmp(&t).is_le());
+        let bi = nb.checked_sub(1)?;
+        let si = self.blocks[bi]
+            .points
+            .partition_point(|p| p.total_cmp(&t).is_le());
+        // `si >= 1` because this block's first point is <= t.
+        Some((bi, si - 1))
+    }
+
+    /// End of segment `(bi, si)`: the next change-point, crossing into
+    /// the following block when needed; infinity past the last point.
+    fn seg_end(&self, bi: usize, si: usize) -> f64 {
+        let b = &self.blocks[bi];
+        if si + 1 < b.points.len() {
+            b.points[si + 1]
+        } else if bi + 1 < self.blocks.len() {
+            self.blocks[bi + 1].points[0]
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Insert change-point `t` (with the usage of the segment it splits)
+    /// when absent; returns whether it was inserted.
+    fn ensure_point(&mut self, t: f64) -> bool {
+        if self.blocks.is_empty() {
+            self.blocks.push(Block {
+                points: vec![t],
+                seg_cpu: vec![0.0],
+                seg_mem: vec![0.0],
+                max_cpu: 0.0,
+                max_mem: 0.0,
+            });
+            return true;
+        }
+        let nb = self
+            .blocks
+            .partition_point(|b| b.points[0].total_cmp(&t).is_le());
+        // `t` before every point lands at the front of block 0.
+        let bi = nb.saturating_sub(1);
+        match self.blocks[bi].points.binary_search_by(|p| p.total_cmp(&t)) {
+            Ok(_) => false,
+            Err(pos) => {
+                let (c, m) = if pos > 0 {
+                    (self.blocks[bi].seg_cpu[pos - 1], self.blocks[bi].seg_mem[pos - 1])
+                } else if bi > 0 {
+                    // Defensive: unreachable given how `bi` is chosen
+                    // (pos == 0 implies t precedes block 0's first point).
+                    let pb = &self.blocks[bi - 1];
+                    (*pb.seg_cpu.last().unwrap(), *pb.seg_mem.last().unwrap())
                 } else {
-                    (self.seg_cpu[i - 1], self.seg_mem[i - 1])
+                    (0.0, 0.0)
                 };
-                self.points.insert(i, t);
-                self.seg_cpu.insert(i, c);
-                self.seg_mem.insert(i, m);
-                (i, true)
+                let b = &mut self.blocks[bi];
+                b.points.insert(pos, t);
+                b.seg_cpu.insert(pos, c);
+                b.seg_mem.insert(pos, m);
+                // A split segment inherits its usage: the aggregate can
+                // only be confirmed, never raised past the old max — but
+                // fold it in anyway (cheap, and exact when the inherited
+                // value crossed a block boundary).
+                b.max_cpu = b.max_cpu.max(c);
+                b.max_mem = b.max_mem.max(m);
+                if b.points.len() > BLOCK_CAP {
+                    self.split_block(bi);
+                }
+                true
             }
+        }
+    }
+
+    /// Split block `bi` in half, recomputing both aggregates. O(block)
+    /// plus an O(B) shift of the block directory — amortized across the
+    /// ≥ `BLOCK_CAP`/2 inserts that grew the block.
+    fn split_block(&mut self, bi: usize) {
+        let half = self.blocks[bi].points.len() / 2;
+        let b = &mut self.blocks[bi];
+        let points = b.points.split_off(half);
+        let seg_cpu = b.seg_cpu.split_off(half);
+        let seg_mem = b.seg_mem.split_off(half);
+        b.recompute_max();
+        let mut tail = Block {
+            points,
+            seg_cpu,
+            seg_mem,
+            max_cpu: 0.0,
+            max_mem: 0.0,
+        };
+        tail.recompute_max();
+        self.blocks.insert(bi + 1, tail);
+    }
+
+    /// Remove change-point `t` (which must exist — it came from the
+    /// journal), dropping its block when that leaves the block empty.
+    fn remove_point(&mut self, t: f64) {
+        let nb = self
+            .blocks
+            .partition_point(|b| b.points[0].total_cmp(&t).is_le());
+        let bi = nb.checked_sub(1).expect("journaled change-point must exist");
+        let b = &mut self.blocks[bi];
+        let pos = b
+            .points
+            .binary_search_by(|p| p.total_cmp(&t))
+            .expect("journaled change-point must exist");
+        b.points.remove(pos);
+        b.seg_cpu.remove(pos);
+        b.seg_mem.remove(pos);
+        if self.blocks[bi].points.is_empty() {
+            self.blocks.remove(bi);
+        } else {
+            self.blocks[bi].recompute_max();
         }
     }
 
@@ -179,55 +350,103 @@ impl Timeline {
         // NaN-safe "not strictly after": NaN windows are no-ops too.
         if e.partial_cmp(&s) != Some(std::cmp::Ordering::Greater) {
             self.journal.push(JournalEntry {
-                lo: 0,
-                hi: 0,
+                s,
+                e,
                 ins_lo: false,
                 ins_hi: false,
                 saved_off: self.saved.len(),
+                noop: true,
             });
             return;
         }
-        let (lo, ins_lo) = self.ensure_point(s);
-        // `e > s`, so inserting `e` cannot shift index `lo`.
-        let (hi, ins_hi) = self.ensure_point(e);
+        let ins_lo = self.ensure_point(s);
+        let ins_hi = self.ensure_point(e);
         let saved_off = self.saved.len();
-        for i in lo..hi {
-            self.saved.push((self.seg_cpu[i], self.seg_mem[i]));
-            self.seg_cpu[i] += cpu;
-            self.seg_mem[i] += mem;
+        // Raise every segment in [s, e): a forward walk from the segment
+        // starting exactly at `s` (just ensured) to the one starting at
+        // `e`, saving the overwritten values for exact undo.
+        let (mut bi, mut si) = self.locate_seg(s).expect("start point was just ensured");
+        let nb = self.blocks.len();
+        loop {
+            if self.blocks[bi].points[si].total_cmp(&e).is_ge() {
+                break;
+            }
+            let b = &mut self.blocks[bi];
+            let oc = b.seg_cpu[si];
+            let om = b.seg_mem[si];
+            b.seg_cpu[si] = oc + cpu;
+            b.seg_mem[si] = om + mem;
+            b.max_cpu = b.max_cpu.max(oc + cpu);
+            b.max_mem = b.max_mem.max(om + mem);
+            self.saved.push((oc, om));
+            si += 1;
+            if si >= self.blocks[bi].points.len() {
+                bi += 1;
+                si = 0;
+                if bi >= nb {
+                    break;
+                }
+            }
         }
         self.journal.push(JournalEntry {
-            lo,
-            hi,
+            s,
+            e,
             ins_lo,
             ins_hi,
             saved_off,
+            noop: false,
         });
     }
 
     /// Undo the most recent journaled placement exactly (restores the
-    /// overwritten usage bytes; removes the change-points it inserted).
+    /// overwritten usage bytes; removes the change-points it inserted;
+    /// recomputes the aggregates of the touched blocks from the restored
+    /// bytes, so they too are bit-identical to their pre-place values).
     fn unplace(&mut self) {
-        let e = self
+        let entry = self
             .journal
             .pop()
             .expect("rollback below the empty timeline");
-        for (k, i) in (e.lo..e.hi).enumerate() {
-            let (c, m) = self.saved[e.saved_off + k];
-            self.seg_cpu[i] = c;
-            self.seg_mem[i] = m;
+        if entry.noop {
+            debug_assert_eq!(entry.saved_off, self.saved.len());
+            return;
         }
-        self.saved.truncate(e.saved_off);
-        // Remove the higher index first so the lower one stays valid.
-        if e.ins_hi {
-            self.points.remove(e.hi);
-            self.seg_cpu.remove(e.hi);
-            self.seg_mem.remove(e.hi);
+        let (mut bi, mut si) = self
+            .locate_seg(entry.s)
+            .expect("journaled start point must exist while its entry is live");
+        let first_block = bi;
+        let nb = self.blocks.len();
+        let mut k = entry.saved_off;
+        loop {
+            if self.blocks[bi].points[si].total_cmp(&entry.e).is_ge() {
+                break;
+            }
+            let (c, m) = self.saved[k];
+            k += 1;
+            let b = &mut self.blocks[bi];
+            b.seg_cpu[si] = c;
+            b.seg_mem[si] = m;
+            si += 1;
+            if si >= self.blocks[bi].points.len() {
+                bi += 1;
+                si = 0;
+                if bi >= nb {
+                    break;
+                }
+            }
         }
-        if e.ins_lo {
-            self.points.remove(e.lo);
-            self.seg_cpu.remove(e.lo);
-            self.seg_mem.remove(e.lo);
+        debug_assert_eq!(k, self.saved.len(), "undo must consume exactly its saves");
+        self.saved.truncate(entry.saved_off);
+        for b in first_block..=bi.min(nb - 1) {
+            self.blocks[b].recompute_max();
+        }
+        // Remove the later point first: removing `e` can never disturb
+        // the lookup of `s`.
+        if entry.ins_hi {
+            self.remove_point(entry.e);
+        }
+        if entry.ins_lo {
+            self.remove_point(entry.s);
         }
     }
 
@@ -268,108 +487,535 @@ impl Timeline {
     }
 
     /// Earliest `s >= est` such that `(cpu, mem)` more fits throughout
-    /// `[s, s+d)`, or `None` when the demand alone exceeds the cluster
-    /// capacity (no start can ever fit — the caller must surface this
-    /// instead of placing an over-capacity rectangle).
+    /// `[s, s+d)`; `None` when the demand alone exceeds the cluster
+    /// capacity (no start can ever fit) **or** when any argument is
+    /// non-finite (a NaN window used to fall through every sweep
+    /// comparison and come back as `Some(NaN)` — the caller must surface
+    /// the error instead of placing a corrupted rectangle).
     ///
     /// One forward sweep over the profile: start the candidate window at
     /// `est`; whenever a segment inside the window lacks free capacity,
-    /// restart the window at that segment's end and keep scanning. The
-    /// result is always `est` itself or the exact end of a placed
-    /// rectangle (the left-shift argument: any feasible start that is
-    /// neither can be shifted left to one without losing feasibility),
-    /// which is what keeps schedules bit-identical to the historical
-    /// candidate-scan kernel.
+    /// restart the window at that segment's end and keep scanning. A
+    /// block whose `(max_cpu, max_mem)` aggregate leaves room for the
+    /// demand cannot contain such a segment, so the sweep skips it in
+    /// O(1) — the candidate `t` is provably unchanged across it, and if
+    /// the block reaches past `t + d` the answer is `t` exactly as the
+    /// segment-wise sweep would conclude. The result is always `est`
+    /// itself or the exact end of a placed rectangle (the left-shift
+    /// argument: any feasible start that is neither can be shifted left
+    /// to one without losing feasibility), which is what keeps schedules
+    /// bit-identical to both retained kernels.
     pub fn earliest_fit(&self, est: f64, d: f64, cpu: f64, mem: f64) -> Option<f64> {
+        if !est.is_finite() || !d.is_finite() || !cpu.is_finite() || !mem.is_finite() {
+            return None;
+        }
         if cpu > self.cap_cpu + CAP_EPS || mem > self.cap_mem + CAP_EPS {
             return None;
         }
-        let n = self.points.len();
         let mut t = est;
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return Some(t);
+        }
         // First segment whose interior can reach t: the one containing t
-        // (last point <= t), or segment 0 when t precedes every point.
-        let first_after = self.points.partition_point(|p| p.total_cmp(&t).is_le());
-        let mut idx = first_after.saturating_sub(1);
-        while idx < n {
-            if self.points[idx] >= t + d {
+        // (last point <= t), or the very first segment when t precedes
+        // every point.
+        let (mut bi, mut si) = self.locate_seg(t).unwrap_or((0, 0));
+        loop {
+            let b = &self.blocks[bi];
+            if si == 0
+                && b.max_cpu + cpu <= self.cap_cpu + CAP_EPS
+                && b.max_mem + mem <= self.cap_mem + CAP_EPS
+            {
+                // Aggregate skip: no segment in this block can violate
+                // capacity (IEEE addition is monotone: seg <= max implies
+                // seg + cpu <= max + cpu), so t survives the whole block.
+                if b.last_point() >= t + d {
+                    // Some point in the block ends the search exactly as
+                    // the segment-wise sweep would: window [t, t+d) is
+                    // clear.
+                    return Some(t);
+                }
+                bi += 1;
+                if bi >= nb {
+                    return Some(t);
+                }
+                continue;
+            }
+            // Segment-wise sweep, mirroring the flat kernel bit for bit.
+            if b.points[si] >= t + d {
                 // Every remaining segment starts at or after the window
                 // end: [t, t+d) is clear.
                 return Some(t);
             }
-            let end = if idx + 1 < n {
-                self.points[idx + 1]
-            } else {
-                f64::INFINITY
-            };
+            let last = bi + 1 >= nb && si + 1 >= b.points.len();
+            let end = self.seg_end(bi, si);
             if end > t
-                && (self.seg_cpu[idx] + cpu > self.cap_cpu + CAP_EPS
-                    || self.seg_mem[idx] + mem > self.cap_mem + CAP_EPS)
+                && (b.seg_cpu[si] + cpu > self.cap_cpu + CAP_EPS
+                    || b.seg_mem[si] + mem > self.cap_mem + CAP_EPS)
             {
                 // Window hits an over-full segment: restart just past it.
                 // The final segment always has zero usage (it begins at
                 // the latest placement end) and the demand fits capacity,
                 // so a violation here is unreachable — guarded anyway.
-                if idx + 1 >= n {
+                if last {
                     return None;
                 }
                 t = end;
             }
-            idx += 1;
+            si += 1;
+            if si >= b.points.len() {
+                bi += 1;
+                si = 0;
+                if bi >= nb {
+                    return Some(t);
+                }
+            }
         }
-        Some(t)
     }
 
     /// Usage `(cpu, mem)` of the segment containing instant `t`.
     pub fn usage_at(&self, t: f64) -> (f64, f64) {
-        let j = self.points.partition_point(|p| p.total_cmp(&t).is_le());
-        if j == 0 {
-            (0.0, 0.0)
-        } else {
-            (self.seg_cpu[j - 1], self.seg_mem[j - 1])
+        match self.locate_seg(t) {
+            Some((bi, si)) => (self.blocks[bi].seg_cpu[si], self.blocks[bi].seg_mem[si]),
+            None => (0.0, 0.0),
         }
     }
 
     /// Maximum usage `(cpu, mem)` over any instant in `[t0, t1)` — the
     /// conservative per-bucket pre-load of the time-indexed MILP
-    /// baseline. `(0, 0)` for an empty window or a window past every
-    /// placement.
+    /// baseline. `(0, 0)` for an empty window, a window past every
+    /// placement, or non-finite bounds (which used to walk the sweep
+    /// with NaN comparisons). Blocks that lie entirely inside the window
+    /// contribute their precomputed aggregate in O(1).
     pub fn max_usage_in(&self, t0: f64, t1: f64) -> (f64, f64) {
+        if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
+            return (0.0, 0.0);
+        }
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return (0.0, 0.0);
+        }
         let mut mc = 0.0f64;
         let mut mm = 0.0f64;
-        if t1.partial_cmp(&t0) != Some(std::cmp::Ordering::Greater) {
-            return (mc, mm);
-        }
-        let first_after = self.points.partition_point(|p| p.total_cmp(&t0).is_le());
-        for i in first_after.saturating_sub(1)..self.points.len() {
-            if self.points[i] >= t1 {
-                break;
+        let (mut bi, mut si) = self.locate_seg(t0).unwrap_or((0, 0));
+        // The segment containing t0 needs its own end-check (its end can
+        // coincide with t0 in the ±0.0 corner); every later segment ends
+        // strictly past t0, so whole later blocks can use the aggregate.
+        let mut first = true;
+        loop {
+            let b = &self.blocks[bi];
+            if !first && si == 0 && b.last_point() < t1 {
+                mc = mc.max(b.max_cpu);
+                mm = mm.max(b.max_mem);
+                bi += 1;
+                if bi >= nb {
+                    return (mc, mm);
+                }
+                continue;
             }
-            let end = if i + 1 < self.points.len() {
-                self.points[i + 1]
-            } else {
-                f64::INFINITY
-            };
-            if end > t0 {
-                mc = mc.max(self.seg_cpu[i]);
-                mm = mm.max(self.seg_mem[i]);
+            if b.points[si] >= t1 {
+                return (mc, mm);
+            }
+            if self.seg_end(bi, si) > t0 {
+                mc = mc.max(b.seg_cpu[si]);
+                mm = mm.max(b.seg_mem[si]);
+            }
+            first = false;
+            si += 1;
+            if si >= b.points.len() {
+                bi += 1;
+                si = 0;
+                if bi >= nb {
+                    return (mc, mm);
+                }
             }
         }
-        (mc, mm)
+    }
+
+    /// Integrated usage `(cpu·time, mem·time)` over `[t0, t1)` — the
+    /// occupied area the CP solver's capacity-envelope prune subtracts
+    /// from the cluster's total area budget. `(0, 0)` for an empty
+    /// window or non-finite bounds. Plain segment walk: the prune runs
+    /// only on CP-sized problems (≤ 128 tasks), where the profile is a
+    /// handful of blocks.
+    pub fn area_in(&self, t0: f64, t1: f64) -> (f64, f64) {
+        if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
+            return (0.0, 0.0);
+        }
+        let nb = self.blocks.len();
+        if nb == 0 {
+            return (0.0, 0.0);
+        }
+        let mut ac = 0.0f64;
+        let mut am = 0.0f64;
+        let (mut bi, mut si) = self.locate_seg(t0).unwrap_or((0, 0));
+        loop {
+            let b = &self.blocks[bi];
+            let p = b.points[si];
+            if p >= t1 {
+                return (ac, am);
+            }
+            let hi = self.seg_end(bi, si).min(t1);
+            let lo = p.max(t0);
+            if hi > lo {
+                ac += b.seg_cpu[si] * (hi - lo);
+                am += b.seg_mem[si] * (hi - lo);
+            }
+            si += 1;
+            if si >= b.points.len() {
+                bi += 1;
+                si = 0;
+                if bi >= nb {
+                    return (ac, am);
+                }
+            }
+        }
     }
 
     /// Every maximal constant-usage segment as `(start, end, cpu, mem)`,
     /// in time order; the final segment's end is `f64::INFINITY`. Used by
     /// `Schedule::validate`'s Eq.-4 sweep and by the property tests.
     pub fn segments(&self) -> impl Iterator<Item = (f64, f64, f64, f64)> + '_ {
-        let n = self.points.len();
-        (0..n).map(move |i| {
-            let end = if i + 1 < n {
-                self.points[i + 1]
-            } else {
-                f64::INFINITY
-            };
-            (self.points[i], end, self.seg_cpu[i], self.seg_mem[i])
+        let total: usize = self.blocks.iter().map(|b| b.points.len()).sum();
+        let mut bi = 0usize;
+        let mut si = 0usize;
+        (0..total).map(move |_| {
+            let b = &self.blocks[bi];
+            let start = b.points[si];
+            let cpu = b.seg_cpu[si];
+            let mem = b.seg_mem[si];
+            let end = self.seg_end(bi, si);
+            si += 1;
+            if si >= b.points.len() {
+                bi += 1;
+                si = 0;
+            }
+            (start, end, cpu, mem)
         })
+    }
+
+    /// Structural invariants, asserted by the property tests after every
+    /// fuzz op: non-empty blocks within capacity, globally sorted
+    /// strictly-increasing points, exact aggregates, zero-usage final
+    /// segment.
+    #[cfg(test)]
+    fn assert_invariants(&self) {
+        let mut prev: Option<f64> = None;
+        for b in &self.blocks {
+            assert!(!b.points.is_empty(), "empty block survived");
+            assert!(b.points.len() <= BLOCK_CAP, "block over capacity");
+            assert_eq!(b.points.len(), b.seg_cpu.len());
+            assert_eq!(b.points.len(), b.seg_mem.len());
+            let mut mc = 0.0f64;
+            let mut mm = 0.0f64;
+            for (i, &p) in b.points.iter().enumerate() {
+                if let Some(q) = prev {
+                    assert!(
+                        q.total_cmp(&p).is_lt(),
+                        "points not strictly increasing: {q} then {p}"
+                    );
+                }
+                prev = Some(p);
+                mc = mc.max(b.seg_cpu[i]);
+                mm = mm.max(b.seg_mem[i]);
+            }
+            assert_eq!(mc.to_bits(), b.max_cpu.to_bits(), "stale cpu aggregate");
+            assert_eq!(mm.to_bits(), b.max_mem.to_bits(), "stale mem aggregate");
+        }
+        if let Some(b) = self.blocks.last() {
+            assert_eq!(*b.seg_cpu.last().unwrap(), 0.0, "final segment not idle");
+            assert_eq!(*b.seg_mem.last().unwrap(), 0.0, "final segment not idle");
+        }
+    }
+}
+
+pub mod flat {
+    //! The PR 4 sweep-line kernel, retained as an executable reference:
+    //! one flat sorted `Vec` of change-points with absolute per-segment
+    //! usage. Queries are O(log n + k), but every newly inserted
+    //! change-point pays an O(n) contiguous memmove, so a full
+    //! n-placement SGS pass is O(n²) — which is exactly why it was
+    //! superseded by the block-indexed [`Timeline`](super::Timeline).
+    //! Unlike the O(n³) rectangle list in [`reference`](super::reference)
+    //! (capped at `REF_MAX_TASKS` in the scaling bench), this kernel
+    //! scales far enough to cross-check bit-identical schedules at every
+    //! measured size up to 10⁵ tasks. It carries the same non-finite
+    //! guards as the production kernel so the two stay answer-identical
+    //! on every input. Never use this from production paths.
+
+    use crate::solver::rcpsp::{Problem, Reservation};
+    use crate::solver::schedule::Schedule;
+    use crate::solver::sgs::selection_order;
+
+    use super::{Mark, CAP_EPS};
+
+    /// One journaled placement of the flat kernel (physical segment
+    /// indices are stable here — no blocks shift underneath them).
+    #[derive(Debug, Clone, Copy)]
+    struct FlatJournalEntry {
+        lo: usize,
+        hi: usize,
+        ins_lo: bool,
+        ins_hi: bool,
+        saved_off: usize,
+    }
+
+    /// The flat capacity profile: sorted change-points with the absolute
+    /// (cpu, mem) usage of the constant segment starting at each point.
+    #[derive(Debug, Clone)]
+    pub struct FlatTimeline {
+        cap_cpu: f64,
+        cap_mem: f64,
+        points: Vec<f64>,
+        seg_cpu: Vec<f64>,
+        seg_mem: Vec<f64>,
+        journal: Vec<FlatJournalEntry>,
+        saved: Vec<(f64, f64)>,
+    }
+
+    impl FlatTimeline {
+        /// Empty timeline with the given capacity.
+        pub fn new(cap_cpu: f64, cap_mem: f64) -> Self {
+            FlatTimeline {
+                cap_cpu,
+                cap_mem,
+                points: Vec::new(),
+                seg_cpu: Vec::new(),
+                seg_mem: Vec::new(),
+                journal: Vec::new(),
+                saved: Vec::new(),
+            }
+        }
+
+        /// Timeline pre-seeded with occupancy reservations, mirroring
+        /// [`Timeline::seeded`](super::Timeline::seeded).
+        pub fn seeded(cap_cpu: f64, cap_mem: f64, reservations: &[Reservation]) -> Self {
+            let mut tl = FlatTimeline::new(cap_cpu, cap_mem);
+            for &(s, d, cpu, mem) in reservations {
+                tl.place(s, d, cpu, mem);
+            }
+            tl
+        }
+
+        fn ensure_point(&mut self, t: f64) -> (usize, bool) {
+            match self.points.binary_search_by(|p| p.total_cmp(&t)) {
+                Ok(i) => (i, false),
+                Err(i) => {
+                    let (c, m) = if i == 0 {
+                        (0.0, 0.0)
+                    } else {
+                        (self.seg_cpu[i - 1], self.seg_mem[i - 1])
+                    };
+                    self.points.insert(i, t);
+                    self.seg_cpu.insert(i, c);
+                    self.seg_mem.insert(i, m);
+                    (i, true)
+                }
+            }
+        }
+
+        /// Reserve a (cpu, mem) rectangle over `[s, s+d)`; non-positive
+        /// and NaN windows are journaled no-ops.
+        pub fn place(&mut self, s: f64, d: f64, cpu: f64, mem: f64) {
+            let e = s + d;
+            if e.partial_cmp(&s) != Some(std::cmp::Ordering::Greater) {
+                self.journal.push(FlatJournalEntry {
+                    lo: 0,
+                    hi: 0,
+                    ins_lo: false,
+                    ins_hi: false,
+                    saved_off: self.saved.len(),
+                });
+                return;
+            }
+            let (lo, ins_lo) = self.ensure_point(s);
+            let (hi, ins_hi) = self.ensure_point(e);
+            let saved_off = self.saved.len();
+            for i in lo..hi {
+                self.saved.push((self.seg_cpu[i], self.seg_mem[i]));
+                self.seg_cpu[i] += cpu;
+                self.seg_mem[i] += mem;
+            }
+            self.journal.push(FlatJournalEntry {
+                lo,
+                hi,
+                ins_lo,
+                ins_hi,
+                saved_off,
+            });
+        }
+
+        fn unplace(&mut self) {
+            let e = self
+                .journal
+                .pop()
+                .expect("rollback below the empty timeline");
+            for (k, i) in (e.lo..e.hi).enumerate() {
+                let (c, m) = self.saved[e.saved_off + k];
+                self.seg_cpu[i] = c;
+                self.seg_mem[i] = m;
+            }
+            self.saved.truncate(e.saved_off);
+            if e.ins_hi {
+                self.points.remove(e.hi);
+                self.seg_cpu.remove(e.hi);
+                self.seg_mem.remove(e.hi);
+            }
+            if e.ins_lo {
+                self.points.remove(e.lo);
+                self.seg_cpu.remove(e.lo);
+                self.seg_mem.remove(e.lo);
+            }
+        }
+
+        /// Take an epoch mark capturing the current set of placements.
+        pub fn checkpoint(&self) -> Mark {
+            self.journal.len()
+        }
+
+        /// Restore the timeline to the state captured by `mark` —
+        /// bit-exact, same LIFO contract as the production kernel.
+        pub fn rollback(&mut self, mark: Mark) {
+            assert!(
+                mark <= self.journal.len(),
+                "rollback to future mark {mark} (placed: {})",
+                self.journal.len()
+            );
+            while self.journal.len() > mark {
+                self.unplace();
+            }
+        }
+
+        /// Number of placements currently journaled.
+        pub fn len(&self) -> usize {
+            self.journal.len()
+        }
+
+        /// Whether nothing is placed.
+        pub fn is_empty(&self) -> bool {
+            self.journal.is_empty()
+        }
+
+        /// Earliest fit, mirroring
+        /// [`Timeline::earliest_fit`](super::Timeline::earliest_fit)
+        /// including its `None`-on-non-finite guard.
+        pub fn earliest_fit(&self, est: f64, d: f64, cpu: f64, mem: f64) -> Option<f64> {
+            if !est.is_finite() || !d.is_finite() || !cpu.is_finite() || !mem.is_finite() {
+                return None;
+            }
+            if cpu > self.cap_cpu + CAP_EPS || mem > self.cap_mem + CAP_EPS {
+                return None;
+            }
+            let n = self.points.len();
+            let mut t = est;
+            let first_after = self.points.partition_point(|p| p.total_cmp(&t).is_le());
+            let mut idx = first_after.saturating_sub(1);
+            while idx < n {
+                if self.points[idx] >= t + d {
+                    return Some(t);
+                }
+                let end = if idx + 1 < n {
+                    self.points[idx + 1]
+                } else {
+                    f64::INFINITY
+                };
+                if end > t
+                    && (self.seg_cpu[idx] + cpu > self.cap_cpu + CAP_EPS
+                        || self.seg_mem[idx] + mem > self.cap_mem + CAP_EPS)
+                {
+                    if idx + 1 >= n {
+                        return None;
+                    }
+                    t = end;
+                }
+                idx += 1;
+            }
+            Some(t)
+        }
+
+        /// Usage `(cpu, mem)` of the segment containing instant `t`.
+        pub fn usage_at(&self, t: f64) -> (f64, f64) {
+            let j = self.points.partition_point(|p| p.total_cmp(&t).is_le());
+            if j == 0 {
+                (0.0, 0.0)
+            } else {
+                (self.seg_cpu[j - 1], self.seg_mem[j - 1])
+            }
+        }
+
+        /// Maximum usage over `[t0, t1)`, `(0, 0)` on empty or
+        /// non-finite windows — mirroring the production kernel.
+        pub fn max_usage_in(&self, t0: f64, t1: f64) -> (f64, f64) {
+            let mut mc = 0.0f64;
+            let mut mm = 0.0f64;
+            if !t0.is_finite() || !t1.is_finite() || t1 <= t0 {
+                return (mc, mm);
+            }
+            let first_after = self.points.partition_point(|p| p.total_cmp(&t0).is_le());
+            for i in first_after.saturating_sub(1)..self.points.len() {
+                if self.points[i] >= t1 {
+                    break;
+                }
+                let end = if i + 1 < self.points.len() {
+                    self.points[i + 1]
+                } else {
+                    f64::INFINITY
+                };
+                if end > t0 {
+                    mc = mc.max(self.seg_cpu[i]);
+                    mm = mm.max(self.seg_mem[i]);
+                }
+            }
+            (mc, mm)
+        }
+
+        /// Every maximal constant-usage segment, in time order; the
+        /// final segment's end is `f64::INFINITY`.
+        pub fn segments(&self) -> impl Iterator<Item = (f64, f64, f64, f64)> + '_ {
+            let n = self.points.len();
+            (0..n).map(move |i| {
+                let end = if i + 1 < n {
+                    self.points[i + 1]
+                } else {
+                    f64::INFINITY
+                };
+                (self.points[i], end, self.seg_cpu[i], self.seg_mem[i])
+            })
+        }
+    }
+
+    /// The production serial SGS, verbatim, over [`FlatTimeline`] —
+    /// same occupancy seeding, same `selection_order`, so any schedule
+    /// difference against `sgs::serial_sgs` isolates a timeline-kernel
+    /// divergence. The assignment must draw from `Problem::feasible`.
+    pub fn serial_sgs_flat(p: &Problem, assignment: &[usize], prio: &[f64]) -> Schedule {
+        let n = p.len();
+        let order = selection_order(p, prio);
+        let mut start = vec![0.0f64; n];
+        let mut timeline = FlatTimeline::new(p.capacity.vcpus, p.capacity.memory_gb);
+        for &(s, d, cpu, mem) in &p.preplaced {
+            timeline.place(s, d, cpu, mem);
+        }
+        for &t in &order {
+            let est = p
+                .preds(t)
+                .iter()
+                .map(|&q| start[q] + p.duration(q, assignment[q]))
+                .fold(p.release[t], f64::max);
+            let d = p.duration(t, assignment[t]);
+            let (cpu, mem) = p.demand(assignment[t]);
+            let s = timeline
+                .earliest_fit(est, d, cpu, mem)
+                .expect("assignments must draw from Problem::feasible");
+            timeline.place(s, d, cpu, mem);
+            start[t] = s;
+        }
+        Schedule {
+            assignment: assignment.to_vec(),
+            start,
+            optimal: false,
+        }
     }
 }
 
@@ -377,10 +1023,12 @@ pub mod reference {
     //! The historical rectangle-list kernel, retained **verbatim** as the
     //! executable specification of [`Timeline`](super::Timeline): a flat
     //! list of placed rectangles, O(n²) feasibility queries, O(n³)
-    //! placement scans. Property tests (`timeline`, `sgs`) and the
-    //! `scaling_timeline` bench run it side by side with the production
-    //! kernel to pin bit-identical schedules and measure the speedup.
-    //! Never use this from production paths.
+    //! placement scans. Property tests (`timeline`, `sgs`, `invariants`)
+    //! and the `scaling_timeline` bench run it side by side with the
+    //! production kernel to pin bit-identical schedules and measure the
+    //! speedup — capped at `REF_MAX_TASKS` there, where the cheaper
+    //! [`flat`](super::flat) reference takes over. Never use this from
+    //! production paths.
 
     use crate::solver::rcpsp::Problem;
     use crate::solver::schedule::Schedule;
@@ -536,6 +1184,7 @@ pub mod reference {
 
 #[cfg(test)]
 mod tests {
+    use super::flat::FlatTimeline;
     use super::reference::RefTimeline;
     use super::*;
     use crate::util::{propcheck, Rng};
@@ -579,6 +1228,61 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_windows_are_rejected_not_nan() {
+        // The satellite bugfix: a NaN window used to sail through every
+        // sweep comparison and come back as Some(NaN); `place` then
+        // journaled the NaN rectangle as a silent no-op. All three
+        // non-finite classes must be refused outright, on both profile
+        // kernels.
+        let mut tl = Timeline::new(10.0, 100.0);
+        let mut fl = FlatTimeline::new(10.0, 100.0);
+        tl.place(0.0, 10.0, 4.0, 10.0);
+        fl.place(0.0, 10.0, 4.0, 10.0);
+        for (est, d, cpu, mem) in [
+            (f64::NAN, 5.0, 1.0, 1.0),
+            (0.0, f64::NAN, 1.0, 1.0),
+            (0.0, 5.0, f64::NAN, 1.0),
+            (0.0, 5.0, 1.0, f64::NAN),
+            (f64::INFINITY, 5.0, 1.0, 1.0),
+            (f64::NEG_INFINITY, 5.0, 1.0, 1.0),
+            (0.0, f64::INFINITY, 1.0, 1.0),
+            (0.0, 5.0, f64::INFINITY, 1.0),
+            (0.0, 5.0, 1.0, f64::NEG_INFINITY),
+        ] {
+            assert_eq!(
+                tl.earliest_fit(est, d, cpu, mem),
+                None,
+                "indexed kernel accepted non-finite window ({est}, {d}, {cpu}, {mem})"
+            );
+            assert_eq!(
+                fl.earliest_fit(est, d, cpu, mem),
+                None,
+                "flat kernel accepted non-finite window ({est}, {d}, {cpu}, {mem})"
+            );
+        }
+        // max_usage_in: explicitly (0, 0) on non-finite bounds.
+        for (t0, t1) in [
+            (f64::NAN, 5.0),
+            (0.0, f64::NAN),
+            (f64::NEG_INFINITY, f64::INFINITY),
+            (0.0, f64::INFINITY),
+        ] {
+            assert_eq!(tl.max_usage_in(t0, t1), (0.0, 0.0));
+            assert_eq!(fl.max_usage_in(t0, t1), (0.0, 0.0));
+            assert_eq!(tl.area_in(t0, t1), (0.0, 0.0));
+        }
+        // A NaN place stays a journaled no-op and unwinds cleanly.
+        let mark = tl.checkpoint();
+        tl.place(f64::NAN, 5.0, 3.0, 3.0);
+        tl.place(1.0, f64::NAN, 3.0, 3.0);
+        assert_eq!(tl.len(), mark + 2);
+        assert_eq!(tl.usage_at(1.0), (4.0, 10.0));
+        tl.rollback(mark);
+        assert_eq!(tl.usage_at(1.0), (4.0, 10.0));
+        tl.assert_invariants();
+    }
+
+    #[test]
     fn checkpoint_rollback_restores_exactly() {
         let mut tl = Timeline::new(10.0, 100.0);
         tl.place(0.0, 10.0, 4.0, 10.0);
@@ -596,6 +1300,7 @@ mod tests {
             assert_eq!(b.2.to_bits(), a.2.to_bits());
             assert_eq!(b.3.to_bits(), a.3.to_bits());
         }
+        tl.assert_invariants();
     }
 
     #[test]
@@ -613,6 +1318,7 @@ mod tests {
         tl.rollback(m0);
         assert!(tl.is_empty());
         assert_eq!(tl.segments().count(), 0);
+        assert_eq!(tl.block_count(), 0);
     }
 
     #[test]
@@ -638,7 +1344,7 @@ mod tests {
         // A zero-length window occupies nothing, but both kernels treat
         // it as a point probe: inside a saturated segment it defers to
         // the segment end, in free space it returns est. Pinned here so
-        // the edge cannot drift silently between the two kernels.
+        // the edge cannot drift silently between the kernels.
         let mut tl = Timeline::new(10.0, 100.0);
         let mut rf = RefTimeline::new(10.0, 100.0);
         tl.place(5.0, 10.0, 8.0, 10.0);
@@ -710,10 +1416,12 @@ mod tests {
         );
     }
 
-    /// Drive the production and reference kernels through an identical
-    /// random op sequence, cross-checking occupancy (against a
-    /// brute-force per-event-point recomputation) and every
-    /// `earliest_fit` answer, with reservations, floored queries, and
+    /// Drive the indexed, flat, and rectangle-list kernels through an
+    /// identical random op sequence — the three-way differential of the
+    /// satellite task — cross-checking occupancy (against a brute-force
+    /// per-event-point recomputation) and every `earliest_fit` answer,
+    /// with reservations, floored queries, zero-duration placements,
+    /// demands at capacity within the 1e-6 slack, and
     /// checkpoint/rollback interleavings.
     #[test]
     fn property_fuzz_against_reference_and_brute_force() {
@@ -734,24 +1442,30 @@ mod tests {
                 })
                 .collect();
             let mut tl = Timeline::seeded(cap_cpu, cap_mem, &reservations);
+            let mut fl = FlatTimeline::seeded(cap_cpu, cap_mem, &reservations);
             let mut rf = RefTimeline::new(cap_cpu, cap_mem);
             for &(s, d, cpu, mem) in &reservations {
                 rf.place(s, d, cpu, mem);
             }
-            // Rectangles mirrored into both kernels, for brute-force
+            // Rectangles mirrored into all kernels, for brute-force
             // usage recomputation and LIFO undo.
             let mut rects: Vec<Reservation> = reservations.clone();
             let mut marks: Vec<(Mark, usize)> = Vec::new();
 
             for step in 0..60 {
-                match rng.below(10) {
-                    // place
+                match rng.below(12) {
+                    // place (occasionally zero-duration)
                     0..=4 => {
                         let s = rng.uniform(0.0, 200.0);
-                        let d = rng.uniform(0.5, 60.0);
+                        let d = if rng.chance(0.1) {
+                            0.0
+                        } else {
+                            rng.uniform(0.5, 60.0)
+                        };
                         let cpu = cap_cpu * rng.uniform(0.05, 0.8);
                         let mem = cap_mem * rng.uniform(0.05, 0.8);
                         tl.place(s, d, cpu, mem);
+                        fl.place(s, d, cpu, mem);
                         rf.place(s, d, cpu, mem);
                         rects.push((s, d, cpu, mem));
                     }
@@ -761,8 +1475,31 @@ mod tests {
                     6 => {
                         if let Some((mark, kept)) = marks.pop() {
                             tl.rollback(mark);
+                            fl.rollback(mark);
                             rf.truncate(mark);
                             rects.truncate(kept);
+                        }
+                    }
+                    // demand at the residual-capacity boundary, within
+                    // the 1e-6 slack — all three kernels must agree on
+                    // whether it fits at est
+                    7 => {
+                        let t = rng.uniform(0.0, 200.0);
+                        let (uc, um) = tl.usage_at(t);
+                        let cpu = (cap_cpu - uc + rng.uniform(-1e-7, 5e-7)).max(0.0);
+                        let mem = (cap_mem - um).max(0.0) * rng.uniform(0.1, 0.9);
+                        let got = tl.earliest_fit(t, 0.5, cpu, mem);
+                        let flat = fl.earliest_fit(t, 0.5, cpu, mem);
+                        if got.map(f64::to_bits) != flat.map(f64::to_bits) {
+                            return Err(format!(
+                                "step {step}: slack-boundary fit {got:?} != flat {flat:?}"
+                            ));
+                        }
+                        let want = rf.earliest_fit(t, 0.5, cpu, mem);
+                        if got.map(f64::to_bits) != Some(want.to_bits()) {
+                            return Err(format!(
+                                "step {step}: slack-boundary fit {got:?} != ref {want}"
+                            ));
                         }
                     }
                     // earliest_fit cross-check (random admission floor)
@@ -772,6 +1509,12 @@ mod tests {
                         let cpu = cap_cpu * rng.uniform(0.05, 0.95);
                         let mem = cap_mem * rng.uniform(0.05, 0.95);
                         let got = tl.earliest_fit(est, d, cpu, mem);
+                        let flat = fl.earliest_fit(est, d, cpu, mem);
+                        if got.map(f64::to_bits) != flat.map(f64::to_bits) {
+                            return Err(format!(
+                                "step {step}: earliest_fit {got:?} != flat {flat:?}"
+                            ));
+                        }
                         let want = rf.earliest_fit(est, d, cpu, mem);
                         match got {
                             None => {
@@ -787,6 +1530,27 @@ mod tests {
                                 }
                             }
                         }
+                    }
+                }
+                tl.assert_invariants();
+
+                // The two profile kernels must agree segment-for-segment,
+                // bit for bit, after every op.
+                let a: Vec<_> = tl.segments().collect();
+                let b: Vec<_> = fl.segments().collect();
+                if a.len() != b.len() {
+                    return Err(format!(
+                        "step {step}: segment counts diverge: {} vs flat {}",
+                        a.len(),
+                        b.len()
+                    ));
+                }
+                for (x, y) in a.iter().zip(b.iter()) {
+                    if x.0.to_bits() != y.0.to_bits()
+                        || x.2.to_bits() != y.2.to_bits()
+                        || x.3.to_bits() != y.3.to_bits()
+                    {
+                        return Err(format!("step {step}: segments diverge: {x:?} vs {y:?}"));
                     }
                 }
 
@@ -828,7 +1592,8 @@ mod tests {
 
     /// After an arbitrary place/rollback history, the profile must be
     /// byte-identical to one freshly built from the surviving rectangles
-    /// — the no-rounding-drift guarantee of the undo journal.
+    /// — the no-rounding-drift guarantee of the undo journal, now also
+    /// covering block splits and the aggregate recomputation on undo.
     #[test]
     fn property_rollback_leaves_no_float_drift() {
         propcheck::check(30, |rng| {
@@ -853,6 +1618,7 @@ mod tests {
                     tl.place(r.0, r.1, r.2, r.3);
                     rects.push(r);
                 }
+                tl.assert_invariants();
             }
             let fresh = Timeline::seeded(tl.cap_cpu(), tl.cap_mem(), &rects);
             let a: Vec<_> = tl.segments().collect();
@@ -872,6 +1638,61 @@ mod tests {
         });
     }
 
+    /// Push the profile far past `BLOCK_CAP` so splits actually happen,
+    /// then cross-check fits, window maxima, and a deep rollback against
+    /// the flat kernel — the regime the unit tests above never reach.
+    #[test]
+    fn block_splits_preserve_flat_equivalence_at_scale() {
+        let cap_cpu = 64.0;
+        let cap_mem = 256.0;
+        let mut rng = Rng::new(0xB10C);
+        let mut tl = Timeline::new(cap_cpu, cap_mem);
+        let mut fl = FlatTimeline::new(cap_cpu, cap_mem);
+        let mark = (tl.checkpoint(), fl.checkpoint());
+        for i in 0..2000 {
+            let s = rng.uniform(0.0, 5000.0);
+            let d = rng.uniform(0.5, 20.0);
+            let cpu = cap_cpu * rng.uniform(0.02, 0.3);
+            let mem = cap_mem * rng.uniform(0.02, 0.3);
+            tl.place(s, d, cpu, mem);
+            fl.place(s, d, cpu, mem);
+            if i % 251 == 0 {
+                tl.assert_invariants();
+            }
+        }
+        assert!(
+            tl.block_count() > 4,
+            "2000 placements must span multiple blocks, got {}",
+            tl.block_count()
+        );
+        for _ in 0..500 {
+            let est = rng.uniform(-10.0, 5500.0);
+            let d = rng.uniform(0.5, 50.0);
+            let cpu = cap_cpu * rng.uniform(0.05, 0.95);
+            let mem = cap_mem * rng.uniform(0.05, 0.95);
+            let got = tl.earliest_fit(est, d, cpu, mem);
+            let want = fl.earliest_fit(est, d, cpu, mem);
+            assert_eq!(
+                got.map(f64::to_bits),
+                want.map(f64::to_bits),
+                "fit diverges at est {est} d {d}: {got:?} vs flat {want:?}"
+            );
+            let t1 = est + rng.uniform(0.0, 100.0);
+            let (ac, am) = tl.max_usage_in(est, t1);
+            let (bc, bm) = fl.max_usage_in(est, t1);
+            assert_eq!(ac.to_bits(), bc.to_bits(), "max cpu diverges in [{est}, {t1})");
+            assert_eq!(am.to_bits(), bm.to_bits(), "max mem diverges in [{est}, {t1})");
+        }
+        // Deep rollback across hundreds of splits must land both kernels
+        // on the same (empty) profile.
+        tl.rollback(mark.0);
+        fl.rollback(mark.1);
+        tl.assert_invariants();
+        assert_eq!(tl.segments().count(), 0);
+        assert_eq!(fl.segments().count(), 0);
+        assert_eq!(tl.block_count(), 0);
+    }
+
     #[test]
     fn max_usage_in_windows() {
         let mut tl = Timeline::new(100.0, 100.0);
@@ -884,5 +1705,70 @@ mod tests {
         assert_eq!(tl.max_usage_in(5.0, 5.0), (0.0, 0.0));
         // window straddling only the tail of the first task
         assert_eq!(tl.max_usage_in(9.0, 10.0), (10.0, 9.0));
+    }
+
+    #[test]
+    fn area_in_integrates_the_occupied_rectangles() {
+        let mut tl = Timeline::new(100.0, 100.0);
+        tl.place(0.0, 10.0, 4.0, 8.0);
+        tl.place(5.0, 10.0, 6.0, 1.0);
+        // Full horizon: 4*10 + 6*10 cpu-seconds, 8*10 + 1*10 mem.
+        let (ac, am) = tl.area_in(0.0, 20.0);
+        assert!((ac - 100.0).abs() < 1e-9, "cpu area {ac}");
+        assert!((am - 90.0).abs() < 1e-9, "mem area {am}");
+        // Clipped window [2, 7): 4*5 from the first + 6*2 from the second.
+        let (ac, am) = tl.area_in(2.0, 7.0);
+        assert!((ac - 32.0).abs() < 1e-9, "clipped cpu area {ac}");
+        assert!((am - 42.0).abs() < 1e-9, "clipped mem area {am}");
+        // Empty and inverted windows.
+        assert_eq!(tl.area_in(3.0, 3.0), (0.0, 0.0));
+        assert_eq!(tl.area_in(7.0, 3.0), (0.0, 0.0));
+        // Past every placement.
+        assert_eq!(tl.area_in(50.0, 60.0), (0.0, 0.0));
+    }
+
+    /// `area_in` against a brute-force per-rectangle overlap integral,
+    /// over random profiles (tolerance-based: segment sums and rectangle
+    /// sums associate differently).
+    #[test]
+    fn property_area_matches_rectangle_overlap() {
+        propcheck::check(30, |rng| {
+            let cap_cpu = 64.0;
+            let cap_mem = 256.0;
+            let mut tl = Timeline::new(cap_cpu, cap_mem);
+            let mut rects: Vec<Reservation> = Vec::new();
+            for _ in 0..rng.below(40) {
+                let r = (
+                    rng.uniform(0.0, 300.0),
+                    rng.uniform(0.5, 40.0),
+                    rng.uniform(0.5, 20.0),
+                    rng.uniform(0.5, 60.0),
+                );
+                tl.place(r.0, r.1, r.2, r.3);
+                rects.push(r);
+            }
+            for _ in 0..20 {
+                let t0 = rng.uniform(-20.0, 350.0);
+                let t1 = t0 + rng.uniform(0.0, 120.0);
+                let (ac, am) = tl.area_in(t0, t1);
+                let mut bc = 0.0;
+                let mut bm = 0.0;
+                for &(s, d, cpu, mem) in &rects {
+                    let overlap = (s + d).min(t1) - s.max(t0);
+                    if overlap > 0.0 {
+                        bc += cpu * overlap;
+                        bm += mem * overlap;
+                    }
+                }
+                if (ac - bc).abs() > 1e-6 * (1.0 + bc.abs())
+                    || (am - bm).abs() > 1e-6 * (1.0 + bm.abs())
+                {
+                    return Err(format!(
+                        "area in [{t0}, {t1}) = ({ac}, {am}), brute force ({bc}, {bm})"
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -93,6 +93,53 @@ fn all_schedulers_valid_on_arbitrary_dags() {
 }
 
 #[test]
+fn timeline_kernels_agree_bit_for_bit_at_the_scheduler_level() {
+    // Three-way differential across the kernel generations — the
+    // block-indexed production `Timeline`, the retained flat sweep-line
+    // (`timeline::flat`), and the historical rectangle list
+    // (`timeline::reference`) — at the *scheduler* level: every priority
+    // rule, random assignments, and a coin-flip occupancy seed so the
+    // kernels must also agree when packing around reservations.
+    use agora::solver::sgs::{self, Rule};
+    use agora::solver::timeline::{flat, reference};
+    propcheck::check(15, |rng| {
+        let dag = arbitrary_dag(rng, 14);
+        let mut p = oracle_problem(vec![dag], Capacity::micro());
+        if rng.chance(0.5) {
+            let cap = p.capacity;
+            let s0 = rng.uniform(0.0, 500.0);
+            let d0 = rng.uniform(1.0, 400.0);
+            // Half-memory blocker: contends without making anything
+            // infeasible, so all three kernels must thread through it.
+            p = p.with_occupancy(vec![(s0, d0, cap.vcpus * 0.5, cap.memory_gb * 0.5)], 0.0);
+        }
+        let assignment: Vec<usize> = (0..p.len())
+            .map(|_| p.feasible[rng.below(p.feasible.len())])
+            .collect();
+        let mut rules: Vec<Rule> = sgs::ALL_RULES.to_vec();
+        rules.truncate(3); // 3 rules x 15 reps keeps the O(n³) reference affordable
+        for rule in rules {
+            let prio = sgs::priorities(&p, &assignment, rule);
+            let idx = sgs::serial_sgs(&p, &assignment, &prio).map_err(|e| e.to_string())?;
+            let fl = flat::serial_sgs_flat(&p, &assignment, &prio);
+            let rf = reference::serial_sgs_ref(&p, &assignment, &prio);
+            idx.validate(&p).map_err(|e| e.to_string())?;
+            for t in 0..p.len() {
+                if idx.start[t].to_bits() != fl.start[t].to_bits()
+                    || idx.start[t].to_bits() != rf.start[t].to_bits()
+                {
+                    return Err(format!(
+                        "{rule:?}: kernel divergence at task {t}: indexed {} flat {} rect {}",
+                        idx.start[t], fl.start[t], rf.start[t]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn cooptimizer_schedules_valid_and_never_worse_than_baseline() {
     propcheck::check(8, |rng| {
         let dag = arbitrary_dag(rng, 10);
