@@ -1,0 +1,269 @@
+//! CEDCES-style evolutionary deadline-constrained scheduler — the
+//! cost-effective deadline-aware evolutionary baseline the Fig. 13
+//! comparison pits against AGORA's simulated annealing under an equal
+//! evaluation budget.
+//!
+//! A genome is a per-task configuration assignment; decoding runs the
+//! same critical-path serial SGS every other scheduler uses, so fitness
+//! is measured on exactly feasible schedules. Fitness is realized
+//! dollar cost plus a deadline-violation penalty (hard SLAs use a large
+//! constant per violated DAG on top of the linear overshoot term, so
+//! any deadline-feasible genome dominates every infeasible one). A
+//! CEDCES-style repair operator upgrades random tasks of a violating
+//! DAG to their fastest configuration before evaluation.
+
+use anyhow::Result;
+
+use super::Scheduler;
+use crate::solver::sgs::{priorities, serial_sgs, Rule};
+use crate::solver::{Problem, Schedule};
+use crate::util::Rng;
+
+/// Large per-DAG fitness penalty for a violated hard deadline; dwarfs
+/// any realistic dollar cost so evolution always prefers feasibility.
+const HARD_VIOLATION_PENALTY: f64 = 1e6;
+
+/// Deadline-aware evolutionary (genetic) scheduler.
+#[derive(Debug, Clone)]
+pub struct EvolutionaryScheduler {
+    /// Genomes per generation.
+    pub population: usize,
+    /// Generations evolved after the seeded initial population.
+    pub generations: usize,
+    /// Per-gene mutation probability.
+    pub mutation: f64,
+    /// Repair attempts per violating DAG per evaluation.
+    pub repairs: usize,
+    /// RNG seed — the search is fully deterministic given the problem.
+    pub seed: u64,
+}
+
+impl Default for EvolutionaryScheduler {
+    fn default() -> Self {
+        EvolutionaryScheduler {
+            population: 16,
+            generations: 24,
+            mutation: 0.15,
+            repairs: 4,
+            seed: 0xCEDCE5,
+        }
+    }
+}
+
+impl EvolutionaryScheduler {
+    /// Size the search to an evaluation budget comparable to an SA run
+    /// of `evals` energy evaluations (population x (generations + 1)
+    /// schedule decodings).
+    pub fn with_budget(evals: usize) -> Self {
+        let base = EvolutionaryScheduler::default();
+        EvolutionaryScheduler {
+            generations: (evals / base.population).saturating_sub(1).max(1),
+            ..base
+        }
+    }
+
+    /// Total schedule evaluations this configuration spends.
+    pub fn evals(&self) -> usize {
+        self.population * (self.generations + 1)
+    }
+
+    /// Decode a genome with the shared critical-path serial SGS.
+    fn decode(p: &Problem, genome: &[usize]) -> Result<Schedule> {
+        let prio = priorities(p, genome, Rule::CriticalPath);
+        serial_sgs(p, genome, &prio)
+    }
+
+    /// Fitness: cost plus deadline penalties (lower is better).
+    fn fitness(p: &Problem, s: &Schedule) -> f64 {
+        let mut f = s.cost(p);
+        for (d, sla) in p.slas.iter().enumerate() {
+            if sla.is_unbounded() {
+                continue;
+            }
+            let end = s.dag_completion(p, d);
+            if end > sla.deadline {
+                f += (end - sla.deadline) * sla.penalty_per_sec;
+                if sla.hard {
+                    f += HARD_VIOLATION_PENALTY + (end - sla.deadline);
+                }
+            }
+        }
+        f
+    }
+
+    /// CEDCES repair: upgrade random tasks of deadline-violating DAGs
+    /// to their fastest feasible configuration.
+    fn repair(&self, p: &Problem, genome: &mut [usize], rng: &mut Rng) -> Result<()> {
+        for _ in 0..self.repairs {
+            let s = Self::decode(p, genome)?;
+            let violating: Vec<usize> = p
+                .slas
+                .iter()
+                .enumerate()
+                .filter(|(d, sla)| !sla.is_unbounded() && s.dag_completion(p, *d) > sla.deadline)
+                .map(|(d, _)| d)
+                .collect();
+            if violating.is_empty() {
+                return Ok(());
+            }
+            for d in violating {
+                let tasks: Vec<usize> = (0..p.len()).filter(|&t| p.tasks[t].dag == d).collect();
+                let t = *rng.choice(&tasks);
+                if let Some(&fast) = p
+                    .feasible
+                    .iter()
+                    .min_by(|&&a, &&b| p.duration(t, a).total_cmp(&p.duration(t, b)))
+                {
+                    genome[t] = fast;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Scheduler for EvolutionaryScheduler {
+    fn name(&self) -> &'static str {
+        "cedces-ga"
+    }
+
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
+        let n = p.len();
+        let mut rng = Rng::new(self.seed);
+        let pop_size = self.population.max(2);
+
+        // Seeded initial population: all-cheapest, all-fastest, then
+        // uniform random genomes over the feasible configurations.
+        let cheapest: Vec<usize> = (0..n)
+            .map(|t| {
+                *p.feasible
+                    .iter()
+                    .min_by(|&&a, &&b| p.cost(t, a).total_cmp(&p.cost(t, b)))
+                    .expect("non-empty feasible set")
+            })
+            .collect();
+        let fastest: Vec<usize> = (0..n)
+            .map(|t| {
+                *p.feasible
+                    .iter()
+                    .min_by(|&&a, &&b| p.duration(t, a).total_cmp(&p.duration(t, b)))
+                    .expect("non-empty feasible set")
+            })
+            .collect();
+        let mut population: Vec<Vec<usize>> = vec![cheapest, fastest];
+        while population.len() < pop_size {
+            population.push((0..n).map(|_| *rng.choice(&p.feasible)).collect());
+        }
+
+        let mut scored: Vec<(f64, Vec<usize>)> = Vec::with_capacity(pop_size);
+        for mut genome in population {
+            self.repair(p, &mut genome, &mut rng)?;
+            let s = Self::decode(p, &genome)?;
+            scored.push((Self::fitness(p, &s), genome));
+        }
+        scored.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        for _ in 0..self.generations {
+            let mut next: Vec<(f64, Vec<usize>)> = Vec::with_capacity(pop_size);
+            // Elitism: the incumbent survives unchanged.
+            next.push(scored[0].clone());
+            while next.len() < pop_size {
+                // Binary-tournament parents.
+                let pick = |rng: &mut Rng| {
+                    let a = rng.below(scored.len());
+                    let b = rng.below(scored.len());
+                    a.min(b) // scored is sorted: lower index = fitter
+                };
+                let pa = &scored[pick(&mut rng)].1;
+                let pb = &scored[pick(&mut rng)].1;
+                // Uniform crossover + per-gene mutation.
+                let mut child: Vec<usize> = (0..n)
+                    .map(|t| if rng.chance(0.5) { pa[t] } else { pb[t] })
+                    .collect();
+                for gene in child.iter_mut() {
+                    if rng.chance(self.mutation) {
+                        *gene = *rng.choice(&p.feasible);
+                    }
+                }
+                self.repair(p, &mut child, &mut rng)?;
+                let s = Self::decode(p, &child)?;
+                next.push((Self::fitness(p, &s), child));
+            }
+            next.sort_by(|a, b| a.0.total_cmp(&b.0));
+            scored = next;
+        }
+
+        Self::decode(p, &scored[0].1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::solver::Sla;
+    use crate::Predictor;
+
+    fn problem(dags: Vec<crate::Dag>) -> Problem {
+        let releases = vec![0.0; dags.len()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags
+            .iter()
+            .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+            .collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &dags,
+            &releases,
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn produces_valid_schedules_and_is_deterministic() {
+        let p = problem(vec![dag1(), dag2()]);
+        let ga = EvolutionaryScheduler {
+            population: 8,
+            generations: 4,
+            ..Default::default()
+        };
+        let a = ga.schedule(&p).unwrap();
+        let b = ga.schedule(&p).unwrap();
+        a.validate(&p).unwrap();
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(
+            a.makespan(&p).to_bits(),
+            b.makespan(&p).to_bits(),
+            "same seed, same problem, same schedule"
+        );
+    }
+
+    #[test]
+    fn meets_a_loose_hard_deadline_when_one_exists() {
+        let p = problem(vec![dag1()]);
+        // A deadline 3x the completion lower bound is easily meetable.
+        let lb = p.dag_lower_bounds()[0];
+        let p = p.with_slas(vec![Sla::hard(3.0 * lb)]);
+        let ga = EvolutionaryScheduler {
+            population: 8,
+            generations: 6,
+            ..Default::default()
+        };
+        let s = ga.schedule(&p).unwrap();
+        s.validate(&p).unwrap();
+        assert!(s.dag_completion(&p, 0) <= 3.0 * lb + 1e-9);
+    }
+
+    #[test]
+    fn budget_sizing_matches_requested_evals() {
+        let ga = EvolutionaryScheduler::with_budget(400);
+        assert_eq!(ga.population, 16);
+        assert_eq!(ga.generations, 24);
+        assert_eq!(ga.evals(), 400);
+    }
+}

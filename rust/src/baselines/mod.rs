@@ -9,6 +9,7 @@
 pub mod airflow;
 pub mod critical_path;
 pub mod ernest;
+pub mod evolutionary;
 pub mod milp;
 pub mod stratus;
 
@@ -33,6 +34,7 @@ pub trait Scheduler {
 pub use airflow::AirflowScheduler;
 pub use critical_path::CriticalPathScheduler;
 pub use ernest::{ernest_selection, ErnestGoal};
+pub use evolutionary::EvolutionaryScheduler;
 pub use milp::MilpScheduler;
 pub use stratus::StratusScheduler;
 
@@ -72,6 +74,11 @@ mod tests {
             Box::new(CriticalPathScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
             Box::new(MilpScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
             Box::new(StratusScheduler::default()),
+            Box::new(EvolutionaryScheduler {
+                population: 6,
+                generations: 3,
+                ..Default::default()
+            }),
         ];
         for b in baselines {
             let s = b.schedule(&p).with_context(|| b.name().to_string())?;

@@ -9,7 +9,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
-use crate::coordinator::Admission;
+use crate::coordinator::{Admission, SlaPolicy};
 use crate::sim::{CapacityOutage, ReplanPolicy};
 use crate::solver::anneal::AnnealParams;
 use crate::solver::{Goal, Mode};
@@ -56,6 +56,15 @@ pub struct AppConfig {
     /// ([`ConfigSpace::market`]: m5/c5/r5 x on-demand/spot) instead of
     /// the historical m5-only space, priced by [`CostModel::Market`].
     pub market: bool,
+    /// Per-DAG deadline slack for `trace`/`serve` as a multiple of each
+    /// DAG's critical-path completion lower bound (0 = SLAs off). When
+    /// armed, the coordinator attaches deadlines and admission control
+    /// rejects or defers DAGs that provably cannot meet them.
+    pub deadline_frac: f64,
+    /// Soft-SLA penalty in dollars per second past a missed deadline.
+    /// `0` keeps deadlines hard (admission-enforced); `> 0` switches to
+    /// soft SLAs that are accounted as `penalty_cost` instead.
+    pub sla_penalty: f64,
     /// Optimization worker threads for `serve` (1 = the deterministic
     /// legacy serial stream).
     pub workers: usize,
@@ -85,6 +94,8 @@ impl Default for AppConfig {
             admission: Admission::Rounds,
             trace_large: 0,
             market: false,
+            deadline_frac: 0.0,
+            sla_penalty: 0.0,
             workers: 1,
             queue_bound: 0,
             status_interval_ms: 0,
@@ -97,7 +108,7 @@ impl AppConfig {
     /// Flags understood by the launcher (also used for usage output).
     pub const FLAGS: &'static [(&'static str, &'static str)] = &[
         ("config", "JSON config file"),
-        ("goal", "cost | balanced | runtime | w=<0..1>"),
+        ("goal", "cost | balanced | runtime | deadline-cost | w=<0..1>"),
         ("mode", "agora | predictor-only | scheduler-only | agora-separate"),
         ("seed", "RNG seed (u64)"),
         ("vcpus", "cluster vCPU capacity"),
@@ -114,6 +125,8 @@ impl AppConfig {
         ("status-interval", "serve: status ticker period in ms (0 = off)"),
         ("trace-large", "append N ~1000-task large-scale DAGs to the trace workload"),
         ("market", "search the heterogeneous instance market (m5/c5/r5 + spot)"),
+        ("deadline-frac", "per-DAG deadline as a multiple of its critical-path bound (0 = off)"),
+        ("sla-penalty", "soft-SLA dollars per second past the deadline (0 = hard SLAs)"),
         ("spot-rate", "expected spot interruptions per node-hour (0 = reliable spot)"),
         ("spot-max", "realized preemptions per task before fallback (planner always prices 2)"),
         ("replan-max", "max mid-flight suffix replans per execution (0 = off)"),
@@ -174,6 +187,12 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("market") {
             c.market = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("deadline_frac") {
+            c.deadline_frac = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("sla_penalty") {
+            c.sla_penalty = x.as_f64()?;
         }
         if let Some(x) = v.opt("workers") {
             c.workers = x.as_usize()?.max(1);
@@ -257,6 +276,8 @@ impl AppConfig {
         }
         self.trace_large = args.usize_or("trace-large", self.trace_large)?;
         self.market = args.bool_or("market", self.market)?;
+        self.deadline_frac = args.f64_or("deadline-frac", self.deadline_frac)?;
+        self.sla_penalty = args.f64_or("sla-penalty", self.sla_penalty)?;
         self.workers = args.usize_or("workers", self.workers)?.max(1);
         self.queue_bound = args.usize_or("queue-bound", self.queue_bound)?;
         self.status_interval_ms = args.u64_or("status-interval", self.status_interval_ms)?;
@@ -316,6 +337,19 @@ impl AppConfig {
             ConfigSpace::market()
         } else {
             ConfigSpace::standard()
+        }
+    }
+
+    /// The deadline/SLA policy of this run: off until `--deadline-frac`
+    /// arms it; `--sla-penalty > 0` switches from hard (admission
+    /// rejects/defers) to soft (misses accounted as `penalty_cost`)
+    /// deadlines.
+    pub fn sla(&self) -> SlaPolicy {
+        SlaPolicy {
+            deadline_frac: self.deadline_frac,
+            penalty_per_sec: self.sla_penalty,
+            hard: self.sla_penalty == 0.0,
+            enforce: true,
         }
     }
 
@@ -584,6 +618,49 @@ mod tests {
         let c = base.apply_args(&args(&["serve", "--queue-bound", "4"])).unwrap();
         assert_eq!(c.queue_bound, 4);
         assert_eq!(c.workers, 2);
+    }
+
+    #[test]
+    fn deadline_flags_parse_from_cli_and_json() {
+        // Default: SLAs fully off.
+        let c = AppConfig::default();
+        assert_eq!(c.deadline_frac, 0.0);
+        assert_eq!(c.sla_penalty, 0.0);
+        assert!(c.sla().is_off());
+
+        // deadline-frac alone arms hard SLAs.
+        let c = AppConfig::resolve(&args(&["trace", "--deadline-frac", "1.5"])).unwrap();
+        assert_eq!(c.deadline_frac, 1.5);
+        let sla = c.sla();
+        assert!(!sla.is_off());
+        assert!(sla.hard && sla.enforce);
+
+        // A penalty rate switches to soft SLAs.
+        let c = AppConfig::resolve(&args(&[
+            "trace",
+            "--deadline-frac",
+            "2.0",
+            "--sla-penalty",
+            "0.01",
+        ]))
+        .unwrap();
+        let sla = c.sla();
+        assert!(!sla.hard);
+        assert_eq!(sla.penalty_per_sec, 0.01);
+
+        // JSON path + CLI override; deadline-cost goal spelling parses.
+        let v = Json::parse(r#"{"deadline_frac": 1.2, "sla_penalty": 0.5,
+                                "goal": "deadline-cost"}"#)
+            .unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        assert_eq!(base.deadline_frac, 1.2);
+        assert_eq!(base.sla_penalty, 0.5);
+        assert_eq!(base.goal, Goal::DeadlineCost);
+        let c = base
+            .apply_args(&args(&["trace", "--deadline-frac", "3.0"]))
+            .unwrap();
+        assert_eq!(c.deadline_frac, 3.0);
+        assert_eq!(c.sla_penalty, 0.5);
     }
 
     #[test]

@@ -21,12 +21,12 @@
 //!   accounted at true finish times in absolute virtual time, so rounds
 //!   overlap instead of queueing.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use super::round::{busy_core_seconds, preemption_count, RoundEngine};
+use super::round::{busy_core_seconds, preemption_count, RoundEngine, RoundOutcome};
 use super::{Admission, OccupancyLedger, TriggerPolicy};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
@@ -34,7 +34,7 @@ use crate::dag::Dag;
 use crate::predictor::default_profiling_configs;
 use crate::predictor::EventLog;
 use crate::sim::{self, ReplanPolicy};
-use crate::solver::{Agora, Goal, Mode, Problem};
+use crate::solver::{Agora, Goal, Mode, Problem, Reservation, Schedule, Sla};
 use crate::trace::TracedJob;
 use crate::util::{stats, Rng};
 
@@ -56,6 +56,69 @@ impl Strategy {
             Strategy::Airflow => "airflow".into(),
             Strategy::Agora(g) => format!("agora[{}]", g.name()),
             Strategy::AgoraMode(g, m) => format!("{}[{}]", m.name(), g.name()),
+        }
+    }
+}
+
+/// Per-DAG SLA attachment + admission policy for macro runs.
+///
+/// Each DAG's deadline is fixed at its **first admission evaluation**:
+/// `origin + deadline_frac * cp_lb(dag)`, where `cp_lb` is the DAG's
+/// critical-path completion lower bound under best-case durations
+/// ([`Problem::dag_lower_bounds`]) and `origin` the round's admission
+/// instant — the SLA clock starts when the coordinator first considers
+/// the DAG, so trigger-batching delay does not eat the budget. The
+/// deadline is remembered across deferrals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlaPolicy {
+    /// Deadline slack as a multiple of the DAG's critical-path lower
+    /// bound (>= 1 is meetable in principle). `<= 0` disables SLAs
+    /// entirely — the runner is then bit-identical to the SLA-free one.
+    pub deadline_frac: f64,
+    /// Dollars accrued per second past a missed deadline (soft
+    /// accounting; reported as [`MacroReport::penalty_cost`]).
+    pub penalty_per_sec: f64,
+    /// Hard SLAs: admission rejects provably-infeasible DAGs (completion
+    /// lower bound past the deadline), defers DAGs whose *planned*
+    /// completion misses (once — a second miss rejects), and the
+    /// attached [`Sla::hard`] arms deadline budgets in the solver.
+    pub hard: bool,
+    /// Enforce admission control. When false the runner only *accounts*
+    /// SLA outcomes (`sla_met`/`sla_missed`/`penalty_cost`) — the
+    /// SLA-blind baseline the fig13 bench compares against.
+    pub enforce: bool,
+}
+
+impl Default for SlaPolicy {
+    fn default() -> Self {
+        SlaPolicy::off()
+    }
+}
+
+impl SlaPolicy {
+    /// SLAs disabled: no deadlines attached, no admission control, all
+    /// SLA report fields zero.
+    pub fn off() -> SlaPolicy {
+        SlaPolicy {
+            deadline_frac: 0.0,
+            penalty_per_sec: 0.0,
+            hard: false,
+            enforce: true,
+        }
+    }
+
+    /// Whether this policy attaches no SLAs at all.
+    pub fn is_off(&self) -> bool {
+        self.deadline_frac <= 0.0
+    }
+
+    /// The [`Sla`] attached to one DAG given its deadline in round-local
+    /// time.
+    pub(crate) fn sla_for(&self, local_deadline: f64) -> Sla {
+        if self.hard {
+            Sla::hard(local_deadline)
+        } else {
+            Sla::soft(local_deadline, self.penalty_per_sec)
         }
     }
 }
@@ -111,6 +174,20 @@ pub struct MacroReport {
     /// Spot preemptions realized across all rounds (0 without spot
     /// capacity or with the interruption process off).
     pub preemptions: usize,
+    /// Admitted DAGs that finished at or before their SLA deadline
+    /// (0 with SLAs off).
+    pub sla_met: usize,
+    /// Admitted DAGs that finished past their SLA deadline (0 with SLAs
+    /// off).
+    pub sla_missed: usize,
+    /// DAGs rejected by SLA admission control — provably unable (or,
+    /// after a deferral, still planned unable) to meet a hard deadline.
+    /// They never execute and have no [`DagOutcome`].
+    pub rejected: usize,
+    /// Dollars of soft-SLA penalty accrued across all missed deadlines
+    /// (`penalty_per_sec * overshoot`, summed; 0 whenever
+    /// `sla_missed == 0`).
+    pub penalty_cost: f64,
 }
 
 /// Virtual-time batch runner.
@@ -136,6 +213,8 @@ pub struct BatchRunner {
     /// Round-barrier or continuous admission (default: rounds, the
     /// historical bulk-synchronous behaviour).
     pub admission: Admission,
+    /// Per-DAG SLA attachment + admission control (off by default).
+    pub sla: SlaPolicy,
     /// Event-log database (scoped task name -> history), persisted
     /// across rounds.
     pub log_db: HashMap<String, EventLog>,
@@ -155,6 +234,7 @@ impl BatchRunner {
             parallelism: 1,
             replan: ReplanPolicy::off(),
             admission: Admission::Rounds,
+            sla: SlaPolicy::off(),
             log_db: HashMap::new(),
         }
     }
@@ -181,6 +261,12 @@ impl BatchRunner {
     /// heterogeneous-market runs; on-demand by default).
     pub fn with_cost_model(mut self, cost_model: CostModel) -> Self {
         self.cost_model = cost_model;
+        self
+    }
+
+    /// Builder-style SLA knob (deadline attachment + admission control).
+    pub fn with_sla(mut self, sla: SlaPolicy) -> Self {
+        self.sla = sla;
         self
     }
 
@@ -226,7 +312,10 @@ impl BatchRunner {
         }
     }
 
-    /// Aggregate per-DAG outcomes into the macro report.
+    /// Aggregate per-DAG outcomes into the macro report. `deadlines`
+    /// maps DAG names to the absolute deadline fixed at first admission
+    /// (empty with SLAs off); `rejected` counts DAGs SLA admission
+    /// turned away.
     #[allow(clippy::too_many_arguments)]
     fn summarize(
         &self,
@@ -236,7 +325,22 @@ impl BatchRunner {
         replans: usize,
         preemptions: usize,
         busy_core_seconds: f64,
+        deadlines: &HashMap<String, f64>,
+        rejected: usize,
     ) -> MacroReport {
+        let mut sla_met = 0usize;
+        let mut sla_missed = 0usize;
+        let mut penalty_cost = 0.0f64;
+        for o in &outcomes {
+            if let Some(&deadline) = deadlines.get(&o.name) {
+                if o.finish_time <= deadline {
+                    sla_met += 1;
+                } else {
+                    sla_missed += 1;
+                    penalty_cost += (o.finish_time - deadline) * self.sla.penalty_per_sec;
+                }
+            }
+        }
         let total_cost = outcomes.iter().map(|o| o.cost).sum();
         let total_completion = outcomes.iter().map(|o| o.completion).sum();
         let completions: Vec<f64> = outcomes.iter().map(|o| o.completion).collect();
@@ -264,6 +368,10 @@ impl BatchRunner {
             optimizer_overhead: overhead,
             replans,
             preemptions,
+            sla_met,
+            sla_missed,
+            rejected,
+            penalty_cost,
         }
     }
 
@@ -317,6 +425,11 @@ impl BatchRunner {
         let mut cluster_free = 0.0f64;
         // queue demand measured at the default config
         let default_cores = self.default_cores();
+        // SLA admission state (all inert with the policy off).
+        let mut deadlines: HashMap<String, f64> = HashMap::new();
+        let mut deferred: Vec<TracedJob> = Vec::new();
+        let mut deferred_once: HashSet<String> = HashSet::new();
+        let mut rejected = 0usize;
 
         loop {
             // Admit arrivals up to the clock.
@@ -328,51 +441,86 @@ impl BatchRunner {
             let queued_demand: f64 = queue
                 .iter()
                 .map(|j| j.dag.len() as f64 * default_cores)
-                .sum();
+                .sum::<f64>()
+                + deferred
+                    .iter()
+                    .map(|j| j.dag.len() as f64 * default_cores)
+                    .sum::<f64>();
             let fire = self.trigger.should_fire(
                 queued_demand,
                 self.capacity.vcpus,
                 clock - last_round,
-                queue.len(),
+                queue.len() + deferred.len(),
             );
 
             if fire {
                 rounds += 1;
                 last_round = clock;
-                let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
+                // SLA-deferred DAGs (older) rejoin ahead of fresh queue.
+                let mut batch: Vec<TracedJob> = deferred.drain(..).collect();
+                batch.extend(queue.drain(..).cloned());
                 let round_start = clock.max(cluster_free);
 
                 // The shared per-round pipeline (build → plan → execute
                 // → feed back), same stages as the threaded service.
-                let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
                 let engine = RoundEngine {
                     capacity: self.capacity,
                     space: &self.space,
                     cost_model: &self.cost_model,
                     replan: &self.replan,
                 };
-                let out = engine.run_round(
-                    &self.strategy,
-                    self.parallelism,
-                    &dags,
-                    rounds,
-                    None,
-                    &mut self.log_db,
-                    &mut rng,
-                    &mut overhead,
-                )?;
-                replans += out.report.replans.len();
-                preempts += preemption_count(&out.report);
-                cluster_free = round_start + out.report.makespan;
-                busy += busy_core_seconds(&out.problem, &out.report);
+                let out = if self.sla.is_off() {
+                    let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
+                    let out = engine.run_round(
+                        &self.strategy,
+                        self.parallelism,
+                        &dags,
+                        rounds,
+                        None,
+                        &mut self.log_db,
+                        &mut rng,
+                        &mut overhead,
+                    )?;
+                    Some((batch, out))
+                } else {
+                    run_sla_round(
+                        &engine,
+                        &self.strategy,
+                        self.parallelism,
+                        &self.sla,
+                        batch,
+                        None,
+                        round_start,
+                        rounds,
+                        &mut self.log_db,
+                        &mut rng,
+                        &mut overhead,
+                        &mut deadlines,
+                        &mut deferred_once,
+                        &mut deferred,
+                        &mut rejected,
+                    )?
+                };
+                if let Some((batch, out)) = out {
+                    replans += out.report.replans.len();
+                    preempts += preemption_count(&out.report);
+                    cluster_free = round_start + out.report.makespan;
+                    busy += busy_core_seconds(&out.problem, &out.report);
 
-                self.record_outcomes(&mut outcomes, &out.problem, &batch, &out.report, round_start);
+                    self.record_outcomes(
+                        &mut outcomes,
+                        &out.problem,
+                        &batch,
+                        &out.report,
+                        round_start,
+                    );
+                }
             }
 
             match next_clock(
                 jobs,
                 next_job,
-                queue.is_empty(),
+                queue.is_empty() && deferred.is_empty(),
                 last_round,
                 self.trigger.interval,
                 clock,
@@ -382,7 +530,9 @@ impl BatchRunner {
             }
         }
 
-        Ok(self.summarize(outcomes, rounds, overhead, replans, preempts, busy))
+        Ok(self.summarize(
+            outcomes, rounds, overhead, replans, preempts, busy, &deadlines, rejected,
+        ))
     }
 
     /// Continuous multi-tenant admission: each round is planned and
@@ -410,6 +560,11 @@ impl BatchRunner {
         // each admission instant.
         let mut ledger = OccupancyLedger::default();
         let default_cores = self.default_cores();
+        // SLA admission state (all inert with the policy off).
+        let mut deadlines: HashMap<String, f64> = HashMap::new();
+        let mut deferred: Vec<TracedJob> = Vec::new();
+        let mut deferred_once: HashSet<String> = HashSet::new();
+        let mut rejected = 0usize;
 
         loop {
             while next_job < jobs.len() && jobs[next_job].submit_time <= clock {
@@ -420,18 +575,24 @@ impl BatchRunner {
             let queued_demand: f64 = queue
                 .iter()
                 .map(|j| j.dag.len() as f64 * default_cores)
-                .sum();
+                .sum::<f64>()
+                + deferred
+                    .iter()
+                    .map(|j| j.dag.len() as f64 * default_cores)
+                    .sum::<f64>();
             let fire = self.trigger.should_fire(
                 queued_demand,
                 self.capacity.vcpus,
                 clock - last_round,
-                queue.len(),
+                queue.len() + deferred.len(),
             );
 
             if fire {
                 rounds += 1;
                 last_round = clock;
-                let batch: Vec<TracedJob> = queue.drain(..).cloned().collect();
+                // SLA-deferred DAGs (older) rejoin ahead of fresh queue.
+                let mut batch: Vec<TracedJob> = deferred.drain(..).collect();
+                batch.extend(queue.drain(..).cloned());
 
                 // Snapshot the occupied-cluster timeline and run the
                 // shared pipeline in round-local time (origin = the
@@ -443,39 +604,62 @@ impl BatchRunner {
                 // optimizer's percentage energies scale-free regardless
                 // of how deep into the trace the round fires.
                 let shifted = ledger.snapshot(clock);
-                let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
                 let engine = RoundEngine {
                     capacity: self.capacity,
                     space: &self.space,
                     cost_model: &self.cost_model,
                     replan: &self.replan,
                 };
-                let out = engine.run_round(
-                    &self.strategy,
-                    self.parallelism,
-                    &dags,
-                    rounds,
-                    Some(shifted),
-                    &mut self.log_db,
-                    &mut rng,
-                    &mut overhead,
-                )?;
-                replans += out.report.replans.len();
-                preempts += preemption_count(&out.report);
-                busy += busy_core_seconds(&out.problem, &out.report);
+                let out = if self.sla.is_off() {
+                    let dags: Vec<Dag> = batch.iter().map(|j| j.dag.clone()).collect();
+                    let out = engine.run_round(
+                        &self.strategy,
+                        self.parallelism,
+                        &dags,
+                        rounds,
+                        Some(shifted),
+                        &mut self.log_db,
+                        &mut rng,
+                        &mut overhead,
+                    )?;
+                    Some((batch, out))
+                } else {
+                    run_sla_round(
+                        &engine,
+                        &self.strategy,
+                        self.parallelism,
+                        &self.sla,
+                        batch,
+                        Some(shifted),
+                        clock,
+                        rounds,
+                        &mut self.log_db,
+                        &mut rng,
+                        &mut overhead,
+                        &mut deadlines,
+                        &mut deferred_once,
+                        &mut deferred,
+                        &mut rejected,
+                    )?
+                };
+                if let Some((batch, out)) = out {
+                    replans += out.report.replans.len();
+                    preempts += preemption_count(&out.report);
+                    busy += busy_core_seconds(&out.problem, &out.report);
 
-                // Every realized record becomes a reservation later
-                // rounds must pack around (ledger is absolute time).
-                ledger.absorb(&out.problem, &out.report, clock);
+                    // Every realized record becomes a reservation later
+                    // rounds must pack around (ledger is absolute time).
+                    ledger.absorb(&out.problem, &out.report, clock);
 
-                // Outcomes at true finish times (absolute virtual time).
-                self.record_outcomes(&mut outcomes, &out.problem, &batch, &out.report, clock);
+                    // Outcomes at true finish times (absolute virtual time).
+                    self.record_outcomes(&mut outcomes, &out.problem, &batch, &out.report, clock);
+                }
             }
 
             match next_clock(
                 jobs,
                 next_job,
-                queue.is_empty(),
+                queue.is_empty() && deferred.is_empty(),
                 last_round,
                 self.trigger.interval,
                 clock,
@@ -485,7 +669,140 @@ impl BatchRunner {
             }
         }
 
-        Ok(self.summarize(outcomes, rounds, overhead, replans, preempts, busy))
+        Ok(self.summarize(
+            outcomes, rounds, overhead, replans, preempts, busy, &deadlines, rejected,
+        ))
+    }
+}
+
+/// Planned per-DAG completion instants of one schedule (round-local
+/// time): max planned end over each DAG's tasks.
+fn planned_dag_completions(p: &Problem, schedule: &Schedule) -> Vec<f64> {
+    let mut out = vec![0.0f64; p.slas.len()];
+    for t in 0..p.len() {
+        let end = schedule.start[t] + p.duration(t, schedule.assignment[t]);
+        let d = p.tasks[t].dag;
+        out[d] = out[d].max(end);
+    }
+    out
+}
+
+/// One SLA-gated round, shared by both admission modes.
+///
+/// Stages: build the full batch's problem (bootstrap draws happen once,
+/// in submission order — rebuilds below hit the event-log cache and draw
+/// nothing), fix each DAG's deadline at first sight, **reject** DAGs
+/// whose completion lower bound provably exceeds a hard deadline, plan,
+/// **defer** DAGs whose planned completion misses a hard deadline (once;
+/// a second planned miss rejects), and execute the surviving batch.
+/// Returns the admitted jobs with the executed round outcome, or `None`
+/// when admission emptied the batch.
+#[allow(clippy::too_many_arguments)]
+fn run_sla_round(
+    engine: &RoundEngine,
+    strategy: &Strategy,
+    parallelism: usize,
+    sla: &SlaPolicy,
+    mut jobs: Vec<TracedJob>,
+    occupancy: Option<Vec<Reservation>>,
+    origin: f64,
+    round: usize,
+    log_db: &mut HashMap<String, EventLog>,
+    rng: &mut Rng,
+    overhead: &mut Duration,
+    deadlines: &mut HashMap<String, f64>,
+    deferred_once: &mut HashSet<String>,
+    deferred: &mut Vec<TracedJob>,
+    rejected: &mut usize,
+) -> Result<Option<(Vec<TracedJob>, RoundOutcome)>> {
+    let build =
+        |jobs: &[TracedJob], log_db: &mut HashMap<String, EventLog>, rng: &mut Rng| -> Problem {
+            let dags: Vec<Dag> = jobs.iter().map(|j| j.dag.clone()).collect();
+            let mut p = engine.build_problem(&dags, log_db, rng);
+            if let Some(res) = &occupancy {
+                p = p.with_occupancy(res.clone(), 0.0);
+            }
+            p
+        };
+    let mut p = build(&jobs, log_db, rng);
+
+    // Fix deadlines at first admission evaluation and reject the
+    // provably infeasible: a hard deadline below the DAG's completion
+    // lower bound cannot be met by any schedule.
+    loop {
+        let lbs = p.dag_lower_bounds();
+        let slas: Vec<Sla> = jobs
+            .iter()
+            .enumerate()
+            .map(|(d, j)| {
+                let abs = *deadlines
+                    .entry(j.dag.name.clone())
+                    .or_insert(origin + sla.deadline_frac * lbs[d]);
+                sla.sla_for(abs - origin)
+            })
+            .collect();
+        p = p.with_slas(slas);
+        if !sla.enforce {
+            break;
+        }
+        let infeasible = p.sla_infeasible();
+        if !infeasible.iter().any(|&x| x) {
+            break;
+        }
+        *rejected += infeasible.iter().filter(|&&x| x).count();
+        jobs = jobs
+            .into_iter()
+            .zip(infeasible)
+            .filter(|&(_, bad)| !bad)
+            .map(|(j, _)| j)
+            .collect();
+        if jobs.is_empty() {
+            return Ok(None);
+        }
+        p = build(&jobs, log_db, rng);
+    }
+
+    // Plan; under hard enforcement, defer DAGs whose planned completion
+    // misses their deadline — they rejoin the next trigger's batch with
+    // the same absolute deadline (which only tightens in local time, so
+    // a perpetually-crowded DAG converges to rejection).
+    loop {
+        let schedule = engine.plan(strategy, parallelism, &p, round, rng, overhead)?;
+        let miss: Vec<bool> = if sla.enforce && sla.hard {
+            planned_dag_completions(&p, &schedule)
+                .iter()
+                .zip(&p.slas)
+                .map(|(&end, s)| !s.is_unbounded() && end > s.deadline)
+                .collect()
+        } else {
+            vec![false; jobs.len()]
+        };
+        if !miss.iter().any(|&x| x) {
+            let dags: Vec<Dag> = jobs.iter().map(|j| j.dag.clone()).collect();
+            let report = engine.execute(&p, &dags, &schedule, round, rng);
+            RoundEngine::feed_back(log_db, &p, &report);
+            return Ok(Some((jobs, RoundOutcome { problem: p, report })));
+        }
+        let mut keep = Vec::new();
+        for (j, bad) in jobs.into_iter().zip(miss) {
+            if !bad {
+                keep.push(j);
+            } else if deferred_once.insert(j.dag.name.clone()) {
+                deferred.push(j);
+            } else {
+                *rejected += 1;
+            }
+        }
+        jobs = keep;
+        if jobs.is_empty() {
+            return Ok(None);
+        }
+        p = build(&jobs, log_db, rng);
+        let slas: Vec<Sla> = jobs
+            .iter()
+            .map(|j| sla.sla_for(deadlines[&j.dag.name] - origin))
+            .collect();
+        p = p.with_slas(slas);
     }
 }
 

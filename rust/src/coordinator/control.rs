@@ -48,10 +48,10 @@ use super::reload::ConfigSnapshot;
 use super::retry::RoundError;
 use super::round::{busy_core_seconds, RoundEngine};
 use super::service::{Shared, SubmitResult};
-use super::{Admission, OccupancyLedger, TriggerPolicy};
+use super::{Admission, OccupancyLedger, SlaPolicy, TriggerPolicy};
 use crate::dag::Dag;
 use crate::predictor::EventLog;
-use crate::solver::{Mode, Problem, Schedule};
+use crate::solver::{Mode, Problem, Schedule, Sla};
 use crate::util::Rng;
 
 /// A dispatched, uncommitted round.
@@ -246,12 +246,11 @@ pub(crate) fn run(shared: Arc<Shared>) -> usize {
             } else {
                 cfg.max_batch
             };
-            let batch = shared.ingress.take_batch(cap);
+            let mut batch = shared.ingress.take_batch(cap);
             if batch.is_empty() {
                 break;
             }
-            dispatched += 1;
-            let round = dispatched;
+            let round = dispatched + 1;
             // Virtual admission instant: consecutive rounds sit one
             // trigger interval (the paper's 15 minutes, which a
             // batch_window stands for) apart — round-indexed, so slow
@@ -260,7 +259,7 @@ pub(crate) fn run(shared: Arc<Shared>) -> usize {
                 Admission::Rounds => 0.0,
                 Admission::Continuous => (round as f64 - 1.0) * TriggerPolicy::default().interval,
             };
-            let dags: Vec<Dag> = batch.iter().map(|p| p.dag.clone()).collect();
+            let mut dags: Vec<Dag> = batch.iter().map(|p| p.dag.clone()).collect();
             let engine = RoundEngine {
                 capacity: cfg.capacity,
                 space: &cfg.space,
@@ -271,6 +270,58 @@ pub(crate) fn run(shared: Arc<Shared>) -> usize {
             if cfg.admission == Admission::Continuous {
                 problem = problem.with_occupancy(ledger.snapshot(vnow), 0.0);
             }
+            // SLA admission: attach round-local deadlines
+            // (`deadline_frac` x the DAG's completion lower bound) and
+            // reject provably-infeasible hard-deadline DAGs with an
+            // explicit error ticket before any optimization is spent.
+            if !cfg.sla.is_off() {
+                let attach = |p: Problem, s: &SlaPolicy| -> Problem {
+                    let slas: Vec<Sla> = p
+                        .dag_lower_bounds()
+                        .iter()
+                        .map(|&lb| s.sla_for(s.deadline_frac * lb))
+                        .collect();
+                    p.with_slas(slas)
+                };
+                problem = attach(problem, &cfg.sla);
+                if cfg.sla.enforce {
+                    let infeasible = problem.sla_infeasible();
+                    if infeasible.iter().any(|&x| x) {
+                        let mut kept = Vec::new();
+                        for (pending, bad) in batch.into_iter().zip(infeasible) {
+                            if bad {
+                                shared.status.record_rejected(&pending.tenant);
+                                let _ = pending.reply.send(Err(RoundError {
+                                    round,
+                                    attempts: 0,
+                                    message: format!(
+                                        "DAG '{}' rejected: completion lower bound \
+                                         exceeds its hard deadline",
+                                        pending.dag.name
+                                    ),
+                                }));
+                            } else {
+                                kept.push(pending);
+                            }
+                        }
+                        batch = kept;
+                        if batch.is_empty() {
+                            // Whole batch rejected: no round is consumed.
+                            window_start = Instant::now();
+                            continue;
+                        }
+                        dags = batch.iter().map(|p| p.dag.clone()).collect();
+                        // Rebuild for the survivors — their logs are
+                        // cached now, so this draws nothing.
+                        problem = engine.build_problem(&dags, &mut log_db, &mut rng);
+                        if cfg.admission == Admission::Continuous {
+                            problem = problem.with_occupancy(ledger.snapshot(vnow), 0.0);
+                        }
+                        problem = attach(problem, &cfg.sla);
+                    }
+                }
+            }
+            dispatched += 1;
             let seed = rng.next_u64();
             let job = Job {
                 round,

@@ -83,6 +83,51 @@ impl AdmissionStats {
     }
 }
 
+/// One row of the deadline/SLA comparison (Fig. 13): admission verdicts
+/// and the realized penalty bill of a run under an SLA policy.
+#[derive(Debug, Clone)]
+pub struct SlaStats {
+    /// Strategy name of the run.
+    pub strategy: String,
+    /// DAGs that finished within their deadline.
+    pub met: usize,
+    /// DAGs that finished past their deadline.
+    pub missed: usize,
+    /// DAGs rejected by admission control.
+    pub rejected: usize,
+    /// Total soft-SLA penalty dollars across missed DAGs.
+    pub penalty_cost: f64,
+    /// Realized total dollar cost of the admitted work.
+    pub total_cost: f64,
+}
+
+impl SlaStats {
+    /// Extract the comparison row from a macro report.
+    pub fn of(report: &MacroReport) -> SlaStats {
+        SlaStats {
+            strategy: report.strategy.clone(),
+            met: report.sla_met,
+            missed: report.sla_missed,
+            rejected: report.rejected,
+            penalty_cost: report.penalty_cost,
+            total_cost: report.total_cost,
+        }
+    }
+
+    /// Render as a bench-table row: strategy, met, missed, rejected,
+    /// penalty, cost.
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.strategy.clone(),
+            format!("{}", self.met),
+            format!("{}", self.missed),
+            format!("{}", self.rejected),
+            format!("${:.2}", self.penalty_cost),
+            format!("${:.2}", self.total_cost),
+        ]
+    }
+}
+
 /// Per-DAG completion-time improvement of `run` vs `base`
 /// ((base - run)/base per DAG, matched by name), sorted ascending —
 /// the CDF panel of Fig. 11.
@@ -137,6 +182,10 @@ mod tests {
             optimizer_overhead: Duration::ZERO,
             replans: 0,
             preemptions: 0,
+            sla_met: 0,
+            sla_missed: 0,
+            rejected: 0,
+            penalty_cost: 0.0,
         }
     }
 
@@ -155,6 +204,19 @@ mod tests {
         assert_eq!(s.admission, "rounds");
         assert!((s.mean_completion - 200.0).abs() < 1e-9);
         assert!((s.total_cost - 4.0).abs() < 1e-9);
+        assert_eq!(s.row().len(), 6);
+    }
+
+    #[test]
+    fn sla_stats_extract_report_fields() {
+        let mut r = report("agora", &[("a", 100.0, 1.0)]);
+        r.sla_met = 3;
+        r.sla_missed = 1;
+        r.rejected = 2;
+        r.penalty_cost = 4.5;
+        let s = SlaStats::of(&r);
+        assert_eq!((s.met, s.missed, s.rejected), (3, 1, 2));
+        assert!((s.penalty_cost - 4.5).abs() < 1e-12);
         assert_eq!(s.row().len(), 6);
     }
 

@@ -17,9 +17,9 @@ pub(crate) mod round;
 pub mod service;
 pub mod status;
 
-pub use batch::{BatchRunner, DagOutcome, MacroReport, Strategy};
+pub use batch::{BatchRunner, DagOutcome, MacroReport, SlaPolicy, Strategy};
 pub use ingress::{Priority, SubmitError, Ticket};
-pub use metrics::{improvement_cdf, AdmissionStats, MacroSummary};
+pub use metrics::{improvement_cdf, AdmissionStats, MacroSummary, SlaStats};
 pub use retry::{FaultSpec, RetryPolicy, RoundError};
 pub use service::{Service, ServiceConfig, ServiceHandle, SubmitResult};
 pub use status::{ServiceStatus, TenantStatus};

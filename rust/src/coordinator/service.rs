@@ -39,7 +39,7 @@ use super::ingress::{Mailbox, Priority, SubmitError, Ticket};
 use super::reload::ConfigCell;
 use super::retry::{FaultSpec, RetryPolicy};
 use super::status::{ServiceStatus, StatusBoard};
-use super::{control, Admission};
+use super::{control, Admission, SlaPolicy};
 use crate::cluster::{Capacity, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::sim::ReplanPolicy;
@@ -110,6 +110,11 @@ pub struct ServiceConfig {
     pub retry: RetryPolicy,
     /// Deterministic fault injection for retry tests (off by default).
     pub fault: FaultSpec,
+    /// Per-DAG deadline/SLA policy (off by default). When armed, DAGs
+    /// whose completion lower bound provably exceeds their hard deadline
+    /// are rejected at dispatch with an error ticket; like `goal`, a
+    /// reload applies from the next dispatched round.
+    pub sla: SlaPolicy,
 }
 
 impl Default for ServiceConfig {
@@ -130,6 +135,7 @@ impl Default for ServiceConfig {
             max_batch: 0,
             retry: RetryPolicy::default(),
             fault: FaultSpec::default(),
+            sla: SlaPolicy::off(),
         }
     }
 }

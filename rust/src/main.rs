@@ -209,6 +209,7 @@ fn cmd_serve(config: &AppConfig) -> Result<()> {
         cost_model: config.cost_model(),
         workers: config.workers,
         queue_bound: config.queue_bound,
+        sla: config.sla(),
         ..Default::default()
     });
     let handle = service.handle();
@@ -297,7 +298,8 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
     )
     .with_cost_model(config.cost_model())
     .with_replan(config.replan.clone())
-    .with_admission(config.admission);
+    .with_admission(config.admission)
+    .with_sla(config.sla());
     let base = base_runner.run(&jobs)?;
     let mut agora_runner = BatchRunner::new(
         params.batch_capacity(),
@@ -308,7 +310,8 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
     .with_cost_model(config.cost_model())
     .with_parallelism(config.parallelism)
     .with_replan(config.replan.clone())
-    .with_admission(config.admission);
+    .with_admission(config.admission)
+    .with_sla(config.sla());
     let run = agora_runner.run(&jobs)?;
     let summary = MacroSummary::against(&base, &run);
     println!(
@@ -345,6 +348,17 @@ fn cmd_trace(config: &AppConfig) -> Result<()> {
             "spot preemptions: airflow {}  agora {}",
             base.preemptions, run.preemptions
         );
+    }
+    if config.deadline_frac > 0.0 {
+        for (name, r) in [("airflow", &base), ("agora", &run)] {
+            println!(
+                "SLA ({name}): {} met, {} missed, {} rejected, penalty {}",
+                r.sla_met,
+                r.sla_missed,
+                r.rejected,
+                fmt_cost(r.penalty_cost)
+            );
+        }
     }
 
     // Round-barrier vs continuous admission at equal cost budget: the

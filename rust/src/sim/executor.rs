@@ -247,7 +247,23 @@ pub fn execute_with_policy(
                 let end_t = start[t] + runtimes[t];
                 let div = (end_t - expected_end[t]) / plan_makespan;
                 checked[t] = true;
-                if div <= policy.threshold {
+                // Deadline-at-risk trigger (armed by `sla_spot_penalty`):
+                // even below the divergence threshold, a completion in a
+                // DAG whose projected finish now misses its bounded SLA
+                // deadline fires a replan, so the suffix search can
+                // migrate the at-risk cone off spot capacity.
+                let deadline_risk = policy.sla_spot_penalty > 0.0 && {
+                    let d = p.tasks[t].dag;
+                    let sla = &p.slas[d];
+                    !sla.is_unbounded() && {
+                        let projected = (0..n)
+                            .filter(|&u| p.tasks[u].dag == d)
+                            .map(|u| start[u] + runtimes[u])
+                            .fold(0.0, f64::max);
+                        projected > sla.deadline
+                    }
+                };
+                if div <= policy.threshold && !deadline_risk {
                     continue;
                 }
 

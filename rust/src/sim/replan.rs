@@ -225,6 +225,15 @@ pub struct ReplanPolicy {
     pub seed: u64,
     /// Divergence injected into the execution.
     pub divergence: DivergenceSpec,
+    /// Deadline-at-risk spot migration: energy surcharge per cone task
+    /// left on a **spot** row when its DAG's projected completion under
+    /// the incumbent continuation already misses a bounded SLA deadline
+    /// ([`crate::solver::Problem::slas`]). Any positive value dominates
+    /// the O(1) normalized cost/makespan terms, so the search flips
+    /// at-risk tasks to on-demand capacity whenever an on-demand row is
+    /// feasible. 0.0 (the default) disables the rule — replanning is
+    /// then bit-identical to the SLA-blind search.
+    pub sla_spot_penalty: f64,
 }
 
 impl Default for ReplanPolicy {
@@ -236,6 +245,7 @@ impl Default for ReplanPolicy {
             goal: Goal::Runtime,
             seed: 0x2EF1A,
             divergence: DivergenceSpec::default(),
+            sla_spot_penalty: 0.0,
         }
     }
 }
@@ -361,11 +371,52 @@ pub fn replan_suffix(
     // Incumbent continuation: the scale-free reference for the blend.
     let mut best = incumbent.to_vec();
     let (m0, c0) = eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &best);
+
+    // Deadline-at-risk detection (armed by `sla_spot_penalty`): per-DAG
+    // projected completion under the incumbent continuation — committed
+    // ends plus the cone evaluator's placement, which `sgs` still holds
+    // from the incumbent evaluation above. A DAG already projected past
+    // its bounded deadline marks its cone tasks at-risk.
+    let mut in_cone = vec![false; p.len()];
+    for &t in active {
+        in_cone[t] = true;
+    }
+    let mut at_risk = vec![false; p.slas.len()];
+    if policy.sla_spot_penalty > 0.0 {
+        let mut completion = vec![0.0f64; p.slas.len()];
+        for t in 0..p.len() {
+            let end = if in_cone[t] {
+                sgs.start_of(t) + p.duration(t, incumbent[t])
+            } else {
+                fixed_end[t]
+            };
+            let d = p.tasks[t].dag;
+            completion[d] = completion[d].max(end);
+        }
+        for (d, sla) in p.slas.iter().enumerate() {
+            at_risk[d] = !sla.is_unbounded() && completion[d] > sla.deadline;
+        }
+    }
+    // Energy surcharge: each at-risk cone task still on a spot row pays
+    // `sla_spot_penalty`. Returns exactly 0.0 when the rule is off, so
+    // `energy + surcharge` is bit-identical to the SLA-blind search
+    // (the blend terms are non-negative).
+    let surcharge = |assignment: &[usize]| -> f64 {
+        if policy.sla_spot_penalty <= 0.0 {
+            return 0.0;
+        }
+        active
+            .iter()
+            .filter(|&&t| at_risk[p.tasks[t].dag] && p.config(assignment[t]).is_spot())
+            .count() as f64
+            * policy.sla_spot_penalty
+    };
+
     let base_m = m0.max(1e-9);
     let base_c = c0.max(1e-9);
     let w = policy.goal.weight();
     let energy = |m: f64, c: f64| w * m / base_m + (1.0 - w) * c / base_c;
-    let mut best_e = energy(m0, c0);
+    let mut best_e = energy(m0, c0) + surcharge(&best);
 
     // Per-task-best candidate (what a task-local optimizer would pick for
     // the goal) — a strong, deterministic lower anchor for the search.
@@ -375,7 +426,7 @@ pub fn replan_suffix(
         cand[t] = ptb[t];
     }
     let (m1, c1) = eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &cand);
-    let e1 = energy(m1, c1);
+    let e1 = energy(m1, c1) + surcharge(&cand);
     let (mut cur, mut cur_e) = if e1 < best_e {
         best = cand.clone();
         best_e = e1;
@@ -383,6 +434,37 @@ pub fn replan_suffix(
     } else {
         (best.clone(), best_e)
     };
+
+    // Deadline-repair candidate: with the spot surcharge armed and some
+    // DAG at risk, seed the search with at-risk cone tasks flipped to
+    // their cheapest **on-demand** row. Deterministic — under a
+    // cost-weighted goal this is the surcharge-free optimum, so the
+    // spot→on-demand migration never hinges on the SA walk proposing it.
+    if at_risk.iter().any(|&r| r) {
+        let mut repair = best.clone();
+        for &t in active {
+            if !at_risk[p.tasks[t].dag] {
+                continue;
+            }
+            if let Some(&c) = p
+                .feasible
+                .iter()
+                .filter(|&&c| !p.config(c).is_spot())
+                .min_by(|&&a, &&b| p.cost(t, a).total_cmp(&p.cost(t, b)))
+            {
+                repair[t] = c;
+            }
+        }
+        let (m2, c2) =
+            eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &repair);
+        let e2 = energy(m2, c2) + surcharge(&repair);
+        if e2 < best_e {
+            best = repair.clone();
+            best_e = e2;
+            cur = repair;
+            cur_e = e2;
+        }
+    }
 
     // Short, mostly-greedy SA over cone configurations.
     let mut rng = Rng::new(round_seed(policy.seed, round));
@@ -394,7 +476,7 @@ pub fn replan_suffix(
             proposal[t] = p.feasible[rng.below(p.feasible.len())];
             let (m, c) =
                 eval_candidate(p, active, committed_peak, &mut sgs, &mut memo, &proposal);
-            let e = energy(m, c);
+            let e = energy(m, c) + surcharge(&proposal);
             let de = e - cur_e;
             let accept = de < 0.0
                 || (e.is_finite() && rng.f64() < (-de / temperature.max(1e-12)).exp());
@@ -455,6 +537,18 @@ mod tests {
         assert_eq!(r1.divergence.straggler_prob, base.divergence.straggler_prob);
         // Derivation is itself deterministic.
         assert_eq!(base.for_round(1), base.for_round(1));
+    }
+
+    #[test]
+    fn sla_spot_penalty_defaults_off_and_survives_round_derivation() {
+        let base = ReplanPolicy::default();
+        assert_eq!(base.sla_spot_penalty, 0.0);
+        let armed = ReplanPolicy {
+            sla_spot_penalty: 10.0,
+            ..Default::default()
+        };
+        assert_eq!(armed.for_round(0), armed);
+        assert_eq!(armed.for_round(3).sla_spot_penalty, 10.0);
     }
 
     #[test]

@@ -210,8 +210,15 @@ impl Agora {
             .expect("the default configuration must fit the cluster capacity");
         let base_makespan = base_sched.makespan(p);
         let base_cost = base_sched.cost(p);
-        let objective = Objective::new(self.options.goal, base_makespan, base_cost)
+        let mut objective = Objective::new(self.options.goal, base_makespan, base_cost)
             .with_budgets(self.options.makespan_budget, self.options.cost_budget);
+        if self.options.goal == Goal::DeadlineCost {
+            // Deadline-aware cost minimization: hard SLA deadlines become
+            // Eq. 7 makespan budgets, soft ones a penalty schedule folded
+            // into the cost term. With only unbounded SLAs attached this
+            // is a no-op and the search is bit-identical to Goal::Cost.
+            objective = objective.with_slas(&p.slas);
+        }
 
         let mut rng = Rng::new(self.options.seed);
 

@@ -16,7 +16,7 @@ pub mod timeline;
 pub use anneal::{anneal, portfolio_anneal, AnnealParams, AnnealResult};
 pub use cooptimizer::{Agora, AgoraOptions, Mode, Plan};
 pub use cp::{CpSolver, Limits};
-pub use objective::{Goal, Objective};
+pub use objective::{Goal, Objective, Sla};
 pub use rcpsp::{Problem, Reservation};
 pub use schedule::Schedule;
 pub use timeline::{Mark, Timeline};

@@ -17,6 +17,13 @@ pub enum Goal {
     Runtime,
     /// Arbitrary weight in [0, 1].
     Weighted(f64),
+    /// w = 0 **subject to deadlines**: minimize cost with per-DAG SLA
+    /// deadlines enforced as Eq. 7 makespan budgets (hard SLAs) and
+    /// accounted as dollar penalties folded into the cost term (soft
+    /// SLAs). With no bounded SLA attached this degenerates to
+    /// [`Goal::Cost`] bit-for-bit — the same w = 0 arithmetic with an
+    /// empty penalty schedule.
+    DeadlineCost,
 }
 
 impl Goal {
@@ -27,6 +34,7 @@ impl Goal {
             Goal::Balanced => 0.5,
             Goal::Runtime => 1.0,
             Goal::Weighted(w) => w.clamp(0.0, 1.0),
+            Goal::DeadlineCost => 0.0,
         }
     }
 
@@ -37,16 +45,93 @@ impl Goal {
             Goal::Balanced => "balanced".into(),
             Goal::Runtime => "runtime".into(),
             Goal::Weighted(w) => format!("w={w:.2}"),
+            Goal::DeadlineCost => "deadline-cost".into(),
         }
     }
 
-    /// Parse a CLI spelling (`cost` | `balanced` | `runtime` | `w=<0..1>`).
+    /// Parse a CLI spelling (`cost` | `balanced` | `runtime` |
+    /// `deadline-cost` | `w=<0..1>`).
     pub fn parse(s: &str) -> Option<Goal> {
         match s {
             "cost" => Some(Goal::Cost),
             "balanced" => Some(Goal::Balanced),
             "runtime" => Some(Goal::Runtime),
+            "deadline-cost" => Some(Goal::DeadlineCost),
             _ => s.strip_prefix("w=")?.parse().ok().map(Goal::Weighted),
+        }
+    }
+}
+
+/// A per-DAG service-level agreement: a completion deadline in the
+/// problem's time base, a dollar penalty rate for soft misses, and a
+/// hardness flag that arms admission control and deadline-at-risk spot
+/// migration. The default ([`Sla::none`]) is unbounded and inert —
+/// attaching it changes nothing anywhere.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sla {
+    /// Completion deadline (seconds, problem time base); infinity = no
+    /// deadline.
+    pub deadline: f64,
+    /// Dollars accrued per second past the deadline on a soft miss.
+    pub penalty_per_sec: f64,
+    /// Hard SLA: admission may reject or defer the DAG when its
+    /// completion lower bound provably exceeds the deadline.
+    pub hard: bool,
+}
+
+impl Default for Sla {
+    fn default() -> Self {
+        Sla::none()
+    }
+}
+
+impl Sla {
+    /// No SLA: infinite deadline, zero penalty, soft.
+    pub fn none() -> Sla {
+        Sla {
+            deadline: f64::INFINITY,
+            penalty_per_sec: 0.0,
+            hard: false,
+        }
+    }
+
+    /// A soft SLA: misses accrue `penalty_per_sec` dollars per second.
+    pub fn soft(deadline: f64, penalty_per_sec: f64) -> Sla {
+        Sla {
+            deadline,
+            penalty_per_sec,
+            hard: false,
+        }
+    }
+
+    /// A hard SLA: admission control may reject/defer, and the replan
+    /// path migrates at-risk tasks off spot capacity.
+    pub fn hard(deadline: f64) -> Sla {
+        Sla {
+            deadline,
+            penalty_per_sec: 0.0,
+            hard: true,
+        }
+    }
+
+    /// Whether this SLA constrains nothing (infinite deadline).
+    pub fn is_unbounded(&self) -> bool {
+        self.deadline == f64::INFINITY
+    }
+
+    /// Whether a realized completion meets the deadline.
+    pub fn met(&self, completion: f64) -> bool {
+        completion <= self.deadline
+    }
+
+    /// Dollar penalty for a realized completion: 0 at or before the
+    /// deadline (and always 0 when unbounded), linear in the overshoot
+    /// after it.
+    pub fn penalty(&self, completion: f64) -> f64 {
+        if completion <= self.deadline {
+            0.0
+        } else {
+            (completion - self.deadline) * self.penalty_per_sec
         }
     }
 }
@@ -64,6 +149,13 @@ pub struct Objective {
     pub makespan_budget: f64,
     /// C_budget (Eq. 8); infinity when unset.
     pub cost_budget: f64,
+    /// Soft-SLA penalty schedule `(deadline, penalty_per_sec)` applied
+    /// to the candidate makespan (the completion upper bound of every
+    /// DAG in the problem): dollars past each deadline are folded into
+    /// the cost term before normalization. Empty when no bounded soft
+    /// SLA is attached — and then [`Objective::energy`] is bit-identical
+    /// to the SLA-free arithmetic.
+    pub soft_slas: Vec<(f64, f64)>,
 }
 
 impl Objective {
@@ -75,6 +167,7 @@ impl Objective {
             base_cost: base_cost.max(1e-9),
             makespan_budget: f64::INFINITY,
             cost_budget: f64::INFINITY,
+            soft_slas: Vec::new(),
         }
     }
 
@@ -85,11 +178,42 @@ impl Objective {
         self
     }
 
+    /// Attach per-DAG SLAs: every bounded **hard** deadline tightens the
+    /// Eq. 7 makespan budget (makespan <= the earliest hard deadline
+    /// implies every DAG meets its own), and every bounded **soft**
+    /// deadline joins the penalty schedule folded into the cost term by
+    /// [`Objective::energy`]. Unbounded SLAs change nothing: with only
+    /// [`Sla::none`] entries this is a no-op and the energy arithmetic
+    /// stays bit-identical.
+    pub fn with_slas(mut self, slas: &[Sla]) -> Self {
+        for sla in slas {
+            if sla.is_unbounded() {
+                continue;
+            }
+            if sla.hard {
+                self.makespan_budget = self.makespan_budget.min(sla.deadline);
+            }
+            if sla.penalty_per_sec > 0.0 {
+                self.soft_slas.push((sla.deadline, sla.penalty_per_sec));
+            }
+        }
+        self
+    }
+
     /// The energy of a candidate (lower is better). Budget violations
-    /// (Eq. 7–8) are infeasible: +infinity energy.
+    /// (Eq. 7–8) are infeasible: +infinity energy. Soft-SLA penalties
+    /// (dollars past each deadline, with the makespan standing in as the
+    /// completion upper bound of every DAG) are added to the cost before
+    /// normalization.
     pub fn energy(&self, makespan: f64, cost: f64) -> f64 {
         if makespan > self.makespan_budget || cost > self.cost_budget {
             return f64::INFINITY;
+        }
+        let mut cost = cost;
+        for &(deadline, rate) in &self.soft_slas {
+            if makespan > deadline {
+                cost += (makespan - deadline) * rate;
+            }
         }
         let w = self.goal.weight();
         w * (makespan - self.base_makespan) / self.base_makespan
@@ -152,6 +276,55 @@ mod tests {
         assert!(o.energy(85.0, 11.0).is_finite());
         assert!(o.within_budgets(90.0, 12.0));
         assert!(!o.within_budgets(90.1, 12.0));
+    }
+
+    #[test]
+    fn deadline_cost_goal_parses_names_and_weights_like_cost() {
+        assert_eq!(Goal::DeadlineCost.weight(), 0.0);
+        assert_eq!(Goal::DeadlineCost.name(), "deadline-cost");
+        assert_eq!(Goal::parse("deadline-cost"), Some(Goal::DeadlineCost));
+    }
+
+    #[test]
+    fn unbounded_sla_is_inert() {
+        let sla = Sla::none();
+        assert!(sla.is_unbounded());
+        assert!(sla.met(1e12));
+        assert_eq!(sla.penalty(1e12), 0.0);
+        assert_eq!(Sla::default(), sla);
+    }
+
+    #[test]
+    fn soft_sla_penalty_is_linear_in_overshoot() {
+        let sla = Sla::soft(100.0, 0.5);
+        assert_eq!(sla.penalty(100.0), 0.0);
+        assert!((sla.penalty(130.0) - 15.0).abs() < 1e-12);
+        assert!(sla.met(100.0));
+        assert!(!sla.met(100.1));
+    }
+
+    #[test]
+    fn with_slas_tightens_budget_and_schedules_penalties() {
+        let o = Objective::new(Goal::DeadlineCost, 100.0, 10.0)
+            .with_slas(&[Sla::hard(80.0), Sla::soft(60.0, 1.0), Sla::none()]);
+        assert_eq!(o.makespan_budget, 80.0);
+        assert_eq!(o.soft_slas, vec![(60.0, 1.0)]);
+        // Past the hard deadline: infeasible.
+        assert!(o.energy(81.0, 1.0).is_infinite());
+        // Past the soft deadline: 10 seconds late at $1/s = $10 extra cost.
+        let on_time = o.energy(60.0, 5.0);
+        let late = o.energy(70.0, 5.0);
+        assert!((late - on_time - 10.0 / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_cost_without_bounded_slas_is_bit_identical_to_cost() {
+        let cost = Objective::new(Goal::Cost, 137.0, 9.25);
+        let dc = Objective::new(Goal::DeadlineCost, 137.0, 9.25)
+            .with_slas(&[Sla::none(), Sla::none()]);
+        for (m, c) in [(137.0, 9.25), (88.5, 4.125), (250.0, 31.0)] {
+            assert_eq!(cost.energy(m, c).to_bits(), dc.energy(m, c).to_bits());
+        }
     }
 
     #[test]

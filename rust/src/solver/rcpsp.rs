@@ -13,6 +13,7 @@
 //! [`SuffixSgs`](super::sgs::SuffixSgs) to cross-round, cross-DAG
 //! occupancy.
 
+use super::objective::Sla;
 use crate::cluster::{Capacity, Config, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::Grid;
@@ -61,6 +62,10 @@ pub struct Problem {
     /// [`Problem::with_occupancy`] folds it into `release`, so schedulers
     /// that respect release times respect the floor for free.
     pub floor: f64,
+    /// Per-DAG service-level agreements (deadlines in this problem's
+    /// time base), indexed by DAG. Defaults to [`Sla::none`] per DAG —
+    /// fully inert until [`Problem::with_slas`] attaches bounded ones.
+    pub slas: Vec<Sla>,
     preds: Vec<Vec<usize>>,
     succs: Vec<Vec<usize>>,
     /// Cached `space.instance_count()` — the SA proposer reads it on
@@ -154,6 +159,7 @@ impl Problem {
             cost_model,
             preplaced: Vec::new(),
             floor: 0.0,
+            slas: vec![Sla::none(); dags.len()],
             preds,
             succs,
             space_instances,
@@ -174,6 +180,61 @@ impl Problem {
         self.preplaced = preplaced;
         self.floor = floor;
         self
+    }
+
+    /// Attach per-DAG SLAs (deadlines in this problem's time base). The
+    /// vector must carry one entry per input DAG.
+    pub fn with_slas(mut self, slas: Vec<Sla>) -> Self {
+        assert_eq!(
+            slas.len(),
+            self.slas.len(),
+            "one SLA per DAG ({} DAGs)",
+            self.slas.len()
+        );
+        self.slas = slas;
+        self
+    }
+
+    /// Per-DAG completion lower bounds under **best-case** durations:
+    /// the critical-path pass of [`Problem::critical_path_lb`] with each
+    /// task at its minimum feasible duration, maxed per source DAG.
+    /// Resources and co-tenants are ignored, so this is a true lower
+    /// bound on any feasible schedule's per-DAG completion — the
+    /// provable side of SLA admission: a DAG whose bound already exceeds
+    /// its deadline cannot meet it under *any* schedule.
+    pub fn dag_lower_bounds(&self) -> Vec<f64> {
+        let order = self.topo_order();
+        let mut finish = vec![0.0f64; self.len()];
+        let mut out = vec![0.0f64; self.slas.len()];
+        for &u in &order {
+            let start = self.preds[u]
+                .iter()
+                .map(|&p| finish[p])
+                .fold(self.release[u], f64::max);
+            let best = self
+                .feasible
+                .iter()
+                .map(|&c| self.duration(u, c))
+                .fold(f64::INFINITY, f64::min);
+            finish[u] = start + best;
+            let d = self.tasks[u].dag;
+            out[d] = out[d].max(finish[u]);
+        }
+        out
+    }
+
+    /// Per-DAG provable SLA infeasibility: `true` where a **hard**
+    /// bounded deadline sits below the DAG's completion lower bound
+    /// ([`Problem::dag_lower_bounds`]) — no schedule can meet it, so
+    /// admission may reject outright. Soft and unbounded SLAs are never
+    /// flagged.
+    pub fn sla_infeasible(&self) -> Vec<bool> {
+        let lbs = self.dag_lower_bounds();
+        self.slas
+            .iter()
+            .zip(&lbs)
+            .map(|(sla, &lb)| sla.hard && !sla.is_unbounded() && lb > sla.deadline)
+            .collect()
     }
 
     /// Number of flat tasks.
@@ -369,6 +430,39 @@ mod tests {
         let assignment = vec![p.feasible[0]; p.len()];
         assert!(p.energy_lb(&assignment) > 0.0);
         assert!(p.lower_bound(&assignment) >= p.energy_lb(&assignment));
+    }
+
+    #[test]
+    fn problems_default_to_unbounded_slas() {
+        let p = toy_problem();
+        assert_eq!(p.slas.len(), 2);
+        assert!(p.slas.iter().all(|s| s.is_unbounded() && !s.hard));
+        assert_eq!(p.sla_infeasible(), vec![false, false]);
+    }
+
+    #[test]
+    fn dag_lower_bounds_are_per_dag_and_positive() {
+        let p = toy_problem();
+        let lbs = p.dag_lower_bounds();
+        assert_eq!(lbs.len(), 2);
+        assert!(lbs.iter().all(|&lb| lb > 0.0));
+        // Best-case durations: the bound cannot exceed the critical path
+        // of any concrete assignment.
+        let assignment = vec![p.feasible[0]; p.len()];
+        let cp = p.critical_path_lb(&assignment);
+        assert!(lbs.iter().all(|&lb| lb <= cp + 1e-9));
+    }
+
+    #[test]
+    fn sla_infeasible_flags_only_provably_impossible_hard_deadlines() {
+        let lbs = toy_problem().dag_lower_bounds();
+        // A hard deadline below the lower bound is provably impossible;
+        // a soft one never flags, however tight.
+        let p = toy_problem().with_slas(vec![Sla::hard(lbs[0] * 0.5), Sla::soft(0.0, 1.0)]);
+        assert_eq!(p.sla_infeasible(), vec![true, false]);
+        // A hard deadline above the bound is not provably impossible.
+        let p = toy_problem().with_slas(vec![Sla::hard(lbs[0] * 2.0), Sla::none()]);
+        assert_eq!(p.sla_infeasible(), vec![false, false]);
     }
 
     #[test]

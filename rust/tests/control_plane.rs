@@ -8,7 +8,9 @@ use std::time::Duration;
 
 use agora::cluster::{Capacity, ConfigSpace, CostModel};
 use agora::coordinator::service::{Service, ServiceConfig};
-use agora::coordinator::{Admission, FaultSpec, Priority, RetryPolicy, SubmitError, TriggerPolicy};
+use agora::coordinator::{
+    Admission, FaultSpec, Priority, RetryPolicy, SlaPolicy, SubmitError, TriggerPolicy,
+};
 use agora::dag::workloads::{dag1, dag2, fig1_dag};
 use agora::predictor::{
     bootstrap_history, profiling_configs_for, scoped_task_name, EventLog,
@@ -384,6 +386,55 @@ fn exhausted_retries_answer_tickets_with_the_round_error() {
     let t2 = handle.submit("a", dag2()).expect("admitted");
     let r2 = t2.recv_timeout(Duration::from_secs(120)).expect("served");
     assert!(r2.completion > 0.0 && r2.cost > 0.0);
+    service.shutdown().expect("clean shutdown");
+}
+
+#[test]
+fn reloaded_sla_policy_applies_only_to_later_dispatched_rounds() {
+    // Round 1 dispatches under the default (SLA-off) config and must be
+    // served normally. A live reload then arms an impossibly tight hard
+    // SLA (deadline at 1% of the completion lower bound), so the next
+    // dispatched round rejects its DAG with an error ticket — proving
+    // the reload snapshot is taken per dispatch, not per submission.
+    let service = Service::start(ServiceConfig {
+        batch_window: Duration::from_millis(30),
+        ..Default::default()
+    });
+    let handle = service.handle();
+
+    let before = handle.submit("a", dag1()).expect("admitted");
+    let r1 = before
+        .recv_timeout(Duration::from_secs(120))
+        .expect("served under the pre-reload, SLA-off config");
+    assert!(r1.completion > 0.0 && r1.cost > 0.0);
+
+    handle.reload(ServiceConfig {
+        batch_window: Duration::from_millis(30),
+        sla: SlaPolicy {
+            deadline_frac: 0.01,
+            penalty_per_sec: 0.0,
+            hard: true,
+            enforce: true,
+        },
+        ..Default::default()
+    });
+    let after = handle.submit("a", dag1()).expect("admission still accepts");
+    let err = after
+        .recv_timeout(Duration::from_secs(60))
+        .expect_err("the post-reload round must reject the DAG");
+    let msg = format!("{err}");
+    assert!(msg.contains("rejected"), "unexpected error: {msg}");
+    assert!(msg.contains("hard deadline"), "unexpected error: {msg}");
+    assert!(handle.status().rejected >= 1);
+
+    // Rejection does not wedge the service: disarm and serve again.
+    handle.reload(ServiceConfig {
+        batch_window: Duration::from_millis(30),
+        ..Default::default()
+    });
+    let t3 = handle.submit("a", dag2()).expect("admitted");
+    let r3 = t3.recv_timeout(Duration::from_secs(120)).expect("served");
+    assert!(r3.completion > 0.0 && r3.cost > 0.0);
     service.shutdown().expect("clean shutdown");
 }
 

@@ -1,0 +1,256 @@
+//! Deadline/SLA differential corpus: AGORA's simulated annealing vs the
+//! CEDCES-style evolutionary baseline on hand-checkable market problems,
+//! plus the bit-identity contract of [`Goal::DeadlineCost`].
+//!
+//! The problems are built so the global optimum is computable by hand: a
+//! one-node cluster (16 vCPUs / 64 GiB) admits exactly four catalog rows
+//! (m5.4xlarge and c5.4xlarge, on-demand and spot; r5.4xlarge needs
+//! 128 GiB and is excluded), zero-noise/zero-contention profiles make
+//! per-task cost separable across four strictly distinct levels, and the
+//! cheapest row is c5.4xlarge:spot at $0.272/h over a 1.18 speed factor.
+//! Both searches must land on that optimum, which pins:
+//!
+//!   * SA cost is never worse than the GA at an equal evaluation budget
+//!     (and both schedules pass Eq. 4 `validate`),
+//!   * a binding hard deadline forces both searches onto the fast c5
+//!     family, still at the spot price,
+//!   * `Goal::DeadlineCost` with only unbounded SLAs is bit-identical
+//!     to `Goal::Cost` — same seed, same walk, same schedule.
+
+use agora::baselines::{EvolutionaryScheduler, Scheduler};
+use agora::cluster::{catalog, Capacity, Config, ConfigSpace, CostModel};
+use agora::dag::{Dag, Task, TaskProfile};
+use agora::predictor::OraclePredictor;
+use agora::solver::{Agora, AgoraOptions, AnnealParams, Goal, Mode, Sla};
+use agora::Predictor;
+
+/// Deterministic profile: zero noise, zero contention, tiny working set —
+/// runtime at 1 node of a 16-vCPU row is exactly `work / speed_factor`.
+fn exact_profile(work: f64) -> TaskProfile {
+    TaskProfile {
+        work,
+        alpha: 0.0,
+        beta: 0.0,
+        mem_gb: 4.0,
+        spark_affinity: 0.0,
+        noise_sigma: 0.0,
+    }
+}
+
+fn exact_task(name: &str, work: f64) -> Task {
+    Task {
+        name: name.to_string(),
+        profile: exact_profile(work),
+    }
+}
+
+/// Market problem with raw spot prices (no interruption surcharge).
+fn market_problem(dags: &[Dag], capacity: Capacity) -> agora::solver::Problem {
+    let space = ConfigSpace::market();
+    let profiles: Vec<_> = dags
+        .iter()
+        .flat_map(|d| d.tasks.iter().map(|t| t.profile.clone()))
+        .collect();
+    let grid = OraclePredictor { profiles }.predict(&space);
+    let releases = vec![0.0; dags.len()];
+    agora::solver::Problem::new(
+        dags,
+        &releases,
+        capacity,
+        space,
+        grid,
+        CostModel::Market { interrupt_rate: 0.0 },
+    )
+}
+
+/// One node's worth of capacity: the four 4xlarge m5/c5 rows, one node
+/// each, are the entire feasible set.
+fn one_node() -> Capacity {
+    Capacity::new(16.0, 64.0)
+}
+
+/// Index of a named catalog row x nodes x balanced preset in a space.
+fn market_config(space: &ConfigSpace, name: &str, nodes: u32) -> usize {
+    let instance = catalog::index_by_name(name).expect("catalog row");
+    space
+        .configs
+        .iter()
+        .position(|c| {
+            *c == Config {
+                instance,
+                nodes,
+                spark: 1,
+            }
+        })
+        .expect("market space carries every catalog row on the full ladder")
+}
+
+/// SA co-optimizer under [`Goal::DeadlineCost`] with a generous budget.
+fn sa_plan(p: &agora::solver::Problem, evals: usize) -> agora::solver::Plan {
+    Agora::new(AgoraOptions {
+        goal: Goal::DeadlineCost,
+        mode: Mode::CoOptimize,
+        params: AnnealParams {
+            max_iters: evals,
+            patience: evals,
+            ..AnnealParams::fast()
+        },
+        seed: 0xD1FF,
+        ..Default::default()
+    })
+    .optimize(p)
+}
+
+// ---------------------------------------------------------------------------
+// 1. Equal evaluation budget: SA cost never worse than the CEDCES-style
+//    GA, and the GA itself sits exactly on the hand-computed global
+//    minimum (all tasks on c5.4xlarge:spot).
+
+#[test]
+fn sa_matches_evolutionary_baseline_at_equal_eval_budget() {
+    let dag = Dag::new(
+        "budget",
+        vec![exact_task("a", 50.0), exact_task("b", 30.0)],
+        vec![],
+    )
+    .unwrap();
+    let dags = vec![dag];
+    // Loose bounded soft SLA: the deadline-cost machinery is armed but
+    // the penalty term is zero at every reachable makespan, so fitness
+    // and energy both reduce to pure dollar cost.
+    let p = market_problem(&dags, one_node()).with_slas(vec![Sla::soft(1e6, 0.01)]);
+
+    let evals = 800;
+    let sa = sa_plan(&p, evals);
+    sa.schedule.validate(&p).expect("SA schedule Eq. 4 feasible");
+
+    let ga = EvolutionaryScheduler::with_budget(evals);
+    assert_eq!(ga.evals(), evals, "budget sizing drifted");
+    let ga_s = ga.schedule(&p).expect("GA schedule");
+    ga_s.validate(&p).expect("GA schedule Eq. 4 feasible");
+    let ga_cost = ga_s.cost(&p);
+
+    // Hand pin: cost is separable and c5.4xlarge:spot is the strict
+    // per-task minimum ($0.272/h over speed 1.18; the alternatives are
+    // $0.2688/1.0, $0.680/1.18, $0.768/1.0 per unit work-hour).
+    let want = 0.272 * ((50.0 + 30.0) / 1.18) / 3600.0;
+    assert!(
+        (ga_cost - want).abs() < 1e-9,
+        "GA missed the global cost minimum: {ga_cost} vs {want}"
+    );
+    let c5_spot_1 = market_config(&p.space, "c5.4xlarge:spot", 1);
+    for &c in &ga_s.assignment {
+        assert_eq!(
+            p.space.configs[c].instance, p.space.configs[c5_spot_1].instance,
+            "GA assignment off the cheapest row"
+        );
+    }
+
+    // The headline differential: at the same evaluation budget the
+    // annealer is never worse than the evolutionary baseline.
+    assert!(
+        sa.cost <= ga_cost + 1e-9,
+        "SA cost {} worse than GA cost {} at {} evaluations",
+        sa.cost,
+        ga_cost,
+        evals
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 2. A binding hard deadline: the all-m5 plans miss it, so both searches
+//    must buy the fast c5 family — and still take the spot discount.
+
+#[test]
+fn hard_deadline_forces_the_fast_family_for_both_searches() {
+    let dag = Dag::new(
+        "deadline-chain",
+        vec![exact_task("a", 60.0), exact_task("b", 60.0)],
+        vec![(0, 1)],
+    )
+    .unwrap();
+    let dags = vec![dag];
+    // Chain makespans by family mix: m5+m5 = 120, m5+c5 = 60 + 60/1.18
+    // ~ 110.85, c5+c5 = 120/1.18 ~ 101.69. Deadline 115 rules out the
+    // all-m5 plan but leaves a single-task repair path feasible, so the
+    // SA walk can cross the feasibility boundary one move at a time.
+    let deadline = 115.0;
+    let p = market_problem(&dags, one_node()).with_slas(vec![Sla::hard(deadline)]);
+
+    let sa = sa_plan(&p, 600);
+    sa.schedule.validate(&p).expect("SA schedule Eq. 4 feasible");
+
+    let ga = EvolutionaryScheduler::with_budget(600);
+    let ga_s = ga.schedule(&p).expect("GA schedule");
+    ga_s.validate(&p).expect("GA schedule Eq. 4 feasible");
+
+    // Cheapest deadline-feasible plan: both tasks on c5.4xlarge:spot
+    // (the only cheaper row, m5.4xlarge:spot, is slower and any m5 task
+    // keeps the chain above the one-m5 makespan).
+    let want_cost = 0.272 * (120.0 / 1.18) / 3600.0;
+    let want_makespan = 120.0 / 1.18;
+
+    for (label, makespan, cost) in [
+        ("sa", sa.makespan, sa.cost),
+        ("ga", ga_s.makespan(&p), ga_s.cost(&p)),
+    ] {
+        assert!(
+            makespan <= deadline + 1e-9,
+            "{label} missed the hard deadline: {makespan} > {deadline}"
+        );
+        assert!(
+            (makespan - want_makespan).abs() < 1e-9,
+            "{label} makespan {makespan} vs {want_makespan}"
+        );
+        assert!(
+            (cost - want_cost).abs() < 1e-9,
+            "{label} cost {cost} vs {want_cost}"
+        );
+    }
+    assert!(sa.cost <= ga_s.cost(&p) + 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Bit-identity: DeadlineCost with only unbounded SLAs is Goal::Cost.
+
+#[test]
+fn deadline_cost_with_unbounded_slas_is_bit_identical_to_cost() {
+    let dag = Dag::new(
+        "identity",
+        vec![
+            exact_task("a", 40.0),
+            exact_task("b", 25.0),
+            exact_task("c", 10.0),
+        ],
+        vec![(0, 2)],
+    )
+    .unwrap();
+    let dags = vec![dag];
+    // No with_slas call: Problem::new defaults every DAG to Sla::none(),
+    // which the objective's SLA fold skips entirely.
+    let p = market_problem(&dags, one_node());
+    assert!(p.slas.iter().all(|s| s.is_unbounded()));
+
+    let optimize = |goal| {
+        Agora::new(AgoraOptions {
+            goal,
+            mode: Mode::CoOptimize,
+            params: AnnealParams {
+                max_iters: 300,
+                ..AnnealParams::fast()
+            },
+            seed: 0xB17,
+            ..Default::default()
+        })
+        .optimize(&p)
+    };
+    let dc = optimize(Goal::DeadlineCost);
+    let cost = optimize(Goal::Cost);
+
+    // Same seed, same energy arithmetic, same walk: the plans agree to
+    // the last bit.
+    assert_eq!(dc.makespan.to_bits(), cost.makespan.to_bits());
+    assert_eq!(dc.cost.to_bits(), cost.cost.to_bits());
+    assert_eq!(dc.schedule.assignment, cost.schedule.assignment);
+    assert_eq!(dc.schedule.start, cost.schedule.start);
+}

@@ -630,6 +630,153 @@ fn trigger_policy_batches_cover_all_submissions_once() {
 }
 
 #[test]
+fn hard_sla_plans_that_promise_the_deadline_deliver_it() {
+    // Deadline-cost planning + zero-noise execution: whenever the plan
+    // itself promises every hard deadline, the realized run (replanning
+    // off, no divergence injected) delivers it. A plan that already
+    // misses is the admission layer's domain (reject/defer), not this
+    // invariant's — those draws are skipped.
+    use agora::solver::Sla;
+    propcheck::check(12, |rng| {
+        let mut dag = arbitrary_dag(rng, 8);
+        for t in dag.tasks.iter_mut() {
+            t.profile.noise_sigma = 0.0;
+        }
+        let dags = vec![dag];
+        let p = oracle_problem(dags.clone(), Capacity::micro());
+        let lb = p.dag_lower_bounds()[0];
+        let deadline = lb * rng.uniform(1.5, 3.0);
+        let p = p.with_slas(vec![Sla::hard(deadline)]);
+
+        let plan = Agora::new(AgoraOptions {
+            goal: Goal::DeadlineCost,
+            mode: Mode::CoOptimize,
+            params: AnnealParams {
+                max_iters: 80,
+                patience: 80,
+                ..AnnealParams::fast()
+            },
+            seed: rng.next_u64(),
+            ..Default::default()
+        })
+        .optimize(&p);
+        plan.schedule.validate(&p).map_err(|e| e.to_string())?;
+        if plan.schedule.dag_completion(&p, 0) > deadline {
+            return Ok(()); // planned miss: admission's reject/defer path
+        }
+
+        let report = execute_with_policy(
+            &p,
+            &dags,
+            &plan.schedule,
+            &CostModel::OnDemand,
+            &mut Rng::new(rng.next_u64()),
+            &ReplanPolicy::off(),
+        );
+        if report.dag_completion[0] > deadline + 1e-6 {
+            return Err(format!(
+                "plan promised {deadline}, realized {} with no divergence",
+                report.dag_completion[0]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn admission_never_rejects_provably_feasible_dags() {
+    // The admission layer's only provable-reject predicate is
+    // Problem::sla_infeasible — a hard deadline below the release-aware
+    // critical-path lower bound. Any deadline at or above that bound
+    // must therefore never be flagged, whatever the DAG shape.
+    use agora::solver::Sla;
+    propcheck::check(20, |rng| {
+        let dags = vec![arbitrary_dag(rng, 10), arbitrary_dag(rng, 6)];
+        let p = oracle_problem(dags, Capacity::micro());
+        let slas: Vec<Sla> = p
+            .dag_lower_bounds()
+            .iter()
+            .map(|&lb| Sla::hard(lb * rng.uniform(1.0, 3.0)))
+            .collect();
+        let p = p.with_slas(slas);
+        let flagged = p.sla_infeasible();
+        if flagged.iter().any(|&x| x) {
+            return Err(format!(
+                "deadline >= lower bound flagged infeasible: {flagged:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sla_accounting_invariants_hold_on_random_traces() {
+    // Macro-level bookkeeping, any policy knobs: every executed DAG is
+    // counted exactly once as met or missed, penalties are non-negative
+    // and exactly zero without misses (or without a penalty rate), and
+    // rejection requires enforced hard SLAs.
+    use agora::coordinator::{BatchRunner, SlaPolicy, Strategy};
+    use agora::trace::{generate, TraceParams};
+    propcheck::check(4, |rng| {
+        let params = TraceParams::tiny();
+        let jobs = generate(&params, rng);
+        let policy = SlaPolicy {
+            deadline_frac: rng.uniform(0.5, 2.5),
+            penalty_per_sec: if rng.chance(0.5) { 0.0 } else { 0.05 },
+            hard: rng.chance(0.5),
+            enforce: rng.chance(0.5),
+        };
+        let mut runner = BatchRunner::new(
+            params.batch_capacity(),
+            ConfigSpace::standard(),
+            Strategy::AgoraMode(Goal::DeadlineCost, Mode::Separate),
+            rng.next_u64(),
+        )
+        .with_sla(policy.clone());
+        let report = runner.run(&jobs).map_err(|e| e.to_string())?;
+
+        if report.sla_met + report.sla_missed != report.outcomes.len() {
+            return Err(format!(
+                "{} outcomes but {} met + {} missed",
+                report.outcomes.len(),
+                report.sla_met,
+                report.sla_missed
+            ));
+        }
+        if report.outcomes.len() + report.rejected != jobs.len() {
+            return Err(format!(
+                "{} jobs != {} executed + {} rejected",
+                jobs.len(),
+                report.outcomes.len(),
+                report.rejected
+            ));
+        }
+        if !(report.penalty_cost >= 0.0 && report.penalty_cost.is_finite()) {
+            return Err(format!("bad penalty cost {}", report.penalty_cost));
+        }
+        if report.sla_missed == 0 && report.penalty_cost != 0.0 {
+            return Err(format!(
+                "no misses but penalty cost {}",
+                report.penalty_cost
+            ));
+        }
+        if policy.penalty_per_sec == 0.0 && report.penalty_cost != 0.0 {
+            return Err(format!(
+                "zero penalty rate accrued {}",
+                report.penalty_cost
+            ));
+        }
+        if !(policy.hard && policy.enforce) && report.rejected != 0 {
+            return Err(format!(
+                "{} rejections without enforced hard SLAs",
+                report.rejected
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn per_task_best_is_locally_optimal() {
     use agora::solver::cooptimizer::per_task_best;
     propcheck::check(20, |rng| {

@@ -32,6 +32,13 @@
 //!  10. seeded spot market batch  — bitwise determinism of a seeded
 //!                                  preemption process with replanning
 //!                                  armed on the market space
+//!  11. deadline-at-risk flip     — a pinned spot preemption pushes a
+//!                                  hard-SLA DAG past its deadline; the
+//!                                  SLA-aware policy migrates exactly
+//!                                  the at-risk cone to on-demand c5
+//!                                  and meets the deadline, with exact
+//!                                  makespan/cost pins; the SLA-blind
+//!                                  policy provably misses
 
 use agora::cluster::{catalog, Capacity, Config, ConfigSpace, CostModel, Family};
 use agora::dag::generator::arbitrary_dag;
@@ -41,7 +48,7 @@ use agora::sim::{
     execute, execute_with_policy, CapacityOutage, DivergenceSpec, ExecutionReport,
     ReplanPolicy,
 };
-use agora::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Schedule};
+use agora::solver::{Agora, AgoraOptions, Goal, Mode, Problem, Schedule, Sla};
 use agora::util::Rng;
 use agora::Predictor;
 
@@ -878,4 +885,106 @@ fn scenario_seeded_spot_market_batch_is_bitwise_deterministic() {
     let longest = a.records.iter().map(|r| r.runtime).fold(0.0, f64::max);
     assert!(a.makespan >= longest - 1e-6);
     assert!(a.cost > 0.0 && a.cost.is_finite());
+}
+
+// ---------------------------------------------------------------------------
+// 11. Deadline-at-risk spot migration: a pinned preemption pushes a
+//     hard-SLA DAG past its deadline without crossing the divergence
+//     threshold. The SLA-blind policy therefore never replans and
+//     misses; the SLA-aware policy (same policy + spot surcharge) fires
+//     the deadline-risk trigger, flips exactly the at-risk cone to the
+//     cheapest on-demand row (c5.4xlarge), and meets the deadline.
+
+#[test]
+fn scenario_deadline_at_risk_cone_flips_spot_to_on_demand() {
+    // Chain a -> c on a one-node cluster (16 vCPUs / 64 GiB): the only
+    // feasible rows are 1 x m5.4xlarge and 1 x c5.4xlarge, on-demand
+    // and spot. Both tasks planned on the m5 spot row: makespan 20.
+    let dag = Dag::new(
+        "sla-flip",
+        vec![exact_task("a", 10.0), exact_task("c", 10.0)],
+        vec![(0, 1)],
+    )
+    .unwrap();
+    let dags = vec![dag];
+    let p = market_problem(&dags, Capacity::new(16.0, 64.0), 0.0)
+        .with_slas(vec![Sla::hard(24.0)]);
+    let m5_spot_1 = market_config(&p.space, "m5.4xlarge:spot", 1);
+    let plan = manual_plan(&p, m5_spot_1, &[0.0, 10.0]);
+
+    // Task a is preempted once (pinned): runs 0-15 (10 x 1.5). Its
+    // divergence is (15 - 10) / 20 = 0.25, below the 0.5 threshold, so
+    // only the deadline-risk rule can trigger a replan — and the
+    // projected completion 15 + 10 = 25 misses the hard deadline 24.
+    let divergence = DivergenceSpec {
+        spot_tasks: vec![0],
+        ..Default::default()
+    };
+    let blind_policy = ReplanPolicy {
+        threshold: 0.5,
+        max_replans: 1,
+        iters: 80,
+        goal: Goal::Cost,
+        divergence,
+        ..Default::default()
+    };
+    let aware_policy = ReplanPolicy {
+        sla_spot_penalty: 10.0,
+        ..blind_policy.clone()
+    };
+    let model = CostModel::Market { interrupt_rate: 0.0 };
+
+    let blind =
+        execute_with_policy(&p, &dags, &plan, &model, &mut Rng::new(1100), &blind_policy);
+    let run = |seed| {
+        execute_with_policy(&p, &dags, &plan, &model, &mut Rng::new(seed), &aware_policy)
+    };
+    let aware = run(1100);
+    assert_reports_bit_identical(&aware, &run(1100));
+
+    // SLA-blind: no replan fires (divergence under threshold), so the
+    // DAG finishes at 25 on the stale spot plan — a hard miss.
+    assert!(blind.replans.is_empty());
+    assert_eq!(blind.records[0].preemptions, 1);
+    assert!((blind.records[0].runtime - 15.0).abs() < 1e-9);
+    assert!((blind.makespan - 25.0).abs() < 1e-9, "blind {}", blind.makespan);
+    assert!(blind.dag_completion[0] > 24.0, "blind must miss the deadline");
+    let spot_hourly = p.space.configs[m5_spot_1].hourly_cost();
+    let blind_cost = spot_hourly * (15.0 + 10.0) / 3600.0;
+    assert!((blind.cost - blind_cost).abs() < 1e-9, "blind cost {}", blind.cost);
+
+    // SLA-aware: a's completion at t=15 fires the deadline-risk trigger
+    // despite div 0.25 <= 0.5; the cone {c} flips to the cheapest
+    // on-demand row — c5.4xlarge, one node — and the DAG meets 24.
+    assert_eq!(aware.replans.len(), 1);
+    let e = &aware.replans[0];
+    assert_eq!(e.trigger_task, 0);
+    assert!((e.at - 15.0).abs() < 1e-9);
+    assert!((e.divergence - 0.25).abs() < 1e-9);
+    assert_eq!(e.replanned, 1);
+    assert_eq!(e.reassigned, 1);
+    assert!((e.stale_makespan - 25.0).abs() < 1e-9);
+
+    let cfg = p.space.configs[aware.records[1].config];
+    assert!(!cfg.is_spot(), "at-risk cone must leave spot capacity");
+    assert_eq!(cfg.family(), Family::C5);
+    assert_eq!(cfg.nodes, 1);
+    let d_c = 10.0 / 1.18; // 10 s of work at 1 node, c5 speed
+    assert!((aware.records[1].start - 15.0).abs() < 1e-9);
+    assert!((aware.records[1].runtime - d_c).abs() < 1e-9);
+    assert!((aware.makespan - (15.0 + d_c)).abs() < 1e-9, "aware {}", aware.makespan);
+    assert!((e.planned_makespan - (15.0 + d_c)).abs() < 1e-9);
+    assert!(
+        aware.dag_completion[0] <= 24.0 + 1e-9,
+        "aware must meet the hard deadline: {}",
+        aware.dag_completion[0]
+    );
+    // The preempted record itself is immutable history.
+    assert_eq!(aware.records[0].preemptions, 1);
+    assert!((aware.records[0].runtime - 15.0).abs() < 1e-9);
+    // Realized market cost: a at the spot price for its inflated run,
+    // the migrated c at the on-demand c5 price.
+    let c5_hourly = cfg.hourly_cost();
+    let want_cost = spot_hourly * 15.0 / 3600.0 + c5_hourly * d_c / 3600.0;
+    assert!((aware.cost - want_cost).abs() < 1e-9, "aware cost {}", aware.cost);
 }
