@@ -96,6 +96,18 @@ fn main() {
         let quad = portfolio_anneal(&p, &obj, &vec![c0; p.len()], &quad_params, 4, common::SEED);
         let quad_time = t2.elapsed();
 
+        // Adaptive engine (calibrated T0 + equilibrium loops + restarts)
+        // at the same charged budget: the warmup samples and restart
+        // reseeds are billed against the same max_iters the fixed chain
+        // spends, so the gap column is an equal-cost comparison.
+        let adaptive_params = AnnealParams {
+            patience: AnnealParams::fast().max_iters,
+            ..AnnealParams::fast()
+        }
+        .adaptive();
+        let mut arng = Rng::new(common::SEED);
+        let adaptive = anneal(&p, &obj, &vec![c0; p.len()], &adaptive_params, &mut arng);
+
         rows.push(vec![
             jobs.to_string(),
             format!("{:.1e}", search_space_size(jobs, space.len())),
@@ -113,6 +125,7 @@ fn main() {
                 bench::speedup(sa_time, quad_time)
             ),
             format!("{:+.1}%", (quad.energy - bf.energy) * 100.0),
+            format!("{:+.1}%", (adaptive.energy - bf.energy) * 100.0),
         ]);
     }
     bench::table(
@@ -125,6 +138,7 @@ fn main() {
             "AGORA gap vs BF",
             "portfolio x4 time",
             "portfolio gap vs BF",
+            "adaptive gap vs BF",
         ],
         &rows,
     );

@@ -8,10 +8,21 @@
 //!   * one full annealing iteration (propose + solve + accept),
 //!   * full co-optimization of DAG1+DAG2,
 //!   * host-predictor grid construction,
-//!   * PJRT predictor grid construction (when artifacts are present).
+//!   * PJRT predictor grid construction (when artifacts are present),
+//!   * adaptive vs fixed search engine at an equal charged budget, and
+//!     the destructive UB-ladder vs the one-shot exact CP solve.
+//!
+//! `cargo bench --bench perf_hotpath -- --smoke` skips the timing rows
+//! and runs only the deterministic equal-budget quality duel — the CI
+//! pin that the adaptive engine (calibrated T0 + equilibrium loops +
+//! restart-on-stall) is at least as good as the fixed engine at the
+//! same evaluation budget. Both modes write `BENCH_search.json` at the
+//! repo root.
 
 #[path = "common/mod.rs"]
 mod common;
+
+use std::path::Path;
 
 use agora::bench;
 use agora::dag::workloads::{dag1, dag2};
@@ -19,11 +30,15 @@ use agora::runtime::{ArtifactManifest, Engine, PjrtPredictor};
 use agora::solver::cp::{CpSolver, Limits};
 use agora::solver::sgs;
 use agora::solver::{anneal, portfolio_anneal, Agora, AgoraOptions, AnnealParams, Goal, Objective};
-use agora::util::Rng;
+use agora::util::{Json, Rng};
 use agora::{LearnedPredictor, Predictor};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     bench::header("Perf", "L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf harness)");
+    if smoke {
+        println!("mode: smoke (--smoke) — equal-budget search-engine duel only\n");
+    }
 
     let mut rng = Rng::new(common::SEED);
     let (p, dags) = common::learned_problem(vec![dag1(), dag2()], &mut rng);
@@ -31,9 +46,18 @@ fn main() {
     let assignment = vec![c0; p.len()];
     let _ = &dags;
 
+    if !smoke {
+        timing_rows(&p, &dags, &assignment);
+    }
+    search_engine_duel(smoke);
+}
+
+/// The historical microbenchmark rows (skipped under `--smoke`).
+fn timing_rows(p: &agora::solver::Problem, dags: &[agora::Dag], assignment: &[usize]) {
+    let assignment = assignment.to_vec();
     let mut results = Vec::new();
 
-    let prio = sgs::priorities(&p, &assignment, sgs::Rule::CriticalPath);
+    let prio = sgs::priorities(p, &assignment, sgs::Rule::CriticalPath);
     results.push(bench::measure("serial SGS (16 tasks)", 50, 500, || {
         let s = sgs::serial_sgs(&p, &assignment, &prio).expect("feasible assignment");
         std::hint::black_box(s.start[0]);
@@ -160,4 +184,161 @@ fn main() {
             })
             .collect::<Vec<_>>(),
     );
+}
+
+/// Equal-budget quality duel: the adaptive engine (calibrated T0,
+/// equilibrium inner loops, restart-on-stall) vs the fixed engine at the
+/// same `max_iters`. The adaptive side's warmup samples and restart
+/// reseeds are charged against that budget, so neither engine sees more
+/// evaluations than the other. Asserts the adaptive sum is at least as
+/// good with >= 1 strict per-case win, checks the UB-ladder against the
+/// one-shot exact CP solve, and writes `BENCH_search.json`.
+fn search_engine_duel(smoke: bool) {
+    let budget = 240usize;
+    let seeds = [11u64, 12, 13];
+    let instances = vec![
+        ("dag1", vec![dag1()]),
+        ("dag2", vec![dag2()]),
+        ("dag1+dag2", vec![dag1(), dag2()]),
+    ];
+    let fixed_params = AnnealParams {
+        max_iters: budget,
+        patience: budget,
+        t0: Some(0.05), // pinned: no warmup, the full budget is Metropolis moves
+        ..Default::default()
+    };
+    let adaptive_params = AnnealParams {
+        max_iters: budget,
+        patience: budget,
+        ..Default::default()
+    }
+    .adaptive();
+
+    println!(
+        "\n-- adaptive vs fixed search engine, {budget} charged evaluations, \
+         {} instances x {} seeds --",
+        instances.len(),
+        seeds.len()
+    );
+    let mut rows = Vec::new();
+    let mut cases = Vec::new();
+    let (mut sum_fixed, mut sum_adaptive) = (0.0f64, 0.0f64);
+    let mut strict_wins = 0usize;
+    for (name, dags) in instances {
+        let (p, _) = common::learned_problem(dags, &mut Rng::new(common::SEED));
+        let c0 = Agora::default_config(&p.space);
+        let init = vec![c0; p.len()];
+        let (s0, _) = CpSolver::new(Limits::default())
+            .solve(&p, &init)
+            .expect("default assignment is feasible");
+        let obj = Objective::new(Goal::Balanced, s0.makespan(&p), s0.cost(&p));
+        for &seed in &seeds {
+            let fixed = anneal(&p, &obj, &init, &fixed_params, &mut Rng::new(seed));
+            let adaptive = anneal(&p, &obj, &init, &adaptive_params, &mut Rng::new(seed));
+            sum_fixed += fixed.energy;
+            sum_adaptive += adaptive.energy;
+            let win = adaptive.energy < fixed.energy - 1e-9;
+            strict_wins += win as usize;
+            rows.push(vec![
+                name.to_string(),
+                seed.to_string(),
+                format!("{:.4}", fixed.energy),
+                format!("{:.4}", adaptive.energy),
+                adaptive.stats.restarts.to_string(),
+                adaptive
+                    .stats
+                    .calibrated_t0
+                    .map(|t| format!("{t:.5}"))
+                    .unwrap_or_default(),
+            ]);
+            cases.push(Json::obj(vec![
+                ("instance", Json::str(name)),
+                ("seed", Json::num(seed as f64)),
+                ("fixed_energy", Json::num(fixed.energy)),
+                ("adaptive_energy", Json::num(adaptive.energy)),
+                ("fixed_evaluations", Json::num(fixed.stats.evaluations as f64)),
+                (
+                    "adaptive_evaluations",
+                    Json::num(adaptive.stats.evaluations as f64),
+                ),
+                ("adaptive_restarts", Json::num(adaptive.stats.restarts as f64)),
+                (
+                    "calibrated_t0",
+                    adaptive.stats.calibrated_t0.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ]));
+        }
+    }
+    bench::table(
+        &["instance", "seed", "fixed energy", "adaptive energy", "restarts", "calibrated T0"],
+        &rows,
+    );
+    println!(
+        "\nsummed energy over all cases: fixed {sum_fixed:.4}, adaptive {sum_adaptive:.4} \
+         ({strict_wins} strict adaptive wins)"
+    );
+    assert!(
+        sum_adaptive <= sum_fixed + 1e-9,
+        "adaptive engine lost the equal-budget duel: {sum_adaptive:.4} vs {sum_fixed:.4}"
+    );
+    assert!(
+        strict_wins >= 1,
+        "adaptive engine never strictly beat the fixed engine"
+    );
+
+    // UB-ladder vs one-shot exact: same proved optimum on the 16-task
+    // figure workload.
+    let (p, _) = common::learned_problem(vec![dag1(), dag2()], &mut Rng::new(common::SEED));
+    let c0 = Agora::default_config(&p.space);
+    let a0 = vec![c0; p.len()];
+    let (exact_s, exact_stats) = CpSolver::new(Limits::exact())
+        .solve(&p, &a0)
+        .expect("feasible default assignment");
+    let (ladder_s, ladder_stats) = CpSolver::new(Limits::ladder())
+        .solve_ladder(&p, &a0)
+        .expect("feasible default assignment");
+    println!(
+        "\nCP polish: exact makespan {:.2}s (proved {}), ladder makespan {:.2}s \
+         (proved {}, {} rungs)",
+        exact_s.makespan(&p),
+        exact_stats.proved_optimal,
+        ladder_s.makespan(&p),
+        ladder_stats.proved_optimal,
+        ladder_stats.rungs
+    );
+    if exact_stats.proved_optimal && ladder_stats.proved_optimal {
+        assert!(
+            (exact_s.makespan(&p) - ladder_s.makespan(&p)).abs() <= 1e-9,
+            "ladder proved a different optimum: {} vs {}",
+            ladder_s.makespan(&p),
+            exact_s.makespan(&p)
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("perf_hotpath")),
+        ("provenance", Json::str("measured")),
+        ("smoke", Json::Bool(smoke)),
+        ("seed", Json::num(common::SEED as f64)),
+        ("budget", Json::num(budget as f64)),
+        ("sum_fixed_energy", Json::num(sum_fixed)),
+        ("sum_adaptive_energy", Json::num(sum_adaptive)),
+        ("strict_adaptive_wins", Json::num(strict_wins as f64)),
+        ("cases", Json::Arr(cases)),
+        (
+            "ladder",
+            Json::obj(vec![
+                ("exact_makespan", Json::num(exact_s.makespan(&p))),
+                ("ladder_makespan", Json::num(ladder_s.makespan(&p))),
+                ("exact_proved", Json::Bool(exact_stats.proved_optimal)),
+                ("ladder_proved", Json::Bool(ladder_stats.proved_optimal)),
+                ("rungs", Json::num(ladder_stats.rungs as f64)),
+            ]),
+        ),
+    ]);
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_search.json");
+    match std::fs::write(&out, doc.to_pretty() + "\n") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
 }

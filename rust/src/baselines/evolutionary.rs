@@ -92,10 +92,19 @@ impl EvolutionaryScheduler {
     }
 
     /// CEDCES repair: upgrade random tasks of deadline-violating DAGs
-    /// to their fastest feasible configuration.
-    fn repair(&self, p: &Problem, genome: &mut [usize], rng: &mut Rng) -> Result<()> {
+    /// to their fastest feasible configuration. Every repair probe is a
+    /// schedule decode and is charged to `decodes` — the historically
+    /// uncounted part of the GA's budget.
+    fn repair(
+        &self,
+        p: &Problem,
+        genome: &mut [usize],
+        rng: &mut Rng,
+        decodes: &mut usize,
+    ) -> Result<()> {
         for _ in 0..self.repairs {
             let s = Self::decode(p, genome)?;
+            *decodes += 1;
             let violating: Vec<usize> = p
                 .slas
                 .iter()
@@ -122,12 +131,14 @@ impl EvolutionaryScheduler {
     }
 }
 
-impl Scheduler for EvolutionaryScheduler {
-    fn name(&self) -> &'static str {
-        "cedces-ga"
-    }
-
-    fn schedule(&self, p: &Problem) -> Result<Schedule> {
+impl EvolutionaryScheduler {
+    /// Like [`Scheduler::schedule`], but also returns the number of
+    /// schedule decodes actually spent — fitness evaluations *and* repair
+    /// probes (the final materialization of the winner is excluded, like
+    /// SA's polish). This is the budget currency for fair equal-cost
+    /// duels against the annealer.
+    pub fn schedule_counted(&self, p: &Problem) -> Result<(Schedule, usize)> {
+        let mut decodes = 0usize;
         let n = p.len();
         let mut rng = Rng::new(self.seed);
         let pop_size = self.population.max(2);
@@ -157,8 +168,9 @@ impl Scheduler for EvolutionaryScheduler {
 
         let mut scored: Vec<(f64, Vec<usize>)> = Vec::with_capacity(pop_size);
         for mut genome in population {
-            self.repair(p, &mut genome, &mut rng)?;
+            self.repair(p, &mut genome, &mut rng, &mut decodes)?;
             let s = Self::decode(p, &genome)?;
+            decodes += 1;
             scored.push((Self::fitness(p, &s), genome));
         }
         scored.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -185,15 +197,26 @@ impl Scheduler for EvolutionaryScheduler {
                         *gene = *rng.choice(&p.feasible);
                     }
                 }
-                self.repair(p, &mut child, &mut rng)?;
+                self.repair(p, &mut child, &mut rng, &mut decodes)?;
                 let s = Self::decode(p, &child)?;
+                decodes += 1;
                 next.push((Self::fitness(p, &s), child));
             }
             next.sort_by(|a, b| a.0.total_cmp(&b.0));
             scored = next;
         }
 
-        Self::decode(p, &scored[0].1)
+        Ok((Self::decode(p, &scored[0].1)?, decodes))
+    }
+}
+
+impl Scheduler for EvolutionaryScheduler {
+    fn name(&self) -> &'static str {
+        "cedces-ga"
+    }
+
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
+        self.schedule_counted(p).map(|(s, _)| s)
     }
 }
 
@@ -265,5 +288,26 @@ mod tests {
         assert_eq!(ga.population, 16);
         assert_eq!(ga.generations, 24);
         assert_eq!(ga.evals(), 400);
+    }
+
+    #[test]
+    fn counted_decodes_cover_fitness_and_repair_probes() {
+        let p = problem(vec![dag1()]);
+        let ga = EvolutionaryScheduler {
+            population: 8,
+            generations: 4,
+            ..Default::default()
+        };
+        let (s, decodes) = ga.schedule_counted(&p).unwrap();
+        s.validate(&p).unwrap();
+        // One fitness decode per evaluated genome (the elite clone is
+        // carried over, not re-decoded) plus one repair probe each —
+        // nothing violates without SLAs, so repair stops after its first
+        // decode. The nominal `evals()` never counted the probes.
+        let evaluated = ga.population + ga.generations * (ga.population - 1);
+        assert_eq!(decodes, 2 * evaluated, "fitness + one repair probe each");
+        let (s2, decodes2) = ga.schedule_counted(&p).unwrap();
+        assert_eq!(s.assignment, s2.assignment);
+        assert_eq!(decodes, decodes2, "counting must be deterministic");
     }
 }

@@ -118,6 +118,11 @@ impl AppConfig {
         ("makespan-budget", "Eq. 7 budget in seconds"),
         ("cost-budget", "Eq. 8 budget in dollars"),
         ("max-iters", "annealing iteration cap"),
+        ("sa-target-accept", "calibrate T0 to this start-acceptance ratio (statistical cooling)"),
+        ("sa-equilibrium", "hold SA temperature for equilibrium-length inner loops"),
+        ("sa-stall-iters", "SA restart-on-stall patience in iterations (0 = off)"),
+        ("sa-reheat", "restart reheat as a fraction of the starting temperature"),
+        ("cp-ladder", "run one-shot/polish CP solves as a destructive UB ladder"),
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
         ("admission", "rounds | continuous (trace/serve batch admission)"),
         ("workers", "serve: optimization worker threads (1 = deterministic legacy stream)"),
@@ -175,6 +180,21 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("max_iters") {
             c.anneal.max_iters = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("sa_target_accept") {
+            c.anneal.target_acceptance = Some(x.as_f64()?);
+        }
+        if let Some(x) = v.opt("sa_equilibrium") {
+            c.anneal.equilibrium = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("sa_stall_iters") {
+            c.anneal.stall_iters = x.as_usize()?;
+        }
+        if let Some(x) = v.opt("sa_reheat") {
+            c.anneal.reheat = x.as_f64()?;
+        }
+        if let Some(x) = v.opt("cp_ladder") {
+            c.anneal.cp_ladder = x.as_bool()?;
         }
         if let Some(x) = v.opt("parallelism") {
             c.parallelism = x.as_usize()?.max(1);
@@ -270,6 +290,15 @@ impl AppConfig {
         self.makespan_budget = args.f64_or("makespan-budget", self.makespan_budget)?;
         self.cost_budget = args.f64_or("cost-budget", self.cost_budget)?;
         self.anneal.max_iters = args.usize_or("max-iters", self.anneal.max_iters)?;
+        if args.has("sa-target-accept") {
+            self.anneal.target_acceptance =
+                Some(args.f64_or("sa-target-accept", 0.8)?);
+        }
+        self.anneal.equilibrium = args.bool_or("sa-equilibrium", self.anneal.equilibrium)?;
+        self.anneal.stall_iters =
+            args.usize_or("sa-stall-iters", self.anneal.stall_iters)?;
+        self.anneal.reheat = args.f64_or("sa-reheat", self.anneal.reheat)?;
+        self.anneal.cp_ladder = args.bool_or("cp-ladder", self.anneal.cp_ladder)?;
         self.parallelism = args.usize_or("parallelism", self.parallelism)?.max(1);
         if let Some(s) = args.get("admission") {
             self.admission = parse_admission(s)?;
@@ -661,6 +690,53 @@ mod tests {
             .unwrap();
         assert_eq!(c.deadline_frac, 3.0);
         assert_eq!(c.sla_penalty, 0.5);
+    }
+
+    #[test]
+    fn adaptive_search_flags_parse_from_cli_and_json() {
+        // Defaults: every adaptive-search knob off — the legacy engine.
+        let c = AppConfig::default();
+        assert_eq!(c.anneal.target_acceptance, None);
+        assert!(!c.anneal.equilibrium);
+        assert_eq!(c.anneal.stall_iters, 0);
+        assert_eq!(c.anneal.reheat, 0.5);
+        assert!(!c.anneal.cp_ladder);
+
+        let c = AppConfig::resolve(&args(&[
+            "optimize",
+            "--sa-target-accept",
+            "0.7",
+            "--sa-equilibrium",
+            "--sa-stall-iters",
+            "120",
+            "--sa-reheat",
+            "0.25",
+            "--cp-ladder",
+        ]))
+        .unwrap();
+        assert_eq!(c.anneal.target_acceptance, Some(0.7));
+        assert!(c.anneal.equilibrium);
+        assert_eq!(c.anneal.stall_iters, 120);
+        assert_eq!(c.anneal.reheat, 0.25);
+        assert!(c.anneal.cp_ladder);
+
+        // JSON path + CLI override.
+        let v = Json::parse(
+            r#"{"sa_target_accept": 0.9, "sa_equilibrium": true,
+                "sa_stall_iters": 64, "sa_reheat": 0.75, "cp_ladder": true}"#,
+        )
+        .unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        assert_eq!(base.anneal.target_acceptance, Some(0.9));
+        assert!(base.anneal.equilibrium);
+        assert_eq!(base.anneal.stall_iters, 64);
+        assert_eq!(base.anneal.reheat, 0.75);
+        assert!(base.anneal.cp_ladder);
+        let c = base
+            .apply_args(&args(&["optimize", "--sa-stall-iters", "32"]))
+            .unwrap();
+        assert_eq!(c.anneal.stall_iters, 32);
+        assert_eq!(c.anneal.target_acceptance, Some(0.9));
     }
 
     #[test]

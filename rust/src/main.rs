@@ -153,6 +153,15 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
             "annealing: {} iterations, {} accepted, {} improvements, {} CP nodes",
             a.stats.iterations, a.stats.accepted, a.stats.improved, a.stats.inner_nodes
         );
+        println!(
+            "adaptive:  {} evaluations, {} restarts{}",
+            a.stats.evaluations,
+            a.stats.restarts,
+            match a.stats.calibrated_t0 {
+                Some(t0) => format!(", calibrated T0 {t0:.5}"),
+                None => String::new(),
+            }
+        );
     }
     println!("\n{}", plan.schedule.render(&p));
 

@@ -43,7 +43,7 @@ use super::cp::{CpSolver, Limits};
 use super::objective::Objective;
 use super::rcpsp::Problem;
 use super::schedule::Schedule;
-use super::sgs::IncrementalSgs;
+use super::sgs::{self, IncrementalSgs};
 use crate::util::Rng;
 
 /// Annealing hyper-parameters.
@@ -78,6 +78,33 @@ pub struct AnnealParams {
     /// Poll/publish the portfolio exchange every N iterations
     /// (0 = never; irrelevant outside portfolio mode).
     pub exchange_interval: usize,
+    /// Target start-of-search acceptance ratio for statistical-cooling
+    /// calibration (Aarts & Van Laarhoven): with `t0 = None` and this
+    /// set, T0 is estimated from the warmup sample's mean *uphill* delta
+    /// as `mean(dE+) / ln(1/chi0)`, so a chain starts accepting roughly
+    /// `chi0` of its regressions at every problem size — and the warmup
+    /// evaluations are charged against the chain's iteration budget.
+    /// `None` preserves the historical uncharged mean-|dE| heuristic.
+    pub target_acceptance: Option<f64>,
+    /// Hold the temperature for an equilibrium-length inner loop
+    /// (iterations per temperature step derived from the neighbourhood's
+    /// task dimension, à la Van Laarhoven) instead of cooling once per
+    /// move. The envelope is preserved: after L iterations at constant T
+    /// the chain cools by `cooling^L`. `false` = historical per-move
+    /// cooling.
+    pub equilibrium: bool,
+    /// Restart-on-stall: after this many iterations without improving
+    /// the chain's local best, reheat to `reheat * T0` and restart from a
+    /// diversified seed (incumbent perturbation on even restarts, DAGPS
+    /// troublesome-task-first reseed on odd restarts). `0` = off.
+    pub stall_iters: usize,
+    /// Fraction of the (calibrated or fixed) starting temperature the
+    /// chain reheats to on a stall restart.
+    pub reheat: f64,
+    /// Run the final polish (and the scheduler-only paths in the
+    /// co-optimizer) through the destructive UB-ladder CP mode
+    /// ([`CpSolver::solve_ladder`]) instead of a single default solve.
+    pub cp_ladder: bool,
 }
 
 impl Default for AnnealParams {
@@ -93,6 +120,11 @@ impl Default for AnnealParams {
             moves_per_proposal: 1,
             incremental: false,
             exchange_interval: 16,
+            target_acceptance: None,
+            equilibrium: false,
+            stall_iters: 0,
+            reheat: 0.5,
+            cp_ladder: false,
         }
     }
 }
@@ -113,6 +145,30 @@ impl AnnealParams {
             max_iters: 600,
             max_time: Duration::from_secs(10),
             ..Default::default()
+        }
+    }
+
+    /// Turn on the adaptive engine: acceptance-calibrated T0 (target
+    /// start-acceptance 0.8), equilibrium-length inner loops, and
+    /// restart-on-stall at a quarter of the iteration budget.
+    pub fn adaptive(mut self) -> Self {
+        self.t0 = None;
+        self.target_acceptance = Some(0.8);
+        self.equilibrium = true;
+        self.stall_iters = (self.max_iters / 4).max(16);
+        self
+    }
+
+    /// Equilibrium inner-loop length for an n-task neighbourhood: one
+    /// sweep of the first-order neighbourhood's task dimension (Van
+    /// Laarhoven's |N| proxy), clipped so a chain still visits several
+    /// temperature plateaus within its budget. 1 when the equilibrium
+    /// knob is off — i.e. the historical cool-every-move schedule.
+    pub fn equilibrium_len(&self, n: usize) -> usize {
+        if self.equilibrium {
+            n.max(1).min((self.max_iters / 8).max(1))
+        } else {
+            1
         }
     }
 }
@@ -220,6 +276,15 @@ pub struct AnnealStats {
     pub cache_hits: usize,
     /// Plans adopted from the portfolio exchange.
     pub adopted: usize,
+    /// Objective evaluations actually computed (memo hits excluded) —
+    /// the budget currency for equal-cost comparisons between search
+    /// engines. Excludes the final polish solve.
+    pub evaluations: usize,
+    /// Stall restarts taken (reheat + diversified reseed).
+    pub restarts: usize,
+    /// Acceptance-calibrated starting temperature, when the warmup
+    /// calibration ran with a target acceptance ratio.
+    pub calibrated_t0: Option<f64>,
 }
 
 /// Result of the co-optimization.
@@ -300,6 +365,7 @@ impl Evaluator {
                     .solve(p, assignment)
                     .expect("SA proposals draw from Problem::feasible, whose demands fit");
                 stats.inner_nodes += cp_stats.nodes;
+                stats.evaluations += 1;
                 let makespan = sched.makespan(p);
                 let cost = sched.cost(p);
                 if cache.len() < EVAL_CACHE_CAP {
@@ -318,6 +384,7 @@ impl Evaluator {
             }
             Evaluator::Incremental(inc) => {
                 let makespan = inc.evaluate(p, assignment);
+                stats.evaluations += 1;
                 (makespan, p.assignment_cost(assignment))
             }
         }
@@ -402,6 +469,34 @@ impl Exchange {
 // ---------------------------------------------------------------------------
 // The annealing chain.
 
+/// DAGPS/Graphene-style restart seed ("schedule the hard stuff first",
+/// Grandl et al.): score every task by how hard it is to pack under the
+/// incumbent (resource share x duration), then hand the most troublesome
+/// half their per-task fastest feasible configuration while the rest
+/// keep the incumbent's choice — a deterministic reseed that pulls the
+/// restarted walk toward a different basin than the one it stalled in.
+fn dagps_seed(p: &Problem, incumbent: &[usize]) -> Vec<usize> {
+    let score = sgs::priorities(p, incumbent, sgs::Rule::HardestToPack);
+    let mut order: Vec<usize> = (0..p.len()).collect();
+    order.sort_by(|&a, &b| score[b].total_cmp(&score[a]).then(a.cmp(&b)));
+    let mut seed = incumbent.to_vec();
+    for &t in order.iter().take(p.len().div_ceil(2)) {
+        // Fastest feasible config for this task; strict `<` keeps the
+        // lowest config index among duration ties (feasible is ascending).
+        let mut best_c = seed[t];
+        let mut best_d = f64::INFINITY;
+        for &c in &p.feasible {
+            let d = p.duration(t, c);
+            if d < best_d {
+                best_d = d;
+                best_c = c;
+            }
+        }
+        seed[t] = best_c;
+    }
+    seed
+}
+
 /// Algorithm 1: co-optimize configurations (SA) and schedule (CP).
 pub fn anneal(
     p: &Problem,
@@ -440,12 +535,61 @@ pub fn anneal_chain(
     let mut best_energy = cur_energy;
 
     // Warmup calibration: sample a few proposals to learn the energy
-    // scale, then set T0 so typical regressions are accepted with
-    // probability ~exp(-1) at the start and the walk turns greedy as the
-    // temperature cools.
-    let mut temperature = match params.t0 {
-        Some(t0) => t0 * params.t0_scale,
-        None => {
+    // scale. With a `target_acceptance` the statistical-cooling estimate
+    // (Aarts & Van Laarhoven) sets T0 = mean(dE+) / ln(1/chi0) so the
+    // start-of-search acceptance ratio is ~chi0 at every problem size,
+    // and the warmup evaluations are charged against the chain budget;
+    // without one, the historical uncharged mean-|dE| heuristic stands.
+    let mut temperature = match (params.t0, params.target_acceptance) {
+        (Some(t0), _) => t0 * params.t0_scale,
+        (None, Some(chi0)) => {
+            let chi0 = chi0.clamp(0.05, 0.99);
+            let warmup = 12.min(params.max_iters / 4).max(3);
+            let mut uphill = Vec::new();
+            for _ in 0..warmup {
+                if stats.iterations >= params.max_iters {
+                    break;
+                }
+                // Calibration samples are real objective evaluations:
+                // they spend the same budget the search loop does.
+                stats.iterations += 1;
+                let proposal = propose(p, &current, params.moves_per_proposal, rng);
+                let (makespan, cost) = evaluator.eval(p, &proposal, &mut stats);
+                let e = objective.energy(makespan, cost);
+                if e.is_finite() {
+                    let de = e - cur_energy;
+                    if de > 0.0 {
+                        uphill.push(de);
+                    }
+                    // Greedy seed: keep strict improvements found during
+                    // warmup (they are free information).
+                    if e < cur_energy {
+                        current = proposal;
+                        cur_makespan = makespan;
+                        cur_cost = cost;
+                        cur_energy = e;
+                        if e < best_energy {
+                            best = evaluator.take_schedule(&current);
+                            best_makespan = cur_makespan;
+                            best_cost = cur_cost;
+                            best_energy = e;
+                        }
+                    }
+                }
+                stats.trace.push(best_energy);
+            }
+            let mean = if uphill.is_empty() {
+                // All-downhill (or infeasible) warmup: no uphill scale to
+                // learn; fall back to the historical default scale.
+                0.01
+            } else {
+                uphill.iter().sum::<f64>() / uphill.len() as f64
+            };
+            let t0 = (mean / (1.0 / chi0).ln()).max(1e-4) * params.t0_scale;
+            stats.calibrated_t0 = Some(t0);
+            t0
+        }
+        (None, None) => {
             let warmup = 12.min(params.max_iters / 4).max(3);
             let mut des = Vec::new();
             for _ in 0..warmup {
@@ -478,6 +622,10 @@ pub fn anneal_chain(
             (0.8 * mean).max(1e-4) * params.t0_scale
         }
     };
+    // Reheat target for stall restarts: the (calibrated or fixed) T0.
+    let base_t0 = temperature;
+    let equilibrium_len = params.equilibrium_len(p.len());
+    let mut since_cool = 0usize;
     let mut stale = 0usize;
 
     if let Some(ex) = exchange {
@@ -566,17 +714,79 @@ pub fn anneal_chain(
             }
         }
 
-        temperature *= cooling;
+        // Cooling: one multiplicative step per move (historical), or —
+        // with equilibrium inner loops — hold T for `equilibrium_len`
+        // moves and then apply the same envelope in one step
+        // (`cooling^L`), so the temperature trajectory is preserved while
+        // the chain actually equilibrates at each plateau.
+        if equilibrium_len > 1 {
+            since_cool += 1;
+            if since_cool >= equilibrium_len {
+                temperature *= cooling.powi(equilibrium_len as i32);
+                since_cool = 0;
+            }
+        } else {
+            temperature *= cooling;
+        }
         stats.trace.push(best_energy);
+
+        // Restart-on-stall (Cruz-Chávez & Frausto-Solís): `stall_iters`
+        // moves without improving the local best means the chain is
+        // re-rejecting into a cold basin — reheat toward T0 and restart
+        // from a diversified seed instead of burning the rest of the
+        // budget. Even restarts kick the incumbent with a multi-move
+        // perturbation; odd restarts take the deterministic DAGPS
+        // troublesome-task-first reseed.
+        if params.stall_iters > 0
+            && stale >= params.stall_iters
+            && stats.iterations < params.max_iters
+        {
+            let r = stats.restarts;
+            stats.restarts += 1;
+            // The reseed evaluation is a real objective evaluation:
+            // charge it like any other iteration.
+            stats.iterations += 1;
+            let seed_assignment = if r % 2 == 0 {
+                propose(p, &best.assignment, (2 * params.moves_per_proposal).max(3), rng)
+            } else {
+                dagps_seed(p, &best.assignment)
+            };
+            let (makespan, cost) = evaluator.eval(p, &seed_assignment, &mut stats);
+            current = seed_assignment;
+            cur_makespan = makespan;
+            cur_cost = cost;
+            cur_energy = objective.energy(makespan, cost);
+            if cur_energy < best_energy - 1e-12 {
+                stats.improved += 1;
+                best = evaluator.take_schedule(&current);
+                best_makespan = cur_makespan;
+                best_cost = cur_cost;
+                best_energy = cur_energy;
+                if let Some(ex) = exchange {
+                    ex.publish(best_energy, &best, best_makespan, best_cost);
+                }
+            }
+            temperature = params.reheat.max(0.0) * base_t0;
+            stale = 0;
+            since_cool = 0;
+            stats.trace.push(best_energy);
+        }
     }
 
     // Final polish: one full-budget CP solve on the best configuration —
     // the inner loop runs with starved limits for speed (§Perf), so the
-    // winning assignment deserves an exact(-ish) schedule before returning.
-    let polish = CpSolver::new(Limits::default());
-    let (polished, _) = polish
-        .solve(p, &best.assignment)
-        .expect("the accepted incumbent was already scheduled feasibly");
+    // winning assignment deserves an exact(-ish) schedule before
+    // returning. With the ladder knob on, the polish runs the
+    // destructive UB-ladder instead of a single descent.
+    let (polished, _) = if params.cp_ladder {
+        CpSolver::new(Limits::ladder())
+            .solve_ladder(p, &best.assignment)
+            .expect("the accepted incumbent was already scheduled feasibly")
+    } else {
+        CpSolver::new(Limits::default())
+            .solve(p, &best.assignment)
+            .expect("the accepted incumbent was already scheduled feasibly")
+    };
     let pm = polished.makespan(p);
     let pc = polished.cost(p);
     let pe = objective.energy(pm, pc);
@@ -682,6 +892,8 @@ pub fn portfolio_anneal(
         agg.inner_nodes += r.stats.inner_nodes;
         agg.cache_hits += r.stats.cache_hits;
         agg.adopted += r.stats.adopted;
+        agg.evaluations += r.stats.evaluations;
+        agg.restarts += r.stats.restarts;
     }
     agg.wall_time = t_start.elapsed();
 
@@ -696,6 +908,7 @@ pub fn portfolio_anneal(
     }
     let mut best = best.expect("portfolio ran at least one chain");
     agg.trace = std::mem::take(&mut best.stats.trace);
+    agg.calibrated_t0 = best.stats.calibrated_t0;
     best.stats = agg;
     best
 }
@@ -947,6 +1160,118 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn adaptive_restarts_are_seed_deterministic() {
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams {
+            stall_iters: 40, // low patience-to-stall so restarts actually fire
+            ..AnnealParams::fast().adaptive()
+        };
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            anneal(&p, &obj, &init, &params, &mut rng)
+        };
+        let a = run(21);
+        let b = run(21);
+        a.schedule.validate(&p).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.schedule.assignment, b.schedule.assignment);
+        assert_eq!(a.stats.restarts, b.stats.restarts, "restart count must replay");
+        assert_eq!(a.stats.evaluations, b.stats.evaluations);
+        assert_eq!(a.stats.calibrated_t0, b.stats.calibrated_t0);
+        assert!(a.stats.calibrated_t0.is_some(), "adaptive preset calibrates T0");
+    }
+
+    #[test]
+    fn knobs_off_is_bit_identical_to_default_params() {
+        // Spelling every adaptive knob out in its off position must replay
+        // the default engine exactly — the legacy-path pin for this PR.
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let spelled_out = AnnealParams {
+            target_acceptance: None,
+            equilibrium: false,
+            stall_iters: 0,
+            reheat: 0.5,
+            cp_ladder: false,
+            ..AnnealParams::fast()
+        };
+        let run = |params: &AnnealParams| {
+            let mut rng = Rng::new(19);
+            anneal(&p, &obj, &init, params, &mut rng)
+        };
+        let a = run(&AnnealParams::fast());
+        let b = run(&spelled_out);
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+        assert_eq!(a.schedule.assignment, b.schedule.assignment);
+        assert_eq!(a.schedule.start, b.schedule.start);
+        assert_eq!(a.stats.restarts, 0, "no stall knob, no restarts");
+        assert_eq!(a.stats.calibrated_t0, None, "no target, no calibration");
+    }
+
+    #[test]
+    fn evaluations_count_the_computed_solves_exactly() {
+        // With a pinned T0 (no warmup) every iteration evaluates exactly
+        // one assignment, either computed or answered by the memo — so
+        // evaluations + cache_hits == iterations + 1 (the initial eval).
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams {
+            t0: Some(0.05),
+            ..AnnealParams::fast()
+        };
+        let mut rng = Rng::new(31);
+        let r = anneal(&p, &obj, &init, &params, &mut rng);
+        assert_eq!(
+            r.stats.evaluations + r.stats.cache_hits,
+            r.stats.iterations + 1,
+            "budget accounting must cover every eval exactly once"
+        );
+        assert!(r.stats.evaluations >= 1);
+    }
+
+    #[test]
+    fn stall_restart_fires_exactly_at_stall_iters() {
+        // A one-config search space is a perfect plateau: every proposal
+        // re-draws the same assignment, dE == 0 is accepted but never
+        // improves, so `stale` grows by one per iteration and a restart
+        // must fire exactly every `stall_iters` moves. Each restart also
+        // charges one iteration for its reseed evaluation, so a budget of
+        // `max_iters` buys exactly max_iters / (stall_iters + 1) restarts.
+        let mut p = problem();
+        let keep = p.feasible[0];
+        p.feasible = vec![keep];
+        let init = vec![keep; p.len()];
+        let solver = CpSolver::new(Limits::inner_loop());
+        let (s0, _) = solver.solve(&p, &init).unwrap();
+        let obj = Objective::new(Goal::Balanced, s0.makespan(&p), s0.cost(&p));
+        let params = AnnealParams {
+            t0: Some(0.1), // pinned: no warmup iterations
+            max_iters: 40,
+            patience: 10_000,
+            stall_iters: 7,
+            ..AnnealParams::fast()
+        };
+        let mut rng = Rng::new(5);
+        let r = anneal(&p, &obj, &init, &params, &mut rng);
+        assert_eq!(r.stats.iterations, 40, "the full budget is consumed");
+        assert_eq!(
+            r.stats.restarts,
+            40 / (7 + 1),
+            "one restart per stall_iters+1 charged iterations"
+        );
+        // The plateau has a single reachable assignment: the memo answers
+        // every re-evaluation after the first.
+        assert_eq!(r.stats.evaluations, 1);
+        assert_eq!(r.schedule.assignment, init);
     }
 
     #[test]

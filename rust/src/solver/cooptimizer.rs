@@ -256,9 +256,10 @@ impl Agora {
                 finish_plan(p, schedule, t0)
             }
             Mode::SchedulerOnly => {
-                // Default configs, exact schedule optimization.
-                let (schedule, _) = CpSolver::new(Limits::default())
-                    .solve(p, &default_assignment)
+                // Default configs, exact schedule optimization. The
+                // cp_ladder knob swaps in the destructive UB-ladder solve.
+                let (schedule, _) = self
+                    .one_shot_solve(p, &default_assignment)
                     .expect("the default configuration must fit the cluster capacity");
                 finish_plan(p, schedule, t0)
             }
@@ -266,13 +267,28 @@ impl Agora {
                 // Ernest-then-schedule: independently chosen configs, then
                 // exact schedule for those configs (no feedback loop).
                 let assignment = per_task_best(p, self.options.goal);
-                let (schedule, _) = CpSolver::new(Limits::default())
-                    .solve(p, &assignment)
+                let (schedule, _) = self
+                    .one_shot_solve(p, &assignment)
                     .expect("per-task-best assignments draw from Problem::feasible");
                 finish_plan(p, schedule, t0)
             }
         };
         plan
+    }
+
+    /// One-shot schedule optimization for the scheduler-only/separate
+    /// ablations: the default full-budget CP descent, or — with the
+    /// `cp_ladder` knob on — the destructive UB-ladder solve.
+    fn one_shot_solve(
+        &self,
+        p: &Problem,
+        assignment: &[usize],
+    ) -> anyhow::Result<(Schedule, super::cp::Stats)> {
+        if self.options.params.cp_ladder {
+            CpSolver::new(Limits::ladder()).solve_ladder(p, assignment)
+        } else {
+            CpSolver::new(Limits::default()).solve(p, assignment)
+        }
     }
 }
 

@@ -94,6 +94,18 @@ impl Limits {
             ..Limits::default()
         }
     }
+
+    /// Budgets for the destructive UB-ladder ([`CpSolver::solve_ladder`]):
+    /// default node/time budgets, envelope prune on. Inside the ladder
+    /// the prune is always sound — every rung only removes subtrees that
+    /// cannot beat the incumbent, and the ladder's contract is the final
+    /// incumbent, not a pinned traversal.
+    pub fn ladder() -> Self {
+        Limits {
+            envelope_prune: true,
+            ..Limits::default()
+        }
+    }
 }
 
 /// Solve statistics for overhead reporting (Fig. 10).
@@ -112,6 +124,12 @@ pub struct Stats {
     pub solve_time: Duration,
     /// Whether the search completed (schedule proven optimal).
     pub proved_optimal: bool,
+    /// UB-ladder rungs executed (0 outside [`CpSolver::solve_ladder`]).
+    pub rungs: u64,
+    /// Serial-SGS decodes spent on the incumbent (multistart rules +
+    /// noisy restarts) — part of the evaluation budget currency for fair
+    /// engine comparisons.
+    pub sgs_evals: u64,
 }
 
 /// The CP-style branch-and-bound scheduler (see module docs).
@@ -136,6 +154,11 @@ struct Search<'a> {
     /// scheduled-set -> end-time profile(s) seen (dominance store).
     seen: HashMap<u128, Vec<Vec<f64>>>,
     exhausted: bool,
+    /// Ladder mode: unwind the whole search as soon as one improving
+    /// solution is accepted (the rung's job is a single UB tightening).
+    first_solution: bool,
+    /// Whether the current (rung) search accepted an improving solution.
+    found: bool,
 }
 
 impl CpSolver {
@@ -191,7 +214,10 @@ impl CpSolver {
             deadline: t0 + self.limits.max_time,
             seen: HashMap::new(),
             exhausted: false,
+            first_solution: false,
+            found: false,
         };
+        search.stats.sgs_evals = (sgs::ALL_RULES.len() + self.limits.sgs_restarts) as u64;
 
         // Bitset dominance only works up to 128 tasks; beyond that the
         // anytime SGS result stands (macro-scale problems).
@@ -214,6 +240,116 @@ impl CpSolver {
         best.optimal = search.exhausted;
         let mut stats = search.stats;
         stats.proved_optimal = search.exhausted;
+        stats.solve_time = t0.elapsed();
+        Ok((best, stats))
+    }
+
+    /// Destructive UB-ladder solve (the DDD/incremental-SAT shape): seed
+    /// the incumbent once via multistart SGS, then run first-solution
+    /// branch-and-bound *rungs*, each re-searching from the root with the
+    /// upper bound tightened to the previous rung's `best_makespan − ε`.
+    /// The root [`Timeline`] seed, the precomputed per-task lower bounds
+    /// (`bottom`, `root_lb`) and the bottom-level branching order are
+    /// built once and reused across every rung; the node/time budgets are
+    /// global across the whole ladder, and [`Stats`] accumulates per-rung
+    /// (`rungs` counts them). Envelope pruning is forced on — inside the
+    /// ladder it is always sound, because each rung only removes subtrees
+    /// that cannot beat the current incumbent and the ladder's contract
+    /// is the final incumbent, not a pinned traversal.
+    ///
+    /// The dominance store is cleared between rungs: a witness recorded
+    /// during an aborted (first-solution) rung may cover a subtree that
+    /// was never fully explored, so carrying it over could prune the very
+    /// branch the next rung must descend. Within a rung the store is
+    /// sound as usual.
+    ///
+    /// Optimality: a rung that exhausts without finding an improvement
+    /// proves the incumbent optimal (no completion beats it); a rung that
+    /// hits the budget leaves the incumbent anytime-valid, unproven.
+    pub fn solve_ladder(&self, p: &Problem, assignment: &[usize]) -> Result<(Schedule, Stats)> {
+        let t0 = Instant::now();
+        assert_eq!(assignment.len(), p.len());
+
+        let mut limits = self.limits.clone();
+        limits.envelope_prune = true;
+
+        let mut rng = Rng::new(0xCB5A7);
+        let incumbent = sgs::multistart_sgs(p, assignment, limits.sgs_restarts, &mut rng)?;
+        let incumbent_makespan = incumbent.makespan(p);
+
+        let durations: Vec<f64> = (0..p.len())
+            .map(|t| p.duration(t, assignment[t]))
+            .collect();
+        let demands: Vec<(f64, f64)> = (0..p.len())
+            .map(|t| p.demand(assignment[t]))
+            .collect();
+        let bottom = {
+            let order = p.topo_order();
+            let mut b = vec![0.0f64; p.len()];
+            for &u in order.iter().rev() {
+                b[u] = durations[u]
+                    + p.succs(u).iter().map(|&v| b[v]).fold(0.0f64, f64::max);
+            }
+            b
+        };
+        let root_lb = p.lower_bound(assignment);
+
+        let mut search = Search {
+            p,
+            assignment,
+            durations,
+            demands,
+            bottom,
+            best: incumbent,
+            best_makespan: incumbent_makespan,
+            root_lb,
+            stats: Stats::default(),
+            limits: limits.clone(),
+            deadline: t0 + limits.max_time,
+            seen: HashMap::new(),
+            exhausted: false,
+            first_solution: true,
+            found: false,
+        };
+        search.stats.sgs_evals = (sgs::ALL_RULES.len() + limits.sgs_restarts) as u64;
+
+        let mut proved = incumbent_makespan <= root_lb + 1e-6;
+        if p.len() <= 128 && !proved {
+            let mut timeline =
+                Timeline::seeded(p.capacity.vcpus, p.capacity.memory_gb, &p.preplaced);
+            let root_mark = timeline.checkpoint();
+            let mut start = vec![0.0f64; p.len()];
+            let mut indeg: Vec<usize> = (0..p.len()).map(|t| p.preds(t).len()).collect();
+            loop {
+                search.stats.rungs += 1;
+                search.found = false;
+                search.exhausted = true;
+                search.seen.clear();
+                // Every DFS frame rolls back before returning, so the
+                // timeline is already at the root; the rollback makes the
+                // rung-reuse contract explicit (and is a cheap no-op).
+                timeline.rollback(root_mark);
+                search.dfs(0u128, &mut start, &mut indeg, &mut timeline, 0, 0.0);
+                if search.best_makespan <= root_lb + 1e-6 {
+                    proved = true; // UB met LB
+                    break;
+                }
+                if !search.exhausted {
+                    break; // global node/time budget ran out mid-rung
+                }
+                if !search.found {
+                    // A complete rung found nothing below the incumbent's
+                    // UB: the incumbent is the optimum.
+                    proved = true;
+                    break;
+                }
+            }
+        }
+
+        let mut best = search.best;
+        best.optimal = proved;
+        let mut stats = search.stats;
+        stats.proved_optimal = proved;
         stats.solve_time = t0.elapsed();
         Ok((best, stats))
     }
@@ -248,6 +384,7 @@ impl<'a> Search<'a> {
                     optimal: false,
                 };
                 self.best_makespan = max_end;
+                self.found = true;
             }
             return;
         }
@@ -351,6 +488,11 @@ impl<'a> Search<'a> {
                 indeg[v] += 1;
             }
 
+            // Ladder rung: one improving solution tightened the UB; the
+            // rung is done — unwind (every frame re-checks this flag).
+            if self.first_solution && self.found {
+                return;
+            }
             if self.best_makespan <= self.root_lb + 1e-6 {
                 return; // proven optimal
             }
@@ -594,6 +736,85 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn ladder_matches_exact_on_the_figure_workload() {
+        let p = problem_from(vec![dag1(), dag2()], Capacity::micro());
+        let assignment = vec![p.feasible[0]; p.len()];
+        let (exact, exact_stats) =
+            CpSolver::new(Limits::exact()).solve(&p, &assignment).unwrap();
+        let (ladder, ladder_stats) = CpSolver::new(Limits::ladder())
+            .solve_ladder(&p, &assignment)
+            .unwrap();
+        ladder.validate(&p).unwrap();
+        assert!(exact_stats.proved_optimal && ladder_stats.proved_optimal);
+        assert!(ladder.optimal);
+        assert!(
+            (exact.makespan(&p) - ladder.makespan(&p)).abs() <= 1e-9,
+            "ladder optimum {} != exact optimum {}",
+            ladder.makespan(&p),
+            exact.makespan(&p)
+        );
+        assert!(
+            ladder_stats.rungs >= 1
+                || ladder.makespan(&p) <= p.lower_bound(&assignment) + 1e-6,
+            "rungs only stay at zero when the seed incumbent meets the root LB"
+        );
+        assert!(
+            ladder_stats.sgs_evals >= sgs::ALL_RULES.len() as u64,
+            "incumbent seeding is charged to the budget currency"
+        );
+    }
+
+    #[test]
+    fn property_ladder_proves_the_same_optimum_as_exact() {
+        propcheck::check(10, |rng| {
+            let dag = arbitrary_dag(rng, 6);
+            let p = problem_from(vec![dag], Capacity::micro());
+            let assignment: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let (exact, exact_stats) = CpSolver::new(Limits::exact())
+                .solve(&p, &assignment)
+                .map_err(|e| e.to_string())?;
+            let (ladder, ladder_stats) = CpSolver::new(Limits::ladder())
+                .solve_ladder(&p, &assignment)
+                .map_err(|e| e.to_string())?;
+            ladder.validate(&p).map_err(|e| e.to_string())?;
+            if !(exact_stats.proved_optimal && ladder_stats.proved_optimal) {
+                return Err("6-task searches must complete under default budgets".into());
+            }
+            if (exact.makespan(&p) - ladder.makespan(&p)).abs() > 1e-9 {
+                return Err(format!(
+                    "ladder optimum {} != exact optimum {}",
+                    ladder.makespan(&p),
+                    exact.makespan(&p)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ladder_stays_anytime_valid_under_a_starved_budget() {
+        // A global node budget that dies mid-rung must still hand back a
+        // feasible (SGS-seeded or partially improved) incumbent, unproven.
+        let p = problem_from(vec![dag1(), dag2()], Capacity::micro());
+        let assignment = vec![p.feasible[0]; p.len()];
+        let (s, stats) = CpSolver::new(Limits {
+            max_nodes: 10,
+            max_time: Duration::from_millis(50),
+            sgs_restarts: 1,
+            envelope_prune: true,
+        })
+        .solve_ladder(&p, &assignment)
+        .unwrap();
+        s.validate(&p).unwrap();
+        if !stats.proved_optimal {
+            assert!(!s.optimal);
+        }
+        assert!(stats.rungs >= 1 || s.makespan(&p) <= p.lower_bound(&assignment) + 1e-6);
     }
 
     #[test]

@@ -97,16 +97,22 @@ pub fn priorities(p: &Problem, assignment: &[usize], rule: Rule) -> Vec<f64> {
 /// Implemented as Kahn's algorithm over a max-heap — O((n + E) log n)
 /// instead of the historical O(n²) full rescan per pick, which was the
 /// hidden quadratic blocker for 10⁴–10⁵-task DAGs once the timeline
-/// kernel itself went sub-quadratic. The heap reproduces the scan's
-/// semantics exactly: IEEE `>` ties the two zeros, so keys collapse
-/// `-0.0` onto `0.0` before ordering by `total_cmp`, and equal keys pop
-/// lowest-index-first. NaN priorities (which IEEE `>` cannot order — the
-/// scan's behaviour there is "first eligible wins and sticks") fall back
-/// to the verbatim historical scan, kept as the executable reference and
-/// pinned equivalent by a property test.
+/// kernel itself went sub-quadratic. Integer-valued priorities within a
+/// bounded range (count-like rules) take a heap-free counting-bucket
+/// Kahn instead ([`selection_order_buckets`]) — O(n + E) when the rule's
+/// priorities are non-increasing along precedence. The heap/bucket paths
+/// reproduce the scan's semantics exactly: IEEE `>` ties the two zeros,
+/// so keys collapse `-0.0` onto `0.0` before ordering by `total_cmp`,
+/// and equal keys pop lowest-index-first. NaN priorities (which IEEE `>`
+/// cannot order — the scan's behaviour there is "first eligible wins and
+/// sticks") fall back to the verbatim historical scan, kept as the
+/// executable reference and pinned equivalent by a property test.
 pub fn selection_order(p: &Problem, prio: &[f64]) -> Vec<usize> {
     if prio.iter().any(|v| v.is_nan()) {
         return selection_order_scan(p, prio);
+    }
+    if let Some(order) = selection_order_buckets(p, prio) {
+        return order;
     }
     let n = p.len();
     let mut n_unplaced_preds: Vec<usize> = (0..n).map(|t| p.preds(t).len()).collect();
@@ -171,6 +177,96 @@ impl PartialEq for Eligible {
 }
 
 impl Eq for Eligible {}
+
+/// Per-bucket tie cap of the counting-bucket fast path: the pop's
+/// lowest-index scan is O(bucket occupancy), so capping the static
+/// occupancy keeps every pop O(1) amortized; denser tie patterns fall
+/// back to the heap.
+const BUCKET_TIE_CAP: u32 = 32;
+
+/// Heap-free counting-bucket Kahn for *integer-valued* priorities — the
+/// common case for count-like rules (e.g. successor counts). Tasks live
+/// in buckets indexed by `prio - min`; the cursor walks down from the
+/// highest occupied bucket, and a newly eligible successor may raise it
+/// back up. Pops take the lowest task index within the bucket, which is
+/// exactly the heap's (and scan's) tie-break on the canonical key
+/// (`-0.0` collapses onto `0.0` via `+ 0.0` before keying).
+///
+/// Returns None — routing to the heap — unless every priority is a
+/// finite integer-valued float, the value range is at most `4 * n`
+/// (bucket storage stays O(n)), and no bucket holds more than
+/// [`BUCKET_TIE_CAP`] tasks. Within those gates a full pass is
+/// O(n + E + R) plus the total upward cursor movement, which is zero
+/// when priorities are non-increasing along precedence (true for
+/// successor counts: a task's count strictly exceeds each successor's).
+fn selection_order_buckets(p: &Problem, prio: &[f64]) -> Option<Vec<usize>> {
+    let n = p.len();
+    if n == 0 {
+        return Some(Vec::new());
+    }
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for &v in prio {
+        let v = v + 0.0;
+        if !v.is_finite() || v.fract() != 0.0 {
+            return None;
+        }
+        min = min.min(v);
+        max = max.max(v);
+    }
+    // Integer-valued floats more than one ULP apart subtract exactly, and
+    // closer ones are equal, so the keys below are exact within the gate.
+    if max - min > (4 * n.max(64)) as f64 {
+        return None;
+    }
+    let range = (max - min) as usize;
+    let key: Vec<usize> = prio.iter().map(|&v| ((v + 0.0) - min) as usize).collect();
+    let mut count = vec![0u32; range + 1];
+    for &k in &key {
+        count[k] += 1;
+        if count[k] > BUCKET_TIE_CAP {
+            return None;
+        }
+    }
+
+    let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); range + 1];
+    let mut n_unplaced_preds: Vec<usize> = (0..n).map(|t| p.preds(t).len()).collect();
+    let mut cursor = 0usize;
+    for t in 0..n {
+        if n_unplaced_preds[t] == 0 {
+            buckets[key[t]].push(t as u32);
+            cursor = cursor.max(key[t]);
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Invariant: every occupied bucket is at or below the cursor (it
+        // only descends past empties and is raised on every push), and an
+        // acyclic problem always has an eligible task, so the walk
+        // terminates before underflowing.
+        while buckets[cursor].is_empty() {
+            debug_assert!(cursor > 0, "acyclic problem always has an eligible task");
+            cursor -= 1;
+        }
+        let bucket = &mut buckets[cursor];
+        let mut at = 0;
+        for (i, &c) in bucket.iter().enumerate() {
+            if c < bucket[at] {
+                at = i;
+            }
+        }
+        let t = bucket.swap_remove(at) as usize;
+        order.push(t);
+        for &v in p.succs(t) {
+            n_unplaced_preds[v] -= 1;
+            if n_unplaced_preds[v] == 0 {
+                buckets[key[v]].push(v as u32);
+                cursor = cursor.max(key[v]);
+            }
+        }
+    }
+    Some(order)
+}
 
 /// The historical O(n²) selection scan, verbatim: the executable
 /// reference for the heap path (a property test pins them identical on
@@ -863,6 +959,67 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The counting-bucket fast path must be pick-for-pick identical to
+    /// the scan on all-integer priorities (the patterns that actually
+    /// route to it: dense ties under the cap, negatives, mixed zeros).
+    #[test]
+    fn property_selection_order_buckets_match_scan_on_integer_priorities() {
+        propcheck::check(60, |rng| {
+            let dag = arbitrary_dag(rng, 20);
+            let p = problem_from(vec![dag]);
+            let prio: Vec<f64> = (0..p.len())
+                .map(|_| match rng.below(4) {
+                    // Dense ties from a tiny value set (occupancy < cap).
+                    0 => rng.below(2) as f64,
+                    1 => -(rng.below(5) as f64),
+                    2 => if rng.chance(0.5) { -0.0 } else { 0.0 },
+                    _ => rng.below(40) as f64,
+                })
+                .collect();
+            let bucketed = selection_order_buckets(&p, &prio)
+                .ok_or_else(|| format!("integer priorities must bucket: {prio:?}"))?;
+            let slow = selection_order_scan(&p, &prio);
+            if bucketed != slow {
+                return Err(format!(
+                    "bucket order diverges for prio {prio:?}: {bucketed:?} vs scan {slow:?}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bucket_path_rejects_what_it_cannot_order() {
+        let p = problem_from(vec![dag1(), dag2()]);
+        let n = p.len();
+        assert!(n > 2, "need a few tasks");
+        // Non-integer priorities route to the heap.
+        assert!(selection_order_buckets(&p, &vec![0.5; n]).is_none());
+        // Infinities are not bucketable.
+        let mut inf = vec![1.0; n];
+        inf[0] = f64::INFINITY;
+        assert!(selection_order_buckets(&p, &inf).is_none());
+        // A range wider than 4n overflows the bucket array budget.
+        let mut wide = vec![0.0; n];
+        wide[0] = (8 * n.max(64)) as f64;
+        assert!(selection_order_buckets(&p, &wide).is_none());
+        // Integer ties denser than the cap fall back to the heap — and
+        // the public entry point still matches the scan there.
+        let big = problem_from(vec![dag1(), dag2(), dag1(), dag2(), dag1()]);
+        assert!(big.len() as u32 > BUCKET_TIE_CAP);
+        let flat = vec![3.0; big.len()];
+        assert!(selection_order_buckets(&big, &flat).is_none());
+        assert_eq!(selection_order(&big, &flat), selection_order_scan(&big, &flat));
+        // Successor counts are the motivating integer rule: bucketable,
+        // and identical through the public entry point.
+        let assignment = vec![p.feasible[0]; n];
+        let counts = priorities(&p, &assignment, Rule::MostSuccessors);
+        if let Some(b) = selection_order_buckets(&p, &counts) {
+            assert_eq!(b, selection_order_scan(&p, &counts));
+            assert_eq!(b, selection_order(&p, &counts));
+        }
     }
 
     #[test]
