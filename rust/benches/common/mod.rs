@@ -73,3 +73,25 @@ pub fn agora_plan(p: &Problem, goal: Goal, base_makespan: f64) -> agora::solver:
     })
     .optimize(p)
 }
+
+/// [`agora_plan`] with a short fast-parameter search — the `--smoke`
+/// variant for CI bench gates (same pipeline, reduced budget).
+pub fn agora_plan_quick(p: &Problem, goal: Goal, base_makespan: f64) -> agora::solver::Plan {
+    let (makespan_budget, cost_budget) = match goal {
+        Goal::Cost => (3.0 * base_makespan, f64::INFINITY),
+        _ => (f64::INFINITY, f64::INFINITY),
+    };
+    Agora::new(AgoraOptions {
+        goal,
+        mode: Mode::CoOptimize,
+        makespan_budget,
+        cost_budget,
+        seed: SEED,
+        params: agora::solver::AnnealParams {
+            max_iters: 150,
+            ..agora::solver::AnnealParams::fast()
+        },
+        ..Default::default()
+    })
+    .optimize(p)
+}

@@ -1,0 +1,138 @@
+//! DAGPS/Graphene-style troublesome-subgraph packing [Grandl et al.,
+//! OSDI 2016] — a topology-aware list scheduler that identifies the
+//! tasks hardest to place late (long, resource-skewed, deep) and packs
+//! them *first*, as whole precedence-connected subgraphs, before filling
+//! the remaining tasks in criticality order.
+//!
+//! Scoring and subgraph growth live in [`crate::solver::sgs`]
+//! ([`troublesome_scores`](crate::solver::sgs::troublesome_scores) /
+//! [`troublesome_components`](crate::solver::sgs::troublesome_components))
+//! so the same signal also seeds the annealer's portfolio and
+//! prioritizes the replanner's suffix cone:
+//!
+//! - every task is scored `(duration / max duration) × resource skew ×
+//!   (bottom level / max bottom level)` — normalized length times how
+//!   lopsided its CPU:memory demand is times how deep a chain hangs off
+//!   it;
+//! - tasks scoring at least half the maximum are *troublesome*, and the
+//!   maximal precedence-connected groups of troublesome tasks form the
+//!   subgraphs, ranked by their peak score;
+//! - [`Rule::Troublesome`](crate::solver::sgs::Rule::Troublesome) turns
+//!   the ranked subgraphs into serial-SGS priorities: each subgraph gets
+//!   a boost that dominates every plain criticality value, so subgraphs
+//!   are packed whole and in rank order onto the shared [`Timeline`]
+//!   before any filler task, and the remaining tasks follow by
+//!   criticality.
+//!
+//! [`Timeline`]: crate::solver::timeline::Timeline
+
+use anyhow::Result;
+
+use super::ernest::{ernest_selection, ErnestGoal};
+use super::Scheduler;
+use crate::solver::sgs::{priorities, serial_sgs, Rule};
+use crate::solver::{Problem, Schedule};
+
+/// Ernest VM selection + DAGPS troublesome-subgraph-first packing
+/// ("Ernest+DAGPS" in the fig7/fig11 baseline tables).
+#[derive(Debug, Clone)]
+pub struct DagpsScheduler {
+    /// How per-task configs are chosen before scheduling (same two-step
+    /// pipeline as the other Ernest-combined baselines).
+    pub ernest_goal: Option<ErnestGoal>,
+    /// Fixed assignment override (scheduler-only ablations).
+    pub assignment: Option<Vec<usize>>,
+}
+
+impl DagpsScheduler {
+    /// Two-step pipeline: Ernest picks configs, DAGPS packs them.
+    pub fn with_ernest(goal: ErnestGoal) -> Self {
+        DagpsScheduler {
+            ernest_goal: Some(goal),
+            assignment: None,
+        }
+    }
+
+    /// Schedule a fixed externally chosen assignment.
+    pub fn with_assignment(assignment: Vec<usize>) -> Self {
+        DagpsScheduler {
+            ernest_goal: None,
+            assignment: Some(assignment),
+        }
+    }
+}
+
+impl Scheduler for DagpsScheduler {
+    fn name(&self) -> &'static str {
+        "ernest+dagps"
+    }
+
+    fn schedule(&self, p: &Problem) -> Result<Schedule> {
+        let assignment = match (&self.assignment, self.ernest_goal) {
+            (Some(a), _) => a.clone(),
+            (None, Some(goal)) => ernest_selection(p, goal),
+            (None, None) => {
+                let c = crate::solver::cooptimizer::Agora::default_config(&p.space);
+                vec![c; p.len()]
+            }
+        };
+        let prio = priorities(p, &assignment, Rule::Troublesome);
+        serial_sgs(p, &assignment, &prio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Capacity, ConfigSpace, CostModel};
+    use crate::dag::workloads::{dag1, dag2};
+    use crate::predictor::OraclePredictor;
+    use crate::solver::Goal;
+    use crate::Predictor;
+
+    fn problem(dag: crate::Dag) -> Problem {
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dag.tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        Problem::new(
+            &[dag],
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        )
+    }
+
+    #[test]
+    fn valid_on_both_evaluation_dags() {
+        for dag in [dag1(), dag2()] {
+            let p = problem(dag);
+            let s = DagpsScheduler::with_ernest(ErnestGoal(Goal::Balanced))
+                .schedule(&p)
+                .unwrap();
+            s.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn fixed_assignment_is_respected() {
+        let p = problem(dag1());
+        let a = vec![p.feasible[3]; p.len()];
+        let s = DagpsScheduler::with_assignment(a.clone()).schedule(&p).unwrap();
+        assert_eq!(s.assignment, a);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let p = problem(dag2());
+        let run = || {
+            DagpsScheduler::with_ernest(ErnestGoal(Goal::Runtime))
+                .schedule(&p)
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.start, b.start);
+    }
+}

@@ -1,6 +1,7 @@
 //! Baseline schedulers from the paper's evaluation (§5.1): default
-//! Airflow, Ernest VM selection combined with Critical-Path and MILP
-//! scheduling, and Stratus cost-aware packing.
+//! Airflow, Ernest VM selection combined with Critical-Path, MILP and
+//! DAGPS troublesome-subgraph scheduling, and Stratus cost-aware
+//! packing.
 //!
 //! Every baseline implements [`Scheduler`] over the same extended-RCPSP
 //! [`Problem`] AGORA solves, so results are directly comparable and all
@@ -8,6 +9,7 @@
 
 pub mod airflow;
 pub mod critical_path;
+pub mod dagps;
 pub mod ernest;
 pub mod evolutionary;
 pub mod milp;
@@ -33,6 +35,7 @@ pub trait Scheduler {
 
 pub use airflow::AirflowScheduler;
 pub use critical_path::CriticalPathScheduler;
+pub use dagps::DagpsScheduler;
 pub use ernest::{ernest_selection, ErnestGoal};
 pub use evolutionary::EvolutionaryScheduler;
 pub use milp::MilpScheduler;
@@ -72,6 +75,7 @@ mod tests {
         let baselines: Vec<Box<dyn Scheduler>> = vec![
             Box::new(AirflowScheduler::default()),
             Box::new(CriticalPathScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
+            Box::new(DagpsScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
             Box::new(MilpScheduler::with_ernest(ErnestGoal::from(Goal::Balanced))),
             Box::new(StratusScheduler::default()),
             Box::new(EvolutionaryScheduler {

@@ -123,6 +123,7 @@ impl AppConfig {
         ("sa-stall-iters", "SA restart-on-stall patience in iterations (0 = off)"),
         ("sa-reheat", "restart reheat as a fraction of the starting temperature"),
         ("cp-ladder", "run one-shot/polish CP solves as a destructive UB ladder"),
+        ("sa-troublesome-seed", "seed one portfolio chain from the DAGPS troublesome-first reseed"),
         ("parallelism", "portfolio annealing chains (1 = deterministic single chain)"),
         ("admission", "rounds | continuous (trace/serve batch admission)"),
         ("workers", "serve: optimization worker threads (1 = deterministic legacy stream)"),
@@ -145,6 +146,7 @@ impl AppConfig {
         ("replan-outage-duration", "capacity outage length in seconds (0 = none)"),
         ("replan-outage-cpu", "fraction of cluster vCPUs lost during the outage"),
         ("replan-outage-mem", "fraction of cluster memory lost during the outage"),
+        ("replan-troublesome", "order the replan cone troublesome-first (DAGPS subgraph boosts)"),
         ("verbose", "chatty output"),
     ];
 
@@ -195,6 +197,9 @@ impl AppConfig {
         }
         if let Some(x) = v.opt("cp_ladder") {
             c.anneal.cp_ladder = x.as_bool()?;
+        }
+        if let Some(x) = v.opt("sa_troublesome_seed") {
+            c.anneal.troublesome_seed = x.as_bool()?;
         }
         if let Some(x) = v.opt("parallelism") {
             c.parallelism = x.as_usize()?.max(1);
@@ -264,6 +269,9 @@ impl AppConfig {
         if let Some(x) = v.opt("replan_outage_mem") {
             outage_mut(&mut c.replan).mem_fraction = x.as_f64()?;
         }
+        if let Some(x) = v.opt("replan_troublesome") {
+            c.replan.troublesome_cone = x.as_bool()?;
+        }
         Ok(c)
     }
 
@@ -299,6 +307,8 @@ impl AppConfig {
             args.usize_or("sa-stall-iters", self.anneal.stall_iters)?;
         self.anneal.reheat = args.f64_or("sa-reheat", self.anneal.reheat)?;
         self.anneal.cp_ladder = args.bool_or("cp-ladder", self.anneal.cp_ladder)?;
+        self.anneal.troublesome_seed =
+            args.bool_or("sa-troublesome-seed", self.anneal.troublesome_seed)?;
         self.parallelism = args.usize_or("parallelism", self.parallelism)?.max(1);
         if let Some(s) = args.get("admission") {
             self.admission = parse_admission(s)?;
@@ -345,6 +355,8 @@ impl AppConfig {
             outage_mut(&mut self.replan).mem_fraction =
                 args.f64_or("replan-outage-mem", 0.0)?;
         }
+        self.replan.troublesome_cone =
+            args.bool_or("replan-troublesome", self.replan.troublesome_cone)?;
         self.verbose = args.bool_or("verbose", self.verbose)?;
         Ok(self)
     }
@@ -737,6 +749,33 @@ mod tests {
             .unwrap();
         assert_eq!(c.anneal.stall_iters, 32);
         assert_eq!(c.anneal.target_acceptance, Some(0.9));
+    }
+
+    #[test]
+    fn troublesome_flags_parse_from_cli_and_json() {
+        // Defaults: both topology-aware knobs off — historical behaviour.
+        let c = AppConfig::default();
+        assert!(!c.anneal.troublesome_seed);
+        assert!(!c.replan.troublesome_cone);
+
+        let c = AppConfig::resolve(&args(&[
+            "optimize",
+            "--sa-troublesome-seed",
+            "--replan-troublesome",
+        ]))
+        .unwrap();
+        assert!(c.anneal.troublesome_seed);
+        assert!(c.replan.troublesome_cone);
+
+        // JSON path + CLI leaves the file's setting alone when absent.
+        let v = Json::parse(r#"{"sa_troublesome_seed": true, "replan_troublesome": true}"#)
+            .unwrap();
+        let base = AppConfig::from_json(&v).unwrap();
+        assert!(base.anneal.troublesome_seed);
+        assert!(base.replan.troublesome_cone);
+        let c = base.apply_args(&args(&["optimize"])).unwrap();
+        assert!(c.anneal.troublesome_seed);
+        assert!(c.replan.troublesome_cone);
     }
 
     #[test]

@@ -153,9 +153,30 @@ impl Dag {
         finish.into_iter().fold(0.0, f64::max)
     }
 
-    /// Per-task "criticality": length of the longest path through the task
-    /// (bottom level + top level - own duration). Used by CP-list baseline
-    /// and by the solver's branching order.
+    /// Per-task "criticality": length of the longest path through the task,
+    /// computed as top level + bottom level, where the top level is the
+    /// longest path ending at the task's *start* (own duration excluded)
+    /// and the bottom level is the longest path starting at the task (own
+    /// duration included) — so the task's duration is counted exactly
+    /// once. Used by CP-list baseline and by the solver's branching order.
+    ///
+    /// ```
+    /// use agora::dag::{Dag, Task, TaskProfile};
+    /// let task = |n: &str| Task {
+    ///     name: n.to_string(),
+    ///     profile: TaskProfile::example(),
+    /// };
+    /// // Diamond 0 -> {1, 2} -> 3 with durations [1, 5, 2, 1]: the
+    /// // critical path 0 -> 1 -> 3 has length 7, so every task on it
+    /// // scores 7 and the off-path task 2 scores 1 + 2 + 1 = 4.
+    /// let d = Dag::new(
+    ///     "diamond",
+    ///     vec![task("a"), task("b"), task("c"), task("d")],
+    ///     vec![(0, 1), (0, 2), (1, 3), (2, 3)],
+    /// )
+    /// .unwrap();
+    /// assert_eq!(d.criticality(&[1.0, 5.0, 2.0, 1.0]), vec![7.0, 7.0, 4.0, 7.0]);
+    /// ```
     pub fn criticality(&self, durations: &[f64]) -> Vec<f64> {
         let order = self.topo_order().expect("validated at construction");
         let n = self.len();
@@ -178,22 +199,36 @@ impl Dag {
 
     /// Transitive closure of the precedence relation as a boolean matrix
     /// (row r reaches column c). Used by schedule-invariant checks.
+    ///
+    /// Rows are packed into `u64` bitset words internally so each edge
+    /// merges its successor's row with word-wise ORs (64 columns per
+    /// operation, no per-edge row allocation), which keeps the closure
+    /// cheap on 10k-task DAGs; the expanded `Vec<Vec<bool>>` form is
+    /// materialized once at the end.
     pub fn reachability(&self) -> Vec<Vec<bool>> {
         let n = self.len();
         let order = self.topo_order().expect("validated at construction");
-        let mut reach = vec![vec![false; n]; n];
+        // Flat n x words bit matrix: row u occupies words [u*w, (u+1)*w).
+        // Walking tasks in reverse topological order means every
+        // successor's row is final before it is OR-ed into a predecessor.
+        let w = n.div_ceil(64);
+        let mut bits = vec![0u64; n * w];
         for &u in order.iter().rev() {
             for &v in &self.succs[u] {
-                reach[u][v] = true;
-                let row = reach[v].clone();
-                for (w, r) in row.into_iter().enumerate() {
-                    if r {
-                        reach[u][w] = true;
-                    }
+                bits[u * w + v / 64] |= 1u64 << (v % 64);
+                for k in 0..w {
+                    let word = bits[v * w + k];
+                    bits[u * w + k] |= word;
                 }
             }
         }
-        reach
+        (0..n)
+            .map(|u| {
+                (0..n)
+                    .map(|c| (bits[u * w + c / 64] >> (c % 64)) & 1 == 1)
+                    .collect()
+            })
+            .collect()
     }
 
     // -- JSON spec ----------------------------------------------------------
@@ -338,6 +373,46 @@ mod tests {
         assert!(r[0][1] && r[1][3]);
         assert!(!r[1][2]);
         assert!(!r[3][0]);
+    }
+
+    /// The pre-bitset `reachability` implementation (successor row cloned
+    /// per edge), kept verbatim as the behavioural reference for the
+    /// word-wise rewrite.
+    fn reference_reachability(d: &Dag) -> Vec<Vec<bool>> {
+        let n = d.len();
+        let order = d.topo_order().expect("validated at construction");
+        let mut reach = vec![vec![false; n]; n];
+        for &u in order.iter().rev() {
+            for &v in &d.succs[u] {
+                reach[u][v] = true;
+                let row = reach[v].clone();
+                for (w, r) in row.into_iter().enumerate() {
+                    if r {
+                        reach[u][w] = true;
+                    }
+                }
+            }
+        }
+        reach
+    }
+
+    #[test]
+    fn reachability_matches_row_clone_reference_on_random_dags() {
+        let mut rng = crate::util::Rng::new(0xB175E7);
+        for _ in 0..60 {
+            // Sizes straddle the 64-column word boundary so multi-word
+            // rows and the final partial word both get exercised.
+            let d = generator::arbitrary_dag(&mut rng, 90);
+            assert_eq!(d.reachability(), reference_reachability(&d));
+        }
+    }
+
+    #[test]
+    fn reachability_empty_and_singleton() {
+        let empty = Dag::new("e", vec![], vec![]).unwrap();
+        assert!(empty.reachability().is_empty());
+        let one = Dag::new("s", vec![task("a")], vec![]).unwrap();
+        assert_eq!(one.reachability(), vec![vec![false]]);
     }
 
     #[test]

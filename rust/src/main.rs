@@ -162,6 +162,14 @@ fn cmd_optimize(args: &Args, config: &AppConfig, execute: bool) -> Result<()> {
                 None => String::new(),
             }
         );
+        if config.anneal.troublesome_seed {
+            let host = if config.parallelism > 1 {
+                "chain 1"
+            } else {
+                "the single chain"
+            };
+            println!("seeding:   DAGPS troublesome-first reseed active on {host}");
+        }
     }
     println!("\n{}", plan.schedule.render(&p));
 

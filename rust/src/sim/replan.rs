@@ -234,6 +234,16 @@ pub struct ReplanPolicy {
     /// feasible. 0.0 (the default) disables the rule — replanning is
     /// then bit-identical to the SLA-blind search.
     pub sla_spot_penalty: f64,
+    /// Order the replan cone troublesome-first: the suffix evaluator
+    /// packs the cone with [`Rule::Troublesome`] (DAGPS subgraph boosts
+    /// over criticality) instead of plain [`Rule::CriticalPath`], so
+    /// at-risk heavy subgraphs grab residual capacity before filler
+    /// tasks. `false` (the default) keeps the historical criticality
+    /// order, bit-identical.
+    ///
+    /// [`Rule::Troublesome`]: crate::solver::sgs::Rule::Troublesome
+    /// [`Rule::CriticalPath`]: crate::solver::sgs::Rule::CriticalPath
+    pub troublesome_cone: bool,
 }
 
 impl Default for ReplanPolicy {
@@ -246,6 +256,7 @@ impl Default for ReplanPolicy {
             seed: 0x2EF1A,
             divergence: DivergenceSpec::default(),
             sla_spot_penalty: 0.0,
+            troublesome_cone: false,
         }
     }
 }
@@ -361,7 +372,20 @@ pub fn replan_suffix(
     policy: &ReplanPolicy,
     round: usize,
 ) -> SuffixPlan {
-    let mut sgs = SuffixSgs::new(p, incumbent, active, floor, fixed_end, preplaced);
+    let cone_rule = if policy.troublesome_cone {
+        crate::solver::sgs::Rule::Troublesome
+    } else {
+        crate::solver::sgs::Rule::CriticalPath
+    };
+    let mut sgs = SuffixSgs::with_rule(
+        p,
+        incumbent,
+        active,
+        floor,
+        fixed_end,
+        preplaced,
+        cone_rule,
+    );
     let committed_peak = preplaced
         .iter()
         .map(|&(s, d, _, _)| s + d)
@@ -549,6 +573,63 @@ mod tests {
         };
         assert_eq!(armed.for_round(0), armed);
         assert_eq!(armed.for_round(3).sla_spot_penalty, 10.0);
+    }
+
+    #[test]
+    fn troublesome_cone_defaults_off_and_survives_round_derivation() {
+        let base = ReplanPolicy::default();
+        assert!(!base.troublesome_cone);
+        let armed = ReplanPolicy {
+            troublesome_cone: true,
+            ..Default::default()
+        };
+        assert_eq!(armed.for_round(0), armed);
+        assert!(armed.for_round(3).troublesome_cone);
+    }
+
+    #[test]
+    fn troublesome_cone_replan_is_valid_under_both_orders() {
+        // A full-cone replan (trigger at t = 0, nothing committed) must
+        // produce a feasible suffix plan under both the historical
+        // critical-path cone order and the DAGPS troublesome-first order.
+        use crate::cluster::{Capacity, ConfigSpace, CostModel};
+        use crate::dag::workloads::dag2;
+        use crate::predictor::OraclePredictor;
+        use crate::Predictor;
+
+        let dags = vec![dag2()];
+        let space = ConfigSpace::standard();
+        let profiles: Vec<_> = dags[0].tasks.iter().map(|t| t.profile.clone()).collect();
+        let grid = OraclePredictor { profiles }.predict(&space);
+        let p = Problem::new(
+            &dags,
+            &[0.0],
+            Capacity::micro(),
+            space,
+            grid,
+            CostModel::OnDemand,
+        );
+
+        let incumbent = vec![p.feasible[0]; p.len()];
+        let active: Vec<usize> = (0..p.len()).collect();
+        let fixed_end = vec![0.0; p.len()];
+        for troublesome in [false, true] {
+            let policy = ReplanPolicy {
+                iters: 40,
+                troublesome_cone: troublesome,
+                ..ReplanPolicy::off()
+            };
+            let plan = replan_suffix(&p, &incumbent, &active, 0.0, &fixed_end, &[], &policy, 0);
+            assert_eq!(plan.assignment.len(), p.len());
+            for &c in &plan.assignment {
+                assert!(p.feasible.contains(&c), "cone escaped the feasible set");
+            }
+            assert!(
+                plan.makespan.is_finite() && plan.makespan > 0.0,
+                "degenerate cone makespan {} (troublesome={troublesome})",
+                plan.makespan
+            );
+        }
     }
 
     #[test]

@@ -105,6 +105,14 @@ pub struct AnnealParams {
     /// co-optimizer) through the destructive UB-ladder CP mode
     /// ([`CpSolver::solve_ladder`]) instead of a single default solve.
     pub cp_ladder: bool,
+    /// Seed the search from the DAGPS troublesome-task-first reseed of
+    /// the initial assignment (the most troublesome half of the tasks
+    /// start on their fastest per-task-feasible configuration). In
+    /// portfolio mode chain 1 starts from the seeded assignment while
+    /// chain 0 keeps the unseeded base walk; at parallelism 1 the single
+    /// chain starts from the seeded assignment directly. `false` =
+    /// historical behaviour, bit-identical.
+    pub troublesome_seed: bool,
 }
 
 impl Default for AnnealParams {
@@ -125,6 +133,7 @@ impl Default for AnnealParams {
             stall_iters: 0,
             reheat: 0.5,
             cp_ladder: false,
+            troublesome_seed: false,
         }
     }
 }
@@ -472,21 +481,29 @@ impl Exchange {
 /// DAGPS/Graphene-style restart seed ("schedule the hard stuff first",
 /// Grandl et al.): score every task by how hard it is to pack under the
 /// incumbent (resource share x duration), then hand the most troublesome
-/// half their per-task fastest feasible configuration while the rest
+/// half their fastest *per-task-feasible* configuration while the rest
 /// keep the incumbent's choice — a deterministic reseed that pulls the
 /// restarted walk toward a different basin than the one it stalled in.
+///
+/// "Per-task-feasible" matters: a config in `p.feasible` fits the
+/// cluster, but its duration model can still be degenerate for a given
+/// task (NaN/inf/non-positive rows from a predictor that never saw that
+/// shape). Such configs are skipped rather than adopted on raw duration.
 fn dagps_seed(p: &Problem, incumbent: &[usize]) -> Vec<usize> {
     let score = sgs::priorities(p, incumbent, sgs::Rule::HardestToPack);
     let mut order: Vec<usize> = (0..p.len()).collect();
     order.sort_by(|&a, &b| score[b].total_cmp(&score[a]).then(a.cmp(&b)));
     let mut seed = incumbent.to_vec();
     for &t in order.iter().take(p.len().div_ceil(2)) {
-        // Fastest feasible config for this task; strict `<` keeps the
+        // Fastest per-task-feasible config; strict `<` keeps the
         // lowest config index among duration ties (feasible is ascending).
         let mut best_c = seed[t];
         let mut best_d = f64::INFINITY;
         for &c in &p.feasible {
             let d = p.duration(t, c);
+            if !d.is_finite() || d <= 0.0 {
+                continue;
+            }
             if d < best_d {
                 best_d = d;
                 best_c = c;
@@ -849,9 +866,17 @@ pub fn portfolio_anneal(
     seed: u64,
 ) -> AnnealResult {
     let k = parallelism.max(1);
+    // Troublesome-first seeding (off by default): derive the DAGPS reseed
+    // of the initial assignment once. A single chain starts from it
+    // directly; a portfolio hands it to chain 1 only, so chain 0 remains
+    // the historical unseeded walk and the winner can never be worse than
+    // the unseeded single chain at the same parameters.
+    let seeded: Option<Vec<usize>> = params.troublesome_seed.then(|| dagps_seed(p, initial));
+    let seeded_ref: Option<&[usize]> = seeded.as_deref();
     if k == 1 {
         let mut rng = Rng::new(seed);
-        return anneal(p, objective, initial, params, &mut rng);
+        let start = seeded_ref.unwrap_or(initial);
+        return anneal(p, objective, start, params, &mut rng);
     }
 
     let t_start = Instant::now();
@@ -866,8 +891,13 @@ pub fn portfolio_anneal(
             .map(|(i, cp)| {
                 let ex = &exchange;
                 scope.spawn(move || {
+                    let start = if i == 1 {
+                        seeded_ref.unwrap_or(initial)
+                    } else {
+                        initial
+                    };
                     let mut rng = Rng::new(chain_seed(seed, i));
-                    anneal_chain(p, objective, initial, cp, &mut rng, Some(ex))
+                    anneal_chain(p, objective, start, cp, &mut rng, Some(ex))
                 })
             })
             .collect();
@@ -1200,6 +1230,7 @@ mod tests {
             stall_iters: 0,
             reheat: 0.5,
             cp_ladder: false,
+            troublesome_seed: false,
             ..AnnealParams::fast()
         };
         let run = |params: &AnnealParams| {
@@ -1315,6 +1346,121 @@ mod tests {
             saw_twin |= proposal.contains(&twin);
         }
         assert!(saw_twin, "purchase toggle never reached the on-demand twin");
+    }
+
+    #[test]
+    fn dagps_seed_picks_the_fastest_per_task_feasible_config() {
+        // The globally fastest config can be infeasible *for one task*:
+        // its duration row there is degenerate (zero — the predictor has
+        // no model for that shape on that config). The reseed must skip
+        // it and fall back to that task's fastest valid config; the old
+        // scan on duration alone would adopt the degenerate config, since
+        // 0.0 is the global duration minimum.
+        let mut p = problem();
+        assert!(p.feasible.len() >= 2, "need a fallback config to pin");
+
+        // Fastest config for `t` and, with `skip`, the runner-up it must
+        // fall back to once the fastest is poisoned.
+        let fastest = |p: &Problem, t: usize, skip: Option<usize>| {
+            let mut best_c = usize::MAX;
+            let mut best_d = f64::INFINITY;
+            for &c in &p.feasible {
+                if Some(c) == skip {
+                    continue;
+                }
+                let d = p.duration(t, c);
+                if d < best_d {
+                    best_d = d;
+                    best_c = c;
+                }
+            }
+            best_c
+        };
+        // Pick a uniform incumbent whose config is NOT the fastest for
+        // the most troublesome task: poisoning then can't perturb the
+        // troublesome ordering, because HardestToPack scores only read
+        // each task's own incumbent config, which stays untouched.
+        let (init, t_star, c_fast, c_next) = p
+            .feasible
+            .iter()
+            .find_map(|&c| {
+                let init = vec![c; p.len()];
+                let score = sgs::priorities(&p, &init, sgs::Rule::HardestToPack);
+                let t_star = (0..p.len())
+                    .max_by(|&a, &b| score[a].total_cmp(&score[b]).then(b.cmp(&a)))
+                    .unwrap();
+                let c_fast = fastest(&p, t_star, None);
+                (c != c_fast).then(|| (init, t_star, c_fast, fastest(&p, t_star, Some(c_fast))))
+            })
+            .expect("some feasible config is slower than the fastest");
+        assert_ne!(c_fast, c_next);
+
+        p.grid.durations[t_star][c_fast] = 0.0;
+        let seed = dagps_seed(&p, &init);
+        assert_ne!(
+            seed[t_star], c_fast,
+            "a config with a degenerate duration row must not be adopted"
+        );
+        assert_eq!(
+            seed[t_star], c_next,
+            "the fastest per-task-feasible config wins instead"
+        );
+        // Every reseeded task lands on a valid duration row.
+        for t in 0..p.len() {
+            let d = p.duration(t, seed[t]);
+            assert!(d.is_finite() && d > 0.0, "task {t} seeded onto duration {d}");
+        }
+    }
+
+    #[test]
+    fn troublesome_seed_at_parallelism_one_is_anneal_from_the_dagps_reseed() {
+        // With the knob on, a single-chain portfolio is exactly `anneal`
+        // started from the DAGPS reseed of the initial assignment — same
+        // RNG stream, bit-identical outputs.
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams {
+            troublesome_seed: true,
+            ..AnnealParams::fast()
+        };
+        let via_portfolio = portfolio_anneal(&p, &obj, &init, &params, 1, 0xD46);
+        let mut rng = Rng::new(0xD46);
+        let direct = anneal(&p, &obj, &dagps_seed(&p, &init), &params, &mut rng);
+        assert_eq!(via_portfolio.makespan.to_bits(), direct.makespan.to_bits());
+        assert_eq!(via_portfolio.cost.to_bits(), direct.cost.to_bits());
+        assert_eq!(
+            via_portfolio.schedule.assignment,
+            direct.schedule.assignment
+        );
+        assert_eq!(via_portfolio.schedule.start, direct.schedule.start);
+    }
+
+    #[test]
+    fn troublesome_seeded_portfolio_never_loses_to_the_unseeded_single_chain() {
+        // Chain 0 of a portfolio runs the base parameters from the
+        // unseeded initial assignment with the base seed — the seeded
+        // walk only ever occupies chain 1. With the exchange disabled the
+        // chains are independent, so the portfolio winner is at most
+        // chain 0's energy, which equals the plain unseeded single-chain
+        // result: seeding can add a better basin but never costs one.
+        let p = problem();
+        let (init, m0, c0) = baseline(&p);
+        let obj = Objective::new(Goal::Balanced, m0, c0);
+        let params = AnnealParams {
+            exchange_interval: 0,
+            troublesome_seed: true,
+            ..AnnealParams::fast()
+        };
+        let seeded = portfolio_anneal(&p, &obj, &init, &params, 2, 0xBEE);
+        let mut rng = Rng::new(0xBEE);
+        let unseeded = anneal(&p, &obj, &init, &params, &mut rng);
+        assert!(
+            seeded.energy <= unseeded.energy + 1e-12,
+            "seeded portfolio {} must not degrade the unseeded chain {}",
+            seeded.energy,
+            unseeded.energy
+        );
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use std::time::Duration;
 
-use super::anneal::{anneal, portfolio_anneal, AnnealParams, AnnealResult};
+use super::anneal::{portfolio_anneal, AnnealParams, AnnealResult};
 use super::cp::{CpSolver, Limits};
 use super::objective::{Goal, Objective};
 use super::rcpsp::Problem;
@@ -13,7 +13,6 @@ use super::schedule::Schedule;
 use crate::cluster::{Capacity, Config, ConfigSpace, CostModel};
 use crate::dag::Dag;
 use crate::predictor::{EventLog, Grid, LearnedPredictor, Predictor};
-use crate::util::Rng;
 
 /// Which parts of AGORA are active — the §5.2 ablation axes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -220,22 +219,21 @@ impl Agora {
             objective = objective.with_slas(&p.slas);
         }
 
-        let mut rng = Rng::new(self.options.seed);
-
         let plan = match self.options.mode {
             Mode::CoOptimize => {
-                let r = if self.options.parallelism > 1 {
-                    portfolio_anneal(
-                        p,
-                        &objective,
-                        &default_assignment,
-                        &self.options.params,
-                        self.options.parallelism,
-                        self.options.seed,
-                    )
-                } else {
-                    anneal(p, &objective, &default_assignment, &self.options.params, &mut rng)
-                };
+                // Every parallelism routes through the portfolio entry
+                // point: at parallelism 1 it degrades to the plain seeded
+                // single chain (bit-identical to calling `anneal` with
+                // `Rng::new(seed)` directly), and it is also where the
+                // troublesome-seed knob derives the DAGPS-seeded start.
+                let r = portfolio_anneal(
+                    p,
+                    &objective,
+                    &default_assignment,
+                    &self.options.params,
+                    self.options.parallelism,
+                    self.options.seed,
+                );
                 Plan {
                     makespan: r.makespan,
                     cost: r.cost,
@@ -341,6 +339,7 @@ mod tests {
     use super::*;
     use crate::dag::workloads::{dag1, dag2};
     use crate::predictor::{bootstrap_history, default_profiling_configs};
+    use crate::util::Rng;
 
     fn problem(dag_fn: fn() -> Dag) -> Problem {
         let dags = vec![dag_fn()];

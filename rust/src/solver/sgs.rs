@@ -37,9 +37,22 @@ pub enum Rule {
     /// Largest resource demand x duration ("hardest to pack", Graphene's
     /// troublesome-task intuition).
     HardestToPack,
+    /// DAGPS-style troublesome-*subgraph* priority: maximal connected
+    /// groups of troublesome tasks (long × resource-skewed × deep, see
+    /// [`troublesome_scores`]) are boosted above everything else, ranked
+    /// by their peak score, so whole heavy chains are packed first while
+    /// the remaining tasks fill in by criticality. Unlike the per-task
+    /// [`Rule::HardestToPack`], the boost is subgraph-aware: a
+    /// troublesome task drags its troublesome ancestors/descendants to
+    /// the front with it.
+    Troublesome,
 }
 
 /// Every static rule, in the order `multistart_sgs` tries them.
+/// [`Rule::Troublesome`] is deliberately *not* part of the multistart
+/// portfolio: it is the DAGPS baseline's rule and the opt-in seeding
+/// rule, and keeping it out preserves the CP solver's pinned initial
+/// upper bounds.
 pub const ALL_RULES: &[Rule] = &[
     Rule::CriticalPath,
     Rule::LongestFirst,
@@ -84,7 +97,126 @@ pub fn priorities(p: &Problem, assignment: &[usize], rule: Rule) -> Vec<f64> {
                 (cpu / p.capacity.vcpus + mem / p.capacity.memory_gb) * durations[t]
             })
             .collect(),
+        Rule::Troublesome => {
+            let comps = troublesome_components(p, &troublesome_scores(p, assignment));
+            let mut prio = priorities(p, assignment, Rule::CriticalPath);
+            // Boost strictly dominates every base priority, and each
+            // component's boost dominates the next-ranked component's, so
+            // subgraphs are packed whole, in rank order, before any
+            // non-troublesome task.
+            let boost = 2.0 * prio.iter().cloned().fold(0.0f64, f64::max).max(1.0);
+            let k = comps.len();
+            for (rank, comp) in comps.iter().enumerate() {
+                for &t in comp {
+                    prio[t] += boost * (k - rank) as f64;
+                }
+            }
+            prio
+        }
     }
+}
+
+/// DAGPS/Graphene-style per-task troublesome score: normalized duration
+/// × resource skew × normalized depth.
+///
+/// - duration is the task's duration under `assignment`, normalized by
+///   the longest task duration (degenerate — non-finite or non-positive
+///   — durations are treated as zero);
+/// - skew is `max(cpu_frac, mem_frac) / mean(cpu_frac, mem_frac)` of the
+///   assigned configuration's demand against cluster capacity, in
+///   `[1, 2]` — a balanced demand scores 1, a single-resource hog
+///   approaches 2;
+/// - depth is the task's bottom level (longest downstream path including
+///   itself), normalized by the deepest bottom level.
+///
+/// The score is a pure per-task function of durations, demands and DAG
+/// structure, so it is deterministic and stable under task-index
+/// permutation. An all-degenerate problem scores all zeros.
+pub fn troublesome_scores(p: &Problem, assignment: &[usize]) -> Vec<f64> {
+    let n = p.len();
+    let durations: Vec<f64> = (0..n)
+        .map(|t| {
+            let d = p.duration(t, assignment[t]);
+            if d.is_finite() && d > 0.0 {
+                d
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let order = p.topo_order();
+    let mut bottom = vec![0.0f64; n];
+    for &u in order.iter().rev() {
+        bottom[u] = durations[u]
+            + p.succs(u)
+                .iter()
+                .map(|&v| bottom[v])
+                .fold(0.0f64, f64::max);
+    }
+    let max_d = durations.iter().cloned().fold(0.0f64, f64::max);
+    let max_b = bottom.iter().cloned().fold(0.0f64, f64::max);
+    if max_d <= 0.0 || max_b <= 0.0 {
+        return vec![0.0; n];
+    }
+    (0..n)
+        .map(|t| {
+            let (cpu, mem) = p.demand(assignment[t]);
+            let cpu_frac = cpu / p.capacity.vcpus;
+            let mem_frac = mem / p.capacity.memory_gb;
+            let mean = 0.5 * (cpu_frac + mem_frac);
+            let skew = if mean > 0.0 {
+                cpu_frac.max(mem_frac) / mean
+            } else {
+                1.0
+            };
+            (durations[t] / max_d) * skew * (bottom[t] / max_b)
+        })
+        .collect()
+}
+
+/// Maximal troublesome subgraphs for [`Rule::Troublesome`]: a task is
+/// troublesome when its score is at least half the peak score, and each
+/// subgraph is a maximal precedence-connected group of troublesome tasks
+/// (a troublesome task plus its troublesome ancestors/descendants,
+/// transitively). Components are returned ranked by their peak member
+/// score (descending; ties break on lowest member index), each with its
+/// members sorted by task index. Returns no components when every score
+/// is zero.
+pub fn troublesome_components(p: &Problem, scores: &[f64]) -> Vec<Vec<usize>> {
+    let n = p.len();
+    let max_s = scores.iter().cloned().fold(0.0f64, f64::max);
+    if max_s <= 0.0 {
+        return Vec::new();
+    }
+    let threshold = 0.5 * max_s;
+    let marked: Vec<bool> = scores.iter().map(|&s| s >= threshold).collect();
+    // Seeding from the highest-score unclaimed task makes the component
+    // order the rank order: a component's first seed carries its peak.
+    let mut seeds: Vec<usize> = (0..n).filter(|&t| marked[t]).collect();
+    seeds.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    let mut claimed = vec![false; n];
+    let mut comps = Vec::new();
+    for &seed in &seeds {
+        if claimed[seed] {
+            continue;
+        }
+        claimed[seed] = true;
+        let mut members = vec![seed];
+        let mut head = 0;
+        while head < members.len() {
+            let u = members[head];
+            head += 1;
+            for &v in p.preds(u).iter().chain(p.succs(u).iter()) {
+                if marked[v] && !claimed[v] {
+                    claimed[v] = true;
+                    members.push(v);
+                }
+            }
+        }
+        members.sort_unstable();
+        comps.push(members);
+    }
+    comps
 }
 
 /// The task *selection order* of a serial SGS run under a static priority
@@ -499,7 +631,32 @@ impl SuffixSgs {
         fixed_end: &[f64],
         preplaced: &[(f64, f64, f64, f64)],
     ) -> SuffixSgs {
-        let prio = priorities(p, incumbent, Rule::CriticalPath);
+        Self::with_rule(
+            p,
+            incumbent,
+            active_tasks,
+            floor,
+            fixed_end,
+            preplaced,
+            Rule::CriticalPath,
+        )
+    }
+
+    /// [`SuffixSgs::new`] with an explicit frozen priority rule. The
+    /// replanner's troublesome-cone mode passes [`Rule::Troublesome`]
+    /// here so at-risk heavy subgraphs grab residual capacity before
+    /// filler tasks; `new` keeps the historical critical-path rule.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_rule(
+        p: &Problem,
+        incumbent: &[usize],
+        active_tasks: &[usize],
+        floor: f64,
+        fixed_end: &[f64],
+        preplaced: &[(f64, f64, f64, f64)],
+        rule: Rule,
+    ) -> SuffixSgs {
+        let prio = priorities(p, incumbent, rule);
         let mut active = vec![false; p.len()];
         for &t in active_tasks {
             active[t] = true;
@@ -1129,6 +1286,76 @@ mod tests {
                 current[t] = p.feasible[rng.below(p.feasible.len())];
             }
             Ok(())
+        });
+    }
+
+    #[test]
+    fn troublesome_rule_is_valid_and_outside_the_multistart_portfolio() {
+        // Adding Troublesome to ALL_RULES would silently change
+        // multistart_sgs (the CP solver's initial upper bound) and break
+        // the golden pins — it is a baseline/seeding rule only.
+        assert!(!ALL_RULES.contains(&Rule::Troublesome));
+        let p = problem_from(vec![dag1(), dag2()]);
+        let assignment = vec![p.feasible[0]; p.len()];
+        let prio = priorities(&p, &assignment, Rule::Troublesome);
+        let s = serial_sgs(&p, &assignment, &prio).unwrap();
+        s.validate(&p).unwrap();
+    }
+
+    #[test]
+    fn troublesome_scores_and_components_are_deterministic() {
+        let p = problem_from(vec![dag1(), dag2()]);
+        let assignment = vec![p.feasible[0]; p.len()];
+        let s1 = troublesome_scores(&p, &assignment);
+        let s2 = troublesome_scores(&p, &assignment);
+        assert_eq!(s1, s2);
+        let comps = troublesome_components(&p, &s1);
+        assert_eq!(comps, troublesome_components(&p, &s2));
+
+        let max = s1.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 0.0, "real workloads have nonzero scores");
+        let mut seen = vec![false; p.len()];
+        let mut peaks = Vec::new();
+        for comp in &comps {
+            assert!(!comp.is_empty());
+            let mut peak = f64::NEG_INFINITY;
+            for &t in comp {
+                assert!(!seen[t], "components must be disjoint");
+                seen[t] = true;
+                assert!(s1[t] >= 0.5 * max, "members must be troublesome");
+                peak = peak.max(s1[t]);
+            }
+            peaks.push(peak);
+        }
+        for w in peaks.windows(2) {
+            assert!(w[0] >= w[1], "components ranked by peak score");
+        }
+        // Every troublesome task is claimed by exactly one component and
+        // the peak scorer seeds the first one.
+        let n_marked = (0..p.len()).filter(|&t| s1[t] >= 0.5 * max).count();
+        assert_eq!(seen.iter().filter(|&&b| b).count(), n_marked);
+        let argmax = (0..p.len()).find(|&t| s1[t] == max).unwrap();
+        assert!(comps[0].contains(&argmax));
+    }
+
+    #[test]
+    fn troublesome_zero_scores_mean_no_components() {
+        let p = problem_from(vec![dag1()]);
+        let zeros = vec![0.0; p.len()];
+        assert!(troublesome_components(&p, &zeros).is_empty());
+    }
+
+    #[test]
+    fn property_troublesome_rule_schedules_valid_on_random_dags() {
+        propcheck::check(20, |rng| {
+            let dag = arbitrary_dag(rng, 14);
+            let p = problem_from(vec![dag]);
+            let assignment: Vec<usize> = (0..p.len())
+                .map(|_| p.feasible[rng.below(p.feasible.len())])
+                .collect();
+            let prio = priorities(&p, &assignment, Rule::Troublesome);
+            let s = serial_sgs(&p, &assignment, &prio).map_err(|e| e.to_string())?;
+            s.validate(&p).map_err(|e| format!("{e:#}"))
         });
     }
 }
